@@ -1,0 +1,22 @@
+"""Benchmark helpers: timing + CSV row emission."""
+
+import time
+
+import jax
+
+
+def time_op(fn, *args, warmup=2, iters=10):
+    """Median wall time per call in microseconds (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us if us == '' else f'{us:.1f}'},{derived}", flush=True)

@@ -1,0 +1,55 @@
+"""Op microbenchmarks: the cost of the representation mapping + integer ops.
+
+Wall-clock here is the CPU *emulation* cost (useful for relative deltas
+and regression tracking, not TPU projections — those are the roofline
+terms in EXPERIMENTS.md). Also derives the activation-memory ratio the
+int8 residuals buy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PAPER_INT8, NumericPolicy, QuantConfig, dequantize,
+                        qmatmul, quantize)
+from repro.core.qnorm import qlayernorm
+from repro.kernels.ops import int8_matmul_op, quantize_op
+
+from .common import row, time_op
+
+KEY = jax.random.key(0)
+
+
+def run():
+    x = jnp.asarray(np.random.RandomState(0).randn(512, 512).astype(np.float32))
+    w = jnp.asarray(np.random.RandomState(1).randn(512, 512).astype(np.float32))
+
+    q_jnp = jax.jit(lambda x, k: quantize(x, QuantConfig(8), k).m)
+    us = time_op(q_jnp, x, KEY)
+    row("quantize_jnp_512x512", us, f"GBps={x.nbytes / us * 1e6 / 1e9:.2f}")
+
+    q_pl = jax.jit(lambda x, k: quantize_op(x, k, interpret=True)[0])
+    us = time_op(q_pl, x, KEY)
+    row("quantize_pallas_interp_512x512", us, "interpret-mode (correctness path)")
+
+    mm_f = jax.jit(lambda x, w: x @ w)
+    us_f = time_op(mm_f, x, w)
+    row("matmul_float_512", us_f, "")
+
+    mm_q = jax.jit(lambda x, w, k: qmatmul(x, w, k, PAPER_INT8))
+    us_q = time_op(mm_q, x, w, KEY)
+    row("qmatmul_int8_512", us_q, f"emulation_overhead_x={us_q / us_f:.1f}")
+
+    g = jnp.ones((512,))
+    b = jnp.zeros((512,))
+    ln_q = jax.jit(lambda x, k: qlayernorm(x, g, b, k, PAPER_INT8))
+    us = time_op(ln_q, x, KEY)
+    row("qlayernorm_int8_512", us, "integer fwd")
+
+    # residual memory ratio: custom_vjp stores int8 mantissas vs f32 acts
+    row("activation_residual_ratio", 0.0,
+        "int8_residuals=1byte/elem;float=4bytes/elem;ratio=4.0x")
+
+
+if __name__ == "__main__":
+    run()

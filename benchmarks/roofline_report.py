@@ -1,0 +1,37 @@
+"""§Roofline report: aggregates experiments/dryrun/*.json into the
+per-(arch x shape x mesh) table (terms in seconds, dominant bottleneck,
+MODEL_FLOPS usefulness ratio)."""
+
+import glob
+import json
+import os
+
+from .common import row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run(verbose: bool = True):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        name = f"{rec['arch']}__{rec['shape']}__" \
+               f"{'pod2' if rec.get('multi_pod') else 'pod1'}__{rec.get('policy', 'int8')}"
+        if rec.get("status") != "ok":
+            row(f"roofline_{name}", 0.0, rec.get("status", "missing"))
+            continue
+        r = rec["roofline"]
+        derived = (f"compute_s={r['compute_s']:.4g};memory_s={r['memory_s']:.4g};"
+                   f"collective_s={r['collective_s']:.4g};dominant={r['dominant']};"
+                   f"useful_ratio={rec.get('useful_flop_ratio', 0):.3f};"
+                   f"temp_GB={rec['memory']['temp_bytes'] / 1e9:.2f}")
+        row(f"roofline_{name}", r["step_s"] * 1e6, derived)
+        rows.append(rec)
+    if not rows:
+        row("roofline_report", 0.0, "no dryrun records yet (run experiments/run_sweep.py)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * fig3c_trajectory_*      — Fig. 3(c) integer-vs-float loss parity
+  * table1_classification   — CNN+BN fully-integer pipeline accuracy parity
+  * table4_vs_uniform_quant — representation mapping vs A.6 divide+clip
+  * table5_bitwidth_*       — int8..int4 ablation
+  * quantize_/qmatmul_/...  — op microbenchmarks (emulation cost)
+  * roofline_*              — §Roofline terms per dry-run cell (from JSONs)
+"""
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (bitwidth_ablation, classification, op_microbench,
+                   roofline_report, trajectory, versus_baseline)
+    trajectory.run()
+    classification.run()
+    versus_baseline.run()
+    bitwidth_ablation.run()
+    op_microbench.run()
+    roofline_report.run()
+
+
+if __name__ == '__main__':
+    main()

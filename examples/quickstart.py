@@ -1,0 +1,64 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+1. Map a float tensor to dynamic fixed point (int8 mantissas + one shared
+   exponent) and back — unbiased under stochastic rounding.
+2. Run an integer matmul whose *backward* is also integer (Appendix A.2).
+3. Train a toy regressor with the fully-integer pipeline (int16 SGD) and
+   watch the loss track the float trajectory (Fig. 3c in miniature).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PAPER_INT8, QuantConfig, dequantize, integer_sgd_init,
+                        integer_sgd_step, master_params_f32, qmatmul, quantize)
+
+key = jax.random.key(0)
+
+# -- 1. representation mapping ------------------------------------------------
+x = jax.random.normal(key, (4, 6))
+q = quantize(x, QuantConfig(bits=8), key)
+print("int8 mantissas:\n", q.m)
+print("shared (biased) exponent:", int(q.e))
+print("max |roundtrip error|:", float(jnp.abs(dequantize(q) - x).max()),
+      " (<= 1 ulp of the shared scale)")
+
+# -- 2. integer matmul with integer backward ----------------------------------
+w = jax.random.normal(jax.random.fold_in(key, 1), (6, 3))
+y = qmatmul(x, w, key, PAPER_INT8)            # int8 x int8 -> int32 inside
+gx, gw = jax.grad(lambda x, w: qmatmul(x, w, key, PAPER_INT8).sum(),
+                  argnums=(0, 1))(x, w)       # dX, dW are integer GEMMs too
+print("\ninteger fwd error vs float:",
+      float(jnp.abs(y - x @ w).max()))
+print("integer dW error vs float :",
+      float(jnp.abs(gw - jax.grad(lambda w: (x @ w).sum())(w)).max()))
+
+# -- 3. fully integer training loop -------------------------------------------
+X = jax.random.normal(jax.random.fold_in(key, 2), (256, 16))
+Wt = jax.random.normal(jax.random.fold_in(key, 3), (16, 4))
+Y = X @ Wt
+
+w0 = jax.random.normal(jax.random.fold_in(key, 4), (16, 4)) * 0.1
+state = integer_sgd_init({"w": w0}, PAPER_INT8)     # int16 masters + momentum
+wf, vf = w0, jnp.zeros_like(w0)
+
+print("\nstep   int8+int16-SGD     float32-SGD")
+for step in range(30):
+    k = jax.random.fold_in(key, 100 + step)
+    wi = master_params_f32(state)["w"]
+    gi = jax.grad(lambda w: ((qmatmul(X, w, k, PAPER_INT8) - Y) ** 2).mean())(wi)
+    state = integer_sgd_step(state, {"w": gi}, 0.05, k, PAPER_INT8)
+
+    gf = jax.grad(lambda w: ((X @ w - Y) ** 2).mean())(wf)
+    vf = 0.9 * vf + gf
+    wf = wf - 0.05 * vf
+    if step % 5 == 0 or step == 29:
+        li = float(((X @ master_params_f32(state)["w"] - Y) ** 2).mean())
+        lf = float(((X @ wf - Y) ** 2).mean())
+        print(f"{step:4d}   {li:14.6f}   {lf:14.6f}")
+
+print("\nThe integer trajectory tracks float with no hyper-parameter change —")
+print("the paper's central claim, reproduced end to end.")

@@ -1,0 +1,7 @@
+"""Architecture configs: the 10 assigned archs + the paper's own CNN/MLP."""
+
+from .base import (ARCH_IDS, SHAPES, Shape, cell_runnable, cells, get_config,
+                   get_smoke_config)
+
+__all__ = ["ARCH_IDS", "SHAPES", "Shape", "cell_runnable", "cells",
+           "get_config", "get_smoke_config"]

@@ -1,0 +1,69 @@
+"""Config registry: assigned architectures, smoke variants, and shape cells.
+
+Each ``src/repro/configs/<id>.py`` defines CONFIG (the exact published
+config from the assignment) and SMOKE (a reduced same-family config for
+CPU tests). Shapes are the four assigned cells; eligibility per cell
+follows the assignment rules (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from ..models.common import ArchConfig
+
+__all__ = ["ARCH_IDS", "SHAPES", "Shape", "get_config", "get_smoke_config",
+           "cells", "cell_runnable"]
+
+ARCH_IDS = [
+    "command_r_plus_104b",
+    "starcoder2_7b",
+    "qwen2_0_5b",
+    "minicpm_2b",
+    "rwkv6_3b",
+    "pixtral_12b",
+    "recurrentgemma_2b",
+    "llama4_maverick_400b_a17b",
+    "llama4_scout_17b_16e",
+    "seamless_m4t_medium",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.SMOKE
+
+
+def cell_runnable(cfg: ArchConfig, shape: Shape) -> Tuple[bool, str]:
+    """Assignment rules: long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "skip: pure full-attention arch at 524k context"
+    return True, ""
+
+
+def cells() -> List[Tuple[str, str]]:
+    """All 40 (arch, shape) cells in assignment order."""
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]

@@ -1,0 +1,20 @@
+"""command-r-plus-104b [dense]: 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000 — GQA, no-bias.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+
+from ..models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-plus-104b", family="dense",
+    n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8,
+    d_ff=33792, vocab=256_000,
+    qkv_bias=False, norm="layernorm", act="silu",
+    rope_theta=75_000_000.0, tie_embeddings=True,
+)
+
+SMOKE = ArchConfig(
+    name="command-r-plus-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+    d_ff=160, vocab=512,
+    qkv_bias=False, norm="layernorm", act="silu", tie_embeddings=True,
+)

@@ -1,0 +1,22 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128e top-1 + shared expert, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+
+from ..models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, vocab=202_048,
+    head_dim=128, qkv_bias=False, norm="rmsnorm", act="silu",
+    rope_theta=500_000.0, tie_embeddings=True,
+    moe_experts=128, moe_top_k=1, moe_shared=True, capacity_factor=1.25,
+)
+
+SMOKE = ArchConfig(
+    name="llama4-maverick-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=96, vocab=512,
+    head_dim=16, norm="rmsnorm", act="silu", tie_embeddings=True,
+    moe_experts=8, moe_top_k=1, moe_shared=True, capacity_factor=1.25,
+)

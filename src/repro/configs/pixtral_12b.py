@@ -1,0 +1,27 @@
+"""pixtral-12b [vlm]: 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072 — pixtral-ViT + mistral-nemo backbone.
+[hf:mistralai/Pixtral-12B-2409; unverified]
+
+The ViT frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed patch embeddings for the first ``patch_positions`` slots
+(early fusion into the text sequence).
+"""
+
+from ..models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=131_072,
+    head_dim=128, qkv_bias=False, norm="rmsnorm", act="silu",
+    rope_theta=1_000_000.0, tie_embeddings=True,
+    patch_positions=256,
+)
+
+SMOKE = ArchConfig(
+    name="pixtral-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+    d_ff=160, vocab=512,
+    head_dim=16, norm="rmsnorm", act="silu", tie_embeddings=True,
+    patch_positions=4,
+)

@@ -1,0 +1,25 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680 —
+RG-LRU + local attention, 1:2 ratio. vocab=256000. [arXiv:2402.19427; hf]
+
+26 layers = 8 x [rec, rec, attn] + 2 trailing recurrent blocks.
+"""
+
+from ..models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1,
+    d_ff=7680, vocab=256_000,
+    head_dim=256, norm="rmsnorm", act="gelu",
+    block_period=3, attn_offset=2, local_window=2048, conv_width=4,
+    tie_embeddings=True,
+)
+
+SMOKE = ArchConfig(
+    name="recurrentgemma-smoke", family="hybrid",
+    n_layers=5, d_model=64, n_heads=2, n_kv_heads=1,
+    d_ff=160, vocab=512,
+    head_dim=32, norm="rmsnorm", act="gelu",
+    block_period=3, attn_offset=2, local_window=16, conv_width=4,
+    tie_embeddings=True,
+)

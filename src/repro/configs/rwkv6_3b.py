@@ -1,0 +1,19 @@
+"""rwkv6-3b [ssm]: 32L d_model=2560 (attn-free) d_ff=8960 vocab=65536 —
+Finch, data-dependent decay. [arXiv:2404.05892; hf]"""
+
+from ..models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40,  # 40 heads x 64
+    d_ff=8960, vocab=65_536,
+    head_dim=64, norm="layernorm", lora_rank=64,
+    tie_embeddings=True,
+)
+
+SMOKE = ArchConfig(
+    name="rwkv6-smoke", family="ssm",
+    n_layers=2, d_model=128, n_heads=2, n_kv_heads=2,
+    d_ff=256, vocab=512,
+    head_dim=64, norm="layernorm", lora_rank=8, tie_embeddings=True,
+)

@@ -1,0 +1,23 @@
+"""seamless-m4t-medium [audio]: 12L d_model=1024 16H (kv=16) d_ff=4096
+vocab=256206 — enc-dec, multimodal. [arXiv:2308.11596; hf]
+
+12 encoder + 12 decoder layers; the audio frontend is a STUB per the
+assignment (``input_specs`` provides precomputed frame embeddings).
+"""
+
+from ..models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium", family="audio",
+    n_layers=12, enc_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=256_206,
+    qkv_bias=False, norm="layernorm", act="gelu",
+    tie_embeddings=True,
+)
+
+SMOKE = ArchConfig(
+    name="seamless-smoke", family="audio",
+    n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=512,
+    norm="layernorm", act="gelu", tie_embeddings=True,
+)

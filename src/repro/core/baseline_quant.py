@@ -1,0 +1,62 @@
+"""Appendix A.6 baseline: symmetric uniform quantization (divide + clip).
+
+The common int8 back-propagation recipe the paper argues against ([2,4,3]):
+
+    s = max|x|;  x_q = round(127 * clamp(x, s) / s);  x_hat = x_q * s / 127
+
+Deterministic rounding, a division per element, and a scale that is not a
+power of two.  Provided as a drop-in for ``qmatmul`` so the Table-4-style
+benchmark can show the trajectory bias this method accumulates relative to
+the paper's representation mapping.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["uniform_quantize", "uniform_qmatmul"]
+
+
+def uniform_quantize(x: jnp.ndarray, bits: int = 8):
+    """Returns (x_q int8, scale) per A.6. Round-to-nearest-even (no SR)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    xq = jnp.round(qmax * jnp.clip(x, -s, s) / s).astype(jnp.int8)
+    return xq, s / qmax
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def uniform_qmatmul(x, w, bits: int = 8):
+    y, _ = _uq_fwd(x, w, bits)
+    return y
+
+
+def _uq_fwd(x, w, bits):
+    xq, sx = uniform_quantize(x, bits)
+    wq, sw = uniform_quantize(w, bits)
+    lead = x.shape[:-1]
+    acc = jax.lax.dot_general(
+        xq.reshape(-1, x.shape[-1]), wq,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * (sx * sw)
+    return y.reshape(*lead, w.shape[-1]), (xq, sx, wq, sw, lead)
+
+
+def _uq_bwd(bits, res, gy):
+    xq, sx, wq, sw, lead = res
+    gq, sg = uniform_quantize(gy, bits)
+    g2 = gq.reshape(-1, gy.shape[-1])
+    dx = jax.lax.dot_general(g2, wq.T, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32)
+    dw = jax.lax.dot_general(xq.reshape(-1, xq.shape[-1]).T, g2,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32)
+    dx = dx.astype(jnp.float32) * (sg * sw)
+    dw = dw.astype(jnp.float32) * (sg * sx)
+    return dx.reshape(*lead, dx.shape[-1]), dw
+
+
+uniform_qmatmul.defvjp(_uq_fwd, _uq_bwd)

@@ -1,0 +1,375 @@
+"""Dynamic fixed-point (block floating-point) representation mapping.
+
+This module is the paper's primary contribution (Ghaffari et al., NeurIPS
+2022, §3.1-3.2): a *linear fixed-point mapping* from float32 to a shared-
+scale integer mantissa tensor, executed directly on the IEEE-754 bit
+pattern (unpack -> shift -> stochastic round), and its *non-linear inverse
+mapping* (mantissa normalization + exponent re-bias, i.e. an int->float
+convert on TPU's VPU).
+
+Representation contract
+-----------------------
+A ``BFP`` tensor with ``p`` magnitude bits stores
+
+    x_i  ~=  m_i * 2^(e_shared - 127 - 23 + (24 - p))
+
+with ``m_i`` a signed integer, ``|m_i| <= 2^p - 1``, and ``e_shared`` the
+IEEE-biased maximum exponent over the scale group (whole tensor for the
+paper-faithful per-tensor mode; a trailing-axis block for the TPU-adapted
+per-block mode).  For int8 (p=7) the element carrying ``e_max`` maps to
+``m in [64, 127]`` — i.e. a (1.xxxxxx)_2 fixed-point value — and every
+other element is pushed toward the sub-normal region by right shifts,
+exactly as in Fig. 1(a) of the paper.
+
+Stochastic rounding adds uniform random bits below the cut position before
+shifting (the Fig. 4 circuit): ``P(round up) = fraction``, which makes the
+mapping an unbiased estimator of the source tensor (Appendix A.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "BFP",
+    "QuantConfig",
+    "quantize",
+    "dequantize",
+    "pow2",
+    "storage_dtype",
+    "scale_exponent",
+    "PER_TENSOR",
+]
+
+# Sentinel block size meaning "one scale for the whole tensor".
+PER_TENSOR = 0
+
+# IEEE-754 single precision constants.
+_F32_EXP_BIAS = 127
+_F32_MANT_BITS = 23
+_F32_MANT24 = _F32_MANT_BITS + 1  # incl. implicit hidden bit
+
+
+def storage_dtype(bits: int) -> jnp.dtype:
+    """Smallest signed integer container for a sign + (bits-1) magnitude value."""
+    if bits <= 8:
+        return jnp.int8
+    if bits <= 16:
+        return jnp.int16
+    return jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of a representation mapping.
+
+    Attributes:
+      bits: total bit width including the sign bit (paper: 8 for layers,
+        16 for SGD state; Table 5 ablates 4..8).
+      block: scale-group size along the trailing axis. ``PER_TENSOR`` (0)
+        reproduces the paper's one-scale-per-tensor mapping; a positive
+        value gives MX/MSFP-style per-block scales (TPU adaptation, see
+        DESIGN.md §3).
+      stochastic: stochastic rounding (paper's default for training);
+        False -> round-to-nearest (used for inference-only paths).
+      rng: "threefry" (counter-based crypto PRNG; jax default) or "hash"
+        (one xorshift-multiply avalanche per element, seeded per call —
+        the moral equivalent of the paper's on-the-fly LFSR in Fig. 4,
+        ~8x less arithmetic; unbiasedness is per-element so the SR
+        contract holds — validated statistically in tests).
+    """
+
+    bits: int = 8
+    block: int = PER_TENSOR
+    stochastic: bool = True
+    rng: str = "threefry"
+
+    @property
+    def p(self) -> int:
+        """Magnitude bits of the mantissa."""
+        return self.bits - 1
+
+    @property
+    def base_shift(self) -> int:
+        """Right shift taking a 24-bit mantissa to a p-bit mantissa."""
+        return _F32_MANT24 - self.p
+
+    def __post_init__(self):
+        if not (2 <= self.bits <= 16):
+            raise ValueError(f"bits must be in [2, 16], got {self.bits}")
+        if self.block < 0:
+            raise ValueError(f"block must be >= 0, got {self.block}")
+
+
+@jax.tree_util.register_pytree_node_class
+class BFP:
+    """A block-floating-point tensor: integer mantissas + shared exponent(s).
+
+    ``m`` has the logical shape of the tensor. ``e`` is the IEEE-biased
+    shared exponent: shape ``()`` for per-tensor scale, or the tensor shape
+    with the trailing axis divided by ``block`` for per-block scale.
+    """
+
+    __slots__ = ("m", "e", "cfg")
+
+    def __init__(self, m: jnp.ndarray, e: jnp.ndarray, cfg: QuantConfig):
+        self.m = m
+        self.e = e
+        self.cfg = cfg
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.m, self.e), self.cfg
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        m, e = children
+        return cls(m, e, cfg)
+
+    # -- conveniences --------------------------------------------------------
+    @property
+    def shape(self):
+        return self.m.shape
+
+    @property
+    def ndim(self):
+        return self.m.ndim
+
+    @property
+    def dtype(self):
+        return self.m.dtype
+
+    def dequantize(self) -> jnp.ndarray:
+        return dequantize(self)
+
+    def scale_exp(self) -> jnp.ndarray:
+        """Unbiased power-of-two exponent E such that x ~= m * 2^E."""
+        return scale_exponent(self.e, self.cfg)
+
+    def __repr__(self):
+        return f"BFP(m={self.m.shape}:{self.m.dtype}, e={self.e.shape}, cfg={self.cfg})"
+
+
+def scale_exponent(e_biased: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Unbiased exponent of the scale: x = m * 2^E with E returned here."""
+    return e_biased - _F32_EXP_BIAS - _F32_MANT_BITS + cfg.base_shift
+
+
+def pow2(e: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Exact 2^e for integer e in [-126, 127], via exponent bit patterns.
+
+    Both XLA:CPU and TPU flush sub-normal float32 results (FTZ/DAZ), so
+    scales below 2^-126 are defined to saturate to 0 — the correct limit,
+    and unreachable in practice (an int8 BFP scale of 2^-126 corresponds to
+    a tensor whose max magnitude is ~2^-120).  With a normal scale, every
+    dequantized value m * 2^e (|m| >= 1) is itself normal.
+    """
+    e = e.astype(jnp.int32)
+    e1 = jnp.clip(e, -126, 127)
+    f1 = lax.bitcast_convert_type(((e1 + _F32_EXP_BIAS) << _F32_MANT_BITS).astype(jnp.uint32), jnp.float32)
+    return jnp.where(e < -126, jnp.float32(0), f1).astype(dtype)
+
+
+def _unpack_f32(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Unpack float32 into (sign, effective biased exponent, 24-bit mantissa).
+
+    Sub-normal inputs (biased exp 0) have effective exponent 1 and no
+    implicit bit, per IEEE-754. NaN/Inf are not special-cased (training
+    values are finite; the mapping saturates them like large normals).
+    """
+    b = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    sign = (b >> 31).astype(jnp.int32)
+    bexp = ((b >> _F32_MANT_BITS) & 0xFF).astype(jnp.int32)
+    frac = (b & jnp.uint32(0x7FFFFF))
+    is_normal = bexp > 0
+    mant24 = jnp.where(is_normal, frac | jnp.uint32(1 << _F32_MANT_BITS), frac)
+    eff_exp = jnp.maximum(bexp, 1)
+    return sign, eff_exp, mant24
+
+
+def _blocked(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Reshape trailing axis into (n_blocks, block)."""
+    if x.shape[-1] % block != 0:
+        raise ValueError(
+            f"trailing dim {x.shape[-1]} not divisible by block {block}")
+    return x.reshape(*x.shape[:-1], x.shape[-1] // block, block)
+
+
+def _group_max(e: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Shared exponent per scale group (max over tensor or trailing block)."""
+    if cfg.block == PER_TENSOR:
+        return jnp.max(e)
+    return jnp.max(_blocked(e, cfg.block), axis=-1)
+
+
+def _broadcast_group(e_shared: jnp.ndarray, shape: Tuple[int, ...], cfg: QuantConfig) -> jnp.ndarray:
+    """Broadcast a shared exponent back over its scale group elements."""
+    if cfg.block == PER_TENSOR:
+        return jnp.broadcast_to(e_shared, shape)
+    rep = jnp.repeat(e_shared, cfg.block, axis=-1)
+    return jnp.broadcast_to(rep, shape)
+
+
+def _hash_bits(key: jax.Array, shape) -> jnp.ndarray:
+    """Per-element uniform u32 from one tiny key draw + an index hash.
+
+    xxhash/murmur-style avalanche over the linear element index, seeded by
+    a single threefry word: ~6 elementwise ops instead of threefry's ~50
+    per element. This is the software analogue of the paper's on-the-fly
+    hardware RNG (Fig. 4); stochastic-rounding unbiasedness only needs
+    each element's draw to be marginally uniform, which holds per seed.
+    """
+    seed = jax.random.bits(key, (), jnp.uint32)
+    n = 1
+    for d in shape:
+        n *= d
+    idx = lax.iota(jnp.uint32, max(n, 1))
+    h = idx * jnp.uint32(0x9E3779B1) ^ seed
+    h = (h ^ (h >> 15)) * jnp.uint32(0x85EBCA77)
+    h = (h ^ (h >> 13)) * jnp.uint32(0xC2B2AE3D)
+    h = h ^ (h >> 16)
+    return h[:n].reshape(shape)
+
+
+def _shift_round(mag: jnp.ndarray, shift: jnp.ndarray,
+                 key: Optional[jax.Array], stochastic: bool,
+                 rng: str = "threefry") -> jnp.ndarray:
+    """Right-shift unsigned magnitudes with exact rounding: mag / 2^shift.
+
+    Stochastic mode rounds up with probability = (dropped fraction)/2^shift,
+    realized as a single 32-bit uniform draw compared against the fraction
+    *lifted* to a 32-bit threshold — the exact Fig. 4 circuit, but valid for
+    any shift >= 0 (elements pushed arbitrarily deep into the sub-normal
+    region stay unbiased; P(up) underflows to 0 only past 2^-32).
+    Nearest mode rounds half-up.  ``mag`` must be uint32.
+    """
+    s = shift.astype(jnp.int32)
+    s31 = jnp.minimum(s, 31).astype(jnp.uint32)
+    base = jnp.where(s < 32, mag >> s31, jnp.uint32(0))
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        r = (_hash_bits(key, mag.shape) if rng == "hash"
+             else jax.random.bits(key, mag.shape, jnp.uint32))
+        m_lo = mag & ((jnp.uint32(1) << s31) - jnp.uint32(1))
+        left = jnp.clip(32 - s, 0, 31).astype(jnp.uint32)
+        over = jnp.clip(s - 32, 0, 31).astype(jnp.uint32)
+        thr = jnp.where(s <= 31, m_lo << left,
+                        jnp.where(s == 32, mag, mag >> over))
+        up = (r < thr) & (s > 0)
+        return base + up.astype(jnp.uint32)
+    # Round-to-nearest (half up). mag < 2^31 in every call site, so the
+    # uint32 add cannot overflow for s <= 31; s > 31 rounds to 0.
+    half = jnp.where(s > 0, jnp.uint32(1) << (jnp.maximum(s31, 1) - 1), jnp.uint32(0))
+    return jnp.where(s < 32, (mag + half) >> s31, jnp.uint32(0))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def quantize(x: jnp.ndarray, cfg: QuantConfig = QuantConfig(),
+             key: Optional[jax.Array] = None) -> BFP:
+    """Linear fixed-point mapping: float32 tensor -> BFP (paper §3.1).
+
+    Pure shift-and-round on the IEEE bit pattern; no division, no clamp of
+    the *value* (only the <2^-17-probability rounding-overflow of the top
+    element clamps to 2^p - 1).
+    """
+    x = jnp.asarray(x)
+    sign, eff_exp, mant24 = _unpack_f32(x)
+    e_shared = _group_max(eff_exp, cfg)
+    e_bcast = _broadcast_group(e_shared, x.shape, cfg)
+
+    # Per-element total right shift: alignment shift + mantissa narrowing.
+    shift = (e_bcast - eff_exp) + cfg.base_shift
+    mag = _shift_round(mant24, shift, key, cfg.stochastic, cfg.rng)
+    # Rounding overflow of the e_max element (1.11..1 -> 2.0): clamp.
+    mag = jnp.minimum(mag, jnp.uint32((1 << cfg.p) - 1)).astype(jnp.int32)
+    m = jnp.where(sign == 1, -mag, mag).astype(storage_dtype(cfg.bits))
+    return BFP(m, e_shared.astype(jnp.int32), cfg)
+
+
+@jax.jit
+def dequantize(q: BFP) -> jnp.ndarray:
+    """Non-linear inverse mapping: BFP -> float32 (paper §3.2).
+
+    The int->float convert performs the mantissa normalization (the LZA
+    alignment unit in hardware); the shared exponent re-biases the result.
+    """
+    cfg = q.cfg
+    scale = pow2(scale_exponent(q.e, cfg))
+    f = q.m.astype(jnp.float32)
+    if cfg.block == PER_TENSOR:
+        return f * scale
+    blocked = _blocked(f, cfg.block) * scale[..., None]
+    return blocked.reshape(q.m.shape)
+
+
+def quantize_like(x: jnp.ndarray, q: BFP, key: Optional[jax.Array] = None) -> BFP:
+    """Quantize ``x`` with the same config as ``q``."""
+    return quantize(x, q.cfg, key)
+
+
+# ---------------------------------------------------------------------------
+# int32 accumulator requantization (paper §3.3: integer layer outputs feed
+# the next layer without a float round-trip).
+# ---------------------------------------------------------------------------
+
+def bit_length(v: jnp.ndarray) -> jnp.ndarray:
+    """Number of bits needed for non-negative int32 v (0 -> 0)."""
+    return (32 - lax.clz(jnp.maximum(v, 0).astype(jnp.int32))).astype(jnp.int32)
+
+
+_bit_length = bit_length  # internal alias
+
+
+def sr_shift_signed(v: jnp.ndarray, shift: jnp.ndarray,
+                    key: Optional[jax.Array], stochastic: bool = True) -> jnp.ndarray:
+    """Signed stochastic right shift: round(v / 2^shift), unbiased in SR mode.
+
+    The integer-arithmetic workhorse for fixed-point rescaling inside the
+    integer norm layers and integer SGD (value-preserving when the caller
+    adds ``shift`` to the tracked scale exponent).
+    """
+    mag = jnp.abs(v).astype(jnp.uint32)
+    out = _shift_round(mag, jnp.broadcast_to(jnp.asarray(shift), v.shape), key, stochastic)
+    return jnp.where(v < 0, -out.astype(jnp.int32), out.astype(jnp.int32))
+
+
+def narrow_to_bits(v: jnp.ndarray, bits: int, key: Optional[jax.Array],
+                   stochastic: bool = True, axis=None):
+    """Right-shift int32 ``v`` so its max magnitude fits in ``bits`` bits.
+
+    Returns ``(v_narrow, shift)`` with value = v_narrow * 2^shift. ``axis``
+    selects the scale-group reduction (None = whole tensor).
+    """
+    nb = bit_length(jnp.max(jnp.abs(v), axis=axis, keepdims=axis is not None))
+    shift = jnp.maximum(nb - bits, 0)
+    out = sr_shift_signed(v, jnp.broadcast_to(shift, v.shape), key, stochastic)
+    return out, shift
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def requantize_i32(acc: jnp.ndarray, acc_scale_exp: jnp.ndarray,
+                   cfg: QuantConfig, key: Optional[jax.Array] = None) -> BFP:
+    """Map an int32 accumulator (value = acc * 2^acc_scale_exp) to BFP.
+
+    Integer-only: bit-length via count-leading-zeros, shift with stochastic
+    rounding. ``acc_scale_exp`` must be a scalar (per-tensor accumulation,
+    the paper's mode).
+    """
+    mag_in = jnp.abs(acc).astype(jnp.uint32)
+    nbits = _bit_length(jnp.max(jnp.abs(acc)))
+    # Right shift so the max fits in p magnitude bits.
+    shift = jnp.broadcast_to(jnp.maximum(nbits - cfg.p, 0), acc.shape)
+    mag = _shift_round(mag_in, shift, key, cfg.stochastic, cfg.rng)
+    mag = jnp.minimum(mag, jnp.uint32((1 << cfg.p) - 1)).astype(jnp.int32)
+    m = jnp.where(acc < 0, -mag, mag).astype(storage_dtype(cfg.bits))
+    # Re-bias: value = m * 2^(acc_scale_exp + shift); store IEEE-biased shared
+    # exponent consistent with scale_exponent().
+    e_biased = acc_scale_exp + shift + _F32_EXP_BIAS + _F32_MANT_BITS - cfg.base_shift
+    return BFP(m, e_biased.astype(jnp.int32), cfg)

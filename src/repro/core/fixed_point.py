@@ -1,0 +1,210 @@
+"""Integer fixed-point arithmetic with static bit budgeting.
+
+The paper's integer norm layers and integer SGD need more than GEMMs: means,
+variances, rsqrt, EMA and weight updates, all in integer arithmetic. This
+module provides a tiny fixed-point calculus: an ``Fx`` value is an int32
+mantissa tensor, a (possibly per-row) power-of-two scale exponent, and a
+*static* upper bound on the mantissa bit-length. Every op keeps the bound
+sound by inserting stochastic-rounded shifts (unbiased, Appendix A.1), so
+no int32 can ever overflow regardless of input data — the arithmetic is
+budgeted at trace time, like a hardware datapath.
+
+Division by a static N (means) is a fixed-point multiply by round(2^14/q)
+with N = 2^j * q, q in [1,2). rsqrt is Newton–Raphson in fixed point with a
+CLZ-based seed, the standard integer circuit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .bfp import (QuantConfig, bit_length, pow2, quantize, scale_exponent,
+                  sr_shift_signed)
+
+__all__ = ["Fx", "KeyGen", "fx_quantize", "fx_const", "fx_mul", "fx_add",
+           "fx_sub", "fx_sum", "fx_narrow", "fx_div_n", "fx_rsqrt",
+           "fx_unify", "fx_to_f32", "fx_neg"]
+
+_MAX_BITS = 30  # mantissa budget inside int32 (sign + 30 magnitude + 1 guard)
+
+
+class KeyGen:
+    """Deterministic stream of PRNG keys (fold_in counter).
+
+    Determinism matters: under ``jax.checkpoint`` the forward is re-executed
+    during backward and must re-derive identical stochastic roundings.
+    """
+
+    def __init__(self, key: Optional[jax.Array]):
+        self._key = key
+        self._n = 0
+
+    def __call__(self) -> Optional[jax.Array]:
+        if self._key is None:
+            return None
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Fx:
+    """value = m * 2^e; |m| < 2^bits guaranteed (bits is static)."""
+
+    m: jnp.ndarray   # int32 mantissa
+    e: jnp.ndarray   # int32 scale exponent; scalar or broadcastable to m
+    bits: int        # static sound upper bound on bit_length(|m|)
+
+    def tree_flatten(self):
+        return (self.m, self.e), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, bits, children):
+        return cls(children[0], children[1], bits)
+
+
+def _clog2(n: int) -> int:
+    return max(int(math.ceil(math.log2(n))), 0) if n > 1 else 0
+
+
+def _shift_to(m: jnp.ndarray, s: jnp.ndarray, key, stochastic=True) -> jnp.ndarray:
+    """m * 2^s for signed traced s: left shift when s>=0, SR right shift when s<0."""
+    shape = jnp.broadcast_shapes(m.shape, jnp.shape(s))
+    m = jnp.broadcast_to(m, shape)
+    s = jnp.broadcast_to(jnp.asarray(s, jnp.int32), shape)
+    up = m << jnp.maximum(s, 0).astype(jnp.uint32)
+    dn = sr_shift_signed(m, jnp.maximum(-s, 0), key, stochastic)
+    return jnp.where(s >= 0, up, dn)
+
+
+def _pre_narrow(a: Fx, target_bits: int, key, stochastic=True) -> Fx:
+    """Statically shift a down so bits <= target_bits (no-op if already)."""
+    d = a.bits - target_bits
+    if d <= 0:
+        return a
+    return Fx(sr_shift_signed(a.m, d, key, stochastic), a.e + d, target_bits)
+
+
+def fx_quantize(x: jnp.ndarray, bits: int, key, stochastic=True,
+                rng: str = "threefry") -> Fx:
+    """Linear fixed-point mapping of a float tensor -> Fx (per-tensor scale)."""
+    q = quantize(x, QuantConfig(bits, 0, stochastic, rng), key)
+    return Fx(q.m.astype(jnp.int32), scale_exponent(q.e, q.cfg), bits - 1)
+
+
+def fx_const(c: float, bits: int = 15) -> Fx:
+    """Static scalar constant as fixed point (exact to `bits` mantissa bits)."""
+    if c == 0:
+        return Fx(jnp.int32(0), jnp.int32(0), 1)
+    e = math.floor(math.log2(abs(c))) - (bits - 1)
+    m = int(round(c / (2.0 ** e)))
+    if abs(m) >= (1 << bits):  # rounding bumped the bit-length
+        m >>= 1
+        e += 1
+    return Fx(jnp.int32(m), jnp.int32(e), bits)
+
+
+def fx_neg(a: Fx) -> Fx:
+    return Fx(-a.m, a.e, a.bits)
+
+
+def fx_mul(a: Fx, b: Fx, kg: KeyGen, stochastic=True) -> Fx:
+    """Product; operands pre-narrowed so the int32 product cannot overflow."""
+    total = a.bits + b.bits
+    if total > _MAX_BITS:
+        # shave excess bits off the wider operand (then the other if needed)
+        excess = total - _MAX_BITS
+        if a.bits >= b.bits:
+            cut_a = min(excess, a.bits - 2)
+            a = _pre_narrow(a, a.bits - cut_a, kg(), stochastic)
+            excess -= cut_a
+        if excess > 0:
+            b = _pre_narrow(b, b.bits - excess, kg(), stochastic)
+    return Fx(a.m * b.m, a.e + b.e, a.bits + b.bits)
+
+
+def fx_add(a: Fx, b: Fx, kg: KeyGen, stochastic=True) -> Fx:
+    """Sum with dynamic scale alignment; result bits = MAX_BITS sound."""
+    la = _MAX_BITS - 1 - a.bits   # max left lift of a
+    lb = _MAX_BITS - 1 - b.bits
+    e_common = jnp.maximum(a.e - la, b.e - lb)
+    ma = _shift_to(a.m, a.e - e_common, kg(), stochastic)
+    mb = _shift_to(b.m, b.e - e_common, kg(), stochastic)
+    return Fx(ma + mb, e_common, _MAX_BITS)
+
+
+def fx_sub(a: Fx, b: Fx, kg: KeyGen, stochastic=True) -> Fx:
+    return fx_add(a, fx_neg(b), kg, stochastic)
+
+
+def fx_sum(a: Fx, n: int, kg: KeyGen, axis=-1, stochastic=True) -> Fx:
+    """Reduce-sum over `axis` of static length n; e must be constant on axis
+    (scalar, or a broadcast dim of size 1 there, which gets squeezed)."""
+    grow = _clog2(n)
+    a = _pre_narrow(a, min(a.bits, 31 - grow), kg(), stochastic)
+    e = a.e
+    if e.ndim != 0:
+        if e.shape[axis] != 1:
+            raise ValueError(f"fx_sum: scale exponent varies along axis {axis}")
+        e = jnp.squeeze(e, axis=axis)
+    return Fx(jnp.sum(a.m, axis=axis), e, a.bits + grow)
+
+
+def fx_div_n(a: Fx, n: int, kg: KeyGen, stochastic=True) -> Fx:
+    """Divide by a static positive integer: multiply by round(2^14/q)*2^-14-j."""
+    j = int(math.floor(math.log2(n)))
+    q = n / (1 << j)                      # in [1, 2)
+    inv = fx_const(1.0 / q, 15)           # 2^14..2^15 mantissa
+    out = fx_mul(a, inv, kg, stochastic)
+    return Fx(out.m, out.e - j, out.bits)
+
+
+def fx_narrow(a: Fx, bits: int, kg: KeyGen, stochastic=True) -> Fx:
+    """Dynamically right-shift so the tensor max fits `bits` magnitude bits."""
+    nb = bit_length(jnp.max(jnp.abs(a.m)))
+    sh = jnp.maximum(nb - bits, 0)
+    m = sr_shift_signed(a.m, jnp.broadcast_to(sh, a.m.shape), kg(), stochastic)
+    return Fx(m, a.e + sh, bits)
+
+
+def fx_unify(a: Fx, kg: KeyGen, stochastic=True) -> Fx:
+    """Collapse a per-row scale exponent to a single tensor-wide scalar."""
+    e_max = jnp.max(a.e)
+    m = sr_shift_signed(a.m, jnp.broadcast_to(e_max - a.e, a.m.shape), kg(), stochastic)
+    return Fx(m, e_max, a.bits)
+
+
+def fx_to_f32(a: Fx) -> jnp.ndarray:
+    """Non-linear inverse mapping (int -> normalized float)."""
+    return a.m.astype(jnp.float32) * pow2(jnp.broadcast_to(a.e, a.m.shape))
+
+
+def fx_rsqrt(a: Fx, kg: KeyGen, stochastic=True) -> Fx:
+    """Fixed-point Newton–Raphson 1/sqrt for positive values.
+
+    Normalizes v*2^e to vn in [2^15, 2^17) with even residual exponent,
+    seeds from the bit length, and runs 4 Newton steps, all in int32:
+    r' = r * (3*2^28 - vn*r^2/2^16) / 2^29. Relative error ~1e-4.
+    Returns per-element scale exponents (the caller may fx_unify).
+    """
+    v = jnp.maximum(a.m, 1)
+    b = bit_length(v)
+    d = b - 16                                     # vn = v * 2^-d in [2^15, 2^16)
+    vn = _shift_to(v, -d, kg(), stochastic=False)  # truncation fine: 16-bit norm
+    e2 = a.e + d
+    odd = (e2 & 1) == 1
+    vn = jnp.where(odd, vn << 1, vn)               # [2^15, 2^17)
+    e2 = jnp.where(odd, e2 - 1, e2)
+    r = jnp.where(vn >= (1 << 16), jnp.int32(11585), jnp.int32(16384))  # 2^13.5 / 2^14
+    for _ in range(4):
+        t = (r * r) >> 16                          # <= 2^13.4
+        u = vn * t                                 # <= 2^30.4 : vn*r^2 / 2^16
+        w = (3 << 28) - u                          # target u* = 2^28
+        r = (r * (w >> 14)) >> 15                  # r * w / 2^29
+    # 1/sqrt(v 2^e2) = (r / 2^22) * 2^(-e2/2)
+    return Fx(r, -22 - (e2 >> 1), 15)

@@ -1,0 +1,86 @@
+"""Numeric policy: one switch selecting float / paper-faithful int / variants.
+
+Every model in the zoo takes a ``NumericPolicy``; flipping ``enabled`` (or
+any field) changes the arithmetic of every GEMM, norm and optimizer step
+without touching model code. This is how the paper's Table 1/5 comparisons
+and the beyond-paper per-block variant are all one config away.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .bfp import PER_TENSOR, QuantConfig
+
+__all__ = ["NumericPolicy", "FLOAT32", "PAPER_INT8", "int_policy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericPolicy:
+    """Static numeric configuration (hashable: usable as a jit static arg).
+
+    Attributes:
+      enabled: False -> pure float32 arithmetic everywhere (the paper's
+        baseline column).
+      fwd_bits / bwd_bits: container bit-width for forward activations /
+        weights and for back-propagated gradients (paper: 8/8; Table 5
+        ablates 4..8).
+      block: 0 -> one shared scale per tensor (paper-faithful). >0 ->
+        MX/MSFP-style shared scale per `block` elements along each GEMM's
+        contraction axis (TPU adaptation; removes the all-reduce(max) that
+        per-tensor scales require on sharded tensors).
+      stochastic: stochastic rounding (paper's default). False is only for
+        inference/eval paths.
+      quantize_norms: integer layer-norm/batch-norm fwd+bwd (paper §3.4).
+      quantize_embed: integer embedding gather/scatter.
+      master_bits: SGD state width (paper: int16).
+      accum_chunk: max contraction length per int32 accumulator before a
+        flush to the f32 partial sum (hardware accumulator-flush emulation;
+        keeps worst-case int8 x int8 sums inside int32).
+    """
+
+    enabled: bool = True
+    fwd_bits: int = 8
+    bwd_bits: int = 8
+    block: int = PER_TENSOR
+    stochastic: bool = True
+    quantize_norms: bool = True
+    quantize_embed: bool = True
+    master_bits: int = 16
+    accum_chunk: int = 65536
+    # beyond-paper performance options (see EXPERIMENTS.md §Perf):
+    # fused_proj: merge QKV (and gate/up) projections into one integer GEMM
+    # — the merged weight shares ONE scale (the merged matrix is "a tensor"
+    # under the paper's per-tensor rule), and the input is quantized once
+    # instead of 3x/2x.
+    fused_proj: bool = False
+    # rng: "threefry" (jax default) or "hash" — a per-element avalanche
+    # hash for the stochastic-rounding draws, the software analogue of the
+    # paper's Fig.-4 on-the-fly hardware RNG (~8x less arithmetic).
+    rng: str = "threefry"
+    # backward rounding override: None -> same as `stochastic`. Set by the
+    # attention RNG-dedup path, which rounds the (pre-QDQ'd, on-grid)
+    # forward operands with exact nearest but must keep fresh gradient
+    # tensors stochastically rounded (unbiasedness of the backward).
+    stochastic_bwd: Optional[bool] = None
+
+    def fwd_cfg(self) -> QuantConfig:
+        return QuantConfig(self.fwd_bits, self.block, self.stochastic, self.rng)
+
+    def bwd_cfg(self) -> QuantConfig:
+        sb = self.stochastic if self.stochastic_bwd is None else self.stochastic_bwd
+        return QuantConfig(self.bwd_bits, self.block, sb, self.rng)
+
+    def master_cfg(self) -> QuantConfig:
+        # SGD state is always per-tensor scale (paper §5: "int16 SGD").
+        return QuantConfig(self.master_bits, PER_TENSOR, self.stochastic, self.rng)
+
+
+FLOAT32 = NumericPolicy(enabled=False)
+PAPER_INT8 = NumericPolicy()
+
+
+def int_policy(bits: int = 8, block: int = PER_TENSOR, **kw) -> NumericPolicy:
+    """Shorthand used by the bit-width ablation (Table 5)."""
+    return NumericPolicy(fwd_bits=bits, bwd_bits=bits, block=block, **kw)

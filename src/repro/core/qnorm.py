@@ -1,0 +1,232 @@
+"""Integer layer-norm and batch-norm: integer forward AND integer backward.
+
+The paper's headline systems claim (§1, §5): "the first time that
+back-propagation of a batch-norm ... is performed in integer arithmetic".
+Both norms here compute means, centered values, variances, the rsqrt, the
+normalization products, and all three backward terms
+
+    dx = (1/sigma) * [ gamma*g  -  mean(gamma*g)  -  xhat * mean(gamma*g*xhat) ]
+
+in int32 fixed-point arithmetic (``core.fixed_point``), with stochastic-
+rounded rescaling at every narrowing point so each statistic remains an
+unbiased estimator of its float counterpart (Eqs. (4)-(5); the rounding
+variance folds into eps per the paper's remark under Eq. (5)).
+
+Residuals are stored narrow (int8 centered mantissas + per-row rsqrt),
+not as float activations.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .fixed_point import (Fx, KeyGen, fx_add, fx_const, fx_div_n, fx_mul,
+                          fx_narrow, fx_quantize, fx_rsqrt, fx_sub, fx_sum,
+                          fx_to_f32, fx_unify)
+from .policy import NumericPolicy
+
+__all__ = ["qlayernorm", "qrmsnorm", "qbatchnorm"]
+
+
+def _row(v: Fx) -> Fx:
+    """Broadcast a per-row Fx (...,) to column shape (..., 1)."""
+    e = v.e if v.e.ndim == 0 else v.e[..., None]
+    return Fx(v.m[..., None], e, v.bits)
+
+
+def _ln_stats(xf: Fx, n: int, kg: KeyGen, eps: float) -> Tuple[Fx, Fx]:
+    """Centered int8-grade values and per-row fixed-point rsqrt."""
+    mu = fx_div_n(fx_sum(xf, n, kg), n, kg)
+    c = fx_sub(xf, _row(mu), kg)
+    c7 = fx_narrow(c, 7, kg)
+    var = fx_div_n(fx_sum(fx_mul(c7, c7, kg), n, kg), n, kg)
+    var = fx_add(var, fx_const(eps), kg)
+    rs = fx_rsqrt(var, kg)
+    return c7, rs
+
+
+# ---------------------------------------------------------------------------
+# layer-norm (and rms-norm) over the last axis
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _qln(x, gamma, beta, key, policy: NumericPolicy, eps: float, rms: bool):
+    y, _ = _qln_fwd(x, gamma, beta, key, policy, eps, rms)
+    return y
+
+
+def _qln_fwd(x, gamma, beta, key, policy: NumericPolicy, eps: float, rms: bool):
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, n)
+    kg = KeyGen(key)
+    pb = policy.fwd_bits
+    xf = fx_quantize(x2, pb, kg(), rng=policy.rng)
+    if rms:
+        # RMSNorm: no centering; "c" is x itself narrowed to int8 grade.
+        c7 = fx_narrow(Fx(xf.m, xf.e, xf.bits), 7, kg)
+        var = fx_div_n(fx_sum(fx_mul(c7, c7, kg), n, kg), n, kg)
+        var = fx_add(var, fx_const(eps), kg)
+        rs = fx_rsqrt(var, kg)
+    else:
+        c7, rs = _ln_stats(xf, n, kg, eps)
+    gf = fx_quantize(gamma, pb, kg())
+    xhat = fx_mul(c7, _row(rs), kg)
+    o = fx_mul(xhat, gf, kg)
+    if beta is None:
+        y = fx_to_f32(o)
+    else:
+        bf = fx_quantize(beta, pb, kg())
+        y = fx_to_f32(fx_add(o, bf, kg))
+    res = (Fx(c7.m.astype(jnp.int8), c7.e, c7.bits), rs, gf,
+           jax.random.fold_in(key, 0xBACC))
+    return y.reshape(*lead, n), res
+
+
+def _qln_bwd(policy: NumericPolicy, eps: float, rms: bool, res, gy):
+    c7s, rs, gf, kb = res
+    n = gy.shape[-1]
+    g2 = gy.reshape(-1, n)
+    c7 = Fx(c7s.m.astype(jnp.int32), c7s.e, c7s.bits)
+    kg = KeyGen(kb)
+    gq = fx_quantize(g2, policy.bwd_bits, kg(), rng=policy.rng)
+    t = fx_mul(gf, gq, kg)                                    # gamma * g
+    xhat = fx_narrow(fx_mul(c7, _row(rs), kg), 7, kg)         # normalized x
+    u = fx_mul(t, xhat, kg)
+    m2 = fx_div_n(fx_sum(u, n, kg), n, kg)                    # mean(gamma g xhat)
+    if rms:
+        diff = fx_sub(t, fx_mul(xhat, _row(m2), kg), kg)
+    else:
+        m1 = fx_div_n(fx_sum(t, n, kg), n, kg)                # mean(gamma g)
+        diff = fx_sub(fx_sub(t, _row(m1), kg), fx_mul(xhat, _row(m2), kg), kg)
+    dx = fx_to_f32(fx_mul(diff, _row(rs), kg)).reshape(gy.shape)
+    m_rows = g2.shape[0]
+    dgamma = fx_to_f32(fx_sum(fx_unify(fx_mul(gq, xhat, kg), kg), m_rows, kg, axis=0))
+    # beta exists iff not rms (qrmsnorm passes beta=None)
+    dbeta = None if rms else fx_to_f32(fx_sum(gq, m_rows, kg, axis=0))
+    return dx, dgamma, dbeta, None
+
+
+_qln.defvjp(_qln_fwd, _qln_bwd)
+
+
+def qlayernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: Optional[jnp.ndarray],
+               key: Optional[jax.Array] = None,
+               policy: NumericPolicy = NumericPolicy(), eps: float = 1e-5) -> jnp.ndarray:
+    """Integer layer-norm over the last axis (fwd+bwd in integer arithmetic)."""
+    if not (policy.enabled and policy.quantize_norms):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        v = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(v + eps) * gamma
+        return y if beta is None else y + beta
+    if key is None:
+        raise ValueError("qlayernorm with an integer policy needs a PRNG key")
+    return _qln(x, gamma, beta, key, policy, eps, False)
+
+
+def qrmsnorm(x: jnp.ndarray, gamma: jnp.ndarray,
+             key: Optional[jax.Array] = None,
+             policy: NumericPolicy = NumericPolicy(), eps: float = 1e-6) -> jnp.ndarray:
+    """Integer RMSNorm (the LM-zoo norm): same machinery without centering."""
+    if not (policy.enabled and policy.quantize_norms):
+        v = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(v + eps) * gamma
+    if key is None:
+        raise ValueError("qrmsnorm with an integer policy needs a PRNG key")
+    return _qln(x, gamma, None, key, policy, eps, True)
+
+
+# ---------------------------------------------------------------------------
+# batch-norm over all leading axes (channels-last)
+# ---------------------------------------------------------------------------
+
+def _col(v: Fx) -> Fx:
+    """Broadcast a per-channel Fx (C,) across rows -> (1, C)."""
+    e = v.e if v.e.ndim == 0 else v.e[None, :]
+    return Fx(v.m[None, :], e, v.bits)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _qbn(x, gamma, beta, key, policy: NumericPolicy, eps: float):
+    y, _ = _qbn_fwd(x, gamma, beta, key, policy, eps)
+    return y
+
+
+def _qbn_fwd(x, gamma, beta, key, policy: NumericPolicy, eps: float):
+    c = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, c)
+    m_rows = x2.shape[0]
+    kg = KeyGen(key)
+    xf = fx_quantize(x2, policy.fwd_bits, kg(), rng=policy.rng)
+    mu = fx_div_n(fx_sum(xf, m_rows, kg, axis=0), m_rows, kg)       # (C,)
+    cent = fx_sub(xf, _col(mu), kg)
+    c7 = fx_narrow(cent, 7, kg)
+    var = fx_div_n(fx_sum(fx_mul(c7, c7, kg), m_rows, kg, axis=0), m_rows, kg)
+    var = fx_add(var, fx_const(eps), kg)
+    rs = fx_rsqrt(var, kg)                                          # (C,) per-channel
+    gf = fx_quantize(gamma, policy.fwd_bits, kg())
+    bf = fx_quantize(beta, policy.fwd_bits, kg())
+    xhat = fx_mul(c7, _col(rs), kg)
+    y = fx_to_f32(fx_add(fx_mul(xhat, _col(gf), kg), _col(bf), kg))
+    # batch statistics (dequantized) for the running-stat EMA, outside the
+    # training compute path
+    batch_mean = fx_to_f32(mu)
+    batch_var = fx_to_f32(var)
+    res = (Fx(c7.m.astype(jnp.int8), c7.e, c7.bits), rs, gf,
+           jax.random.fold_in(key, 0xBACC))
+    return (y.reshape(*lead, c), batch_mean, batch_var), res
+
+
+def _qbn_bwd(policy: NumericPolicy, eps: float, res, gys):
+    gy, _, _ = gys  # no gradients flow through the returned batch stats
+    c7s, rs, gf, kb = res
+    n = gy.shape[-1]
+    g2 = gy.reshape(-1, n)
+    m_rows = g2.shape[0]
+    c7 = Fx(c7s.m.astype(jnp.int32), c7s.e, c7s.bits)
+    kg = KeyGen(kb)
+    gq = fx_quantize(g2, policy.bwd_bits, kg(), rng=policy.rng)
+    t = fx_mul(_col(gf), gq, kg)
+    xhat = fx_narrow(fx_mul(c7, _col(rs), kg), 7, kg)
+    m1 = fx_div_n(fx_sum(t, m_rows, kg, axis=0), m_rows, kg)
+    u = fx_mul(t, xhat, kg)
+    m2 = fx_div_n(fx_sum(u, m_rows, kg, axis=0), m_rows, kg)
+    diff = fx_sub(fx_sub(t, _col(m1), kg), fx_mul(xhat, _col(m2), kg), kg)
+    dx = fx_to_f32(fx_mul(diff, _col(rs), kg)).reshape(gy.shape)
+    dgamma = fx_to_f32(fx_sum(fx_unify(fx_mul(gq, xhat, kg), kg), m_rows, kg, axis=0))
+    dbeta = fx_to_f32(fx_sum(gq, m_rows, kg, axis=0))
+    return dx, dgamma, dbeta, None
+
+
+_qbn.defvjp(_qbn_fwd, _qbn_bwd)
+
+
+def qbatchnorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               key: Optional[jax.Array] = None,
+               policy: NumericPolicy = NumericPolicy(), eps: float = 1e-5,
+               *, running: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+               training: bool = True):
+    """Integer batch-norm (channels-last). Returns (y, batch_mean, batch_var).
+
+    ``training=False`` (or frozen BN, as the paper uses for detection /
+    segmentation) normalizes with the supplied ``running`` stats and returns
+    them unchanged. The running-stat EMA itself is the caller's bookkeeping.
+    """
+    if not training:
+        rm, rv = running
+        y = (x - rm) * jax.lax.rsqrt(rv + eps) * gamma + beta
+        return y, rm, rv
+    if not (policy.enabled and policy.quantize_norms):
+        axes = tuple(range(x.ndim - 1))
+        mu = jnp.mean(x, axis=axes)
+        var = jnp.mean(jnp.square(x - mu), axis=axes)
+        y = (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+        return y, mu, var
+    if key is None:
+        raise ValueError("qbatchnorm with an integer policy needs a PRNG key")
+    return _qbn(x, gamma, beta, key, policy, eps)

@@ -1,0 +1,355 @@
+"""Integer GEMM-shaped ops with integer forward AND integer backward.
+
+Every op here is a ``jax.custom_vjp`` whose forward quantizes its float32
+operands to BFP (linear fixed-point mapping), runs the contraction on
+integer mantissas (int8 multiply -> int32 accumulate, exponents add — the
+paper's Fig. 2 integer linear layer), and whose backward quantizes the
+upstream gradient and computes *both* dW and dX as integer GEMMs — exactly
+Appendix A.2 (``dW = X̂ᵀĜ``, ``dX = ĜŴᵀ``).  Residuals hold int8 mantissas
+(+ a scalar scale), not float activations: the 4x activation-memory saving
+of the integer pipeline is real in this implementation.
+
+All contractions reduce to one primitive, ``_contract``: both operands are
+arranged *contraction-last*, quantized (per-tensor scale = paper-faithful;
+per-block scale along the contraction axis = TPU-adapted variant), and fed
+to ``lax.dot_general`` with ``preferred_element_type=int32``.  Contractions
+longer than ``policy.accum_chunk`` are split so worst-case int8 x int8 sums
+can never overflow the int32 accumulator (hardware accumulator flush).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .bfp import BFP, PER_TENSOR, QuantConfig, pow2, quantize, scale_exponent
+from .policy import NumericPolicy
+
+__all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract"]
+
+
+# ---------------------------------------------------------------------------
+# contraction-last integer contraction
+# ---------------------------------------------------------------------------
+
+def _chunk_count(k: int, chunk: int) -> int:
+    """Number of accumulator chunks covering a contraction of length k."""
+    if chunk <= 0 or k <= chunk:
+        return 1
+    n = -(-k // chunk)
+    while k % n:
+        n += 1
+    return n
+
+
+def _pt_dot(am: jnp.ndarray, bm: jnp.ndarray, nbatch: int, nchunk: int) -> jnp.ndarray:
+    """Integer dot, per-tensor scale: a (*B, M, K) x b (*B, N, K) -> (*B, M, N) int32->f32.
+
+    ``nchunk`` > 1 splits K so each int32 accumulator only ever sums
+    K/nchunk int8 x int8 products; partials are combined in f32 (emulating
+    periodic accumulator flushes).
+    """
+    k = am.shape[-1]
+    if nchunk == 1:
+        acc = lax.dot_general(
+            am, bm,
+            (((am.ndim - 1,), (bm.ndim - 1,)),
+             (tuple(range(nbatch)), tuple(range(nbatch)))),
+            preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32)
+    kc = k // nchunk
+    a4 = jnp.moveaxis(am.reshape(*am.shape[:-1], nchunk, kc), -2, nbatch)
+    b4 = jnp.moveaxis(bm.reshape(*bm.shape[:-1], nchunk, kc), -2, nbatch)
+    acc = lax.dot_general(
+        a4, b4,
+        (((a4.ndim - 1,), (b4.ndim - 1,)),
+         (tuple(range(nbatch + 1)), tuple(range(nbatch + 1)))),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32).sum(axis=nbatch)
+
+
+def _blk_dot(aq: BFP, bq: BFP, nbatch: int) -> jnp.ndarray:
+    """Integer dot with per-block scales along the (last) contraction axis.
+
+    Partial int32 products per block are combined in f32 with their block
+    scales — the MX-style contraction (in the Pallas kernel these partials
+    live in VMEM/registers; the jnp emulation materializes them).
+    """
+    blk = aq.cfg.block
+    nb = aq.m.shape[-1] // blk
+    a4 = jnp.moveaxis(aq.m.reshape(*aq.m.shape[:-1], nb, blk), -2, nbatch)
+    b4 = jnp.moveaxis(bq.m.reshape(*bq.m.shape[:-1], nb, blk), -2, nbatch)
+    acc = lax.dot_general(
+        a4, b4,
+        (((a4.ndim - 1,), (b4.ndim - 1,)),
+         (tuple(range(nbatch + 1)), tuple(range(nbatch + 1)))),
+        preferred_element_type=jnp.int32)
+    # acc: (*B, nb, M, N); block scale exponents: aq.e (*B, M, nb), bq.e (*B, N, nb)
+    ea = jnp.moveaxis(scale_exponent(aq.e, aq.cfg), -1, nbatch)[..., :, None]
+    eb = jnp.moveaxis(scale_exponent(bq.e, bq.cfg), -1, nbatch)[..., None, :]
+    return (acc.astype(jnp.float32) * pow2(ea + eb)).sum(axis=nbatch)
+
+
+def _contract_q(aq: BFP, bq: BFP, nbatch: int, chunk: int) -> jnp.ndarray:
+    """Contraction of two pre-quantized contraction-last BFP operands -> f32."""
+    if aq.cfg.block == PER_TENSOR:
+        nchunk = _chunk_count(aq.m.shape[-1], chunk)
+        acc = _pt_dot(aq.m, bq.m, nbatch, nchunk)
+        return acc * pow2(scale_exponent(aq.e, aq.cfg) + scale_exponent(bq.e, bq.cfg))
+    return _blk_dot(aq, bq, nbatch)
+
+
+def _cfg_for_dim(cfg: QuantConfig, dim: int) -> QuantConfig:
+    """Per-block scale needs the contraction dim divisible by the block;
+    otherwise fall back to the per-tensor (paper-faithful) scale."""
+    if cfg.block and dim % cfg.block != 0:
+        return QuantConfig(cfg.bits, PER_TENSOR, cfg.stochastic)
+    return cfg
+
+
+def qcontract(a: jnp.ndarray, b: jnp.ndarray, nbatch: int, cfg: QuantConfig,
+              key: jax.Array, chunk: int = 65536) -> jnp.ndarray:
+    """Quantize-and-contract: a (*B, M, K), b (*B, N, K) -> f32 (*B, M, N)."""
+    ka, kb = jax.random.split(key)
+    return _contract_q(quantize(a, cfg, ka), quantize(b, cfg, kb), nbatch, chunk)
+
+
+def _t(m: jnp.ndarray) -> jnp.ndarray:
+    """Swap the last two axes."""
+    return jnp.swapaxes(m, -1, -2)
+
+
+def _tq(q: BFP) -> BFP:
+    """Transpose the last two axes of a per-tensor-scale BFP tensor."""
+    assert q.cfg.block == PER_TENSOR
+    return BFP(_t(q.m), q.e, q.cfg)
+
+
+def _requant_t(q: BFP, cfg: QuantConfig, key: jax.Array) -> BFP:
+    """Dequantize + requantize the transpose (per-block residual reuse path).
+
+    Per-block scales live along the contraction axis, so reusing a stored
+    operand in a *different* contraction requires re-blocking; composing two
+    unbiased mappings stays unbiased (E{SR(SR(x))} = x).
+    """
+    from .bfp import dequantize
+    return quantize(_t(dequantize(q)), cfg, key)
+
+
+# ---------------------------------------------------------------------------
+# qmatmul: x (..., K) @ w (K, N)   [the paper's Fig. 2 linear layer]
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qmatmul(x, w, key, policy: NumericPolicy):
+    y, _ = _qmatmul_fwd(x, w, key, policy)
+    return y
+
+
+def _qmatmul_fwd(x, w, key, policy: NumericPolicy):
+    cfg = _cfg_for_dim(policy.fwd_cfg(), x.shape[-1])
+    kx, kw, kb = jax.random.split(key, 3)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])                      # (M, K)
+    xq = quantize(x2, cfg, kx)                           # blocks along K
+    wq = quantize(_t(w), cfg, kw)                        # (N, K), blocks along K
+    y = _contract_q(xq, wq, 0, policy.accum_chunk)       # (M, N)
+    return y.reshape(*lead, w.shape[-1]), (xq, wq, kb, lead)
+
+
+def _qmatmul_bwd(policy: NumericPolicy, res, gy):
+    xq, wq, kb, lead = res
+    cfg_b = policy.bwd_cfg()
+    kg, kg2, kx2, kw2 = jax.random.split(kb, 4)
+    g2 = gy.reshape(-1, gy.shape[-1])                    # (M, N)
+    if policy.block == PER_TENSOR:
+        gqN = quantize(g2, cfg_b, kg)                    # scale once
+        gqM = _tq(gqN)                                   # (N, M) same mantissas
+        # dX = G Wᵀ : contract N -> a=(M,N) g, b=(K,N) w
+        dx = _contract_q(gqN, _tq(wq), 0, policy.accum_chunk)          # (M, K)
+        # dW = Xᵀ G : contract M -> a=(K,M), b=(N,M)
+        dw = _contract_q(_tq(xq), gqM, 0, policy.accum_chunk)          # (K, N)
+    else:
+        # per-block: each contraction needs blocks along its own axis.
+        cfg_n = _cfg_for_dim(cfg_b, g2.shape[-1])
+        cfg_m = _cfg_for_dim(cfg_b, g2.shape[0])
+        gqN = quantize(g2, cfg_n, kg)                                   # blocks along N
+        gqM = quantize(_t(g2), cfg_m, kg2)                              # blocks along M
+        dx = _contract_q(gqN, _requant_t(wq, cfg_n, kw2), 0, policy.accum_chunk)
+        dw = _contract_q(_requant_t(xq, cfg_m, kx2), gqM, 0, policy.accum_chunk)
+    return dx.reshape(*lead, dx.shape[-1]), dw, None
+
+
+_qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray, key: Optional[jax.Array] = None,
+            policy: NumericPolicy = NumericPolicy()) -> jnp.ndarray:
+    """Quantized linear contraction x(..., K) @ w(K, N); float path if disabled."""
+    if not policy.enabled:
+        return x @ w
+    if key is None:
+        raise ValueError("qmatmul with an enabled integer policy needs a PRNG key")
+    return _qmatmul(x, w, key, policy)
+
+
+# ---------------------------------------------------------------------------
+# qbmm: batched matmul a (*B, M, K) @ b (*B, K, N)  [attention, MoE experts]
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qbmm(a, b, key, policy: NumericPolicy):
+    y, _ = _qbmm_fwd(a, b, key, policy)
+    return y
+
+
+def _qbmm_fwd(a, b, key, policy: NumericPolicy):
+    cfg = _cfg_for_dim(policy.fwd_cfg(), a.shape[-1])
+    ka, kb_, kres = jax.random.split(key, 3)
+    nbatch = a.ndim - 2
+    aq = quantize(a, cfg, ka)                            # (*B, M, K) blocks on K
+    bq = quantize(_t(b), cfg, kb_)                       # (*B, N, K) blocks on K
+    y = _contract_q(aq, bq, nbatch, policy.accum_chunk)  # (*B, M, N)
+    return y, (aq, bq, kres)
+
+
+def _qbmm_bwd(policy: NumericPolicy, res, gy):
+    aq, bq, kres = res
+    cfg_b = policy.bwd_cfg()
+    kg, kg2, ka2, kb2 = jax.random.split(kres, 4)
+    nbatch = gy.ndim - 2
+    if policy.block == PER_TENSOR:
+        gq = quantize(gy, cfg_b, kg)                     # (*B, M, N)
+        # bq stored (*B, N, K); da contracts N -> needs (*B, K, N).
+        da = _contract_q(gq, _tq(bq), nbatch, policy.accum_chunk)       # (*B, M, K)
+        db = _contract_q(_tq(aq), _tq(gq), nbatch, policy.accum_chunk)  # contract M -> (*B, K, N)
+    else:
+        cfg_n = _cfg_for_dim(cfg_b, gy.shape[-1])
+        cfg_m = _cfg_for_dim(cfg_b, gy.shape[-2])
+        gqN = quantize(gy, cfg_n, kg)
+        gqM = quantize(_t(gy), cfg_m, kg2)
+        # bq is (*B, N, K) blocked on K; da needs (*B, K, N) blocked on N.
+        da = _contract_q(gqN, _requant_t(bq, cfg_n, kb2), nbatch, policy.accum_chunk)
+        db = _contract_q(_requant_t(aq, cfg_m, ka2), gqM, nbatch, policy.accum_chunk)
+    return da, db, None
+
+
+_qbmm.defvjp(_qbmm_fwd, _qbmm_bwd)
+
+
+def qbmm(a: jnp.ndarray, b: jnp.ndarray, key: Optional[jax.Array] = None,
+         policy: NumericPolicy = NumericPolicy()) -> jnp.ndarray:
+    """Quantized batched matmul a(*B, M, K) @ b(*B, K, N) with integer bwd."""
+    if not policy.enabled:
+        return a @ b
+    if key is None:
+        raise ValueError("qbmm with an enabled integer policy needs a PRNG key")
+    return _qbmm(a, b, key, policy)
+
+
+# ---------------------------------------------------------------------------
+# qembed: integer embedding gather + integer scatter-add backward
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qembed(tokens, table, key, policy: NumericPolicy):
+    y, _ = _qembed_fwd(tokens, table, key, policy)
+    return y
+
+
+def _qembed_fwd(tokens, table, key, policy: NumericPolicy):
+    cfg = _cfg_for_dim(policy.fwd_cfg(), table.shape[-1])
+    kt, kb = jax.random.split(key)
+    tq = quantize(table, cfg, kt)                        # (V, D), blocks along D
+    rows = jnp.take(tq.m, tokens, axis=0)                # int8 gather
+    scale = pow2(scale_exponent(tq.e, cfg))
+    if cfg.block == PER_TENSOR:
+        y = rows.astype(jnp.float32) * scale
+    else:
+        erows = jnp.take(scale, tokens, axis=0)          # (..., D/blk)
+        y = (rows.reshape(*rows.shape[:-1], -1, cfg.block).astype(jnp.float32)
+             * erows[..., None]).reshape(rows.shape)
+    return y, (tokens, table.shape[0], kb)
+
+
+def _qembed_bwd(policy: NumericPolicy, res, gy):
+    tokens, vocab, kb = res
+    cfg_b = policy.bwd_cfg()
+    flat_tok = tokens.reshape(-1)
+    g2 = gy.reshape(-1, gy.shape[-1])
+    if policy.block == PER_TENSOR:
+        gq = quantize(g2, QuantConfig(cfg_b.bits, PER_TENSOR, cfg_b.stochastic), kb)
+        # integer scatter-add: int8 mantissas accumulated in int32 rows
+        acc = jax.ops.segment_sum(gq.m.astype(jnp.int32), flat_tok, num_segments=vocab)
+        dtable = acc.astype(jnp.float32) * pow2(scale_exponent(gq.e, gq.cfg))
+    else:
+        # per-block scales differ per row: scatter in float (documented).
+        dtable = jax.ops.segment_sum(g2, flat_tok, num_segments=vocab)
+    return None, dtable, None
+
+
+_qembed.defvjp(_qembed_fwd, _qembed_bwd)
+
+
+def qembed(tokens: jnp.ndarray, table: jnp.ndarray, key: Optional[jax.Array] = None,
+           policy: NumericPolicy = NumericPolicy()) -> jnp.ndarray:
+    """Integer embedding lookup (int8 table) with integer scatter-add grads."""
+    if not (policy.enabled and policy.quantize_embed):
+        return jnp.take(table, tokens, axis=0)
+    if key is None:
+        raise ValueError("qembed with an enabled integer policy needs a PRNG key")
+    return _qembed(tokens, table, key, policy)
+
+
+# ---------------------------------------------------------------------------
+# qconv: NHWC conv as im2col patches + qmatmul (integer fwd + bwd GEMMs)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def qdq_st(x, key, cfg: QuantConfig):
+    """Stochastic quantize-dequantize with a straight-through gradient.
+
+    Used to pre-round a tensor that downstream integer ops will touch many
+    times (e.g. Q across KV chunks): after one unbiased stochastic QDQ the
+    values sit exactly on the int8 grid, so every later requantization at
+    the same (per-tensor) scale is exact under *nearest* rounding — no
+    further random bits are consumed (§Perf iteration: RNG deduplication).
+    """
+    from .bfp import dequantize
+    return dequantize(quantize(x, cfg, key))
+
+
+def _qdq_fwd(x, key, cfg):
+    return qdq_st(x, key, cfg), None
+
+
+def _qdq_bwd(cfg, res, g):
+    return g, None
+
+
+qdq_st.defvjp(_qdq_fwd, _qdq_bwd)
+
+
+def qconv(x: jnp.ndarray, w: jnp.ndarray, key: Optional[jax.Array] = None,
+          policy: NumericPolicy = NumericPolicy(), *,
+          stride: Tuple[int, int] = (1, 1), padding: str = "SAME") -> jnp.ndarray:
+    """2-D convolution, NHWC x HWIO -> NHWC, via integer GEMM.
+
+    The im2col patch extraction / fold-back is pure data movement (gather /
+    scatter-add of already-quantized values); every multiply of both the
+    forward and backward pass happens inside the integer ``qmatmul``.
+    """
+    kh, kw_, cin, cout = w.shape
+    if not policy.enabled:
+        return lax.conv_general_dilated(
+            x, w, stride, padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    patches = lax.conv_general_dilated_patches(
+        x, (kh, kw_), stride, padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))      # (N, Ho, Wo, kh*kw*cin) [CIHW order]
+    # conv_general_dilated_patches emits feature order (cin, kh, kw); match w.
+    w2 = jnp.moveaxis(w, 2, 0).reshape(cin * kh * kw_, cout)
+    return qmatmul(patches, w2, key, policy)

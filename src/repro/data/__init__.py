@@ -1,0 +1,5 @@
+"""Deterministic sharded data pipeline."""
+
+from .pipeline import SyntheticLM, UniformLM, make_batch_specs
+
+__all__ = ["SyntheticLM", "UniformLM", "make_batch_specs"]

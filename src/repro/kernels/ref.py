@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These re-state the kernel semantics in plain jnp (independently of the
+core library where practical) so kernel sweeps have a ground truth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["bfp_quantize_ref", "int8_matmul_ref", "dequant_ref"]
+
+_BASE_SHIFT = 17  # 24-bit mantissa -> 7 magnitude bits (int8)
+
+
+def _unpack(x):
+    b = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    sign = (b >> 31).astype(jnp.int32)
+    bexp = ((b >> 23) & 0xFF).astype(jnp.int32)
+    frac = b & jnp.uint32(0x7FFFFF)
+    mant24 = jnp.where(bexp > 0, frac | jnp.uint32(1 << 23), frac)
+    return sign, jnp.maximum(bexp, 1), mant24
+
+
+def bfp_quantize_ref(x: jnp.ndarray, rand: jnp.ndarray, e_shared: jnp.ndarray):
+    """Linear fixed-point mapping against a given shared exponent.
+
+    x: f32 (M, N); rand: uint32 (M, N); e_shared: int32 per row-group —
+    either scalar () for per-tensor or (M, 1) per-row.
+    Returns int8 mantissas. Threshold-compare stochastic rounding
+    (P(up) = dropped fraction / 2^shift), exact for any shift.
+    """
+    sign, eff, mant24 = _unpack(x)
+    s = (e_shared - eff) + _BASE_SHIFT
+    s31 = jnp.minimum(s, 31).astype(jnp.uint32)
+    base = jnp.where(s < 32, mant24 >> s31, jnp.uint32(0))
+    m_lo = mant24 & ((jnp.uint32(1) << s31) - jnp.uint32(1))
+    left = jnp.clip(32 - s, 0, 31).astype(jnp.uint32)
+    over = jnp.clip(s - 32, 0, 31).astype(jnp.uint32)
+    thr = jnp.where(s <= 31, m_lo << left,
+                    jnp.where(s == 32, mant24, mant24 >> over))
+    up = (rand < thr) & (s > 0)
+    mag = jnp.minimum(base + up.astype(jnp.uint32), jnp.uint32(127)).astype(jnp.int32)
+    return jnp.where(sign == 1, -mag, mag).astype(jnp.int8)
+
+
+def max_biased_exp_ref(x: jnp.ndarray, axis=None) -> jnp.ndarray:
+    _, eff, _ = _unpack(x)
+    return jnp.max(eff, axis=axis)
+
+
+def int8_matmul_ref(a_m: jnp.ndarray, b_m: jnp.ndarray,
+                    scale: jnp.ndarray) -> jnp.ndarray:
+    """int8 (M,K) x int8 (K,N) -> f32 (M,N): int32 accumulate, scale at end."""
+    acc = lax.dot_general(a_m, b_m, (((1,), (0,)), ((), ())),
+                          preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * scale
+
+
+def dequant_ref(m: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return m.astype(jnp.float32) * scale

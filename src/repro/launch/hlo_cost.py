@@ -1,0 +1,275 @@
+"""Loop-aware cost analysis of post-SPMD compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scanned model (layers, microbatches, KV chunks, recurrences) is wildly
+under-counted. This module re-derives per-device costs from
+``compiled.as_text()`` with trip-count multipliers:
+
+  * trip counts come from the ``backend_config={"known_trip_count":...}``
+    XLA attaches to while ops (fallback: the `constant(N)` compared
+    against in the condition computation);
+  * multipliers propagate through the call graph (nested scans multiply);
+  * FLOPs are counted for dot/convolution ops (2 * prod(result) * prod(
+    contracted dims)) — the MXU term; elementwise FLOPs are excluded by
+    design (they belong to the memory term on TPU);
+  * bytes are operands+result of every materializing op (fusion, dot,
+    copy, reduce, scatter/gather, dynamic slices, ...) — an HBM-traffic
+    model consistent with how XLA fusions stage through memory;
+  * collective wire bytes by kind, with a 2x ring factor for all-reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+# ops whose operands/result do NOT represent real data traffic
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "add-dependency",
+    "opt-barrier", "partition-id", "replica-id", "rng-get-and-update-state",
+}
+
+_SHAPE_ELEM = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type: scalar/array `f32[8,16]{1,0}` or tuple `(s32[], ... /*index=5*/ ...)`
+# (tuples of >=5 elements embed `/*index=N*/` comments -> must allow `=`)
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[\w]+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\(")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+_CALLS = re.compile(r"(?:calls|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_ELEM.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(s: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_ELEM.search(s)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_type: str
+    opcode: str
+    line: str
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    current: Optional[str] = None
+    for raw in text.splitlines():
+        if not raw.strip():
+            continue
+        if not raw.startswith(" ") and ("->" in raw) and raw.rstrip().endswith("{"):
+            m = _COMP_HEADER.match(raw.strip())
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if raw.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_LINE.match(raw)
+        if m:
+            comps[current].append(_Op(m.group(1), m.group(2), m.group(3), raw))
+    return comps
+
+
+def _entry_name(text: str) -> Optional[str]:
+    for raw in text.splitlines():
+        if raw.startswith("ENTRY"):
+            m = _COMP_HEADER.match(raw.replace("ENTRY", "", 1).strip())
+            if m:
+                return m.group(1)
+    return None
+
+
+def _dot_flops(op: _Op, symtab: Dict[str, str]) -> float:
+    _, res_dims = _first_shape_dims(op.result_type)
+    out = 1.0
+    for d in res_dims:
+        out *= d
+    # contracted dim sizes from the lhs operand shape
+    operands = _OPERANDS.findall(op.line.split("(", 1)[1].split(")", 1)[0])
+    k = 1.0
+    cm = _CONTRACT.search(op.line)
+    if cm and operands:
+        lhs_type = symtab.get(operands[0], "")
+        _, lhs_dims = _first_shape_dims(lhs_type)
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    return 2.0 * out * k
+
+
+def _conv_flops(op: _Op, symtab: Dict[str, str]) -> float:
+    _, res_dims = _first_shape_dims(op.result_type)
+    out = 1.0
+    for d in res_dims:
+        out *= d
+    operands = _OPERANDS.findall(op.line.split("(", 1)[1].split(")", 1)[0])
+    if len(operands) >= 2:
+        _, k_dims = _first_shape_dims(symtab.get(operands[1], ""))
+        k = 1.0
+        for d in k_dims[:-1]:       # all kernel dims except output features
+            k *= d
+        return 2.0 * out * k
+    return 0.0
+
+
+def _op_bytes(op: _Op, symtab: Dict[str, str]) -> float:
+    total = float(_shape_bytes(op.result_type))
+    args = op.line.split("(", 1)[1].split(")", 1)[0]
+    for name in _OPERANDS.findall(args):
+        total += _shape_bytes(symtab.get(name, ""))
+    return total
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: Dict[str, float]
+    trip_counts: Dict[str, int]
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def coll_total(self) -> float:
+        return sum(v for k, v in self.coll_bytes.items())
+
+    def top_bytes(self, n: int = 12) -> Dict[str, float]:
+        return dict(sorted(self.bytes_by_op.items(), key=lambda kv: -kv[1])[:n])
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    entry = _entry_name(text)
+    symtabs = {c: {op.name: op.result_type for op in ops}
+               for c, ops in comps.items()}
+
+    # call-graph edges: caller -> [(callee, factor per caller execution)]
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for c, ops in comps.items():
+        for op in ops:
+            if op.opcode == "while":
+                t = _TRIP.search(op.line)
+                trips = float(t.group(1)) if t else 1.0
+                for pat in (_CALLS, _COND):
+                    m = pat.search(op.line)
+                    if m and m.group(1) in comps:
+                        edges[c].append((m.group(1), trips))
+            else:
+                for pat in (_CALLS, _TO_APPLY, _COND):
+                    m = pat.search(op.line)
+                    if m and m.group(1) in comps:
+                        edges[c].append((m.group(1), 1.0))
+
+    # topological order from entry over the (acyclic) HLO call graph
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry is None:
+        mult = {c: 1.0 for c in comps}
+    else:
+        order: List[str] = []
+        state: Dict[str, int] = {}
+
+        def visit(c: str):
+            if state.get(c) == 2:
+                return
+            state[c] = 1
+            for callee, _ in edges.get(c, []):
+                if state.get(callee) != 1:   # guard (HLO has no recursion)
+                    visit(callee)
+            state[c] = 2
+            order.append(c)
+
+        visit(entry)
+        mult[entry] = 1.0
+        for c in reversed(order):            # callers before callees
+            for callee, factor in edges.get(c, []):
+                mult[callee] += mult[c] * factor
+
+    flops = 0.0
+    nbytes = 0.0
+    by_op: Dict[str, float] = {}
+    coll = {k: 0.0 for k in _COLL_KINDS}
+    trips: Dict[str, int] = {}
+
+    def _attr(op: _Op, st, m: float) -> None:
+        nonlocal nbytes
+        b = _op_bytes(op, st) * m
+        nbytes += b
+        # attribute fusions by their jax op_name root (e.g. threefry, exp)
+        label = op.opcode
+        if op.opcode == "fusion":
+            om = re.search(r'op_name="jit\([^)]*\)/([^"]+)"', op.line)
+            if om:
+                parts = [p for p in om.group(1).split("/")
+                         if not p.startswith(("while", "body", "cond",
+                                              "closed_call", "checkpoint",
+                                              "rematted", "transpose", "jit",
+                                              "jvp"))]
+                label = f"fusion:{parts[-1] if parts else 'misc'}"
+        by_op[label] = by_op.get(label, 0.0) + b
+
+    for c, ops in comps.items():
+        m = mult.get(c, 0.0)
+        if m <= 0:
+            continue
+        st = symtabs[c]
+        for op in ops:
+            if op.opcode == "while":
+                t = _TRIP.search(op.line)
+                if t:
+                    trips[op.name] = int(t.group(1))
+            base = op.opcode.replace("-start", "")
+            if base in _COLL_KINDS:
+                coll[base] += _shape_bytes(op.result_type) * _WIRE_FACTOR[base] * m
+                _attr(op, st, m)
+                continue
+            if op.opcode == "dot":
+                flops += _dot_flops(op, st) * m
+                _attr(op, st, m)
+            elif op.opcode == "convolution":
+                flops += _conv_flops(op, st) * m
+                _attr(op, st, m)
+            elif op.opcode not in _SKIP_BYTES and not op.opcode.endswith("-done"):
+                _attr(op, st, m)
+    return HloCost(flops=flops, bytes_accessed=nbytes, coll_bytes=coll,
+                   trip_counts=trips, bytes_by_op=by_op)

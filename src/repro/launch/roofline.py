@@ -1,0 +1,153 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e targets):
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16/int8 MXU peak)
+    memory     = HLO_bytes_per_device / 819e9          (HBM bandwidth)
+    collective = wire_bytes_per_device / 50e9          (per-link ICI)
+
+``cost_analysis()`` supplies FLOPs and bytes for the per-device partition.
+Collective wire bytes are NOT in cost_analysis: ``_collective_bytes``
+parses the post-SPMD HLO text and sums shape bytes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute, with a ring
+multiplier of ~2x for all-reduce (reduce-scatter + all-gather phases) and
+(n-1)/n ~ 1 for the others.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "RooflineTerms", "collective_bytes", "roofline_from_compiled",
+           "model_flops"]
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # per chip, bf16/int8
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+# result-shape multiplier approximating wire bytes per device
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # ring: reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Wire bytes per device by collective kind, from post-SPMD HLO text."""
+    out = {k: 0.0 for k in _WIRE_FACTOR}
+    for m in _OP_RE.finditer(hlo_text):
+        shapes = m.group(1) or m.group(2)
+        kind = m.group(3)
+        out[kind] += _shape_bytes(shapes) * _WIRE_FACTOR[kind]
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per device
+    bytes_accessed: float        # per device
+    coll_bytes: float            # per device (wire)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {**dataclasses.asdict(self), "dominant": self.dominant,
+                "step_s": self.step_s}
+
+
+def roofline_from_compiled(compiled, hlo_text: Optional[str] = None) -> RooflineTerms:
+    """Loop-aware terms from the post-SPMD compiled HLO (per device).
+
+    Uses launch.hlo_cost (trip-count-multiplied dots/bytes/collectives) —
+    XLA's own cost_analysis counts while bodies once and is useless for
+    scanned models (see EXPERIMENTS.md §Dry-run, "measurement notes").
+    """
+    from .hlo_cost import analyze_hlo
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = analyze_hlo(text)
+    return RooflineTerms(
+        flops=cost.flops, bytes_accessed=cost.bytes_accessed,
+        coll_bytes=cost.coll_total,
+        compute_s=cost.flops / PEAK_FLOPS,
+        memory_s=cost.bytes_accessed / HBM_BW,
+        collective_s=cost.coll_total / LINK_BW,
+    )
+
+
+def model_flops(cfg, shape, n_layers_active: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for a train step;
+    2*N*D for inference-forward kinds (prefill), 2*N_active per token for
+    decode."""
+    d, L = cfg.d_model, cfg.n_layers
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    # params in the repeated blocks (active path for MoE: top-1 + shared)
+    attn = d * (hq * hd) * 2 + d * (hkv * hd) * 2
+    if cfg.moe_experts:
+        ffn = 3 * d * cfg.d_ff * (2 if cfg.moe_shared else 1)   # routed + shared
+    elif cfg.family == "audio":
+        ffn = 2 * d * cfg.d_ff
+    else:
+        ffn = 3 * d * cfg.d_ff
+    if cfg.family == "ssm":
+        attn = 5 * d * d + 2 * d * cfg.lora_rank     # r/k/v/g/o + decay lora
+        ffn = 2 * d * cfg.d_ff + d * d               # channel mix
+    if cfg.family == "hybrid":
+        np_ = cfg.n_layers // cfg.block_period
+        n_rec = cfg.n_layers - np_
+        rec = 4 * d * d
+        per_layer_ffn = 3 * d * cfg.d_ff
+        n_active = (n_rec * (rec + per_layer_ffn) + np_ * (attn + per_layer_ffn))
+        body = n_active
+    else:
+        body = L * (attn + ffn)
+        if cfg.family == "audio":
+            # encoder + decoder (self+cross) stacks
+            body = cfg.enc_layers * (attn + ffn) + L * (2 * attn + ffn)
+    n_active = body + cfg.vocab * d                  # embeddings/lm head
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,293 @@
+"""Step builders shared by the trainer, the server and the dry-run.
+
+``make_train_step`` returns the paper's full integer pipeline as one jitted
+function: dequantize int16 masters -> integer forward -> integer backward
+-> (optionally microbatched, optionally compression-transported) gradients
+-> integer SGD update. ``make_float_train_step`` is the float32 baseline
+twin. Serving steps wrap prefill/decode_step per family.
+
+Sharding helpers build NamedSharding pytrees for every argument, including
+the BFP-structured optimizer state (mantissas shard like their parameters;
+shared exponents are scalars and replicate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import (BFP, NumericPolicy, integer_sgd_init, integer_sgd_step,
+                    master_params_f32)
+from ..models import get_model
+from ..models.common import ArchConfig
+from ..optim import sgd_init, sgd_step
+from ..runtime.sharding import ShardingRules, spec_tree
+
+__all__ = ["make_train_step", "make_float_train_step", "make_prefill_step",
+           "make_decode_step", "train_state_template", "state_shardings",
+           "params_shardings", "batch_shardings", "cache_template",
+           "cache_shardings", "TrainHyper"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    lr: float = 1e-2
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    microbatch: int = 1          # gradient-accumulation splits of the batch
+    schedule: Optional[Callable] = None   # fn(step) -> lr (overrides lr)
+    # "threefry2x32" (default) or "unsafe_rbg": the TPU hardware RNG
+    # (rng-bit-generator HLO). Stochastic rounding consumes one uniform
+    # draw per element; with threefry that arithmetic dominates HBM
+    # traffic (§Perf iteration 1) — rbg generates bits at memory speed.
+    rng_impl: str = "threefry2x32"
+
+
+_KEY_DATA_LEN = {"threefry2x32": 2, "unsafe_rbg": 4}
+
+
+def key_template(rng_impl: str = "threefry2x32"):
+    return jax.ShapeDtypeStruct((_KEY_DATA_LEN[rng_impl],), jnp.uint32)
+
+
+def _wrap_key(raw, rng_impl: str):
+    if jnp.issubdtype(raw.dtype, jax.dtypes.prng_key):
+        return raw                      # already a typed key (drivers/tests)
+    return jax.random.wrap_key_data(raw, impl=rng_impl)
+
+
+# ---------------------------------------------------------------------------
+# train steps
+# ---------------------------------------------------------------------------
+
+def _grad_fn(mod, cfg, policy):
+    def loss_for(p, b, k):
+        return mod.loss_fn(p, b, k, policy, cfg)
+    return jax.value_and_grad(loss_for)
+
+
+def _accum_grads(vg, params, batch, key, n_micro: int):
+    """Scan microbatches; average loss/grads in f32."""
+    def slice_mb(i):
+        return jax.tree_util.tree_map(
+            lambda a: a.reshape(n_micro, a.shape[0] // n_micro, *a.shape[1:])[i],
+            batch)
+
+    def body(carry, i):
+        loss_acc, g_acc = carry
+        loss, g = vg(params, slice_mb(i), jax.random.fold_in(key, i))
+        g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+        return (loss_acc + loss, g_acc), None
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    (loss, grads), _ = jax.lax.scan(
+        body, (jnp.float32(0), zeros), jnp.arange(n_micro))
+    scale = 1.0 / n_micro
+    return loss * scale, jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def make_train_step(cfg: ArchConfig, policy: NumericPolicy,
+                    hyper: TrainHyper = TrainHyper()):
+    """Integer pipeline train step: (IntSGDState, batch, raw_key) -> (state, loss)."""
+    mod = get_model(cfg)
+    vg = _grad_fn(mod, cfg, policy)
+
+    def train_step(state, batch, key):
+        key = _wrap_key(key, hyper.rng_impl)
+        params = master_params_f32(state)
+        kf = jax.random.fold_in(key, 1)
+        if hyper.microbatch > 1:
+            loss, grads = _accum_grads(vg, params, batch, kf, hyper.microbatch)
+        else:
+            loss, grads = vg(params, batch, kf)
+        lr = hyper.schedule(state.step) if hyper.schedule else hyper.lr
+        state = integer_sgd_step(state, grads, lr, jax.random.fold_in(key, 2),
+                                 policy, momentum=hyper.momentum,
+                                 weight_decay=hyper.weight_decay)
+        return state, loss
+
+    return train_step
+
+
+def make_float_train_step(cfg: ArchConfig, hyper: TrainHyper = TrainHyper()):
+    """Float32 baseline twin: ((params, SGDState), batch, key) -> (..., loss)."""
+    from ..core.policy import FLOAT32
+    mod = get_model(cfg)
+    vg = _grad_fn(mod, cfg, FLOAT32)
+
+    def train_step(carry, batch, key):
+        params, opt = carry
+        if hyper.microbatch > 1:
+            loss, grads = _accum_grads(vg, params, batch, key, hyper.microbatch)
+        else:
+            loss, grads = vg(params, batch, key)
+        lr = hyper.schedule(opt.step) if hyper.schedule else hyper.lr
+        opt, params = sgd_step(opt, params, grads, lr, hyper.momentum,
+                               hyper.weight_decay)
+        return (params, opt), loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, policy: NumericPolicy, max_len: int,
+                      rng_impl: str = "threefry2x32"):
+    mod = get_model(cfg)
+
+    def prefill_step(params, batch, key):
+        key = _wrap_key(key, rng_impl)
+        if cfg.family == "audio":
+            return mod.prefill(params, batch, key, policy, cfg, max_len)
+        if cfg.family == "ssm":
+            return mod.prefill(params, batch["tokens"], key, policy, cfg)
+        if cfg.family == "vlm":
+            return mod.prefill(params, batch["tokens"], key, policy, cfg,
+                               max_len, patch_embeds=batch.get("patch_embeds"))
+        return mod.prefill(params, batch["tokens"], key, policy, cfg, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, policy: NumericPolicy,
+                     rng_impl: str = "threefry2x32"):
+    mod = get_model(cfg)
+
+    def decode_step(params, cache, token, pos, key):
+        key = _wrap_key(key, rng_impl)
+        return mod.decode_step(params, cache, token, pos, key, policy, cfg)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# templates (eval_shape: no allocation) + sharding trees
+# ---------------------------------------------------------------------------
+
+def train_state_template(cfg: ArchConfig, policy: NumericPolicy):
+    mod = get_model(cfg)
+
+    def build(key):
+        return integer_sgd_init(mod.init_params(key, cfg), policy)
+
+    return jax.eval_shape(build, jax.random.key(0))
+
+
+def params_template(cfg: ArchConfig):
+    mod = get_model(cfg)
+    return jax.eval_shape(lambda k: mod.init_params(k, cfg), jax.random.key(0))
+
+
+def _sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Replicate any dim whose size the mapped mesh axes don't divide
+    (odd vocabs like 122753, head counts like 40 vs a 16-wide axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        out.append(entry if total and dim % total == 0 else None)
+    return P(*out)
+
+
+def _sanitized_shardings(spec_names_tree, template_tree, mesh: Mesh,
+                         rules: ShardingRules):
+    specs = spec_tree(rules, spec_names_tree)
+    return jax.tree_util.tree_map(
+        lambda s, t: NamedSharding(mesh, _sanitize_spec(s, t.shape, mesh)),
+        specs, template_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def params_shardings(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules):
+    mod = get_model(cfg)
+    return _sanitized_shardings(mod.param_specs(cfg), params_template(cfg),
+                                mesh, rules)
+
+
+def state_shardings(cfg: ArchConfig, policy: NumericPolicy, mesh: Mesh,
+                    rules: ShardingRules):
+    """IntSGDState sharding tree: BFP mantissas shard like their parameter,
+    shared exponents replicate."""
+    template = train_state_template(cfg, policy)
+    pshard = params_shardings(cfg, mesh, rules)
+    repl = NamedSharding(mesh, P())
+
+    def bfp_shard(leaf_shard):
+        def mk(bfp):
+            return BFP(leaf_shard, repl, bfp.cfg)
+        return mk
+
+    def tree_for(bfp_tree):
+        return jax.tree_util.tree_map(
+            lambda bfp, s: BFP(s, repl, bfp.cfg), bfp_tree, pshard,
+            is_leaf=lambda x: isinstance(x, BFP))
+
+    return type(template)(masters=tree_for(template.masters),
+                          momentum=tree_for(template.momentum),
+                          step=repl)
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules,
+                    batch_template: Dict):
+    b = NamedSharding(mesh, rules.spec(("batch",)))
+    return jax.tree_util.tree_map(lambda _: b, batch_template)
+
+
+def cache_template(cfg: ArchConfig, batch: int, max_len: int,
+                   src_len: Optional[int] = None):
+    mod = get_model(cfg)
+    if cfg.family == "ssm":
+        return jax.eval_shape(lambda: mod.init_state(cfg, batch))
+    if cfg.family == "audio":
+        return jax.eval_shape(
+            lambda: mod.init_cache(cfg, batch, max_len, src_len or max_len))
+    return jax.eval_shape(lambda: mod.init_cache(cfg, batch, max_len))
+
+
+def _kv_axis_names(cfg: ArchConfig, mesh: Mesh) -> Tuple[Optional[str], Optional[str]]:
+    """(kv_heads_name, seq_name): shard heads over `model` when they fill
+    it; otherwise shard the cache sequence dim (flash-decoding SP)."""
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if cfg.n_kv_heads % model_size == 0:
+        return "kv_heads", None
+    return None, "kv_seq_shard"
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules,
+                    template) -> Any:
+    h_name, s_name = _kv_axis_names(cfg, mesh)
+    kv = (None, "batch", h_name, s_name, None)
+    if cfg.family == "ssm":
+        names = {"tm": (None, "batch", None), "cm": (None, "batch", None),
+                 "S": (None, "batch", None, None, None)}
+    elif cfg.family == "hybrid":
+        # Windowed decode dynamic-slices the band out of the cache every
+        # step: a sequence-sharded cache turns that into a cross-device
+        # gather per token. Shard head_dim instead (local slice; QK^T
+        # contraction becomes a tiny score psum) when kv-heads can't fill
+        # the model axis (§Perf iteration 3).
+        hd_name = "heads" if h_name is None else None
+        kv = (None, "batch", h_name, None, hd_name)
+        names = {"conv": (None, None, "batch", None, None),
+                 "h": (None, None, "batch", None), "k": kv, "v": kv}
+        if "conv_t" in template:
+            names["conv_t"] = (None, "batch", None, None)
+            names["h_t"] = (None, "batch", None)
+    elif cfg.family == "audio":
+        names = {"k": kv, "v": kv, "xk": kv, "xv": kv}
+    else:
+        names = {"k": kv, "v": kv}
+    return _sanitized_shardings(names, template, mesh, rules)

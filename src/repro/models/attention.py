@@ -1,0 +1,188 @@
+"""Quantized attention: chunked online-softmax (flash-style) in pure JAX.
+
+QKᵀ and PV are integer matmuls (``qbmm``); the softmax stays float32,
+exactly the paper's ViT recipe (§5: "the computation of softmax in
+attention mechanism is in floating point").
+
+Three paths, all built on the same integer contractions:
+  * ``chunked_attention`` — online-softmax scan over KV chunks. O(chunk)
+    memory for scores: 32k-token prefill never materializes an S x S
+    tensor. GQA contracts grouped queries against each KV head directly
+    (no KV duplication).
+  * ``local_attention`` — banded prefill for sliding-window archs
+    (RecurrentGemma): each query block attends to (prev, self) KV blocks;
+    FLOPs are O(S * window), not O(S^2).
+  * ``decode_attention`` — single-token step against a preallocated cache;
+    windowed archs dynamic-slice the band instead of scanning dead chunks.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import dataclasses
+
+from ..core import NumericPolicy, qbmm
+from ..core.qops import qdq_st
+
+__all__ = ["chunked_attention", "local_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def _group_q(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """(B, Hq, S, D) -> (B, Hkv, g*S, D): queries grouped under their KV head."""
+    b, hq, s, d = q.shape
+    g = hq // n_kv
+    return q.reshape(b, n_kv, g * s, d)
+
+
+def _ungroup(o: jnp.ndarray, hq: int) -> jnp.ndarray:
+    b, n_kv, gs, d = o.shape
+    return o.reshape(b, hq, gs // (hq // n_kv), d)
+
+
+def _qpos(s: int, g: int, offset) -> jnp.ndarray:
+    """Positions of grouped queries (g-major flattening)."""
+    return jnp.tile(jnp.arange(s, dtype=jnp.int32), g) + offset
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      key: Optional[jax.Array], policy: NumericPolicy, *,
+                      causal: bool = True, q_offset=0, window: int = 0,
+                      chunk: int = 1024, scale: float = 0.0,
+                      kv_len=None) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D) -> (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    n_kv, t = k.shape[1], k.shape[2]
+    g = hq // n_kv
+    sc = scale or 1.0 / math.sqrt(d)
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    n_chunks = t // chunk
+
+    qg = _group_q(q, n_kv) * sc
+    qpos = _qpos(s, g, q_offset)                             # (g*S,)
+
+    # RNG deduplication: one stochastic QDQ of Q and K up front puts their
+    # values exactly on the int8 grid; inside the chunk scan the QK^T
+    # integer matmul requantizes with *nearest* rounding, which is exact
+    # for on-grid values — Q is otherwise re-randomized n_chunks times.
+    qk_policy = policy
+    if policy.enabled and policy.stochastic and n_chunks > 1 and key is not None:
+        cfgf = policy.fwd_cfg()
+        qg = qdq_st(qg, jax.random.fold_in(key, 0x71), cfgf)
+        k = qdq_st(k, jax.random.fold_in(key, 0x72), cfgf)
+        qk_policy = dataclasses.replace(policy, stochastic=False, stochastic_bwd=True)
+
+    kc = k.reshape(b, n_kv, n_chunks, chunk, d)
+    vc = v.reshape(b, n_kv, n_chunks, chunk, d)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp                                     # (B,Hkv,C,D)
+        ckey = None if key is None else jax.random.fold_in(key, ci)
+        sck = qbmm(qg, jnp.swapaxes(kb, -1, -2),
+                   None if ckey is None else jax.random.fold_in(ckey, 0),
+                   qk_policy)                                # (B,Hkv,gS,C)
+        kpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = jnp.ones((qpos.shape[0], chunk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        sck = jnp.where(mask, sck, _NEG)
+        m_new = jnp.maximum(m, sck.max(axis=-1))
+        p = jnp.where(mask, jnp.exp(sck - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        pv = qbmm(p, vb, None if ckey is None else jax.random.fold_in(ckey, 1),
+                  policy)                                    # (B,Hkv,gS,D)
+        return (m_new, l * alpha + p.sum(axis=-1), acc * alpha[..., None] + pv), None
+
+    init = (jnp.full((b, n_kv, g * s), _NEG, jnp.float32),
+            jnp.zeros((b, n_kv, g * s), jnp.float32),
+            jnp.zeros((b, n_kv, g * s, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init,
+        (jnp.arange(n_chunks, dtype=jnp.int32),
+         jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return _ungroup(out, hq)
+
+
+def local_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    key: Optional[jax.Array], policy: NumericPolicy, *,
+                    window: int, scale: float = 0.0) -> jnp.ndarray:
+    """Banded causal attention for training/prefill: O(S*window) compute.
+
+    Requires S % window == 0 (configs align); each query block of length W
+    attends to the previous and its own KV block under a causal+band mask.
+    """
+    b, hq, s, d = q.shape
+    n_kv, t = k.shape[1], k.shape[2]
+    if s != t or s % window:
+        return chunked_attention(q, k, v, key, policy, causal=True,
+                                 window=window, scale=scale)
+    w = window
+    nb = s // w
+    g = hq // n_kv
+    sc = scale or 1.0 / math.sqrt(d)
+
+    # blocks of queries under their kv head: (B, Hkv, nb, g*W, D)
+    qb = (q.reshape(b, n_kv, g, nb, w, d).transpose(0, 1, 3, 2, 4, 5)
+          .reshape(b, n_kv, nb, g * w, d)) * sc
+    kb = k.reshape(b, n_kv, nb, w, d)
+    vb = v.reshape(b, n_kv, nb, w, d)
+    # previous block (zeros before block 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :, :1]), kb[:, :, :-1]], axis=2)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :, :1]), vb[:, :, :-1]], axis=2)
+    k2 = jnp.concatenate([kprev, kb], axis=3)                # (B,Hkv,nb,2W,D)
+    v2 = jnp.concatenate([vprev, vb], axis=3)
+
+    sck = qbmm(qb, jnp.swapaxes(k2, -1, -2),
+               None if key is None else jax.random.fold_in(key, 0),
+               policy)                                       # (B,Hkv,nb,gW,2W)
+    qpos = jnp.tile(jnp.arange(w, dtype=jnp.int32), g)       # in-block q pos
+    kpos = jnp.arange(2 * w, dtype=jnp.int32) - w            # rel to block start
+    mask = (kpos[None, :] <= qpos[:, None]) & \
+           ((qpos[:, None] - kpos[None, :]) < w)
+    first = jnp.zeros((nb, 1, 1), bool).at[0].set(True)      # block 0 has no prev
+    valid = jnp.where(first, mask & (kpos >= 0)[None, None, :], mask[None])
+    sck = jnp.where(valid[None, None], sck, _NEG)
+    p = jax.nn.softmax(sck, axis=-1)
+    o = qbmm(p, v2, None if key is None else jax.random.fold_in(key, 1), policy)
+    return (o.reshape(b, n_kv, nb, g, w, d).transpose(0, 1, 3, 2, 4, 5)
+            .reshape(b, hq, s, d))
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos, key: Optional[jax.Array], policy: NumericPolicy, *,
+                     window: int = 0, chunk: int = 0,
+                     scale: float = 0.0) -> jnp.ndarray:
+    """One-token decode: q (B, Hq, 1, D) vs cache (B, Hkv, T, D), pos traced.
+
+    Windowed archs slice the band out of the cache (no dead-chunk scan).
+    Full attention runs single-shot over the whole cache (chunk = T):
+    scores are only B*H*T floats, and with a sequence-sharded cache GSPMD
+    turns the softmax/PV reductions into flash-decoding-style partial
+    reductions + small all-reduces instead of a serializing chunk scan.
+    """
+    if window:
+        t = k_cache.shape[2]
+        w = min(window, t)
+        start = jnp.clip(pos - (w - 1), 0, t - w)
+        kb = jax.lax.dynamic_slice_in_dim(k_cache, start, w, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v_cache, start, w, axis=2)
+        return chunked_attention(q, kb, vb, key, policy, causal=True,
+                                 q_offset=pos - start, chunk=w, scale=scale)
+    return chunked_attention(q, k_cache, v_cache, key, policy, causal=True,
+                             q_offset=pos, chunk=chunk or k_cache.shape[2],
+                             scale=scale)

@@ -1,0 +1,147 @@
+"""Shared model infrastructure: arch config, init, RoPE, losses, KV caches.
+
+Every architecture in the zoo is a pure-functional JAX model built from the
+integer core ops (``repro.core``): a ``NumericPolicy`` flips the entire
+network between float32 and the paper's integer pipeline. Models are
+written with ``lax.scan`` over stacked per-layer parameters so the lowered
+HLO stays O(1) in depth (this matters at 64 layers x 512 devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import NumericPolicy
+from ..runtime.sharding import logical_constraint
+
+__all__ = ["ArchConfig", "KVCache", "dense_init", "rope", "apply_rope",
+           "softmax_xent", "glu_act", "LAYER_AXIS"]
+
+LAYER_AXIS = "layers"  # stacked-parameter leading axis name
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One config describes any architecture in the assigned pool."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu"                # silu (SwiGLU) | gelu (GeGLU) | relu
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 1
+    moe_shared: bool = False         # llama4: shared expert alongside routed
+    capacity_factor: float = 1.25
+    # hybrid (recurrentgemma): block pattern period; indices < attn_offset
+    # are recurrent, the rest attention. "1:2" -> period 3, offset 2.
+    block_period: int = 0
+    attn_offset: int = 0
+    local_window: int = 0            # sliding-window attention (0 = full)
+    conv_width: int = 4              # temporal conv in recurrent blocks
+    # ssm (rwkv6)
+    lora_rank: int = 64
+    # enc-dec (seamless): n_layers applies to each side
+    enc_layers: int = 0
+    # vlm: number of leading positions replaced by patch embeddings
+    patch_positions: int = 0
+    # attention softmax scale override (0 -> 1/sqrt(head_dim))
+    logit_scale: float = 0.0
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: attention-free or bounded-window attention."""
+        return self.family in ("ssm",) or (self.block_period > 0 and self.local_window > 0)
+
+
+class KVCache(dict):
+    """Per-layer stacked KV cache pytree: dict of arrays with leading L axis."""
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches the zoo's public configs)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    sigma = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * sigma)
+
+
+def stacked_init(key: jax.Array, n: int, init_fn):
+    """vmap an init over a leading layer axis."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for positions: (..., dim/2) each."""
+    freqs = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim * math.log(theta))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, D) rotate pairs; cos/sin: (S, D/2) broadcastable."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# activations / losses
+# ---------------------------------------------------------------------------
+
+def glu_act(up: jnp.ndarray, gate: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        return jax.nn.silu(gate) * up
+    if act == "gelu":
+        return jax.nn.gelu(gate) * up
+    if act == "relu":
+        return jax.nn.relu(gate) * up
+    raise ValueError(act)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token CE. Stays float (the paper keeps softmax in float).
+
+    Written reduction-first so GSPMD handles a vocab-sharded logits tensor
+    with two small all-reduces (max + sumexp) instead of an all-gather.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + jnp.squeeze(m, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

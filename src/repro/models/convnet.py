@@ -1,0 +1,114 @@
+"""Small residual CNN — the paper's own experiment family (ResNet/CIFAR).
+
+Integer everything, per Table 1's "fully integer training pipeline":
+int8 conv (im2col integer GEMM fwd+bwd), int8 batch-norm with integer
+forward AND backward (the paper's marquee claim), integer residual adds
+(the custom_vjp adds run on dequantized-int values), int8 linear head,
+int16 SGD. Softmax/CE stays float (paper §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import NumericPolicy, qconv, qmatmul
+from ..core.qnorm import qbatchnorm
+from .common import dense_init
+
+__all__ = ["CNNConfig", "init_params", "loss_fn", "apply", "accuracy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    n_classes: int = 10
+    width: int = 16            # stem channels (ResNet18-CIFAR uses 64)
+    n_blocks: int = 2          # residual blocks per stage
+    n_stages: int = 2          # stages (stride-2 between stages)
+    in_channels: int = 3
+    img: int = 32
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    return dense_init(key, (kh, kw, cin, cout), scale=(2.0 / (kh * kw * cin)) ** 0.5)
+
+
+def init_params(key: jax.Array, cfg: CNNConfig) -> Dict[str, Any]:
+    ks = iter(jax.random.split(key, 4 + cfg.n_stages * cfg.n_blocks * 4))
+    params: Dict[str, Any] = {
+        "stem": _conv_init(next(ks), 3, 3, cfg.in_channels, cfg.width),
+        "stem_bn": {"g": jnp.ones((cfg.width,)), "b": jnp.zeros((cfg.width,))},
+        "blocks": [],
+    }
+    c = cfg.width
+    for s, cout, stride in block_plan(cfg):
+        blk = {
+            "conv1": _conv_init(next(ks), 3, 3, c, cout),
+            "bn1": {"g": jnp.ones((cout,)), "b": jnp.zeros((cout,))},
+            "conv2": _conv_init(next(ks), 3, 3, cout, cout),
+            "bn2": {"g": jnp.ones((cout,)), "b": jnp.zeros((cout,))},
+        }
+        if c != cout or stride != 1:
+            blk["proj"] = _conv_init(next(ks), 1, 1, c, cout)
+        params["blocks"].append(blk)
+        c = cout
+    params["head"] = dense_init(next(ks), (c, cfg.n_classes))
+    return params
+
+
+def block_plan(cfg: CNNConfig):
+    """Static (stage, out_channels, stride) plan — strides are structural,
+    not parameters, so they never enter the traced pytree."""
+    plan = []
+    for s in range(cfg.n_stages):
+        cout = cfg.width * (2 ** s)
+        for b in range(cfg.n_blocks):
+            plan.append((s, cout, 2 if (b == 0 and s > 0) else 1))
+    return plan
+
+
+def _block(x, blk, stride_i, key, policy):
+    ks = jax.random.split(key, 4)
+    stride = (stride_i, stride_i)
+    h = qconv(x, blk["conv1"], ks[0], policy, stride=stride)
+    h, _, _ = qbatchnorm(h, blk["bn1"]["g"], blk["bn1"]["b"], ks[1], policy)
+    h = jax.nn.relu(h)
+    h = qconv(h, blk["conv2"], ks[2], policy)
+    h, _, _ = qbatchnorm(h, blk["bn2"]["g"], blk["bn2"]["b"], ks[3], policy)
+    sc = x
+    if "proj" in blk:
+        sc = qconv(x, blk["proj"], jax.random.fold_in(key, 9), policy,
+                   stride=stride)
+    return jax.nn.relu(h + sc)
+
+
+def apply(params, x, key, policy: NumericPolicy,
+          cfg: CNNConfig = CNNConfig()) -> jnp.ndarray:
+    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    ks = jax.random.split(key, 3)
+    h = qconv(x, params["stem"], ks[0], policy)
+    h, _, _ = qbatchnorm(h, params["stem_bn"]["g"], params["stem_bn"]["b"],
+                         ks[1], policy)
+    h = jax.nn.relu(h)
+    for i, ((_, _, stride), blk) in enumerate(zip(block_plan(cfg),
+                                                  params["blocks"])):
+        h = _block(h, blk, stride, jax.random.fold_in(key, 100 + i), policy)
+    h = h.mean(axis=(1, 2))
+    return qmatmul(h, params["head"], ks[2], policy)
+
+
+def loss_fn(params, batch, key, policy: NumericPolicy,
+            cfg: CNNConfig = CNNConfig()):
+    logits = apply(params, batch["images"], key, policy, cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def accuracy(params, batch, key, policy: NumericPolicy,
+             cfg: CNNConfig = CNNConfig()) -> jnp.ndarray:
+    logits = apply(params, batch["images"], key, policy, cfg)
+    return (jnp.argmax(logits, -1) == batch["labels"]).mean()

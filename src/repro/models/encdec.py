@@ -1,0 +1,313 @@
+"""Seamless-M4T-medium backbone: transformer encoder-decoder (enc 12L +
+dec 12L, MHA, layernorm). The speech/text modality frontend is a STUB per
+the assignment: ``input_specs`` supplies precomputed source frame
+embeddings (B, S_src, d_model); the transformer backbone — every linear,
+attention and norm of both stacks — runs the integer pipeline.
+
+Decode shapes exercise the decoder with a self-attention KV cache plus
+per-layer cross-attention K/V computed once from the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import NumericPolicy, qembed, qmatmul
+from ..core.qnorm import qlayernorm
+from ..runtime.sharding import logical_constraint
+from .attention import chunked_attention, decode_attention
+from .common import ArchConfig, apply_rope, dense_init, rope, softmax_xent
+
+__all__ = ["init_params", "param_specs", "loss_fn", "prefill", "decode_step",
+           "init_cache", "encode"]
+
+
+def _attn_params(key, cfg: ArchConfig, kv_d=None):
+    d, hd, hq, hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    kv_d = kv_d or d
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, hq * hd)),
+        "wk": dense_init(ks[1], (kv_d, hkv * hd)),
+        "wv": dense_init(ks[2], (kv_d, hkv * hd)),
+        "wo": dense_init(ks[3], (hq * hd, d)),
+    }
+
+
+def _ffn_params(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"w_up": dense_init(k1, (cfg.d_model, cfg.d_ff)),
+            "w_down": dense_init(k2, (cfg.d_ff, cfg.d_model))}
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        "attn": _attn_params(k1, cfg), **_ffn_params(k2, cfg),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        "ln3_g": jnp.ones((d,)), "ln3_b": jnp.zeros((d,)),
+        "self": _attn_params(k1, cfg),
+        "cross": _attn_params(k2, cfg),
+        **_ffn_params(k3, cfg),
+    }
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    ke, kd, kt = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+            jax.random.split(ke, cfg.enc_layers)),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+            jax.random.split(kd, cfg.n_layers)),
+        "embed": dense_init(kt, (cfg.vocab, d), scale=0.02),
+        "enc_fn_g": jnp.ones((d,)), "enc_fn_b": jnp.zeros((d,)),
+        "dec_fn_g": jnp.ones((d,)), "dec_fn_b": jnp.zeros((d,)),
+    }
+
+
+def _attn_specs():
+    return {
+        "wq": ("layers", "embed_fsdp", "heads"),
+        "wk": ("layers", "embed_fsdp", "kv_heads"),
+        "wv": ("layers", "embed_fsdp", "kv_heads"),
+        "wo": ("layers", "heads", "embed_fsdp"),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    norm = ("layers", "norm")
+    ffn = {"w_up": ("layers", "embed_fsdp", "mlp"),
+           "w_down": ("layers", "mlp", "embed_fsdp")}
+    enc = {"ln1_g": norm, "ln1_b": norm, "ln2_g": norm, "ln2_b": norm,
+           "attn": _attn_specs(), **ffn}
+    dec = {"ln1_g": norm, "ln1_b": norm, "ln2_g": norm, "ln2_b": norm,
+           "ln3_g": norm, "ln3_b": norm,
+           "self": _attn_specs(), "cross": _attn_specs(), **ffn}
+    return {"enc": enc, "dec": dec, "embed": ("vocab", "embed_fsdp"),
+            "enc_fn_g": ("norm",), "enc_fn_b": ("norm",),
+            "dec_fn_g": ("norm",), "dec_fn_b": ("norm",)}
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _proj_qkv(x_q, x_kv, ap, key, policy, cfg, positions_q=None, positions_k=None):
+    ks = jax.random.split(key, 3)
+    q = _heads(qmatmul(x_q, ap["wq"], ks[0], policy), cfg.n_heads, cfg.hd)
+    k = _heads(qmatmul(x_kv, ap["wk"], ks[1], policy), cfg.n_kv_heads, cfg.hd)
+    v = _heads(qmatmul(x_kv, ap["wv"], ks[2], policy), cfg.n_kv_heads, cfg.hd)
+    if positions_q is not None:
+        cq, sq = rope(positions_q, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cq[None, None], sq[None, None])
+    if positions_k is not None:
+        ck, sk = rope(positions_k, cfg.hd, cfg.rope_theta)
+        k = apply_rope(k, ck[None, None], sk[None, None])
+    return q, k, v
+
+
+def _ffn(x, lp, key, policy):
+    k1, k2 = jax.random.split(key)
+    return qmatmul(jax.nn.gelu(qmatmul(x, lp["w_up"], k1, policy)),
+                   lp["w_down"], k2, policy)
+
+
+def encode(params, src_embeds, key, policy: NumericPolicy, cfg: ArchConfig):
+    """Bidirectional encoder over precomputed frame embeddings."""
+    h = logical_constraint(src_embeds, "batch", "seq", "embed")
+    s = h.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(h, xs):
+        lp, idx = xs
+        lkey = jax.random.fold_in(key, idx)
+
+        def inner(h):
+            hn = qlayernorm(h, lp["ln1_g"], lp["ln1_b"],
+                            jax.random.fold_in(lkey, 0), policy)
+            q, k, v = _proj_qkv(hn, hn, lp["attn"], jax.random.fold_in(lkey, 1),
+                                policy, cfg, positions, positions)
+            o = chunked_attention(q, k, v, jax.random.fold_in(lkey, 2), policy,
+                                  causal=False)
+            h = h + qmatmul(_unheads(o), lp["attn"]["wo"],
+                            jax.random.fold_in(lkey, 3), policy)
+            hn = qlayernorm(h, lp["ln2_g"], lp["ln2_b"],
+                            jax.random.fold_in(lkey, 4), policy)
+            return h + _ffn(hn, lp, jax.random.fold_in(lkey, 5), policy)
+
+        return jax.checkpoint(inner)(h), None
+
+    h, _ = jax.lax.scan(body, h, (params["enc"],
+                                  jnp.arange(cfg.enc_layers, dtype=jnp.int32)))
+    return qlayernorm(h, params["enc_fn_g"], params["enc_fn_b"],
+                      jax.random.fold_in(key, 0xEF), policy)
+
+
+def _dec_layer(h, lp, lkey, policy, cfg, positions, enc_kv=None, enc_out=None,
+               self_kv=None, pos=None):
+    """enc_kv: precomputed cross (k, v); self_kv: decode self cache (k, v)."""
+    hn = qlayernorm(h, lp["ln1_g"], lp["ln1_b"], jax.random.fold_in(lkey, 0), policy)
+    q, k, v = _proj_qkv(hn, hn, lp["self"], jax.random.fold_in(lkey, 1),
+                        policy, cfg, positions, positions)
+    if self_kv is None:
+        o = chunked_attention(q, k, v, jax.random.fold_in(lkey, 2), policy,
+                              causal=True)
+        new_self = (k, v)
+    else:
+        kc, vc = self_kv
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=2)
+        o = decode_attention(q, kc.astype(jnp.float32), vc.astype(jnp.float32),
+                             pos, jax.random.fold_in(lkey, 2), policy)
+        new_self = (kc, vc)
+    h = h + qmatmul(_unheads(o), lp["self"]["wo"], jax.random.fold_in(lkey, 3),
+                    policy)
+    # cross-attention
+    hn = qlayernorm(h, lp["ln2_g"], lp["ln2_b"], jax.random.fold_in(lkey, 4), policy)
+    qx = _heads(qmatmul(hn, lp["cross"]["wq"], jax.random.fold_in(lkey, 5), policy),
+                cfg.n_heads, cfg.hd)
+    if enc_kv is None:
+        kk = jax.random.fold_in(lkey, 6)
+        kx = _heads(qmatmul(enc_out, lp["cross"]["wk"], jax.random.fold_in(kk, 0),
+                            policy), cfg.n_kv_heads, cfg.hd)
+        vx = _heads(qmatmul(enc_out, lp["cross"]["wv"], jax.random.fold_in(kk, 1),
+                            policy), cfg.n_kv_heads, cfg.hd)
+        enc_kv = (kx, vx)
+    ox = chunked_attention(qx, enc_kv[0].astype(jnp.float32),
+                           enc_kv[1].astype(jnp.float32),
+                           jax.random.fold_in(lkey, 7), policy, causal=False)
+    h = h + qmatmul(_unheads(ox), lp["cross"]["wo"], jax.random.fold_in(lkey, 8),
+                    policy)
+    hn = qlayernorm(h, lp["ln3_g"], lp["ln3_b"], jax.random.fold_in(lkey, 9), policy)
+    h = h + _ffn(hn, lp, jax.random.fold_in(lkey, 10), policy)
+    h = logical_constraint(h, "batch", "seq", "embed")
+    return h, new_self, enc_kv
+
+
+def _decode_stack(params, tokens, enc_out, key, policy, cfg):
+    """Teacher-forced decoder over full target sequence."""
+    h = qembed(tokens, params["embed"], jax.random.fold_in(key, 0xE0), policy)
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(h, xs):
+        lp, idx = xs
+        lkey = jax.random.fold_in(key, idx)
+
+        def inner(h):
+            h2, _, _ = _dec_layer(h, lp, lkey, policy, cfg, positions,
+                                  enc_out=enc_out)
+            return h2
+
+        return jax.checkpoint(inner)(h), None
+
+    h, _ = jax.lax.scan(body, h, (params["dec"],
+                                  jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    return qlayernorm(h, params["dec_fn_g"], params["dec_fn_b"],
+                      jax.random.fold_in(key, 0xF1), policy)
+
+
+def loss_fn(params, batch, key, policy: NumericPolicy, cfg: ArchConfig):
+    """batch: {src_embeds (B,Ss,d), tokens (B,St), labels (B,St)}."""
+    ke, kd = jax.random.split(key)
+    enc_out = encode(params, batch["src_embeds"], ke, policy, cfg)
+    h = _decode_stack(params, batch["tokens"], enc_out, kd, policy, cfg)
+    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(kd, 0xF2), policy)
+    logits = logical_constraint(logits, "batch", "seq", "vocab")
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, src_len: int,
+               dtype=jnp.bfloat16):
+    L, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((L, batch, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((L, batch, hkv, max_len, hd), dtype),
+        "xk": jnp.zeros((L, batch, hkv, src_len, hd), dtype),
+        "xv": jnp.zeros((L, batch, hkv, src_len, hd), dtype),
+    }
+
+
+def prefill(params, batch, key, policy: NumericPolicy, cfg: ArchConfig,
+            max_len: int, cache_dtype=jnp.bfloat16):
+    """Encode source; precompute cross K/V; prefill decoder with prompt."""
+    ke, kd = jax.random.split(key)
+    enc_out = encode(params, batch["src_embeds"], ke, policy, cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = qembed(tokens, params["embed"], jax.random.fold_in(kd, 0xE0), policy)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(h, xs):
+        lp, idx = xs
+        lkey = jax.random.fold_in(kd, idx)
+        h, self_kv, enc_kv = _dec_layer(h, lp, lkey, policy, cfg, positions,
+                                        enc_out=enc_out)
+        return h, (self_kv[0], self_kv[1], enc_kv[0], enc_kv[1])
+
+    h, (k, v, xk, xv) = jax.lax.scan(
+        body, h, (params["dec"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    h = qlayernorm(h, params["dec_fn_g"], params["dec_fn_b"],
+                   jax.random.fold_in(kd, 0xF1), policy)
+    pad = max_len - s
+    cache = {
+        "k": jnp.pad(k.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+        "v": jnp.pad(v.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+        "xk": xk.astype(cache_dtype), "xv": xv.astype(cache_dtype),
+    }
+    logits = qmatmul(h[:, -1:], params["embed"].T,
+                     jax.random.fold_in(kd, 0xF2), policy)
+    return cache, logits[:, 0]
+
+
+def decode_step(params, cache, token, pos, key, policy: NumericPolicy,
+                cfg: ArchConfig):
+    h = qembed(token[:, None], params["embed"], jax.random.fold_in(key, 0xE0),
+               policy)
+    positions = pos + jnp.zeros((1,), jnp.int32)
+
+    def body(h, xs):
+        lp, kc, vc, xk, xv, idx = xs
+        lkey = jax.random.fold_in(key, idx)
+        h, self_kv, _ = _dec_layer(
+            h, lp, lkey, policy, cfg, positions,
+            enc_kv=(xk.astype(jnp.float32), xv.astype(jnp.float32)),
+            self_kv=(kc, vc), pos=pos)
+        return h, (self_kv[0], self_kv[1])
+
+    h, (ks_, vs_) = jax.lax.scan(
+        body, h, (params["dec"], cache["k"], cache["v"], cache["xk"],
+                  cache["xv"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    h = qlayernorm(h, params["dec_fn_g"], params["dec_fn_b"],
+                   jax.random.fold_in(key, 0xF1), policy)
+    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    return logits[:, 0], {"k": ks_, "v": vs_, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts block (llama4-style: top-1 routed + shared expert).
+
+Routing (softmax over expert logits) stays float — it is a softmax, which
+the paper keeps in float32 — while every expert GEMM is an integer batched
+matmul (``qbmm`` over the expert axis, which shards over the mesh "model"
+axis = expert parallelism).
+
+Dispatch is sort-free scatter/gather: each token's (expert, slot) flat
+index is computed from a capacity-bounded running count, then tokens are
+scattered into an (E, C, d) buffer (``mode=drop`` handles capacity
+overflow) and gathered back after the expert FFN. O(N*d) data movement —
+no N x (E*C) one-hot matmul.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import NumericPolicy, qbmm, qmatmul
+from .common import ArchConfig, dense_init
+
+__all__ = ["moe_params_init", "moe_param_specs", "moe_block"]
+
+
+def moe_params_init(key: jax.Array, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, e)),
+        "we_gate": jax.vmap(lambda k: dense_init(k, (d, ff)))(jax.random.split(ks[1], e)),
+        "we_up": jax.vmap(lambda k: dense_init(k, (d, ff)))(jax.random.split(ks[2], e)),
+        "we_down": jax.vmap(lambda k: dense_init(k, (ff, d)))(jax.random.split(ks[3], e)),
+    }
+    if cfg.moe_shared:
+        p["ws_gate"] = dense_init(ks[4], (d, ff))
+        p["ws_up"] = dense_init(ks[5], (d, ff))
+        p["ws_down"] = dense_init(ks[6], (ff, d))
+    return p
+
+
+def moe_param_specs(cfg: ArchConfig) -> Dict[str, Tuple]:
+    L = ("layers",)
+    # EP: the expert axis owns the mesh "model" axis, so the ff dim inside
+    # each expert stays unsharded (cannot map one mesh axis twice).
+    p = {
+        "router": L + ("embed_fsdp", None),
+        "we_gate": L + ("experts", "embed_fsdp", None),
+        "we_up": L + ("experts", "embed_fsdp", None),
+        "we_down": L + ("experts", None, "embed_fsdp"),
+    }
+    if cfg.moe_shared:
+        p["ws_gate"] = L + ("embed_fsdp", "mlp")
+        p["ws_up"] = L + ("embed_fsdp", "mlp")
+        p["ws_down"] = L + ("mlp", "embed_fsdp")
+    return p
+
+
+def _expert_ffn(xe: jnp.ndarray, lp, key, policy: NumericPolicy, cfg: ArchConfig):
+    """xe: (E, C, d) -> (E, C, d), integer batched GEMMs over the expert axis."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    gate = qbmm(xe, lp["we_gate"], k1, policy)
+    up = qbmm(xe, lp["we_up"], k2, policy)
+    act = jax.nn.silu(gate) * up
+    return qbmm(act, lp["we_down"], k3, policy)
+
+
+def moe_block(h: jnp.ndarray, lp, key, policy: NumericPolicy,
+              cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h: (B, S, d) -> (out, aux_load_balance_loss). Top-1 routing."""
+    b, s, d = h.shape
+    n = b * s
+    e = cfg.moe_experts
+    cap = max(int(n * cfg.capacity_factor / e), 1)
+    x2 = h.reshape(n, d)
+
+    # -- float router ------------------------------------------------------
+    logits = x2 @ lp["router"]                     # (N, E) float
+    probs = jax.nn.softmax(logits, axis=-1)
+    eid = jnp.argmax(probs, axis=-1)               # (N,)
+    gate = jnp.take_along_axis(probs, eid[:, None], axis=-1)[:, 0]
+
+    # -- capacity-bounded slots --------------------------------------------
+    onehot = jax.nn.one_hot(eid, e, dtype=jnp.int32)          # (N, E)
+    slot = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                               eid[:, None], axis=1)[:, 0]    # (N,)
+    keep = slot < cap
+    flat = jnp.where(keep, eid * cap + slot, e * cap)         # sentinel drops
+
+    # -- dispatch / expert compute / combine --------------------------------
+    xe = jnp.zeros((e * cap, d), h.dtype).at[flat].set(x2, mode="drop")
+    ye = _expert_ffn(xe.reshape(e, cap, d), lp,
+                     jax.random.fold_in(key, 1), policy, cfg)
+    y = ye.reshape(e * cap, d).at[flat].get(mode="fill", fill_value=0)
+    y = y * (gate * keep)[:, None]
+
+    # -- shared expert (llama4) ---------------------------------------------
+    if cfg.moe_shared:
+        ks = jax.random.split(jax.random.fold_in(key, 2), 3)
+        sg = qmatmul(x2, lp["ws_gate"], ks[0], policy)
+        su = qmatmul(x2, lp["ws_up"], ks[1], policy)
+        y = y + qmatmul(jax.nn.silu(sg) * su, lp["ws_down"], ks[2], policy)
+
+    # -- Switch aux loss: E * sum_e f_e * p_e --------------------------------
+    f = jnp.mean(onehot.astype(jnp.float32), axis=0)
+    p_mean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f * p_mean)
+    return y.reshape(b, s, d), aux

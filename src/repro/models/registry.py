@@ -1,0 +1,28 @@
+"""Model registry: dispatch an ArchConfig to its model implementation."""
+
+from __future__ import annotations
+
+from types import ModuleType
+
+from . import encdec, rglru, rwkv6, transformer
+from .common import ArchConfig
+
+__all__ = ["get_model"]
+
+_FAMILY_TO_MODULE = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": rwkv6,
+    "hybrid": rglru,
+    "audio": encdec,
+}
+
+
+def get_model(cfg: ArchConfig) -> ModuleType:
+    """Returns the module implementing init_params / param_specs / loss_fn /
+    prefill / decode_step (+ init_cache or init_state) for this family."""
+    try:
+        return _FAMILY_TO_MODULE[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown architecture family: {cfg.family!r}")

@@ -1,0 +1,332 @@
+"""RecurrentGemma-2B (arXiv:2402.19427): RG-LRU recurrent blocks + local
+attention in a 1:2 ratio — pattern [recurrent, recurrent, attention].
+
+26 layers = 8 full periods (24 layers) + 2 trailing recurrent blocks,
+matching the published block layout. Projections, temporal conv and MLP
+are integer GEMMs; the RG-LRU gate recurrence is elementwise float
+(diagonal state — no GEMM to quantize). Local attention uses the banded
+integer attention (O(S*window)), making the arch sub-quadratic and
+eligible for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import NumericPolicy, qembed, qmatmul
+from ..core.qnorm import qrmsnorm
+from ..runtime.sharding import logical_constraint
+from .attention import decode_attention, local_attention
+from .common import ArchConfig, apply_rope, dense_init, rope, softmax_xent
+
+__all__ = ["init_params", "param_specs", "loss_fn", "prefill", "decode_step",
+           "init_cache"]
+
+_C = 8.0  # RG-LRU gate sharpness constant
+
+
+def _layout(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(n_periods, rec_per_period, n_tail_rec)."""
+    per = cfg.block_period
+    nr = cfg.attn_offset
+    np_ = cfg.n_layers // per
+    tail = cfg.n_layers - np_ * per
+    return np_, nr, tail
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _rec_init(key, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    d, w = cfg.d_model, cfg.conv_width
+    ks = jax.random.split(key, 9)
+    return {
+        "ln_g": jnp.ones((d,)),
+        "w_in": dense_init(ks[0], (d, d)),
+        "w_gate_in": dense_init(ks[1], (d, d)),
+        "conv_w": dense_init(ks[2], (w, d), scale=0.1),
+        "conv_b": jnp.zeros((d,)),
+        "wa": dense_init(ks[3], (d, d), scale=0.01),
+        "wx": dense_init(ks[4], (d, d), scale=0.01),
+        "lam": jnp.full((d,), 2.0),
+        "w_out": dense_init(ks[5], (d, d)),
+        "mlp_ln_g": jnp.ones((d,)),
+        "w_up": dense_init(ks[6], (d, cfg.d_ff)),
+        "w_gate": dense_init(ks[7], (d, cfg.d_ff)),
+        "w_down": dense_init(ks[8], (cfg.d_ff, d)),
+    }
+
+
+def _attn_init(key, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    d, hd, hq, hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "ln_g": jnp.ones((d,)),
+        "wq": dense_init(ks[0], (d, hq * hd)),
+        "wk": dense_init(ks[1], (d, hkv * hd)),
+        "wv": dense_init(ks[2], (d, hkv * hd)),
+        "wo": dense_init(ks[3], (hq * hd, d)),
+        "mlp_ln_g": jnp.ones((d,)),
+        "w_up": dense_init(ks[4], (d, cfg.d_ff)),
+        "w_gate": dense_init(ks[5], (d, cfg.d_ff)),
+        "w_down": dense_init(ks[6], (cfg.d_ff, d)),
+    }
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    np_, nr, tail = _layout(cfg)
+    kr, ka, kt, ke = jax.random.split(key, 4)
+    rec = jax.vmap(lambda k: jax.vmap(lambda kk: _rec_init(kk, cfg))(
+        jax.random.split(k, nr)))(jax.random.split(kr, np_))
+    attn = jax.vmap(lambda k: _attn_init(k, cfg))(jax.random.split(ka, np_))
+    params = {
+        "rec": rec, "attn": attn,
+        "embed": dense_init(ke, (cfg.vocab, cfg.d_model), scale=0.02),
+        "fn_g": jnp.ones((cfg.d_model,)),
+    }
+    if tail:
+        params["rec_tail"] = jax.vmap(lambda k: _rec_init(k, cfg))(
+            jax.random.split(kt, tail))
+    return params
+
+
+def _rec_specs(prefix: Tuple) -> Dict[str, Tuple]:
+    return {
+        "ln_g": prefix + ("norm",), "mlp_ln_g": prefix + ("norm",),
+        "w_in": prefix + ("embed_fsdp", "mlp"),
+        "w_gate_in": prefix + ("embed_fsdp", "mlp"),
+        "conv_w": prefix + ("conv", None), "conv_b": prefix + ("norm",),
+        "wa": prefix + ("embed_fsdp", "mlp"), "wx": prefix + ("embed_fsdp", "mlp"),
+        "lam": prefix + ("norm",),
+        "w_out": prefix + ("mlp", "embed_fsdp"),
+        "w_up": prefix + ("embed_fsdp", "mlp"),
+        "w_gate": prefix + ("embed_fsdp", "mlp"),
+        "w_down": prefix + ("mlp", "embed_fsdp"),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    _, _, tail = _layout(cfg)
+    attn = {
+        "ln_g": ("layers", "norm"), "mlp_ln_g": ("layers", "norm"),
+        "wq": ("layers", "embed_fsdp", "heads"),
+        "wk": ("layers", "embed_fsdp", "kv_heads"),
+        "wv": ("layers", "embed_fsdp", "kv_heads"),
+        "wo": ("layers", "heads", "embed_fsdp"),
+        "w_up": ("layers", "embed_fsdp", "mlp"),
+        "w_gate": ("layers", "embed_fsdp", "mlp"),
+        "w_down": ("layers", "mlp", "embed_fsdp"),
+    }
+    specs = {"rec": _rec_specs(("layers", "layers2")), "attn": attn,
+             "embed": ("vocab", "embed_fsdp"), "fn_g": ("norm",)}
+    if tail:
+        specs["rec_tail"] = _rec_specs(("layers",))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, b, st):
+    """Temporal conv over (B, T, d); st (B, W-1, d) is the carried context."""
+    width = w.shape[0]
+    xp = jnp.concatenate([st, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_st = xp[:, -(width - 1):] if width > 1 else st
+    return out + b, new_st
+
+
+def _rglru(x, gx, lp, h0):
+    """h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t); a_t = sig(lam)^(c r_t)."""
+    r = jax.nn.sigmoid(gx @ lp["wa"])
+    i = jax.nn.sigmoid(gx @ lp["wx"])
+    log_a = -_C * r * jax.nn.softplus(lp["lam"])
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = mult * (i * x)
+
+    def step(h, xs):
+        at, gt = xs
+        h = at * h + gt
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0,
+                          (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hT
+
+
+def _rec_block(h, lp, st, key, policy, cfg):
+    ks = jax.random.split(key, 8)
+    hn = qrmsnorm(h, lp["ln_g"], ks[0], policy)
+    x = qmatmul(hn, lp["w_in"], ks[1], policy)
+    gx = qmatmul(hn, lp["w_gate_in"], ks[2], policy)
+    x, conv_st = _causal_conv(x, lp["conv_w"], lp["conv_b"], st["conv"])
+    y, hT = _rglru(x, gx, lp, st["h"])
+    y = qmatmul(y * jax.nn.gelu(gx), lp["w_out"], ks[3], policy)
+    h = h + y
+    hn = qrmsnorm(h, lp["mlp_ln_g"], ks[4], policy)
+    up = qmatmul(hn, lp["w_up"], ks[5], policy)
+    gate = qmatmul(hn, lp["w_gate"], ks[6], policy)
+    dn = qmatmul(jax.nn.gelu(gate) * up, lp["w_down"], ks[7], policy)
+    return h + dn, {"conv": conv_st, "h": hT}
+
+
+def _heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _attn_block(h, lp, kv, key, policy, cfg, positions, pos=None):
+    ks = jax.random.split(key, 8)
+    hn = qrmsnorm(h, lp["ln_g"], ks[0], policy)
+    q = _heads(qmatmul(hn, lp["wq"], ks[1], policy), cfg.n_heads, cfg.hd)
+    k = _heads(qmatmul(hn, lp["wk"], ks[2], policy), cfg.n_kv_heads, cfg.hd)
+    v = _heads(qmatmul(hn, lp["wv"], ks[3], policy), cfg.n_kv_heads, cfg.hd)
+    cos, sin = rope(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos[None, None], sin[None, None])
+    k = apply_rope(k, cos[None, None], sin[None, None])
+    if kv is None:
+        o = local_attention(q, k, v, ks[4], policy, window=cfg.local_window)
+        new_kv = (k, v)
+    else:
+        kc, vc = kv
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=2)
+        o = decode_attention(q, kc.astype(jnp.float32), vc.astype(jnp.float32),
+                             pos, ks[4], policy, window=cfg.local_window)
+        new_kv = (kc, vc)
+    h = h + qmatmul(_unheads(o), lp["wo"], ks[5], policy)
+    hn = qrmsnorm(h, lp["mlp_ln_g"], ks[6], policy)
+    up = qmatmul(hn, lp["w_up"], ks[7], policy)
+    gate = qmatmul(hn, lp["w_gate"], jax.random.fold_in(ks[7], 1), policy)
+    dn = qmatmul(jax.nn.gelu(gate) * up, lp["w_down"],
+                 jax.random.fold_in(ks[7], 2), policy)
+    return h + dn, new_kv
+
+
+# ---------------------------------------------------------------------------
+# full passes
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    np_, nr, tail = _layout(cfg)
+    d = cfg.d_model
+    z = lambda *s, dt=jnp.float32: jnp.zeros(s, dt)
+    cache = {
+        "conv": z(np_, nr, batch, cfg.conv_width - 1, d),
+        "h": z(np_, nr, batch, d),
+        "k": z(np_, batch, cfg.n_kv_heads, max_len, cfg.hd, dt=dtype),
+        "v": z(np_, batch, cfg.n_kv_heads, max_len, cfg.hd, dt=dtype),
+    }
+    if tail:
+        cache["conv_t"] = z(tail, batch, cfg.conv_width - 1, d)
+        cache["h_t"] = z(tail, batch, d)
+    return cache
+
+
+def _run_periods(params, h, key, policy, cfg, positions, cache=None, pos=None):
+    """Scan the [rec x nr, attn] periods. Returns h and new per-period states."""
+    np_, nr, tail = _layout(cfg)
+    b = h.shape[0]
+    decode = cache is not None
+
+    def period(h, xs):
+        if decode:
+            rec_lp, attn_lp, conv_st, h_st, kc, vc, pidx = xs
+        else:
+            rec_lp, attn_lp, pidx = xs
+            conv_st = jnp.zeros((nr, b, cfg.conv_width - 1, cfg.d_model))
+            h_st = jnp.zeros((nr, b, cfg.d_model))
+            kc = vc = None
+        pkey = jax.random.fold_in(key, pidx)
+
+        def run(h, conv_st, h_st):
+            conv_out, h_out = [], []
+            for j in range(nr):
+                lp_j = jax.tree_util.tree_map(lambda a: a[j], rec_lp)
+                h, st2 = _rec_block(h, lp_j, {"conv": conv_st[j], "h": h_st[j]},
+                                    jax.random.fold_in(pkey, j), policy, cfg)
+                conv_out.append(st2["conv"])
+                h_out.append(st2["h"])
+            kv = (kc, vc) if decode else None
+            h, new_kv = _attn_block(h, attn_lp, kv, jax.random.fold_in(pkey, 97),
+                                    policy, cfg, positions, pos=pos)
+            return h, jnp.stack(conv_out), jnp.stack(h_out), new_kv[0], new_kv[1]
+
+        h, conv_o, h_o, k_o, v_o = jax.checkpoint(run)(h, conv_st, h_st)
+        return h, (conv_o, h_o, k_o, v_o)
+
+    if decode:
+        xs = (params["rec"], params["attn"], cache["conv"], cache["h"],
+              cache["k"], cache["v"], jnp.arange(np_, dtype=jnp.int32))
+    else:
+        xs = (params["rec"], params["attn"], jnp.arange(np_, dtype=jnp.int32))
+    h, (convs, hs, ks_, vs_) = jax.lax.scan(period, h, xs)
+
+    tail_conv, tail_h = [], []
+    if tail:
+        for j in range(tail):
+            lp_j = jax.tree_util.tree_map(lambda a: a[j], params["rec_tail"])
+            st_j = ({"conv": cache["conv_t"][j], "h": cache["h_t"][j]} if decode
+                    else {"conv": jnp.zeros((b, cfg.conv_width - 1, cfg.d_model)),
+                          "h": jnp.zeros((b, cfg.d_model))})
+            h, st2 = _rec_block(h, lp_j, st_j,
+                                jax.random.fold_in(key, 7000 + j), policy, cfg)
+            tail_conv.append(st2["conv"])
+            tail_h.append(st2["h"])
+    new_cache = {"conv": convs, "h": hs, "k": ks_, "v": vs_}
+    if tail:
+        new_cache["conv_t"] = jnp.stack(tail_conv)
+        new_cache["h_t"] = jnp.stack(tail_h)
+    return h, new_cache
+
+
+def _forward(params, tokens, key, policy, cfg, cache=None, pos=None):
+    b, s = tokens.shape
+    h = qembed(tokens, params["embed"], jax.random.fold_in(key, 0xE0), policy)
+    h = logical_constraint(h, "batch", "seq", "embed")
+    positions = (jnp.arange(s, dtype=jnp.int32) if pos is None
+                 else pos + jnp.zeros((1,), jnp.int32))
+    h, st = _run_periods(params, h, key, policy, cfg, positions, cache, pos)
+    h = qrmsnorm(h, params["fn_g"], jax.random.fold_in(key, 0xF1), policy)
+    return h, st
+
+
+def loss_fn(params, batch, key, policy: NumericPolicy, cfg: ArchConfig):
+    h, _ = _forward(params, batch["tokens"], key, policy, cfg)
+    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    logits = logical_constraint(logits, "batch", "seq", "vocab")
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
+            max_len: int, cache_dtype=jnp.bfloat16):
+    b, s = tokens.shape
+    h, st = _forward(params, tokens, key, policy, cfg)
+    pad = max_len - s
+    cache = dict(st)
+    cache["k"] = jnp.pad(st["k"].astype(cache_dtype),
+                         ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    cache["v"] = jnp.pad(st["v"].astype(cache_dtype),
+                         ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    logits = qmatmul(h[:, -1:], params["embed"].T,
+                     jax.random.fold_in(key, 0xF2), policy)
+    return cache, logits[:, 0]
+
+
+def decode_step(params, cache, token, pos, key, policy: NumericPolicy,
+                cfg: ArchConfig):
+    h, cache = _forward(params, token[:, None], key, policy, cfg,
+                        cache=cache, pos=pos)
+    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    return logits[:, 0], cache

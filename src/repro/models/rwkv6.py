@@ -1,0 +1,220 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+decay. All projections (r/k/v/g, decay LoRA, channel-mix, heads) are
+integer GEMMs; the WKV recurrence itself is elementwise float (there is no
+GEMM to quantize — mirrors the paper keeping softmax float).
+
+State per layer: token-shift registers (B, d) x2 and the WKV matrix state
+(B, H, hd, hd) — O(1) in sequence length, which is why this arch runs the
+long_500k cell. Training scans time in remat chunks (chunk-boundary states
+are the only saved activations).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import NumericPolicy, qembed, qmatmul
+from ..core.qnorm import qlayernorm
+from ..runtime.sharding import logical_constraint
+from .common import ArchConfig, dense_init, softmax_xent
+
+__all__ = ["init_params", "param_specs", "loss_fn", "prefill", "decode_step",
+           "init_state", "HEAD_DIM"]
+
+HEAD_DIM = 64
+_TCHUNK = 64   # remat chunk for the time scan
+
+
+def _layer_init(key: jax.Array, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    d, ff, r = cfg.d_model, cfg.d_ff, cfg.lora_rank
+    h = d // HEAD_DIM
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        # time-mix lerp coefficients
+        "mu_r": jnp.full((d,), 0.5), "mu_k": jnp.full((d,), 0.5),
+        "mu_v": jnp.full((d,), 0.5), "mu_g": jnp.full((d,), 0.5),
+        "mu_w": jnp.full((d,), 0.5),
+        # data-dependent decay (LoRA)
+        "w0": jnp.full((d,), -6.0),
+        "wA": dense_init(ks[0], (d, r), scale=0.01),
+        "wB": dense_init(ks[1], (r, d), scale=0.01),
+        "u": dense_init(ks[2], (h, HEAD_DIM), scale=0.5),
+        "Wr": dense_init(ks[3], (d, d)), "Wk": dense_init(ks[4], (d, d)),
+        "Wv": dense_init(ks[5], (d, d)), "Wg": dense_init(ks[6], (d, d)),
+        "Wo": dense_init(ks[7], (d, d)),
+        "gn_g": jnp.ones((d,)), "gn_b": jnp.zeros((d,)),
+        # channel-mix
+        "mu_k2": jnp.full((d,), 0.5), "mu_r2": jnp.full((d,), 0.5),
+        "Wk2": dense_init(ks[8], (d, ff)), "Wv2": dense_init(ks[9], (ff, d)),
+        "Wr2": dense_init(ks[10], (d, d)),
+    }
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    kl, ke = jax.random.split(key)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(jax.random.split(kl, cfg.n_layers))
+    return {
+        "layers": layers,
+        "embed": dense_init(ke, (cfg.vocab, cfg.d_model), scale=0.02),
+        "fn_g": jnp.ones((cfg.d_model,)), "fn_b": jnp.zeros((cfg.d_model,)),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    L = ("layers",)
+    vec = L + ("norm",)
+    layers = {
+        "ln1_g": vec, "ln1_b": vec, "ln2_g": vec, "ln2_b": vec,
+        "mu_r": vec, "mu_k": vec, "mu_v": vec, "mu_g": vec, "mu_w": vec,
+        "w0": vec, "gn_g": vec, "gn_b": vec, "mu_k2": vec, "mu_r2": vec,
+        "wA": L + ("embed_fsdp", None), "wB": L + (None, "embed_fsdp"),
+        "u": L + ("heads", None),
+        "Wr": L + ("embed_fsdp", "mlp"), "Wk": L + ("embed_fsdp", "mlp"),
+        "Wv": L + ("embed_fsdp", "mlp"), "Wg": L + ("embed_fsdp", "mlp"),
+        "Wo": L + ("mlp", "embed_fsdp"),
+        "Wk2": L + ("embed_fsdp", "mlp"), "Wv2": L + ("mlp", "embed_fsdp"),
+        "Wr2": L + ("embed_fsdp", "mlp"),
+    }
+    return {"layers": layers, "embed": ("vocab", "embed_fsdp"),
+            "fn_g": ("norm",), "fn_b": ("norm",)}
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _shift(x, x0):
+    """Previous-token view of x (B, T, d); x0 (B, d) is the register."""
+    return jnp.concatenate([x0[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, state, n_chunks):
+    """Linear recurrence  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t).   Shapes: (B, T, H, hd)."""
+    b, t, h, hd = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                                  # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[..., None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    def chunk_step(S, xs):
+        return jax.checkpoint(
+            lambda S, xs: jax.lax.scan(step, S, xs))(S, xs)
+
+    xs = tuple(jnp.moveaxis(a, 1, 0).reshape(n_chunks, t // n_chunks, b, h, hd)
+               for a in (r, k, v, w))
+    S, ys = jax.lax.scan(chunk_step, state, xs)
+    y = jnp.moveaxis(ys.reshape(t, b, h, hd), 0, 1)          # (B,T,H,hd)
+    return S, y
+
+
+def _time_mix(x, lp, st, key, policy, cfg):
+    """x: (B, T, d); st: {"tm": (B,d), "S": (B,H,hd,hd)} -> (y, st')."""
+    b, t, d = x.shape
+    h = d // HEAD_DIM
+    xp = _shift(x, st["tm"])
+    ks = jax.random.split(key, 7)
+    xr, xk, xv, xg = (_lerp(x, xp, lp[m]) for m in ("mu_r", "mu_k", "mu_v", "mu_g"))
+    xw = _lerp(x, xp, lp["mu_w"])
+    r = qmatmul(xr, lp["Wr"], ks[0], policy).reshape(b, t, h, HEAD_DIM)
+    k = qmatmul(xk, lp["Wk"], ks[1], policy).reshape(b, t, h, HEAD_DIM)
+    v = qmatmul(xv, lp["Wv"], ks[2], policy).reshape(b, t, h, HEAD_DIM)
+    g = qmatmul(xg, lp["Wg"], ks[3], policy)
+    # data-dependent decay: w = exp(-exp(w0 + tanh(xw A) B))  in (0,1)
+    lora = qmatmul(jnp.tanh(qmatmul(xw, lp["wA"], ks[4], policy)),
+                   lp["wB"], ks[5], policy)
+    w = jnp.exp(-jnp.exp(lp["w0"] + lora)).reshape(b, t, h, HEAD_DIM)
+    n_chunks = max(t // _TCHUNK, 1)
+    S, y = _wkv_scan(r, k, v, w, lp["u"], st["S"], n_chunks)
+    # per-head group norm (integer LN over each head's hd channels; the
+    # per-channel affine uses the full-width gamma/beta reshaped per head)
+    y = y.reshape(b, t, d)
+    y = qlayernorm(y.reshape(-1, HEAD_DIM),
+                   lp["gn_g"].reshape(h, HEAD_DIM).mean(0),
+                   lp["gn_b"].reshape(h, HEAD_DIM).mean(0),
+                   jax.random.fold_in(key, 8), policy).reshape(b, t, d)
+    y = y * jax.nn.silu(g)
+    y = qmatmul(y, lp["Wo"], ks[6], policy)
+    return y, {"tm": x[:, -1], "S": S}
+
+
+def _channel_mix(x, lp, st, key, policy):
+    xp = _shift(x, st)
+    ks = jax.random.split(key, 3)
+    xk = _lerp(x, xp, lp["mu_k2"])
+    xr = _lerp(x, xp, lp["mu_r2"])
+    k = jnp.square(jax.nn.relu(qmatmul(xk, lp["Wk2"], ks[0], policy)))
+    r = jax.nn.sigmoid(qmatmul(xr, lp["Wr2"], ks[1], policy))
+    return r * qmatmul(k, lp["Wv2"], ks[2], policy), x[:, -1]
+
+
+def _layer(h, lp, st, key, policy, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    hn = qlayernorm(h, lp["ln1_g"], lp["ln1_b"], k1, policy)
+    a, st_tm = _time_mix(hn, lp, {"tm": st["tm"], "S": st["S"]}, k2, policy, cfg)
+    h = h + a
+    hn = qlayernorm(h, lp["ln2_g"], lp["ln2_b"], k3, policy)
+    c, cm = _channel_mix(hn, lp, st["cm"], k4, policy)
+    h = h + c
+    h = logical_constraint(h, "batch", "seq", "embed")
+    return h, {"tm": st_tm["tm"], "S": st_tm["S"], "cm": cm}
+
+
+def init_state(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    h = d // HEAD_DIM
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    return {"tm": z(cfg.n_layers, batch, d), "cm": z(cfg.n_layers, batch, d),
+            "S": z(cfg.n_layers, batch, h, HEAD_DIM, HEAD_DIM)}
+
+
+def _forward(params, tokens, state, key, policy, cfg):
+    h = qembed(tokens, params["embed"], jax.random.fold_in(key, 0xE0), policy)
+    h = logical_constraint(h, "batch", "seq", "embed")
+
+    def body(h, xs):
+        lp, tm, cm, S, idx = xs
+        st = {"tm": tm, "cm": cm, "S": S}
+        h, st = _layer(h, lp, st, jax.random.fold_in(key, idx), policy, cfg)
+        return h, (st["tm"], st["cm"], st["S"])
+
+    h, (tms, cms, Ss) = jax.lax.scan(
+        body, h,
+        (params["layers"], state["tm"], state["cm"], state["S"],
+         jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    h = qlayernorm(h, params["fn_g"], params["fn_b"],
+                   jax.random.fold_in(key, 0xF1), policy)
+    return h, {"tm": tms, "cm": cms, "S": Ss}
+
+
+def loss_fn(params, batch, key, policy: NumericPolicy, cfg: ArchConfig):
+    b = batch["tokens"].shape[0]
+    h, _ = _forward(params, batch["tokens"], init_state(cfg, b), key, policy, cfg)
+    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    logits = logical_constraint(logits, "batch", "seq", "vocab")
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
+            max_len: int = 0):
+    """State-based prefill; cache = recurrent state (O(1) in length)."""
+    b = tokens.shape[0]
+    h, state = _forward(params, tokens, init_state(cfg, b), key, policy, cfg)
+    logits = qmatmul(h[:, -1:], params["embed"].T,
+                     jax.random.fold_in(key, 0xF2), policy)
+    return state, logits[:, 0]
+
+
+def decode_step(params, state, token, pos, key, policy: NumericPolicy,
+                cfg: ArchConfig):
+    h, state = _forward(params, token[:, None], state, key, policy, cfg)
+    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    return logits[:, 0], state

@@ -1,0 +1,7 @@
+"""Float baseline optimizers and LR schedules."""
+
+from .optimizers import (adamw_init, adamw_step, cosine_schedule, sgd_init,
+                         sgd_step, step_decay, warmup_linear, wsd_schedule)
+
+__all__ = ["adamw_init", "adamw_step", "cosine_schedule", "sgd_init",
+           "sgd_step", "step_decay", "warmup_linear", "wsd_schedule"]

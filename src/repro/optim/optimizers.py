@@ -1,0 +1,97 @@
+"""Float baseline optimizers + LR schedules (the paper's comparison column).
+
+Pure pytree functions (no optax dependency): SGD+momentum (the float twin
+of core.integer_sgd) and AdamW (for the ViT fine-tune recipe, Table 6).
+Schedules cover the zoo's published recipes: step decay (ResNet), cosine
+(MobileNet/ViT), and WSD warmup-stable-decay (MiniCPM).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgd_init", "sgd_step", "adamw_init", "adamw_step",
+           "step_decay", "cosine_schedule", "wsd_schedule", "warmup_linear"]
+
+
+class SGDState(NamedTuple):
+    momentum: Any
+    step: jnp.ndarray
+
+
+def sgd_init(params) -> SGDState:
+    return SGDState(jax.tree_util.tree_map(jnp.zeros_like, params),
+                    jnp.zeros((), jnp.int32))
+
+
+def sgd_step(state: SGDState, params, grads, lr, momentum=0.9, weight_decay=0.0):
+    def upd(v, g, w):
+        return momentum * v + g + weight_decay * w
+
+    new_v = jax.tree_util.tree_map(upd, state.momentum, grads, params)
+    new_p = jax.tree_util.tree_map(lambda w, v: w - lr * v, params, new_v)
+    return SGDState(new_v, state.step + 1), new_p
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    z = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamWState(z(), z(), jnp.zeros((), jnp.int32))
+
+
+def adamw_step(state: AdamWState, params, grads, lr, b1=0.9, b2=0.999,
+               eps=1e-8, weight_decay=0.01):
+    t = state.step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda n, g: b2 * n + (1 - b2) * g * g,
+                                state.nu, grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(w, m, n):
+        return w - lr * (m / bc1 / (jnp.sqrt(n / bc2) + eps) + weight_decay * w)
+
+    return AdamWState(mu, nu, t), jax.tree_util.tree_map(upd, params, mu, nu)
+
+
+# ---------------------------------------------------------------------------
+# schedules (all pure fns of the step, usable inside jit)
+# ---------------------------------------------------------------------------
+
+def step_decay(step, base_lr, decay_every, factor=0.1):
+    """ResNet recipe: x factor every `decay_every` steps."""
+    k = jnp.floor_divide(step, decay_every).astype(jnp.float32)
+    return base_lr * factor ** k
+
+
+def cosine_schedule(step, base_lr, total_steps, final_frac=0.0):
+    frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(math.pi * frac))
+    return base_lr * (final_frac + (1 - final_frac) * cos)
+
+
+def wsd_schedule(step, base_lr, warmup_steps, stable_steps, decay_steps,
+                 final_frac=0.1):
+    """MiniCPM warmup-stable-decay."""
+    s = step.astype(jnp.float32)
+    warm = base_lr * s / jnp.maximum(warmup_steps, 1)
+    decay_frac = jnp.clip((s - warmup_steps - stable_steps) / jnp.maximum(decay_steps, 1),
+                          0.0, 1.0)
+    decay = base_lr * (1.0 - (1.0 - final_frac) * decay_frac)
+    return jnp.where(s < warmup_steps, warm, decay)
+
+
+def warmup_linear(step, base_lr, warmup_steps, ratio=1e-3):
+    s = step.astype(jnp.float32)
+    w = ratio + (1 - ratio) * jnp.clip(s / jnp.maximum(warmup_steps, 1), 0, 1)
+    return base_lr * w

@@ -1,0 +1,7 @@
+"""Distributed runtime: sharding rules, compressed collectives, fault tolerance."""
+
+from .sharding import (DEFAULT_RULES, MULTIPOD_RULES, ShardingRules,
+                       logical_constraint, spec_tree, use_rules)
+
+__all__ = ["DEFAULT_RULES", "MULTIPOD_RULES", "ShardingRules",
+           "logical_constraint", "spec_tree", "use_rules"]

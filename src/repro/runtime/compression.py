@@ -1,0 +1,82 @@
+"""Gradient compression: the paper's own representation mapping applied to
+the data-parallel all-reduce.
+
+Stochastic rounding makes BFP-mapped gradients unbiased (Appendix A.1), so
+compressing the DP gradient sum preserves SGD's convergence contract
+(Theorem 1 — the mapping noise only adds to M^q). Two schemes:
+
+  * ``quantized_psum``      — int8 reduce-scatter + all-gather, built from
+    ``all_to_all`` + local int32 accumulation + ``all_gather``. Wire bytes:
+    2 x size x 1B vs. psum's ~2 x size x 4B -> ~4x compression. Exponents
+    are unified with one tiny pmax first (the shared-scale handshake).
+  * ``psum16``              — mantissas widened to int16 and psum'd
+    directly (2x compression, single collective, no reshard constraint).
+
+Both are unbiased; both are exposed to the train step via the
+``grad_transport`` config.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.bfp import pow2, sr_shift_signed
+from ..core.fixed_point import fx_quantize, fx_to_f32, Fx
+
+__all__ = ["quantized_psum", "psum16"]
+
+
+def _to_shared_scale(x: jnp.ndarray, bits: int, key, axis_name: str,
+                     guard: int):
+    """Quantize x to mantissas on a scale shared across the reduce axis,
+    with `guard` headroom bits so the int32 sum cannot overflow."""
+    f = fx_quantize(x, bits, key)                  # local per-tensor scale
+    e_shared = lax.pmax(f.e, axis_name)            # one scalar handshake
+    m = sr_shift_signed(f.m, jnp.broadcast_to(e_shared - f.e + guard, f.m.shape),
+                        key)
+    return m, e_shared + guard
+
+
+def quantized_psum(x: jnp.ndarray, axis_name: str, key: jax.Array,
+                   bits: int = 8) -> jnp.ndarray:
+    """Unbiased int8 gradient sum over `axis_name` (shard_map context).
+
+    reduce-scatter: all_to_all moves int8 chunks so each device owns one
+    slice of every peer's tensor; local int32 sum (the guard bits taken at
+    quantization time guarantee the sum of n int8 mantissas still fits in
+    int8); int8 all_gather back. Requires leading dim divisible by the
+    axis size (the train step pads).
+    """
+    n = lax.axis_size(axis_name)
+    guard = max((n - 1).bit_length(), 0)           # sum of n values: +log2(n) bits
+    m, e = _to_shared_scale(x, bits, key, axis_name, guard)
+    m8 = m.astype(jnp.int8)                        # |m| <= 127 >> guard
+
+    lead = m8.shape[0]
+    assert lead % n == 0, f"leading dim {lead} not divisible by axis size {n}"
+    # (n, lead/n, ...) -> all_to_all over the first axis = reduce-scatter's
+    # data movement, in int8.
+    chunks = m8.reshape(n, lead // n, *m8.shape[1:])
+    recv = lax.all_to_all(chunks, axis_name, split_axis=0, concat_axis=0,
+                          tiled=False)
+    local_sum = jnp.sum(recv.astype(jnp.int32), axis=0)      # fits int8 by guard
+    gathered = lax.all_gather(local_sum.astype(jnp.int8), axis_name, axis=0,
+                              tiled=True)                    # (lead, ...)
+    return gathered.astype(jnp.float32) * pow2(e)
+
+
+def psum16(x: jnp.ndarray, axis_name: str, key: jax.Array) -> jnp.ndarray:
+    """Unbiased int16 gradient psum (2x wire compression, single collective).
+
+    Guard bits guarantee the reduction never overflows int16, so the
+    collective itself runs on 2-byte words.
+    """
+    m, e = _to_shared_scale(x, 16, key, axis_name,
+                            max((lax.axis_size(axis_name) - 1).bit_length(), 0))
+    total = lax.psum(m.astype(jnp.int16), axis_name)
+    return total.astype(jnp.float32) * pow2(e)

@@ -1,0 +1,118 @@
+"""Fault tolerance & elasticity: heartbeat, straggler detection, re-mesh.
+
+At 1000+ nodes the failure model is: hosts disappear (preemption, HW
+fault), hosts slow down (thermal, ECC storms, noisy neighbors), and the
+job must keep a consistent SPMD world. This module is the *policy* layer —
+pure Python, injectable clock, unit-testable on CPU — that a multi-
+controller launcher consults between steps:
+
+  * ``Heartbeat``        — liveness ledger with timeout -> dead set.
+  * ``StragglerMonitor`` — per-host step-time EWMA; flags hosts whose EWMA
+    exceeds k x the fleet median (the "straggler mitigation" knob; the
+    mitigation itself is a re-mesh excluding the host, or a hot-spare
+    swap).
+  * ``plan_elastic_mesh``— given surviving device count and the desired
+    (data, model) factorization, produce the largest feasible mesh that
+    keeps the model axis intact (TP degree is fixed by memory), shrinking
+    the data axis; batch is re-balanced by the stateless data pipeline.
+  * ``ReshardPlan``      — old-mesh -> new-mesh restore recipe consumed by
+    CheckpointManager.restore(shardings=...).
+
+The synchronous-SPMD consistency rule: a re-mesh happens only at a step
+boundary, from the last committed checkpoint; the data pipeline is
+stateless-by-step so no data is replayed or skipped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+__all__ = ["Heartbeat", "StragglerMonitor", "plan_elastic_mesh", "ReshardPlan"]
+
+
+class Heartbeat:
+    """Liveness ledger. `clock` is injectable for tests."""
+
+    def __init__(self, hosts: List[int], timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        now = clock()
+        self._last: Dict[int, float] = {h: now for h in hosts}
+
+    def beat(self, host: int) -> None:
+        self._last[host] = self.clock()
+
+    def dead(self) -> Set[int]:
+        now = self.clock()
+        return {h for h, t in self._last.items() if now - t > self.timeout}
+
+    def alive(self) -> Set[int]:
+        return set(self._last) - self.dead()
+
+
+class StragglerMonitor:
+    """Per-host step-duration EWMA; flags hosts slower than k x median."""
+
+    def __init__(self, hosts: List[int], alpha: float = 0.2,
+                 threshold: float = 1.5, warmup_steps: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup_steps
+        self._ewma: Dict[int, Optional[float]] = {h: None for h in hosts}
+        self._count: Dict[int, int] = {h: 0 for h in hosts}
+
+    def record(self, host: int, step_seconds: float) -> None:
+        prev = self._ewma[host]
+        self._ewma[host] = (step_seconds if prev is None
+                            else self.alpha * step_seconds + (1 - self.alpha) * prev)
+        self._count[host] += 1
+
+    def _median(self) -> Optional[float]:
+        vals = sorted(v for v in self._ewma.values() if v is not None)
+        return vals[len(vals) // 2] if vals else None
+
+    def stragglers(self) -> Set[int]:
+        med = self._median()
+        if med is None or med <= 0:
+            return set()
+        return {h for h, v in self._ewma.items()
+                if v is not None and self._count[h] >= self.warmup
+                and v > self.threshold * med}
+
+    def mitigation(self, spares: Set[int]) -> Dict[int, Optional[int]]:
+        """straggler -> replacement spare (or None -> drop via re-mesh)."""
+        plan = {}
+        pool = sorted(spares)
+        for h in sorted(self.stragglers()):
+            plan[h] = pool.pop(0) if pool else None
+        return plan
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshardPlan:
+    """Restore recipe: mesh shape to rebuild + the step to restore from."""
+
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    restore_step: Optional[int]
+    dropped_hosts: Tuple[int, ...]
+
+
+def plan_elastic_mesh(n_devices: int, model_parallel: int,
+                      axes: Tuple[str, ...] = ("data", "model"),
+                      restore_step: Optional[int] = None,
+                      dropped_hosts: Tuple[int, ...] = ()) -> ReshardPlan:
+    """Largest (data, model) mesh with the model axis held fixed.
+
+    TP degree is a memory-fit constraint, so elasticity shrinks only the
+    data axis. Raises if fewer than one model group survives.
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_parallel={model_parallel}")
+    data = n_devices // model_parallel
+    return ReshardPlan(mesh_shape=(data, model_parallel), mesh_axes=axes,
+                       restore_step=restore_step, dropped_hosts=dropped_hosts)

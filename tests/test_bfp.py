@@ -1,0 +1,268 @@
+"""Unit + property tests for the representation mapping (paper §3.1-3.2, A.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bfp
+from repro.core.bfp import BFP, QuantConfig, quantize, dequantize, pow2, requantize_i32
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# pow2 scale construction
+# ---------------------------------------------------------------------------
+
+def test_pow2_exact_over_normal_range():
+    es = jnp.arange(-126, 128, dtype=jnp.int32)
+    got = pow2(es)
+    want = np.array([np.float32(2.0) ** float(e) for e in np.asarray(es)], np.float32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_pow2_saturates_to_zero_below_normal_range():
+    # FTZ backends (XLA:CPU and TPU) cannot represent subnormal scales.
+    assert float(pow2(jnp.int32(-127))) == 0.0
+    assert float(pow2(jnp.int32(-300))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# round-trip error bounds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 6, 8, 12, 16])
+def test_roundtrip_error_bound(bits):
+    x = _rand((256, 64), seed=1)
+    cfg = QuantConfig(bits=bits)
+    q = quantize(x, cfg, jax.random.key(0))
+    err = np.abs(np.asarray(dequantize(q) - x))
+    # 1 shared-scale ulp = max|x| scaled down by >= 2^(p-1)
+    bound = float(jnp.max(jnp.abs(x))) / (2 ** (bits - 2))
+    assert err.max() <= bound + 1e-12
+
+
+def test_nearest_mode_is_deterministic_and_halfulp():
+    x = _rand((512,), seed=2)
+    cfg = QuantConfig(bits=8, stochastic=False)
+    q1, q2 = quantize(x, cfg), quantize(x, cfg)
+    np.testing.assert_array_equal(np.asarray(q1.m), np.asarray(q2.m))
+    err = np.abs(np.asarray(dequantize(q1) - x))
+    scale = float(pow2(q1.scale_exp()))
+    assert err.max() <= 0.5 * scale + 1e-12
+
+
+def test_int16_tighter_than_int8():
+    x = _rand((1024,), seed=3)
+    e8 = np.abs(np.asarray(dequantize(quantize(x, QuantConfig(8), jax.random.key(0))) - x)).mean()
+    e16 = np.abs(np.asarray(dequantize(quantize(x, QuantConfig(16), jax.random.key(0))) - x)).mean()
+    assert e16 < e8 / 50  # 8 extra mantissa bits ~ 256x finer
+
+
+# ---------------------------------------------------------------------------
+# unbiasedness (Appendix A.1): E{x_hat} = x under stochastic rounding
+# ---------------------------------------------------------------------------
+
+def test_stochastic_rounding_unbiased():
+    x = _rand((128,), seed=4)
+    cfg = QuantConfig(bits=8)
+    n = 4096
+    keys = jax.random.split(jax.random.key(7), n)
+    deqs = jax.vmap(lambda k: dequantize(quantize(x, cfg, k)))(keys)
+    mean = np.asarray(deqs.mean(axis=0))
+    scale = float(pow2(quantize(x, cfg, keys[0]).scale_exp()))
+    # SR error per draw is < 1 ulp uniform-ish; the mean over n draws must
+    # shrink ~ ulp/sqrt(n). Allow 6 sigma.
+    tol = 6 * scale / np.sqrt(n)
+    np.testing.assert_allclose(mean, np.asarray(x), atol=tol)
+
+
+def test_unbiased_even_for_tiny_values_pushed_subnormal():
+    # Elements far below e_max are shifted >> 17 bits; SR must still be unbiased.
+    x = jnp.array([1.0] + [3e-6] * 127, jnp.float32)
+    cfg = QuantConfig(bits=8)
+    n = 8192
+    keys = jax.random.split(jax.random.key(9), n)
+    deqs = jax.vmap(lambda k: dequantize(quantize(x, cfg, k)))(keys)
+    mean = np.asarray(deqs.mean(axis=0))[1:]
+    # each draw is 0 or 1 ulp; mean converges to 3e-6
+    assert abs(mean.mean() - 3e-6) < 3e-7
+
+
+# ---------------------------------------------------------------------------
+# structural properties
+# ---------------------------------------------------------------------------
+
+def test_zeros_map_to_exact_zero():
+    q = quantize(jnp.zeros((32,)), QuantConfig(8), jax.random.key(0))
+    assert np.all(np.asarray(q.m) == 0)
+    assert np.all(np.asarray(dequantize(q)) == 0.0)
+
+
+def test_sign_preservation_and_symmetry():
+    x = _rand((256,), seed=5)
+    k = jax.random.key(1)
+    qp = quantize(x, QuantConfig(8), k)
+    qn = quantize(-x, QuantConfig(8), k)
+    np.testing.assert_array_equal(np.asarray(qp.m), -np.asarray(qn.m))
+
+
+def test_scale_invariance_mantissas_identical():
+    # quantize(x * 2^k) must produce identical mantissas, exponent shifted by k.
+    x = _rand((256,), seed=6)
+    k = jax.random.key(3)
+    q0 = quantize(x, QuantConfig(8), k)
+    q1 = quantize(x * 1024.0, QuantConfig(8), k)
+    np.testing.assert_array_equal(np.asarray(q0.m), np.asarray(q1.m))
+    assert int(q1.e) - int(q0.e) == 10
+
+
+def test_max_element_mantissa_in_top_octave():
+    x = _rand((4096,), seed=7)
+    q = quantize(x, QuantConfig(8), jax.random.key(0))
+    assert 64 <= int(np.abs(np.asarray(q.m)).max()) <= 127
+
+
+def test_per_block_matches_independent_tensors():
+    x = _rand((4, 256), seed=8)
+    cfg_b = QuantConfig(bits=8, block=128)
+    k = jax.random.key(5)
+    qb = quantize(x, cfg_b, k)
+    assert qb.e.shape == (4, 2)
+    # block scales never below the per-tensor scale accuracy: error bound per block
+    err = np.abs(np.asarray(dequantize(qb) - x))
+    blocks = np.asarray(x).reshape(4, 2, 128)
+    bound = np.abs(blocks).max(axis=-1) / 64.0
+    assert (err.reshape(4, 2, 128).max(axis=-1) <= bound + 1e-12).all()
+
+
+def test_per_block_more_accurate_than_per_tensor_on_mixed_scales():
+    rng = np.random.RandomState(0)
+    x = np.concatenate([rng.randn(128) * 1e-3, rng.randn(128)]).astype(np.float32)
+    x = jnp.asarray(x)
+    k = jax.random.key(0)
+    et = np.abs(np.asarray(dequantize(quantize(x, QuantConfig(8), k)) - x))[:128].mean()
+    eb = np.abs(np.asarray(dequantize(quantize(x, QuantConfig(8, block=128), k)) - x))[:128].mean()
+    assert eb < et / 10
+
+
+def test_bfp_is_pytree():
+    q = quantize(_rand((8, 8)), QuantConfig(8), jax.random.key(0))
+    leaves = jax.tree_util.tree_leaves(q)
+    assert len(leaves) == 2
+    q2 = jax.tree_util.tree_map(lambda a: a, q)
+    assert isinstance(q2, BFP)
+
+
+def test_quantize_inside_jit_and_grad_free():
+    x = _rand((64, 64))
+
+    @jax.jit
+    def f(x, key):
+        return dequantize(quantize(x, QuantConfig(8), key)).sum()
+
+    assert np.isfinite(float(f(x, jax.random.key(0))))
+
+
+# ---------------------------------------------------------------------------
+# requantize_i32
+# ---------------------------------------------------------------------------
+
+def test_requantize_i32_value_preserved():
+    rng = np.random.RandomState(11)
+    acc = jnp.asarray(rng.randint(-(2**26), 2**26, size=(256,), dtype=np.int64).astype(np.int32))
+    E = jnp.int32(-20)
+    q = requantize_i32(acc, E, QuantConfig(8), jax.random.key(2))
+    want = np.asarray(acc, np.float64) * 2.0 ** float(E)
+    got = np.asarray(dequantize(q), np.float64)
+    bound = np.abs(want).max() / 64.0
+    assert np.abs(got - want).max() <= bound
+
+
+def test_requantize_i32_unbiased():
+    acc = jnp.asarray(np.arange(-1000, 1000, 7, dtype=np.int32) * 1003)
+    E = jnp.int32(-10)
+    n = 4096
+    keys = jax.random.split(jax.random.key(13), n)
+    deqs = jax.vmap(lambda k: dequantize(requantize_i32(acc, E, QuantConfig(8), k)))(keys)
+    want = np.asarray(acc, np.float64) * 2.0 ** -10
+    mean = np.asarray(deqs.mean(axis=0), np.float64)
+    ulp = np.abs(want).max() / 127
+    np.testing.assert_allclose(mean, want, atol=6 * ulp / np.sqrt(n))
+
+
+def test_requantize_i32_zero():
+    q = requantize_i32(jnp.zeros((16,), jnp.int32), jnp.int32(0), QuantConfig(8), jax.random.key(0))
+    assert np.all(np.asarray(q.m) == 0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    log_scale=st.integers(-30, 30),
+    n=st.integers(1, 300),
+    bits=st.sampled_from([4, 8, 16]),
+)
+def test_property_roundtrip_bound(seed, log_scale, n, bits):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray((rng.randn(n) * (2.0 ** log_scale)).astype(np.float32))
+    q = quantize(x, QuantConfig(bits=bits), jax.random.key(seed))
+    err = np.abs(np.asarray(dequantize(q), np.float64) - np.asarray(x, np.float64))
+    mx = float(np.abs(np.asarray(x)).max())
+    if mx == 0:
+        assert err.max() == 0
+    else:
+        assert err.max() <= mx / (2 ** (bits - 2)) + 1e-30
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 200))
+def test_property_nearest_idempotent(seed, n):
+    # Quantizing an already-representable tensor (nearest) is exact.
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray((rng.randn(n)).astype(np.float32))
+    cfg = QuantConfig(bits=8, stochastic=False)
+    y = dequantize(quantize(x, cfg))
+    y2 = dequantize(quantize(y, cfg))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+# ---------------------------------------------------------------------------
+# hash-rounding mode (the Fig.-4 on-the-fly RNG analogue, §Perf iteration)
+# ---------------------------------------------------------------------------
+
+def test_hash_rounding_unbiased():
+    x = _rand((128,), seed=21)
+    cfg = QuantConfig(bits=8, rng="hash")
+    n = 4096
+    keys = jax.random.split(jax.random.key(11), n)
+    deqs = jax.vmap(lambda k: dequantize(quantize(x, cfg, k)))(keys)
+    mean = np.asarray(deqs.mean(axis=0))
+    scale = float(pow2(quantize(x, cfg, keys[0]).scale_exp()))
+    tol = 6 * scale / np.sqrt(n)
+    np.testing.assert_allclose(mean, np.asarray(x), atol=tol)
+
+
+def test_hash_rounding_same_error_bound_as_threefry():
+    x = _rand((256, 64), seed=22)
+    q = quantize(x, QuantConfig(bits=8, rng="hash"), jax.random.key(0))
+    err = np.abs(np.asarray(dequantize(q) - x))
+    bound = float(jnp.max(jnp.abs(x))) / 64
+    assert err.max() <= bound + 1e-12
+
+
+def test_hash_rounding_varies_with_key():
+    x = _rand((512,), seed=23)
+    cfg = QuantConfig(bits=8, rng="hash")
+    m1 = np.asarray(quantize(x, cfg, jax.random.key(1)).m)
+    m2 = np.asarray(quantize(x, cfg, jax.random.key(2)).m)
+    assert not np.array_equal(m1, m2)

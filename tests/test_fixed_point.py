@@ -1,0 +1,129 @@
+"""Tests for the int32 fixed-point calculus (budgeted integer arithmetic)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fixed_point import (Fx, KeyGen, fx_add, fx_const, fx_div_n,
+                                    fx_mul, fx_narrow, fx_quantize, fx_rsqrt,
+                                    fx_sub, fx_sum, fx_to_f32, fx_unify)
+
+
+def _kg(seed=0):
+    return KeyGen(jax.random.key(seed))
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+def test_fx_const_exact_powers():
+    for c in [1.0, 0.5, 0.25, 2.0, -3.0, 0.9, 1e-4]:
+        f = fx_const(c)
+        got = float(f.m) * 2.0 ** int(f.e)
+        assert abs(got - c) <= abs(c) * 2 ** -14
+
+
+def test_fx_quantize_roundtrip():
+    x = _rand((64,), 1)
+    f = fx_quantize(x, 16, jax.random.key(0))
+    np.testing.assert_allclose(np.asarray(fx_to_f32(f)), np.asarray(x),
+                               atol=float(jnp.abs(x).max()) * 2 ** -14)
+
+
+def test_fx_mul_add_sub_roundtrip():
+    kg = _kg()
+    a = fx_quantize(_rand((32,), 2), 16, kg())
+    b = fx_quantize(_rand((32,), 3), 16, kg())
+    av, bv = np.asarray(fx_to_f32(a)), np.asarray(fx_to_f32(b))
+    np.testing.assert_allclose(np.asarray(fx_to_f32(fx_mul(a, b, kg))), av * bv,
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fx_to_f32(fx_add(a, b, kg))), av + bv,
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fx_to_f32(fx_sub(a, b, kg))), av - bv,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_fx_mul_never_overflows_with_max_bits():
+    kg = _kg(1)
+    # two full-width operands: product must be pre-narrowed, not overflow
+    a = Fx(jnp.full((8,), (1 << 29) - 1, jnp.int32), jnp.int32(-29), 30)
+    b = Fx(jnp.full((8,), (1 << 29) - 1, jnp.int32), jnp.int32(-29), 30)
+    out = fx_mul(a, b, kg)
+    val = np.asarray(fx_to_f32(out))
+    np.testing.assert_allclose(val, np.ones(8), rtol=1e-3)
+
+
+def test_fx_sum_and_div_n():
+    kg = _kg(2)
+    x = _rand((4, 1000), 4)
+    f = fx_quantize(x, 16, kg())
+    s = fx_div_n(fx_sum(f, 1000, kg), 1000, kg)
+    np.testing.assert_allclose(np.asarray(fx_to_f32(s)),
+                               np.asarray(x.mean(axis=-1)), atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [3, 7, 48, 896, 12288, 33792])
+def test_fx_div_n_nonpow2(n):
+    kg = _kg(3)
+    f = fx_quantize(jnp.asarray([float(n)]), 16, kg())
+    got = float(fx_to_f32(fx_div_n(f, n, kg))[0])
+    assert abs(got - 1.0) < 3e-4
+
+
+def test_fx_rsqrt_accuracy():
+    kg = _kg(4)
+    v = jnp.asarray(np.random.RandomState(5).uniform(1e-6, 1e6, size=(512,)).astype(np.float32))
+    f = fx_quantize(v, 16, kg())
+    # make strictly positive mantissas (quantize keeps sign; v > 0)
+    r = fx_rsqrt(f, kg)
+    got = np.asarray(fx_to_f32(r), np.float64)
+    want = 1.0 / np.sqrt(np.asarray(fx_to_f32(f), np.float64))
+    np.testing.assert_allclose(got, want, rtol=3e-4)
+
+
+def test_fx_rsqrt_extreme_exponents():
+    kg = _kg(5)
+    for val in [1e-30, 1e-3, 1.0, 1e3, 1e30]:
+        f = fx_quantize(jnp.asarray([val]), 16, kg())
+        got = float(fx_to_f32(fx_rsqrt(f, kg))[0])
+        assert abs(got - val ** -0.5) <= 3e-4 * val ** -0.5
+
+
+def test_fx_unify_preserves_values():
+    kg = _kg(6)
+    m = jnp.asarray([100, 200, 300], jnp.int32)
+    e = jnp.asarray([-5, -7, -6], jnp.int32)
+    a = Fx(m, e, 10)
+    u = fx_unify(a, kg)
+    assert u.e.ndim == 0
+    np.testing.assert_allclose(np.asarray(fx_to_f32(u)), np.asarray(fx_to_f32(a)),
+                               rtol=0.02)
+
+
+def test_fx_narrow_bounds_bits():
+    kg = _kg(7)
+    a = Fx(jnp.asarray([(1 << 20) + 7, -(1 << 19)], jnp.int32), jnp.int32(-20), 21)
+    n = fx_narrow(a, 7, kg)
+    assert int(jnp.abs(n.m).max()) < (1 << 7)
+    np.testing.assert_allclose(np.asarray(fx_to_f32(n)), np.asarray(fx_to_f32(a)),
+                               rtol=0.02)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale_a=st.integers(-20, 20),
+       scale_b=st.integers(-20, 20))
+def test_property_fx_add_mixed_scales(seed, scale_a, scale_b):
+    kg = _kg(seed)
+    rng = np.random.RandomState(seed)
+    a = jnp.asarray(rng.randn(16).astype(np.float32) * 2.0 ** scale_a)
+    b = jnp.asarray(rng.randn(16).astype(np.float32) * 2.0 ** scale_b)
+    fa = fx_quantize(a, 16, kg())
+    fb = fx_quantize(b, 16, kg())
+    got = np.asarray(fx_to_f32(fx_add(fa, fb, kg)), np.float64)
+    want = np.asarray(a, np.float64) + np.asarray(b, np.float64)
+    tol = max(float(jnp.abs(a).max()), float(jnp.abs(b).max())) * 2 ** -13
+    np.testing.assert_allclose(got, want, atol=tol)

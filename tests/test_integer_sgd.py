@@ -1,0 +1,114 @@
+"""Integer SGD (A.4): unbiased integer weight update, trajectory parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BFP, NumericPolicy, integer_sgd_init, integer_sgd_step,
+                        master_params_f32, qmatmul)
+
+P = NumericPolicy()
+
+
+def test_masters_are_int16():
+    params = {"w": jnp.ones((8, 8)), "b": jnp.zeros((8,))}
+    st = integer_sgd_init(params, P)
+    leaves = jax.tree_util.tree_leaves(
+        st.masters, is_leaf=lambda x: isinstance(x, BFP))
+    for leaf in leaves:
+        assert isinstance(leaf, BFP) and leaf.m.dtype == jnp.int16
+
+
+def test_init_roundtrip_accuracy():
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.asarray(rng.randn(32, 32).astype(np.float32))}
+    st = integer_sgd_init(params, P)
+    back = master_params_f32(st)
+    np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(params["w"]),
+                               atol=float(jnp.abs(params["w"]).max()) * 2 ** -14)
+
+
+def test_single_step_matches_float_sgd():
+    rng = np.random.RandomState(1)
+    w = jnp.asarray(rng.randn(64).astype(np.float32))
+    g = jnp.asarray(rng.randn(64).astype(np.float32) * 0.1)
+    st = integer_sgd_init({"w": w}, P)
+    st = integer_sgd_step(st, {"w": g}, 0.1, jax.random.key(0), P,
+                          momentum=0.9, weight_decay=1e-4)
+    got = np.asarray(master_params_f32(st)["w"])
+    want = np.asarray(w - 0.1 * (g + 1e-4 * w))   # first step: v = g + wd*w
+    atol = float(jnp.abs(w).max()) * 2 ** -12
+    np.testing.assert_allclose(got, want, atol=atol)
+
+
+def test_momentum_accumulates_like_float():
+    rng = np.random.RandomState(2)
+    w = jnp.asarray(rng.randn(32).astype(np.float32))
+    st = integer_sgd_init({"w": w}, P)
+    wf, vf = np.asarray(w, np.float64), np.zeros(32)
+    for i in range(20):
+        g = jnp.asarray(rng.randn(32).astype(np.float32) * 0.05)
+        st = integer_sgd_step(st, {"w": g}, 0.05, jax.random.key(i), P, momentum=0.9)
+        vf = 0.9 * vf + np.asarray(g, np.float64)
+        wf = wf - 0.05 * vf
+    got = np.asarray(master_params_f32(st)["w"], np.float64)
+    assert np.abs(got - wf).max() <= 5e-3 * (np.abs(wf).max() + 1)
+
+
+def test_update_unbiased():
+    w = jnp.asarray(np.linspace(-1, 1, 16, dtype=np.float32))
+    g = jnp.asarray(np.linspace(0.3, -0.2, 16, dtype=np.float32))
+
+    def upd(key):
+        st = integer_sgd_init({"w": w}, P, key=key)
+        st = integer_sgd_step(st, {"w": g}, 0.1, key, P, momentum=0.0)
+        return master_params_f32(st)["w"]
+
+    n = 2048
+    keys = jax.random.split(jax.random.key(3), n)
+    ws = np.asarray(jax.vmap(upd)(keys), np.float64)
+    want = np.asarray(w - 0.1 * g, np.float64)
+    sd = ws.std(axis=0).max() + 1e-9
+    np.testing.assert_allclose(ws.mean(axis=0), want, atol=6 * sd / np.sqrt(n) + 1e-6)
+
+
+def test_end_to_end_integer_training_descends_like_float():
+    """Fig. 3c in miniature: integer pipeline (int8 GEMM fwd/bwd + int16 SGD)
+    tracks the float loss trajectory on a small regression task."""
+    rng = np.random.RandomState(4)
+    X = jnp.asarray(rng.randn(256, 16).astype(np.float32))
+    true_w = rng.randn(16, 4).astype(np.float32)
+    Y = jnp.asarray(X @ true_w + 0.01 * rng.randn(256, 4).astype(np.float32))
+
+    def loss_int(w, key):
+        return ((qmatmul(X, w, key, P) - Y) ** 2).mean()
+
+    def loss_flt(w):
+        return ((X @ w - Y) ** 2).mean()
+
+    w0 = jnp.asarray(rng.randn(16, 4).astype(np.float32) * 0.1)
+
+    # integer pipeline
+    st = integer_sgd_init({"w": w0}, P)
+    key = jax.random.key(5)
+    traj_i = []
+    for i in range(60):
+        k = jax.random.fold_in(key, i)
+        w = master_params_f32(st)["w"]
+        g = jax.grad(loss_int)(w, k)
+        st = integer_sgd_step(st, {"w": g}, 0.05, k, P, momentum=0.9)
+        traj_i.append(float(loss_flt(master_params_f32(st)["w"])))
+
+    # float pipeline
+    wf, vf = w0, jnp.zeros_like(w0)
+    traj_f = []
+    for i in range(60):
+        g = jax.grad(loss_flt)(wf)
+        vf = 0.9 * vf + g
+        wf = wf - 0.05 * vf
+        traj_f.append(float(loss_flt(wf)))
+
+    # trajectories track each other (paper's central empirical claim)
+    assert traj_i[-1] <= traj_f[-1] + 0.05
+    mid = len(traj_f) // 2
+    assert abs(traj_i[mid] - traj_f[mid]) <= 0.25 * (traj_f[0] - traj_f[-1] + 1e-3)

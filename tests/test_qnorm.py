@@ -1,0 +1,182 @@
+"""Integer layer-norm / rms-norm / batch-norm: fwd + bwd vs float reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NumericPolicy, qbatchnorm, qlayernorm, qrmsnorm
+from repro.core.policy import FLOAT32
+
+KEY = jax.random.key(7)
+P8 = NumericPolicy()
+
+
+def _rand(shape, seed=0, scale=1.0, loc=0.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray((rng.randn(*shape) * scale + loc).astype(np.float32))
+
+
+def _ln_ref(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    v = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(v + eps) * g + b
+
+
+def _rms_ref(x, g, eps=1e-6):
+    v = (x ** 2).mean(axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(v + eps) * g
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 896, 1000])
+def test_qlayernorm_forward_close(n):
+    x = _rand((8, n), 1, scale=2.0, loc=0.7)
+    g = _rand((n,), 2, scale=0.2, loc=1.0)
+    b = _rand((n,), 3, scale=0.1)
+    y = qlayernorm(x, g, b, KEY, P8)
+    ref = _ln_ref(x, g, b)
+    # int8-grade normalization: elementwise error ~ few ulps of the output
+    assert np.abs(np.asarray(y - ref)).max() <= 0.08 * float(jnp.abs(ref).max()) + 0.02
+
+
+def test_qrmsnorm_forward_close():
+    x = _rand((8, 512), 4, scale=1.5)
+    g = _rand((512,), 5, scale=0.1, loc=1.0)
+    y = qrmsnorm(x, g, KEY, P8)
+    ref = _rms_ref(x, g)
+    assert np.abs(np.asarray(y - ref)).max() <= 0.08 * float(jnp.abs(ref).max()) + 0.02
+
+
+def test_qlayernorm_scale_invariance_of_output():
+    # LN output is invariant to input scale; integer LN must track that
+    x = _rand((4, 256), 6)
+    g = jnp.ones((256,))
+    b = jnp.zeros((256,))
+    y1 = qlayernorm(x, g, b, KEY, P8)
+    y2 = qlayernorm(x * 512.0, g, b, KEY, P8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=0.15)
+
+
+def test_qlayernorm_float_policy_matches_reference():
+    x = _rand((4, 128), 7)
+    g, b = _rand((128,), 8, loc=1.0), _rand((128,), 9)
+    np.testing.assert_allclose(np.asarray(qlayernorm(x, g, b, None, FLOAT32)),
+                               np.asarray(_ln_ref(x, g, b)), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def test_qlayernorm_grads_close_to_float():
+    x = _rand((16, 256), 10, scale=1.3, loc=0.2)
+    g = _rand((256,), 11, scale=0.2, loc=1.0)
+    b = _rand((256,), 12, scale=0.1)
+
+    def lq(x, g, b):
+        return (qlayernorm(x, g, b, KEY, P8) * _rand((16, 256), 13)).sum()
+
+    def lf(x, g, b):
+        return (_ln_ref(x, g, b) * _rand((16, 256), 13)).sum()
+
+    gq = jax.grad(lq, argnums=(0, 1, 2))(x, g, b)
+    gf = jax.grad(lf, argnums=(0, 1, 2))(x, g, b)
+    for q, f, tol in zip(gq, gf, (0.15, 0.15, 0.15)):
+        scale = float(jnp.abs(f).max()) + 1e-6
+        assert np.abs(np.asarray(q - f)).max() <= tol * scale, (
+            np.abs(np.asarray(q - f)).max(), scale)
+
+
+def test_qrmsnorm_grads_close_to_float():
+    x = _rand((8, 512), 14, scale=1.1)
+    g = _rand((512,), 15, scale=0.15, loc=1.0)
+    co = _rand((8, 512), 16)
+
+    gq = jax.grad(lambda x, g: (qrmsnorm(x, g, KEY, P8) * co).sum(), argnums=(0, 1))(x, g)
+    gf = jax.grad(lambda x, g: (_rms_ref(x, g) * co).sum(), argnums=(0, 1))(x, g)
+    for q, f in zip(gq, gf):
+        scale = float(jnp.abs(f).max()) + 1e-6
+        assert np.abs(np.asarray(q - f)).max() <= 0.15 * scale
+
+
+def test_qlayernorm_grads_unbiased():
+    x = _rand((4, 64), 17)
+    g = jnp.ones((64,))
+    b = jnp.zeros((64,))
+    co = _rand((4, 64), 18)
+
+    def gx(key):
+        return jax.grad(lambda x: (qlayernorm(x, g, b, key, P8) * co).sum())(x)
+
+    n = 1024
+    keys = jax.random.split(jax.random.key(3), n)
+    gxs = np.asarray(jax.vmap(gx)(keys), np.float64)
+    ref = np.asarray(jax.grad(lambda x: (_ln_ref(x, g, b) * co).sum())(x), np.float64)
+    sd = gxs.std(axis=0).max()
+    # normalization statistics enter nonlinearly (rsqrt): allow a small
+    # second-order systematic term in addition to the statistical one.
+    np.testing.assert_allclose(gxs.mean(axis=0), ref,
+                               atol=6 * sd / np.sqrt(n) + 0.03 * np.abs(ref).max())
+
+
+# ---------------------------------------------------------------------------
+# batch-norm
+# ---------------------------------------------------------------------------
+
+def test_qbatchnorm_forward_and_stats():
+    x = _rand((64, 32), 19, scale=2.0, loc=-0.5)
+    g = _rand((32,), 20, scale=0.2, loc=1.0)
+    b = _rand((32,), 21, scale=0.1)
+    y, bm, bv = qbatchnorm(x, g, b, KEY, P8)
+    mu = np.asarray(x).mean(axis=0)
+    var = np.asarray(x).var(axis=0)
+    ref = (np.asarray(x) - mu) / np.sqrt(var + 1e-5) * np.asarray(g) + np.asarray(b)
+    assert np.abs(np.asarray(y) - ref).max() <= 0.08 * np.abs(ref).max() + 0.02
+    np.testing.assert_allclose(np.asarray(bm), mu, atol=0.03 * np.abs(mu).max() + 0.01)
+    np.testing.assert_allclose(np.asarray(bv), var, rtol=0.1, atol=0.02)
+
+
+def test_qbatchnorm_4d_nhwc():
+    x = _rand((4, 6, 6, 8), 22, scale=1.5, loc=0.3)
+    g = jnp.ones((8,))
+    b = jnp.zeros((8,))
+    y, bm, bv = qbatchnorm(x, g, b, KEY, P8)
+    assert y.shape == x.shape
+    xs = np.asarray(x).reshape(-1, 8)
+    ref = (xs - xs.mean(0)) / np.sqrt(xs.var(0) + 1e-5)
+    assert np.abs(np.asarray(y).reshape(-1, 8) - ref).max() <= 0.08 * np.abs(ref).max() + 0.02
+
+
+def test_qbatchnorm_grads_close():
+    x = _rand((128, 16), 23, scale=1.2)
+    g = _rand((16,), 24, scale=0.2, loc=1.0)
+    b = _rand((16,), 25, scale=0.1)
+    co = _rand((128, 16), 26)
+
+    def lq(x, g, b):
+        y, _, _ = qbatchnorm(x, g, b, KEY, P8)
+        return (y * co).sum()
+
+    def lf(x, g, b):
+        mu = x.mean(axis=0)
+        v = ((x - mu) ** 2).mean(axis=0)
+        return (((x - mu) * jax.lax.rsqrt(v + 1e-5) * g + b) * co).sum()
+
+    gq = jax.grad(lq, argnums=(0, 1, 2))(x, g, b)
+    gf = jax.grad(lf, argnums=(0, 1, 2))(x, g, b)
+    for q, f in zip(gq, gf):
+        scale = float(jnp.abs(f).max()) + 1e-6
+        assert np.abs(np.asarray(q - f)).max() <= 0.15 * scale
+
+
+def test_qbatchnorm_frozen_mode():
+    x = _rand((32, 8), 27)
+    g, b = jnp.ones((8,)), jnp.zeros((8,))
+    rm, rv = jnp.zeros((8,)), jnp.ones((8,))
+    y, m, v = qbatchnorm(x, g, b, None, P8, running=(rm, rv), training=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) / np.sqrt(1 + 1e-5),
+                               rtol=1e-5)
