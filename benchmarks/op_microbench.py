@@ -4,20 +4,87 @@ Wall-clock here is the CPU *emulation* cost (useful for relative deltas
 and regression tracking, not TPU projections — those are the roofline
 terms in EXPERIMENTS.md). Also derives the activation-memory ratio the
 int8 residuals buy.
+
+The kernel-pipeline section compares, per GEMM shape, the float matmul,
+the jnp emulation, the unfused two-kernel pipeline (quantize -> HBM int8
+-> GEMM) and the fused quantize->GEMM pipeline (interpret mode), and
+writes a machine-readable ``BENCH_kernels.json`` next to the repo root —
+one record per (op, path, shape) with wall µs and the analytic HBM
+bytes-moved model from ``kernels.dispatch`` — so the perf trajectory is
+trackable across PRs.  The fused path's bytes are strictly below the
+unfused path's: the intermediate mantissa round-trip between quantizer
+and GEMM never touches HBM.
 """
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PAPER_INT8, NumericPolicy, QuantConfig, dequantize,
-                        qmatmul, quantize)
+from repro.core import (PAPER_INT8, NumericPolicy, QuantConfig, qmatmul,
+                        quantize)
+from repro.core.bfp import rounding_bits
 from repro.core.qnorm import qlayernorm
+from repro.kernels import dispatch, ref
+from repro.kernels.fused_linear import fused_qq_pt_pallas
 from repro.kernels.ops import int8_matmul_op, quantize_op
 
 from .common import row, time_op
 
 KEY = jax.random.key(0)
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+KERNEL_SHAPES = [(256, 256, 256), (512, 512, 512)]
+
+
+def _gemm_pipeline_records():
+    """fused vs unfused vs float per shape -> list of BENCH_kernels records."""
+    records = []
+    for m, k, n in KERNEL_SHAPES:
+        x = jnp.asarray(np.random.RandomState(0).randn(m, k).astype(np.float32))
+        w = jnp.asarray(np.random.RandomState(1).randn(k, n).astype(np.float32))
+        wT = jnp.asarray(np.asarray(w).T)
+        kx, kw = jax.random.split(jax.random.key(m))
+        shape = f"{m}x{k}x{n}"
+
+        mm_f = jax.jit(lambda x, w: x @ w)
+        us = time_op(mm_f, x, w)
+        records.append(dict(op="matmul", path="float", shape=shape, us=us,
+                            bytes_moved=dispatch.bytes_moved("float", m, k, n)))
+
+        mm_j = jax.jit(lambda x, w, key: qmatmul(
+            x, w, key, NumericPolicy(kernel_mode="jnp")))
+        us = time_op(mm_j, x, w, KEY)
+        records.append(dict(op="qmatmul", path="jnp", shape=shape, us=us,
+                            bytes_moved=dispatch.bytes_moved(
+                                dispatch.JNP, m, k, n)))
+
+        def unfused(x, wT, kx, kw):
+            mx, ex = quantize_op(x, kx, per_tensor=True, interpret=True)
+            mw, ew = quantize_op(wT, kw, per_tensor=True, interpret=True)
+            return int8_matmul_op(mx, mw.T, ex[0], ew[0], bm=128, bn=128,
+                                  bk=128, interpret=True)
+        us = time_op(jax.jit(unfused), x, wT, kx, kw)
+        records.append(dict(op="qmatmul", path="unfused", shape=shape, us=us,
+                            bytes_moved=dispatch.bytes_moved(
+                                dispatch.UNFUSED, m, k, n)))
+
+        def fused(x, wT, kx, kw):
+            ra = rounding_bits(kx, x.shape)
+            rb = rounding_bits(kw, wT.shape)
+            y, _, _ = fused_qq_pt_pallas(
+                x, ra, wT, rb, ref.max_biased_exp_ref(x),
+                ref.max_biased_exp_ref(wT), p=7, bm=256, interpret=True)
+            return y
+        us = time_op(jax.jit(fused), x, wT, kx, kw)
+        records.append(dict(op="qmatmul", path="fused", shape=shape, us=us,
+                            bytes_moved=dispatch.bytes_moved(
+                                dispatch.FUSED, m, k, n)))
+    return records
 
 
 def run():
@@ -49,6 +116,15 @@ def run():
     # residual memory ratio: custom_vjp stores int8 mantissas vs f32 acts
     row("activation_residual_ratio", 0.0,
         "int8_residuals=1byte/elem;float=4bytes/elem;ratio=4.0x")
+
+    # kernel pipeline: fused vs unfused vs float, + BENCH_kernels.json
+    records = _gemm_pipeline_records()
+    for r in records:
+        row(f"{r['op']}_{r['path']}_{r['shape']}", r["us"],
+            f"bytes_moved={r['bytes_moved']}")
+    with open(BENCH_JSON, "w") as f:
+        json.dump(records, f, indent=1)
+    row("bench_kernels_json", 0.0, f"wrote={BENCH_JSON};records={len(records)}")
 
 
 if __name__ == "__main__":

@@ -42,6 +42,7 @@ __all__ = [
     "quantize",
     "dequantize",
     "pow2",
+    "rounding_bits",
     "storage_dtype",
     "scale_exponent",
     "PER_TENSOR",
@@ -237,6 +238,20 @@ def _hash_bits(key: jax.Array, shape) -> jnp.ndarray:
     return h[:n].reshape(shape)
 
 
+def rounding_bits(key: jax.Array, shape, rng: str = "threefry") -> jnp.ndarray:
+    """The uniform u32 draw used by stochastic rounding, as a public helper.
+
+    This is the single source of truth for how a quantization key maps to
+    per-element random bits: ``quantize(x, cfg, key)`` and a fused Pallas
+    kernel fed ``rounding_bits(key, x.shape, cfg.rng)`` consume *identical*
+    bits, which is what makes the kernel path bit-exact against the jnp
+    oracle (kernels.dispatch relies on this).
+    """
+    if rng == "hash":
+        return _hash_bits(key, shape)
+    return jax.random.bits(key, shape, jnp.uint32)
+
+
 def _shift_round(mag: jnp.ndarray, shift: jnp.ndarray,
                  key: Optional[jax.Array], stochastic: bool,
                  rng: str = "threefry") -> jnp.ndarray:
@@ -255,8 +270,7 @@ def _shift_round(mag: jnp.ndarray, shift: jnp.ndarray,
     if stochastic:
         if key is None:
             raise ValueError("stochastic rounding requires a PRNG key")
-        r = (_hash_bits(key, mag.shape) if rng == "hash"
-             else jax.random.bits(key, mag.shape, jnp.uint32))
+        r = rounding_bits(key, mag.shape, rng)
         m_lo = mag & ((jnp.uint32(1) << s31) - jnp.uint32(1))
         left = jnp.clip(32 - s, 0, 31).astype(jnp.uint32)
         over = jnp.clip(s - 32, 0, 31).astype(jnp.uint32)

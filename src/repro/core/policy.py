@@ -64,6 +64,22 @@ class NumericPolicy:
     # forward operands with exact nearest but must keep fresh gradient
     # tensors stochastically rounded (unbiasedness of the backward).
     stochastic_bwd: Optional[bool] = None
+    # kernel_mode: which execution path kernels.dispatch may pick for every
+    # qmatmul/qbmm contraction (forward and both A.2 backward GEMMs).
+    #   "auto"    fused Pallas on TPU when shapes/VMEM allow, jnp oracle
+    #             elsewhere (the default — models never pay interpret-mode
+    #             emulation cost implicitly).
+    #   "fused"   force the fused quantize->GEMM pipeline (interpret mode
+    #             off-TPU), degrading to unfused/jnp only when infeasible.
+    #   "unfused" force the two-kernel pipeline (quantizer -> HBM -> GEMM).
+    #   "jnp"     force the bit-exact jnp reference path.
+    # All paths are bit-identical for per-tensor scale (same rounding bits,
+    # same int32 accumulation, same f32 rescale).
+    kernel_mode: str = "auto"
+    # kernel_autotune: measure fused block-size candidates once per shape
+    # and persist to the JSON cache (kernels.autotune); False uses the
+    # cache when present, else a deterministic heuristic.
+    kernel_autotune: bool = False
 
     def fwd_cfg(self) -> QuantConfig:
         return QuantConfig(self.fwd_bits, self.block, self.stochastic, self.rng)

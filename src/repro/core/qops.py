@@ -9,12 +9,18 @@ Appendix A.2 (``dW = X̂ᵀĜ``, ``dX = ĜŴᵀ``).  Residuals hold int8 mantiss
 (+ a scalar scale), not float activations: the 4x activation-memory saving
 of the integer pipeline is real in this implementation.
 
-All contractions reduce to one primitive, ``_contract``: both operands are
-arranged *contraction-last*, quantized (per-tensor scale = paper-faithful;
-per-block scale along the contraction axis = TPU-adapted variant), and fed
-to ``lax.dot_general`` with ``preferred_element_type=int32``.  Contractions
-longer than ``policy.accum_chunk`` are split so worst-case int8 x int8 sums
-can never overflow the int32 accumulator (hardware accumulator flush).
+All contractions are arranged *contraction-last*, quantized (per-tensor
+scale = paper-faithful; per-block scale along the contraction axis =
+TPU-adapted variant), and contracted with ``preferred_element_type=int32``.
+Contractions longer than ``policy.accum_chunk`` are split so worst-case
+int8 x int8 sums can never overflow the int32 accumulator (hardware
+accumulator flush).
+
+Execution routing: every contraction asks ``kernels.dispatch`` for a path —
+the fused Pallas quantize->GEMM pipeline (default on TPU), the unfused
+two-kernel pipeline, or the jnp emulation below (the bit-exact oracle and
+the default off-TPU).  ``policy.kernel_mode`` overrides the choice; see
+docs/KERNELS.md.
 """
 
 from __future__ import annotations
@@ -26,7 +32,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .bfp import BFP, PER_TENSOR, QuantConfig, pow2, quantize, scale_exponent
+from ..kernels import dispatch as kdispatch
+from .bfp import (BFP, PER_TENSOR, QuantConfig, dequantize, pow2, quantize,
+                  scale_exponent)
 from .policy import NumericPolicy
 
 __all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract"]
@@ -37,21 +45,27 @@ __all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract"]
 # ---------------------------------------------------------------------------
 
 def _chunk_count(k: int, chunk: int) -> int:
-    """Number of accumulator chunks covering a contraction of length k."""
+    """Number of accumulator chunks covering a contraction of length k.
+
+    Always ``ceil(k / chunk)``: ``_pt_dot`` zero-pads K up to an exact
+    multiple, so no divisor search is needed.  (The previous
+    ``while k % n: n += 1`` walk was O(k) for prime K and could silently
+    shrink chunks to size 1 — e.g. k=509, chunk=128 used to yield 509
+    chunks of one element.)
+    """
     if chunk <= 0 or k <= chunk:
         return 1
-    n = -(-k // chunk)
-    while k % n:
-        n += 1
-    return n
+    return -(-k // chunk)
 
 
 def _pt_dot(am: jnp.ndarray, bm: jnp.ndarray, nbatch: int, nchunk: int) -> jnp.ndarray:
     """Integer dot, per-tensor scale: a (*B, M, K) x b (*B, N, K) -> (*B, M, N) int32->f32.
 
     ``nchunk`` > 1 splits K so each int32 accumulator only ever sums
-    K/nchunk int8 x int8 products; partials are combined in f32 (emulating
-    periodic accumulator flushes).
+    ceil(K/nchunk) int8 x int8 products; partials are combined in f32
+    (emulating periodic accumulator flushes).  K is zero-padded up to
+    nchunk * ceil(K/nchunk) — zero mantissas add nothing, so the split is
+    exact for any K, including primes.
     """
     k = am.shape[-1]
     if nchunk == 1:
@@ -61,7 +75,12 @@ def _pt_dot(am: jnp.ndarray, bm: jnp.ndarray, nbatch: int, nchunk: int) -> jnp.n
              (tuple(range(nbatch)), tuple(range(nbatch)))),
             preferred_element_type=jnp.int32)
         return acc.astype(jnp.float32)
-    kc = k // nchunk
+    kc = -(-k // nchunk)
+    pad = nchunk * kc - k
+    if pad:
+        widths = [(0, 0)] * (am.ndim - 1) + [(0, pad)]
+        am = jnp.pad(am, widths)
+        bm = jnp.pad(bm, widths)
     a4 = jnp.moveaxis(am.reshape(*am.shape[:-1], nchunk, kc), -2, nbatch)
     b4 = jnp.moveaxis(bm.reshape(*bm.shape[:-1], nchunk, kc), -2, nbatch)
     acc = lax.dot_general(
@@ -107,7 +126,7 @@ def _cfg_for_dim(cfg: QuantConfig, dim: int) -> QuantConfig:
     """Per-block scale needs the contraction dim divisible by the block;
     otherwise fall back to the per-tensor (paper-faithful) scale."""
     if cfg.block and dim % cfg.block != 0:
-        return QuantConfig(cfg.bits, PER_TENSOR, cfg.stochastic)
+        return QuantConfig(cfg.bits, PER_TENSOR, cfg.stochastic, cfg.rng)
     return cfg
 
 
@@ -150,14 +169,29 @@ def _qmatmul(x, w, key, policy: NumericPolicy):
     return y
 
 
+def _plan(op: str, m: int, k: int, n: int, cfg: QuantConfig,
+          policy: NumericPolicy, kind: str = "qq",
+          cfg2: Optional[QuantConfig] = None) -> "kdispatch.Decision":
+    """Trace-time routing query for one contraction (see kernels.dispatch)."""
+    return kdispatch.plan_contract(
+        op, m, k, n, cfg, kind=kind, cfg2=cfg2,
+        kernel_mode=policy.kernel_mode, accum_chunk=policy.accum_chunk,
+        autotune_measure=policy.kernel_autotune)
+
+
 def _qmatmul_fwd(x, w, key, policy: NumericPolicy):
     cfg = _cfg_for_dim(policy.fwd_cfg(), x.shape[-1])
     kx, kw, kb = jax.random.split(key, 3)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])                      # (M, K)
-    xq = quantize(x2, cfg, kx)                           # blocks along K
-    wq = quantize(_t(w), cfg, kw)                        # (N, K), blocks along K
-    y = _contract_q(xq, wq, 0, policy.accum_chunk)       # (M, N)
+    plan = _plan("qmatmul_fwd", x2.shape[0], x2.shape[1], w.shape[-1],
+                 cfg, policy)
+    if plan.path == kdispatch.JNP:
+        xq = quantize(x2, cfg, kx)                       # blocks along K
+        wq = quantize(_t(w), cfg, kw)                    # (N, K), blocks along K
+        y = _contract_q(xq, wq, 0, policy.accum_chunk)   # (M, N)
+    else:
+        y, xq, wq = kdispatch.contract_qq(x2, _t(w), cfg, kx, kw, plan)
     return y.reshape(*lead, w.shape[-1]), (xq, wq, kb, lead)
 
 
@@ -166,21 +200,51 @@ def _qmatmul_bwd(policy: NumericPolicy, res, gy):
     cfg_b = policy.bwd_cfg()
     kg, kg2, kx2, kw2 = jax.random.split(kb, 4)
     g2 = gy.reshape(-1, gy.shape[-1])                    # (M, N)
+    m, n = g2.shape
+    k = xq.m.shape[-1]
     if policy.block == PER_TENSOR:
-        gqN = quantize(g2, cfg_b, kg)                    # scale once
-        gqM = _tq(gqN)                                   # (N, M) same mantissas
         # dX = G Wᵀ : contract N -> a=(M,N) g, b=(K,N) w
-        dx = _contract_q(gqN, _tq(wq), 0, policy.accum_chunk)          # (M, K)
-        # dW = Xᵀ G : contract M -> a=(K,M), b=(N,M)
-        dw = _contract_q(_tq(xq), gqM, 0, policy.accum_chunk)          # (K, N)
+        plan_dx = _plan("qmatmul_dx", m, n, k, cfg_b, policy, kind="qi",
+                        cfg2=wq.cfg)
+        if plan_dx.path == kdispatch.JNP:
+            gqN = quantize(g2, cfg_b, kg)                # scale once
+            dx = _contract_q(gqN, _tq(wq), 0, policy.accum_chunk)      # (M, K)
+        else:
+            dx, gqN = kdispatch.contract_qi(g2, _tq(wq), cfg_b, kg, plan_dx)
+        # dW = Xᵀ G : contract M -> a=(K,M), b=(N,M); gqM shares gqN's
+        # mantissas (one quantization of the upstream gradient).
+        gqM = _tq(gqN)                                   # (N, M) same mantissas
+        plan_dw = _plan("qmatmul_dw", k, m, n, gqM.cfg, policy, kind="ii",
+                        cfg2=xq.cfg)
+        if plan_dw.path == kdispatch.JNP:
+            dw = _contract_q(_tq(xq), gqM, 0, policy.accum_chunk)      # (K, N)
+        else:
+            dw = kdispatch.contract_ii(_tq(xq), gqM, plan_dw)
     else:
-        # per-block: each contraction needs blocks along its own axis.
+        # per-block: each contraction needs blocks along its own axis, so
+        # the stored residual is dequantized and requantized along the new
+        # contraction (composing two unbiased mappings stays unbiased); the
+        # fused qq kernel performs that requantization in VMEM.
         cfg_n = _cfg_for_dim(cfg_b, g2.shape[-1])
         cfg_m = _cfg_for_dim(cfg_b, g2.shape[0])
-        gqN = quantize(g2, cfg_n, kg)                                   # blocks along N
-        gqM = quantize(_t(g2), cfg_m, kg2)                              # blocks along M
-        dx = _contract_q(gqN, _requant_t(wq, cfg_n, kw2), 0, policy.accum_chunk)
-        dw = _contract_q(_requant_t(xq, cfg_m, kx2), gqM, 0, policy.accum_chunk)
+        plan_dx = _plan("qmatmul_dx", m, n, k, cfg_n, policy)
+        if plan_dx.path == kdispatch.JNP:
+            gqN = quantize(g2, cfg_n, kg)                # blocks along N
+            dx = _contract_q(gqN, _requant_t(wq, cfg_n, kw2), 0,
+                             policy.accum_chunk)
+        else:
+            dx, _, _ = kdispatch.contract_qq(g2, _t(dequantize(wq)), cfg_n,
+                                             kg, kw2, plan_dx,
+                                             want_residuals=False)
+        plan_dw = _plan("qmatmul_dw", k, m, n, cfg_m, policy)
+        if plan_dw.path == kdispatch.JNP:
+            gqM = quantize(_t(g2), cfg_m, kg2)           # blocks along M
+            dw = _contract_q(_requant_t(xq, cfg_m, kx2), gqM, 0,
+                             policy.accum_chunk)
+        else:
+            dw, _, _ = kdispatch.contract_qq(_t(dequantize(xq)), _t(g2),
+                                             cfg_m, kx2, kg2, plan_dw,
+                                             want_residuals=False)
     return dx.reshape(*lead, dx.shape[-1]), dw, None
 
 
@@ -211,9 +275,15 @@ def _qbmm_fwd(a, b, key, policy: NumericPolicy):
     cfg = _cfg_for_dim(policy.fwd_cfg(), a.shape[-1])
     ka, kb_, kres = jax.random.split(key, 3)
     nbatch = a.ndim - 2
-    aq = quantize(a, cfg, ka)                            # (*B, M, K) blocks on K
-    bq = quantize(_t(b), cfg, kb_)                       # (*B, N, K) blocks on K
-    y = _contract_q(aq, bq, nbatch, policy.accum_chunk)  # (*B, M, N)
+    plan = _plan("qbmm_fwd", a.shape[-2], a.shape[-1], b.shape[-1],
+                 cfg, policy)
+    if plan.path == kdispatch.JNP:
+        aq = quantize(a, cfg, ka)                        # (*B, M, K) blocks on K
+        bq = quantize(_t(b), cfg, kb_)                   # (*B, N, K) blocks on K
+        y = _contract_q(aq, bq, nbatch, policy.accum_chunk)  # (*B, M, N)
+    else:
+        y, aq, bq = kdispatch.contract_qq(a, _t(b), cfg, ka, kb_, plan,
+                                          nbatch=nbatch)
     return y, (aq, bq, kres)
 
 
@@ -222,19 +292,48 @@ def _qbmm_bwd(policy: NumericPolicy, res, gy):
     cfg_b = policy.bwd_cfg()
     kg, kg2, ka2, kb2 = jax.random.split(kres, 4)
     nbatch = gy.ndim - 2
+    m, n = gy.shape[-2], gy.shape[-1]
+    k = aq.m.shape[-1]
     if policy.block == PER_TENSOR:
-        gq = quantize(gy, cfg_b, kg)                     # (*B, M, N)
-        # bq stored (*B, N, K); da contracts N -> needs (*B, K, N).
-        da = _contract_q(gq, _tq(bq), nbatch, policy.accum_chunk)       # (*B, M, K)
-        db = _contract_q(_tq(aq), _tq(gq), nbatch, policy.accum_chunk)  # contract M -> (*B, K, N)
+        # da = G Bᵀ: contract N; bq stored (*B, N, K) -> needs (*B, K, N).
+        plan_da = _plan("qbmm_dx", m, n, k, cfg_b, policy, kind="qi",
+                        cfg2=bq.cfg)
+        if plan_da.path == kdispatch.JNP:
+            gq = quantize(gy, cfg_b, kg)                 # (*B, M, N)
+            da = _contract_q(gq, _tq(bq), nbatch, policy.accum_chunk)
+        else:
+            da, gq = kdispatch.contract_qi(gy, _tq(bq), cfg_b, kg, plan_da,
+                                           nbatch=nbatch)
+        plan_db = _plan("qbmm_dw", k, m, n, gq.cfg, policy, kind="ii",
+                        cfg2=aq.cfg)
+        if plan_db.path == kdispatch.JNP:
+            db = _contract_q(_tq(aq), _tq(gq), nbatch, policy.accum_chunk)
+        else:
+            db = kdispatch.contract_ii(_tq(aq), _tq(gq), plan_db,
+                                       nbatch=nbatch)
     else:
         cfg_n = _cfg_for_dim(cfg_b, gy.shape[-1])
         cfg_m = _cfg_for_dim(cfg_b, gy.shape[-2])
-        gqN = quantize(gy, cfg_n, kg)
-        gqM = quantize(_t(gy), cfg_m, kg2)
-        # bq is (*B, N, K) blocked on K; da needs (*B, K, N) blocked on N.
-        da = _contract_q(gqN, _requant_t(bq, cfg_n, kb2), nbatch, policy.accum_chunk)
-        db = _contract_q(_requant_t(aq, cfg_m, ka2), gqM, nbatch, policy.accum_chunk)
+        plan_da = _plan("qbmm_dx", m, n, k, cfg_n, policy)
+        if plan_da.path == kdispatch.JNP:
+            gqN = quantize(gy, cfg_n, kg)
+            # bq is (*B, N, K) blocked on K; da needs (*B, K, N) blocked on N.
+            da = _contract_q(gqN, _requant_t(bq, cfg_n, kb2), nbatch,
+                             policy.accum_chunk)
+        else:
+            da, _, _ = kdispatch.contract_qq(gy, _t(dequantize(bq)), cfg_n,
+                                             kg, kb2, plan_da, nbatch=nbatch,
+                                             want_residuals=False)
+        plan_db = _plan("qbmm_dw", k, m, n, cfg_m, policy)
+        if plan_db.path == kdispatch.JNP:
+            gqM = quantize(_t(gy), cfg_m, kg2)
+            db = _contract_q(_requant_t(aq, cfg_m, ka2), gqM, nbatch,
+                             policy.accum_chunk)
+        else:
+            db, _, _ = kdispatch.contract_qq(_t(dequantize(aq)), _t(gy),
+                                             cfg_m, ka2, kg2, plan_db,
+                                             nbatch=nbatch,
+                                             want_residuals=False)
     return da, db, None
 
 
@@ -282,7 +381,8 @@ def _qembed_bwd(policy: NumericPolicy, res, gy):
     flat_tok = tokens.reshape(-1)
     g2 = gy.reshape(-1, gy.shape[-1])
     if policy.block == PER_TENSOR:
-        gq = quantize(g2, QuantConfig(cfg_b.bits, PER_TENSOR, cfg_b.stochastic), kb)
+        gq = quantize(g2, QuantConfig(cfg_b.bits, PER_TENSOR, cfg_b.stochastic,
+                                      cfg_b.rng), kb)
         # integer scatter-add: int8 mantissas accumulated in int32 rows
         acc = jax.ops.segment_sum(gq.m.astype(jnp.int32), flat_tok, num_segments=vocab)
         dtable = acc.astype(jnp.float32) * pow2(scale_exponent(gq.e, gq.cfg))

@@ -1,3 +1,25 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernel layer for the integer training pipeline.
+
+Modules:
+  ``bfp_quant``     standalone shared-exponent int8 quantizer kernel.
+  ``int8_matmul``   standalone tiled int8 GEMM kernel (scale via SMEM).
+  ``fused_linear``  fused quantize -> int8 GEMM -> rescale pipeline
+                    (forward + both backward contraction variants).
+  ``dispatch``      shape-keyed routing between fused / unfused / jnp,
+                    used by ``core.qops``; decision introspection; the
+                    bytes-moved traffic model.
+  ``autotune``      shape-keyed block-size cache (JSON-persisted).
+  ``ops``           jit'd wrappers for the unfused building blocks.
+  ``ref``           pure-jnp oracles all kernels are tested against.
+
+See docs/KERNELS.md for the kernel contract.
+"""
+
+from . import autotune, dispatch, fused_linear, ref  # noqa: F401
+from .bfp_quant import bfp_quantize_pallas  # noqa: F401
+from .dispatch import (FUSED, JNP, UNFUSED, Decision, bytes_moved,  # noqa: F401
+                       plan_contract, record_decisions)
+from .fused_linear import (fused_ii_pt_pallas, fused_qi_pt_pallas,  # noqa: F401
+                           fused_qq_blk_pallas, fused_qq_pt_pallas)
+from .int8_matmul import int8_matmul_pallas  # noqa: F401
+from .ops import int8_matmul_op, quantize_op  # noqa: F401

@@ -1,0 +1,163 @@
+"""Shape-keyed block-size autotune cache for the fused kernel pipeline.
+
+Kernel geometry (the row-strip height ``bm`` of ``fused_linear``) is not
+hard-coded: for each contraction shape the dispatch layer asks this module
+for a ``bm``.  Resolution order:
+
+  1. the persistent JSON cache (one entry per shape key — measured once);
+  2. if measurement is enabled (``NumericPolicy.kernel_autotune=True`` or
+     ``REPRO_KERNEL_AUTOTUNE=1``), time every feasible candidate with the
+     caller-supplied ``bench`` callable, persist the winner, return it;
+  3. otherwise a deterministic heuristic (no timing, nothing persisted).
+
+Cache file format (JSON object)::
+
+    { "<key>": {"bm": 256, "us": {"32": 410.2, ..., "256": 181.0}} }
+
+with ``<key>`` = ``"<kind>:<M>x<K>x<N>:b<bits>:blk<block>:<backend>"`` from
+:func:`shape_key`.  Path: ``$REPRO_KERNEL_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro_kernels/autotune.json``.  Writes are atomic
+(tmp + ``os.replace``) so concurrent processes at worst re-measure.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+__all__ = [
+    "AutotuneCache",
+    "BM_CANDIDATES",
+    "autotune_enabled_by_env",
+    "cache_path",
+    "heuristic_bm",
+    "select_bm",
+    "shape_key",
+    "time_call_us",
+]
+
+# Row-strip heights: multiples of 32 (int8 sublane packing) spanning one
+# VPU sublane group up to four MXU tiles.
+BM_CANDIDATES = (32, 64, 128, 256, 512)
+
+_ENV_CACHE = "REPRO_KERNEL_AUTOTUNE_CACHE"
+_ENV_ENABLE = "REPRO_KERNEL_AUTOTUNE"
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        _ENV_CACHE,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro_kernels",
+                     "autotune.json"))
+
+
+def autotune_enabled_by_env() -> bool:
+    return os.environ.get(_ENV_ENABLE, "") == "1"
+
+
+def shape_key(kind: str, m: int, k: int, n: int, bits: int, block: int,
+              backend: str) -> str:
+    return f"{kind}:{m}x{k}x{n}:b{bits}:blk{block}:{backend}"
+
+
+# Parsed-file memo shared across AutotuneCache instances: plan_contract
+# constructs a cache per planned contraction (several per traced layer), so
+# without this every trace would re-open and re-parse the JSON from disk.
+# Keyed by path, invalidated by mtime_ns (missing file memoized as None).
+_load_memo: Dict[str, tuple] = {}
+
+
+class AutotuneCache:
+    """Load-modify-write JSON cache; tolerant of a missing/corrupt file."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or cache_path()
+
+    def load(self) -> Dict[str, dict]:
+        try:
+            mtime = os.stat(self.path).st_mtime_ns
+        except OSError:
+            mtime = None
+        hit = _load_memo.get(self.path)
+        if hit is not None and hit[0] == mtime:
+            return hit[1]
+        if mtime is None:
+            data: Dict[str, dict] = {}
+        else:
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+                data = raw if isinstance(raw, dict) else {}
+            except (OSError, ValueError):
+                data = {}
+        _load_memo[self.path] = (mtime, data)
+        return data
+
+    def get(self, key: str) -> Optional[dict]:
+        entry = self.load().get(key)
+        return entry if isinstance(entry, dict) and "bm" in entry else None
+
+    def put(self, key: str, entry: dict) -> None:
+        data = dict(self.load())   # copy: never mutate the read memo
+        data[key] = entry
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+
+def time_call_us(fn: Callable[[], object], iters: int = 3) -> float:
+    """Median wall time of ``fn()`` in microseconds (fn must block)."""
+    times = []
+    fn()  # warmup / compile
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def heuristic_bm(m: int, fits: Callable[[int], bool]) -> int:
+    """Deterministic no-measurement pick: the smallest candidate covering
+    min(M rounded to 32, 256) that fits the VMEM budget, else the largest
+    fitting candidate, else 0 (infeasible)."""
+    target = min(-(-m // 32) * 32, 256)
+    feasible = [bm for bm in BM_CANDIDATES if fits(bm)]
+    if not feasible:
+        return 0
+    for bm in feasible:
+        if bm >= target:
+            return bm
+    return feasible[-1]
+
+
+def select_bm(key: str, m: int, fits: Callable[[int], bool], *,
+              measure: bool = False,
+              bench: Optional[Callable[[int], float]] = None,
+              cache: Optional[AutotuneCache] = None) -> int:
+    """Pick the fused-kernel row-strip height for a contraction shape.
+
+    ``fits(bm)`` is the dispatch layer's VMEM-budget predicate.  ``bench(bm)``
+    returns a wall time in µs for candidate ``bm`` (only called when
+    ``measure`` and the shape is not cached yet).  Returns 0 if no candidate
+    fits — the caller then falls back to the unfused / jnp path.
+    """
+    cache = cache or AutotuneCache()
+    entry = cache.get(key)
+    if entry is not None and fits(int(entry["bm"])):
+        return int(entry["bm"])
+    feasible = [bm for bm in BM_CANDIDATES if fits(bm)]
+    if not feasible:
+        return 0
+    if not (measure and bench is not None):
+        return heuristic_bm(m, fits)
+    timings = {str(bm): bench(bm) for bm in feasible}
+    best = min(feasible, key=lambda bm: timings[str(bm)])
+    cache.put(key, {"bm": best, "us": timings})
+    return best

@@ -1,0 +1,543 @@
+"""Shape-keyed dispatch between fused-Pallas, unfused-Pallas and jnp paths.
+
+``core.qops`` routes every integer contraction (``qmatmul`` / ``qbmm``
+forward and both Appendix-A.2 backward GEMMs) through :func:`plan_contract`,
+which picks one of three execution paths:
+
+  ``fused``    one ``pallas_call`` from ``kernels.fused_linear``: in-VMEM
+               quantization feeding the MXU, no intermediate HBM round-trip.
+  ``unfused``  ``bfp_quant`` kernel -> HBM int8 -> ``int8_matmul`` kernel
+               (the pre-dispatch pipeline; kept as the fallback when the
+               fused kernel's VMEM residency budget doesn't fit).
+  ``jnp``      the pure-jnp emulation in ``core.qops`` — the bit-exact
+               correctness oracle and the default on non-TPU backends.
+
+Routing rules (see docs/KERNELS.md for the full table):
+
+  * ``kernel_mode="jnp"`` or bits != 8 -> jnp (kernels are int8-only);
+  * ``kernel_mode="auto"`` -> fused on TPU when feasible, jnp elsewhere
+    (interpret-mode emulation is for validation, not speed);
+  * ``kernel_mode="fused"``/``"unfused"`` force a kernel path (interpret
+    mode off-TPU), degrading fused -> unfused -> jnp when shapes/VMEM
+    disallow;
+  * fused per-tensor needs K <= min(accum_chunk, int32-overflow bound);
+    per-block contractions are fused-or-jnp (the unfused quantizer kernel
+    only does per-row-strip scales, not per-K-block).
+
+All three paths are *bit-identical* for per-tensor scale: they consume the
+same `core.bfp.rounding_bits` draw, run the same threshold-compare rounding,
+accumulate exactly in int32 and apply the same single f32 scale multiply.
+
+The row-strip height ``bm`` of the fused kernel comes from the shape-keyed
+autotune cache (``kernels.autotune``).  Decisions can be observed with
+:func:`record_decisions` (used by the dispatch-introspection tests), and
+:func:`bytes_moved` is the analytic HBM-traffic model behind the
+``BENCH_kernels.json`` perf trail.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.bfp import BFP, PER_TENSOR, QuantConfig, pow2, rounding_bits
+from . import autotune, ref
+from .bfp_quant import bfp_quantize_pallas
+from .fused_linear import (fused_ii_pt_pallas, fused_qi_pt_pallas,
+                           fused_qq_blk_pallas, fused_qq_pt_pallas)
+from .int8_matmul import int8_matmul_pallas
+
+__all__ = [
+    "FUSED", "UNFUSED", "JNP", "Decision", "plan_contract",
+    "record_decisions", "contract_qq", "contract_qi", "contract_ii",
+    "bytes_moved", "DEFAULT_VMEM_BUDGET",
+]
+
+FUSED = "fused"
+UNFUSED = "unfused"
+JNP = "jnp"
+
+# Conservative residency budget for one fused-kernel instance (the chip has
+# ~16 MB VMEM; leave headroom for double buffering and the compiler).
+DEFAULT_VMEM_BUDGET = 12 * 1024 * 1024
+
+_LANE = 128       # last-dim tile multiple
+_INT8_SUBLANE = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One routing decision, recorded per traced contraction."""
+
+    op: str            # e.g. "qmatmul_fwd", "qmatmul_dx", "qbmm_dw"
+    path: str          # FUSED | UNFUSED | JNP
+    reason: str
+    m: int
+    k: int
+    n: int
+    bm: int = 0        # fused row-strip height (0 when not fused)
+    interpret: bool = False
+
+
+_decision_log: Optional[List[Decision]] = None
+
+
+@contextlib.contextmanager
+def record_decisions():
+    """Collect every Decision planned while the context is open.
+
+    Planning happens at trace time, so wrap the *first* call of a jitted
+    function (cached retraces plan nothing).
+    """
+    global _decision_log
+    prev = _decision_log
+    _decision_log = log = []
+    try:
+        yield log
+    finally:
+        _decision_log = prev
+
+
+def _record(d: Decision) -> Decision:
+    if _decision_log is not None:
+        _decision_log.append(d)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# geometry helpers
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _pad2(x: jnp.ndarray, rm: int, cm: int, value=0) -> jnp.ndarray:
+    """Zero-pad the last two dims up to multiples (rm, cm); exact through
+    quantize (0 -> mantissa 0) and GEMM (0 contributes nothing)."""
+    pr = _round_up(x.shape[-2], rm) - x.shape[-2]
+    pc = _round_up(x.shape[-1], cm) - x.shape[-1]
+    if pr or pc:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
+        x = jnp.pad(x, pad, constant_values=value)
+    return x
+
+
+def _vmem_bytes(kind: str, bm: int, k: int, n: int, nb: int) -> int:
+    """Residency estimate for one fused-kernel instance, in bytes.
+
+    Row-strip (per-program, double-buffered) + resident b-side blocks.
+    kind: "qq" f32 a+rand / f32 b+rand + both mantissa outputs;
+          "qq_blk" adds the int32 exponent blocks;
+          "qi" drops b's f32/rand (int8 resident); "ii" drops a's too.
+    """
+    y = 4 * bm * n
+    if kind in ("qq", "qq_blk"):
+        a_strip = (4 + 4 + 1) * bm * k + y
+        b_res = (4 + 4 + 1) * n * k
+        if kind == "qq_blk":
+            a_strip += 4 * bm * nb
+            b_res += 4 * n * nb
+    elif kind == "qi":
+        a_strip = (4 + 4 + 1) * bm * k + y
+        b_res = 1 * n * k
+    else:  # "ii"
+        a_strip = 1 * bm * k + y
+        b_res = 1 * n * k
+    return 2 * a_strip + b_res
+
+
+def bytes_moved(path: str, m: int, k: int, n: int, *, stochastic: bool = True,
+                bm: int = 128, bn: int = 128, bk: int = 128) -> int:
+    """Analytic HBM traffic of one quantize+contract, in bytes.
+
+    Counts, for a (M, K) x (N, K)^T -> (M, N) integer contraction:
+    the shared-exponent scan (one f32 read of both operands — paid by every
+    integer path), f32 + random-bit reads into the quantizer, int8 mantissa
+    writes (the custom_vjp residuals), any intermediate HBM round-trip, the
+    tiled GEMM's operand re-reads, and the f32 output write.  ``float`` is
+    the plain f32 GEMM (no quantizer, f32 tile re-reads).  The default
+    (bm, bn, bk) matches the 128-tile geometry the unfused pipeline
+    actually executes (_matmul_unfused and the microbenchmarks).
+    """
+    f32, r8, i8 = 4, (4 if stochastic else 0), 1
+    ni, nj = math.ceil(m / bm), math.ceil(n / bn)
+    if path == "float":
+        return f32 * (nj * m * k + ni * n * k + m * n)
+    scan = f32 * (m * k + n * k)
+    quant_in = (f32 + r8) * (m * k + n * k)
+    resid_out = i8 * (m * k + n * k)
+    y_out = f32 * m * n
+    if path == FUSED:
+        # One pallas_call: a-strips fetched once, b resident — the quantizer
+        # feeds the MXU through VMEM, nothing int8 round-trips HBM.
+        return scan + quant_in + resid_out + y_out
+    # Unfused: quantizer writes mantissas to HBM, the GEMM re-reads them
+    # once per output tile row/column; jnp adds the elementwise emulation's
+    # extra f32 round-trips through the ~6-op quantizer chain.
+    gemm_reads = i8 * (nj * m * k + ni * n * k)
+    unfused = scan + quant_in + resid_out + gemm_reads + y_out
+    if path == UNFUSED:
+        return unfused
+    return unfused + 2 * f32 * (m * k + n * k)   # JNP emulation overhead
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
+                  kind: str = "qq", cfg2: Optional[QuantConfig] = None,
+                  kernel_mode: str = "auto", accum_chunk: int = 65536,
+                  backend: Optional[str] = None,
+                  vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                  autotune_measure: bool = False) -> Decision:
+    """Choose the execution path for one (M, K) x (N, K)^T contraction.
+
+    ``cfg`` is the quantization config of the freshly-quantized operand(s);
+    ``cfg2`` (if given) the config of a pre-quantized residual operand
+    (``qi``/``ii`` kinds).  Called at trace time with static shapes.
+    """
+    backend = backend or jax.default_backend()
+    interpret = backend != "tpu"
+
+    def decide(path, reason, bm=0):
+        return _record(Decision(op, path, reason, m, k, n, bm, interpret))
+
+    if kernel_mode not in ("auto", "fused", "unfused", "jnp"):
+        raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
+    if kernel_mode == "jnp":
+        return decide(JNP, "kernel_mode=jnp")
+    bits = {cfg.bits} | ({cfg2.bits} if cfg2 is not None else set())
+    if bits != {8}:
+        return decide(JNP, f"bits={sorted(bits)} (kernels are int8-only)")
+    if cfg2 is not None and cfg2.block != PER_TENSOR:
+        # qi/ii reuse residual mantissas against a *scalar* exponent; a
+        # per-block residual operand has no kernel path at all.
+        return decide(JNP, "per-block residual operands have no kernel path")
+    if kernel_mode == "auto" and interpret:
+        return decide(JNP, f"auto keeps the jnp oracle on backend={backend}")
+    if cfg.block == PER_TENSOR and k > accum_chunk:
+        # The jnp path emulates periodic hardware accumulator flushes by
+        # chunking K; neither kernel path reproduces that flush.
+        return decide(JNP, f"K={k} > accum_chunk={accum_chunk} "
+                           "(flush emulation stays on jnp)")
+    if cfg.block == PER_TENSOR and k * 127 * 127 >= (1 << 31):
+        return decide(JNP, f"K={k} overflows the int32 accumulator")
+
+    blk = cfg.block
+    kp = _round_up(k, _LANE if blk == PER_TENSOR else (_LANE * blk) // math.gcd(_LANE, blk))
+    np_ = _round_up(n, _LANE)
+    nb = 0 if blk == PER_TENSOR else kp // blk
+    vkind = "qq_blk" if (kind == "qq" and blk != PER_TENSOR) else kind
+
+    # -- fused feasibility ---------------------------------------------------
+    fused_block = None
+    if kernel_mode in ("auto", "fused"):
+        if blk != PER_TENSOR and kind != "qq":
+            fused_block = (0, "per-block residuals require the qq variant")
+        else:
+            def fits(bm):
+                return _vmem_bytes(vkind, bm, kp, np_, nb) <= vmem_budget
+            key = autotune.shape_key(vkind, m, k, n, cfg.bits, blk, backend)
+            # Measure only when the requested backend IS the local one:
+            # interpret-mode timings must never be persisted under a TPU key.
+            measure = ((autotune_measure or autotune.autotune_enabled_by_env())
+                       and backend == jax.default_backend())
+            bench = (_make_bench(vkind, m, k, n, cfg, interpret)
+                     if measure else None)
+            bm = autotune.select_bm(key, m, fits, measure=measure,
+                                    bench=bench)
+            if bm:
+                return decide(FUSED, "fused pipeline fits VMEM budget", bm)
+            fused_block = (0, f"no bm candidate fits vmem_budget={vmem_budget}")
+
+    # -- unfused fallback ----------------------------------------------------
+    if blk == PER_TENSOR:
+        if kind != "ii" and not cfg.stochastic:
+            # the standalone quantizer kernel only implements the
+            # threshold-compare *stochastic* circuit; nearest rounding is
+            # fused-or-jnp (the fused kernel handles both).
+            return decide(JNP, "unfused quantizer kernel is SR-only")
+        why = ("kernel_mode=unfused" if kernel_mode == "unfused"
+               else f"fused infeasible: {fused_block[1]}")
+        return decide(UNFUSED, why)
+    return decide(JNP, "per-block scale has no unfused kernel path"
+                  if fused_block is None else
+                  f"fused infeasible: {fused_block[1]} (per-block -> jnp)")
+
+
+def _make_bench(vkind: str, m: int, k: int, n: int, cfg: QuantConfig,
+                interpret: bool):
+    """Build a bench(bm) -> µs callable over synthetic operands (autotune)."""
+    import numpy as np
+
+    def bench(bm: int) -> float:
+        rng = np.random.RandomState(0)
+        mp = _round_up(max(m, 1), bm)
+        blk = cfg.block
+        kp = _round_up(k, _LANE if blk == PER_TENSOR
+                       else (_LANE * blk) // math.gcd(_LANE, blk))
+        np_ = _round_up(n, _LANE)
+        a = jnp.asarray(rng.randn(mp, kp).astype(np.float32))
+        b = jnp.asarray(rng.randn(np_, kp).astype(np.float32))
+        ra = jnp.asarray(rng.randint(0, 2**32, (mp, kp), np.uint32))
+        rb = jnp.asarray(rng.randint(0, 2**32, (np_, kp), np.uint32))
+        if vkind == "qq_blk":
+            ea = ref.max_biased_exp_blocks_ref(a, blk)
+            eb = ref.max_biased_exp_blocks_ref(b, blk)
+            fn = lambda: jax.block_until_ready(fused_qq_blk_pallas(
+                a, ra, ea, b, rb, eb, p=cfg.p, blk=blk, bm=bm,
+                interpret=interpret))
+        else:
+            ea = ref.max_biased_exp_ref(a)
+            eb = ref.max_biased_exp_ref(b)
+            if vkind == "qq":
+                fn = lambda: jax.block_until_ready(fused_qq_pt_pallas(
+                    a, ra, b, rb, ea, eb, p=cfg.p, bm=bm, interpret=interpret))
+            elif vkind == "qi":
+                bm8 = jnp.asarray(rng.randint(-127, 128, (np_, kp), np.int8))
+                fn = lambda: jax.block_until_ready(fused_qi_pt_pallas(
+                    a, ra, bm8, ea, eb, pa=cfg.p, pb=cfg.p, bm=bm,
+                    interpret=interpret))
+            else:
+                a8 = jnp.asarray(rng.randint(-127, 128, (mp, kp), np.int8))
+                bm8 = jnp.asarray(rng.randint(-127, 128, (np_, kp), np.int8))
+                fn = lambda: jax.block_until_ready(fused_ii_pt_pallas(
+                    a8, bm8, ea, eb, pa=cfg.p, pb=cfg.p, bm=bm,
+                    interpret=interpret))
+        return autotune.time_call_us(fn)
+
+    return bench
+
+
+# ---------------------------------------------------------------------------
+# execution: quantize-and-contract entry points (contraction-last layout)
+# ---------------------------------------------------------------------------
+
+def _batched_call(one, arrays, nbatch, crops):
+    """Flatten leading batch dims, run the 2-D kernel wrapper (lax.map when
+    batched), crop the padding, restore batch dims.
+
+    ``crops`` is one (rows, cols) pair per kernel output; returns a list of
+    outputs in kernel order.
+    """
+    lead = arrays[0].shape[:nbatch]
+    flat = tuple(x.reshape((-1,) + x.shape[nbatch:]) if nbatch else x
+                 for x in arrays)
+    outs = one(flat) if nbatch == 0 else lax.map(one, flat)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    res = []
+    for o, (r, c) in zip(outs, crops):
+        o = o[..., :r, :c]
+        if nbatch:
+            o = o.reshape(lead + o.shape[1:])
+        res.append(o)
+    return res
+
+
+def contract_qq(a: jnp.ndarray, b: jnp.ndarray, cfg: QuantConfig,
+                ka: jax.Array, kb: jax.Array, dec: Decision,
+                nbatch: int = 0,
+                want_residuals: bool = True) -> Tuple[jnp.ndarray, BFP, BFP]:
+    """Quantize both contraction-last operands and contract on kernels.
+
+    a (*B, M, K) f32, b (*B, N, K) f32 -> (y (*B, M, N) f32, aq, bq) with
+    the BFP residuals bit-identical to ``core.bfp.quantize(_, cfg, key)``.
+    ``want_residuals=False`` (the backward requantization path) returns
+    (y, None, None) and keeps all mantissas in VMEM — no int8 HBM writes.
+    Non-stochastic configs stream no random bits at all.
+    """
+    m, k = a.shape[-2], a.shape[-1]
+    n = b.shape[-2]
+    sr = cfg.stochastic
+    ra = rounding_bits(ka, a.shape, cfg.rng) if sr else None
+    rb = rounding_bits(kb, b.shape, cfg.rng) if sr else None
+
+    if cfg.block == PER_TENSOR:
+        ea = ref.max_biased_exp_ref(a)    # global max: padding-independent
+        eb = ref.max_biased_exp_ref(b)
+        if dec.path == UNFUSED:
+            # plan_contract only routes stochastic configs here (the
+            # standalone quantizer kernel is SR-only).
+            am, bmant = (_quantize_rows(a, ra, ea, dec.interpret),
+                         _quantize_rows(b, rb, eb, dec.interpret))
+            y = _matmul_unfused(am, bmant, ea, eb, cfg.p, cfg.p,
+                                dec.interpret, nbatch)
+            return y, BFP(am, ea.astype(jnp.int32), cfg), \
+                BFP(bmant, eb.astype(jnp.int32), cfg)
+        arrays = [_pad2(a, dec.bm, _LANE)] + \
+            ([_pad2(ra, dec.bm, _LANE)] if sr else []) + \
+            [_pad2(b, _LANE, _LANE)] + \
+            ([_pad2(rb, _LANE, _LANE)] if sr else [])
+
+        def one(args):
+            if sr:
+                a2, ra2, b2, rb2 = args
+            else:
+                (a2, b2), ra2, rb2 = args, None, None
+            return fused_qq_pt_pallas(a2, ra2, b2, rb2, ea, eb, p=cfg.p,
+                                      bm=dec.bm, stochastic=sr,
+                                      interpret=dec.interpret,
+                                      emit_residuals=want_residuals)
+
+        if not want_residuals:
+            y, = _batched_call(one, arrays, nbatch, [(m, n)])
+            return y, None, None
+        y, am, bmant = _batched_call(one, arrays, nbatch,
+                                     [(m, n), (m, k), (n, k)])
+        return y, BFP(am, ea.astype(jnp.int32), cfg), \
+            BFP(bmant, eb.astype(jnp.int32), cfg)
+
+    # ---- per-block (along K) fused path ------------------------------------
+    blk = cfg.block
+    ea = ref.max_biased_exp_blocks_ref(a, blk)    # (*B, M, K/blk)
+    eb = ref.max_biased_exp_blocks_ref(b, blk)
+    kmult = (_LANE * blk) // math.gcd(_LANE, blk)
+    nbp = _round_up(k, kmult) // blk
+    # Padded blocks/rows get biased exponent 1: their (zero) mantissas scale
+    # to exactly 0, so the padding is invisible in the f32 combine.
+
+    def pad_e(e, rm):
+        e = _pad2(e, rm, 1, value=1)
+        return jnp.pad(e, [(0, 0)] * (e.ndim - 1) + [(0, nbp - e.shape[-1])],
+                       constant_values=1)
+
+    arrays = [_pad2(a, dec.bm, kmult)] + \
+        ([_pad2(ra, dec.bm, kmult)] if sr else []) + \
+        [pad_e(ea, dec.bm), _pad2(b, _LANE, kmult)] + \
+        ([_pad2(rb, _LANE, kmult)] if sr else []) + \
+        [pad_e(eb, _LANE)]
+
+    def one(args):
+        if sr:
+            a2, ra2, ea2, b2, rb2, eb2 = args
+        else:
+            (a2, ea2, b2, eb2), ra2, rb2 = args, None, None
+        return fused_qq_blk_pallas(a2, ra2, ea2, b2, rb2, eb2, p=cfg.p,
+                                   blk=blk, bm=dec.bm, stochastic=sr,
+                                   interpret=dec.interpret,
+                                   emit_residuals=want_residuals)
+
+    if not want_residuals:
+        y, = _batched_call(one, arrays, nbatch, [(m, n)])
+        return y, None, None
+    y, am, bmant = _batched_call(one, arrays, nbatch,
+                                 [(m, n), (m, k), (n, k)])
+    return y, BFP(am, ea.astype(jnp.int32), cfg), \
+        BFP(bmant, eb.astype(jnp.int32), cfg)
+
+
+def contract_qi(a: jnp.ndarray, bq: BFP, cfg: QuantConfig, ka: jax.Array,
+                dec: Decision, nbatch: int = 0) -> Tuple[jnp.ndarray, BFP]:
+    """Quantize ``a`` fused into the GEMM against residual mantissas ``bq``.
+
+    a (*B, M, K) f32, bq.m (*B, N, K) int8 (per-tensor scale) ->
+    (y (*B, M, N) f32, aq).  The backward ``dX = Ĝ Ŵᵀ`` path.
+    """
+    assert bq.cfg.block == PER_TENSOR
+    m, k = a.shape[-2], a.shape[-1]
+    n = bq.m.shape[-2]
+    sr = cfg.stochastic
+    ea = ref.max_biased_exp_ref(a)
+    ra = rounding_bits(ka, a.shape, cfg.rng) if sr else None
+    if dec.path == UNFUSED:
+        am = _quantize_rows(a, ra, ea, dec.interpret)
+        y = _matmul_unfused(am, bq.m, ea, bq.e, cfg.p, bq.cfg.p,
+                            dec.interpret, nbatch)
+        return y, BFP(am, ea.astype(jnp.int32), cfg)
+    arrays = [_pad2(a, dec.bm, _LANE)] + \
+        ([_pad2(ra, dec.bm, _LANE)] if sr else []) + \
+        [_pad2(bq.m, _LANE, _LANE)]
+
+    def one(args):
+        if sr:
+            a2, ra2, b2 = args
+        else:
+            (a2, b2), ra2 = args, None
+        return fused_qi_pt_pallas(a2, ra2, b2, ea, bq.e, pa=cfg.p,
+                                  pb=bq.cfg.p, bm=dec.bm, stochastic=sr,
+                                  interpret=dec.interpret)
+
+    y, am = _batched_call(one, arrays, nbatch, [(m, n), (m, k)])
+    return y, BFP(am, ea.astype(jnp.int32), cfg)
+
+
+def contract_ii(aq: BFP, bq: BFP, dec: Decision,
+                nbatch: int = 0) -> jnp.ndarray:
+    """Contract two residual mantissa tensors (per-tensor scale).
+
+    aq.m (*B, M, K) int8, bq.m (*B, N, K) int8 -> y (*B, M, N) f32.
+    The backward ``dW = X̂ᵀ Ĝ`` path — a pure int8 GEMM on kernels.
+    """
+    assert aq.cfg.block == PER_TENSOR and bq.cfg.block == PER_TENSOR
+    m, k = aq.m.shape[-2], aq.m.shape[-1]
+    n = bq.m.shape[-2]
+    if dec.path == UNFUSED:
+        return _matmul_unfused(aq.m, bq.m, aq.e, bq.e, aq.cfg.p, bq.cfg.p,
+                               dec.interpret, nbatch)
+    arrays = [_pad2(aq.m, dec.bm, _LANE), _pad2(bq.m, _LANE, _LANE)]
+
+    def one(args):
+        a2, b2 = args
+        return fused_ii_pt_pallas(a2, b2, aq.e, bq.e, pa=aq.cfg.p,
+                                  pb=bq.cfg.p, bm=dec.bm,
+                                  interpret=dec.interpret)
+
+    y, = _batched_call(one, arrays, nbatch, [(m, n)])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# unfused building blocks (quantizer kernel -> HBM int8 -> GEMM kernel)
+# ---------------------------------------------------------------------------
+
+def _quantize_rows(x: jnp.ndarray, rand: jnp.ndarray, e: jnp.ndarray,
+                   interpret: bool) -> jnp.ndarray:
+    """Per-tensor quantization through the bfp_quant Pallas kernel.
+
+    Handles any leading batch dims by flattening rows; bit-identical to
+    ``core.bfp.quantize`` for the same random bits (the kernel implements
+    stochastic rounding only — plan_contract never routes nearest-rounding
+    configs here).
+    """
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r2 = rand.reshape(-1, shape[-1])
+    m = x2.shape[0]
+    xp = _pad2(x2, 8, _LANE)
+    rp = _pad2(r2, 8, _LANE)
+    e_rows = jnp.pad(jnp.broadcast_to(e, (m,)), (0, xp.shape[0] - m),
+                     constant_values=1)[:, None].astype(jnp.int32)
+    mant = bfp_quantize_pallas(xp, rp, e_rows, block_rows=8,
+                               interpret=interpret)
+    return mant[:m, :shape[-1]].reshape(shape)
+
+
+def _matmul_unfused(am: jnp.ndarray, bmant: jnp.ndarray, ea, eb,
+                    pa: int, pb: int, interpret: bool,
+                    nbatch: int = 0) -> jnp.ndarray:
+    """int8 GEMM kernel on contraction-last mantissas with scalar scales."""
+    sea = ea - 127 - 23 + (24 - pa)
+    seb = eb - 127 - 23 + (24 - pb)
+    scale = pow2(sea + seb)
+    m, k = am.shape[-2], am.shape[-1]
+    n = bmant.shape[-2]
+    tile = _INT8_SUBLANE * 4  # 128: safe bm/bn/bk for the MXU kernel
+    arrays = [_pad2(am, tile, tile), _pad2(bmant, tile, tile)]
+
+    def one(args):
+        a2, b2 = args
+        return int8_matmul_pallas(a2, jnp.swapaxes(b2, -1, -2), scale,
+                                  bm=tile, bn=tile, bk=tile,
+                                  interpret=interpret)
+
+    y, = _batched_call(one, arrays, nbatch, [(m, n)])
+    return y

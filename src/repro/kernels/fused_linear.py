@@ -1,0 +1,419 @@
+"""Pallas TPU kernels: fused quantize -> int8 GEMM -> exponent-add rescale.
+
+The paper's Fig. 2 integer linear layer as ONE ``pallas_call``: f32 tiles
+stream HBM -> VMEM, the shared-exponent int8 quantization (threshold-compare
+stochastic rounding against caller-supplied random bits) happens in VMEM,
+the mantissas feed the MXU int32 accumulator directly, and the exponent-add
+scale is applied as a single f32 multiply before the output tile is written.
+Unlike the unfused ``bfp_quant`` + ``int8_matmul`` pipeline, no f32 or int8
+intermediate ever round-trips HBM between the quantizer and the GEMM.
+
+Variants (all contraction-last: ``a (M, K) x b (N, K) -> y (M, N)``):
+
+  qq  both operands f32, quantized in-kernel (forward pass);
+  qi  ``a`` f32 quantized in-kernel, ``b`` pre-quantized int8 mantissas
+      (backward ``dX = Ĝ Ŵᵀ``: the fresh gradient is quantized fused, the
+      stored weight mantissas are reused);
+  ii  both operands pre-quantized int8 (backward ``dW = X̂ᵀ Ĝ``: both
+      mantissa tensors come from residuals — a pure int8 GEMM).
+
+Grid / residency contract (see docs/KERNELS.md):
+
+  * grid = (M / bm,): one program per row-strip of ``a``.  Each ``a`` strip
+    (f32 + random bits) is fetched exactly once.
+  * ``b`` (and its random bits / exponents) use a constant index map, so
+    they are fetched once and stay VMEM-resident across the whole grid; the
+    quantized ``b`` mantissas are written into the mantissa *output* block
+    at program 0 and re-read from VMEM by every later program.
+  * Quantized mantissas are also kernel outputs: the ``custom_vjp``
+    residuals come straight from the fused call, so the 4x activation
+    memory saving of the integer pipeline is preserved.  Callers with no
+    use for them (the per-block backward requantization) pass
+    ``emit_residuals=False``: the quantized-``b`` cache then lives in VMEM
+    scratch and no int8 ever reaches HBM.
+  * ``stochastic=False`` (nearest rounding, inference paths) drops the
+    random-bit inputs entirely — no zero-filled rand arrays are streamed.
+
+Per-tensor exponents ride in SMEM via ``PrefetchScalarGridSpec``; per-block
+(along-K) exponents are int32 VMEM blocks.  All wrappers assume shapes are
+pre-padded by ``kernels.dispatch`` (M % bm == 0, K and N multiples of 128).
+Zero padding is exact end-to-end: a zero float quantizes to a zero mantissa
+for any shared exponent, and zero mantissas contribute nothing to the dot.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "fused_qq_pt_pallas",
+    "fused_qi_pt_pallas",
+    "fused_ii_pt_pallas",
+    "fused_qq_blk_pallas",
+]
+
+_F32_EXP_BIAS = 127
+_F32_MANT_BITS = 23
+
+
+def _scale_exp(e_biased, p):
+    """Unbiased exponent of a p-magnitude-bit BFP scale (cf. core.bfp)."""
+    return e_biased - _F32_EXP_BIAS - _F32_MANT_BITS + (24 - p)
+
+
+def _pow2_f32(e):
+    """Exact 2^e for int32 e, flushing e < -126 to 0 (mirrors core.bfp.pow2)."""
+    e = e.astype(jnp.int32) if hasattr(e, "astype") else jnp.int32(e)
+    e1 = jnp.clip(e, -126, 127)
+    f = lax.bitcast_convert_type(
+        ((e1 + _F32_EXP_BIAS) << _F32_MANT_BITS).astype(jnp.uint32), jnp.float32)
+    return jnp.where(e < -126, jnp.float32(0.0), f)
+
+
+def _quantize_tile(x, rand, e_shared, p, stochastic):
+    """Linear fixed-point mapping of a VMEM-resident f32 tile to int8.
+
+    Bit-identical to ``ref.bfp_quantize_ref`` / ``core.bfp.quantize`` given
+    the same random bits: unpack the IEEE-754 pattern, shift-align to the
+    shared exponent, threshold-compare round (stochastic against ``rand``,
+    or half-up when ``stochastic`` is False — then ``rand`` may be None),
+    clamp the 2^p - 1 rounding overflow of the e_max element, re-apply the
+    sign.
+    """
+    base_shift = 24 - p
+    b = lax.bitcast_convert_type(x, jnp.uint32)
+    sign = (b >> 31).astype(jnp.int32)
+    bexp = ((b >> 23) & 0xFF).astype(jnp.int32)
+    frac = b & jnp.uint32(0x7FFFFF)
+    mant24 = jnp.where(bexp > 0, frac | jnp.uint32(1 << 23), frac)
+    eff = jnp.maximum(bexp, 1)
+
+    s = (e_shared - eff) + base_shift
+    s31 = jnp.minimum(s, 31).astype(jnp.uint32)
+    base = jnp.where(s < 32, mant24 >> s31, jnp.uint32(0))
+    m_lo = mant24 & ((jnp.uint32(1) << s31) - jnp.uint32(1))
+    left = jnp.clip(32 - s, 0, 31).astype(jnp.uint32)
+    over = jnp.clip(s - 32, 0, 31).astype(jnp.uint32)
+    thr = jnp.where(s <= 31, m_lo << left,
+                    jnp.where(s == 32, mant24, mant24 >> over))
+    if stochastic:
+        up = (rand < thr) & (s > 0)
+    else:
+        # Half-up: dropped fraction >= 1/2  <=>  lifted threshold >= 2^31.
+        up = (thr >= jnp.uint32(0x80000000)) & (s > 0)
+    mag = jnp.minimum(base + up.astype(jnp.uint32),
+                      jnp.uint32((1 << p) - 1)).astype(jnp.int32)
+    return jnp.where(sign == 1, -mag, mag).astype(jnp.int8)
+
+
+def _int8_dot(am, bm):
+    """(bm, K) int8 x (N, K) int8 -> (bm, N) int32 on the MXU."""
+    return lax.dot_general(am, bm, (((1,), (1,)), ((), ())),
+                           preferred_element_type=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# per-tensor scale kernels (the paper's mode)
+# ---------------------------------------------------------------------------
+
+def _qq_pt_kernel(es_ref, *refs, p, stochastic, emit_residuals):
+    """Ref layout follows the static flags: inputs (a[, ra], b[, rb]);
+    outputs (y, am, bm) with residuals, else (y,) + a bm VMEM scratch."""
+    if stochastic:
+        a_ref, ra_ref, b_ref, rb_ref = refs[:4]
+        rest = refs[4:]
+    else:
+        a_ref, b_ref = refs[:2]
+        ra_ref = rb_ref = None
+        rest = refs[2:]
+    if emit_residuals:
+        y_ref, am_ref, bm_ref = rest
+    else:
+        y_ref, bm_ref = rest            # bm_ref: persistent VMEM scratch
+        am_ref = None
+    ea = es_ref[0]
+    eb = es_ref[1]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        bm_ref[...] = _quantize_tile(
+            b_ref[...], None if rb_ref is None else rb_ref[...], eb,
+            p, stochastic)
+
+    am = _quantize_tile(a_ref[...],
+                        None if ra_ref is None else ra_ref[...], ea,
+                        p, stochastic)
+    if am_ref is not None:
+        am_ref[...] = am
+    acc = _int8_dot(am, bm_ref[...])
+    y_ref[...] = acc.astype(jnp.float32) * _pow2_f32(
+        _scale_exp(ea, p) + _scale_exp(eb, p))
+
+
+def _qi_pt_kernel(es_ref, *refs, pa, pb, stochastic):
+    if stochastic:
+        a_ref, ra_ref, b_ref, y_ref, am_ref = refs
+    else:
+        a_ref, b_ref, y_ref, am_ref = refs
+        ra_ref = None
+    ea = es_ref[0]
+    eb = es_ref[1]
+    am = _quantize_tile(a_ref[...],
+                        None if ra_ref is None else ra_ref[...], ea,
+                        pa, stochastic)
+    am_ref[...] = am
+    acc = _int8_dot(am, b_ref[...])
+    y_ref[...] = acc.astype(jnp.float32) * _pow2_f32(
+        _scale_exp(ea, pa) + _scale_exp(eb, pb))
+
+
+def _ii_pt_kernel(es_ref, a_ref, b_ref, y_ref, *, pa, pb):
+    ea = es_ref[0]
+    eb = es_ref[1]
+    acc = _int8_dot(a_ref[...], b_ref[...])
+    y_ref[...] = acc.astype(jnp.float32) * _pow2_f32(
+        _scale_exp(ea, pa) + _scale_exp(eb, pb))
+
+
+@partial(jax.jit, static_argnames=("p", "bm", "stochastic", "interpret",
+                                   "emit_residuals"))
+def fused_qq_pt_pallas(a, ra, b, rb, ea, eb, *, p=7, bm=256,
+                       stochastic=True, interpret=False,
+                       emit_residuals=True):
+    """Fused quantize-both + GEMM, per-tensor scale.
+
+    a (M, K) f32, ra (M, K) uint32, b (N, K) f32, rb (N, K) uint32,
+    ea / eb scalar int32 biased shared exponents ->
+    (y (M, N) f32, a mantissas (M, K) int8, b mantissas (N, K) int8),
+    or just y when ``emit_residuals=False`` (mantissas stay in VMEM).
+    ``stochastic=False`` takes ra = rb = None — no rand is streamed.
+    M % bm == 0; K, N multiples of 128 (dispatch pads).
+    """
+    m, k = a.shape
+    n = b.shape[0]
+    assert m % bm == 0, (m, bm)
+    es = jnp.stack([jnp.asarray(ea), jnp.asarray(eb)]).astype(jnp.int32)
+    a_spec = pl.BlockSpec((bm, k), lambda i, s: (i, 0))
+    b_spec = pl.BlockSpec((n, k), lambda i, s: (0, 0))
+    if stochastic:
+        in_specs = [a_spec, a_spec, b_spec, b_spec]
+        operands = (es, a, ra, b, rb)
+    else:
+        in_specs = [a_spec, b_spec]
+        operands = (es, a, b)
+    if emit_residuals:
+        out_specs = [pl.BlockSpec((bm, n), lambda i, s: (i, 0)),
+                     pl.BlockSpec((bm, k), lambda i, s: (i, 0)),
+                     pl.BlockSpec((n, k), lambda i, s: (0, 0))]
+        out_shape = [jax.ShapeDtypeStruct((m, n), jnp.float32),
+                     jax.ShapeDtypeStruct((m, k), jnp.int8),
+                     jax.ShapeDtypeStruct((n, k), jnp.int8)]
+        scratch_shapes = ()
+    else:
+        out_specs = pl.BlockSpec((bm, n), lambda i, s: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+        scratch_shapes = (pltpu.VMEM((n, k), jnp.int8),)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        partial(_qq_pt_kernel, p=p, stochastic=stochastic,
+                emit_residuals=emit_residuals),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+
+
+@partial(jax.jit, static_argnames=("pa", "pb", "bm", "stochastic", "interpret"))
+def fused_qi_pt_pallas(a, ra, b_m, ea, eb, *, pa=7, pb=7, bm=256,
+                       stochastic=True, interpret=False):
+    """Fused quantize-a + GEMM against pre-quantized b, per-tensor scale.
+
+    a (M, K) f32, ra (M, K) uint32 (None when ``stochastic=False``),
+    b_m (N, K) int8 mantissas -> (y (M, N) f32, a mantissas (M, K) int8).
+    """
+    m, k = a.shape
+    n = b_m.shape[0]
+    assert m % bm == 0, (m, bm)
+    es = jnp.stack([jnp.asarray(ea), jnp.asarray(eb)]).astype(jnp.int32)
+    a_spec = pl.BlockSpec((bm, k), lambda i, s: (i, 0))
+    b_spec = pl.BlockSpec((n, k), lambda i, s: (0, 0))
+    if stochastic:
+        in_specs = [a_spec, a_spec, b_spec]
+        operands = (es, a, ra, b_m)
+    else:
+        in_specs = [a_spec, b_spec]
+        operands = (es, a, b_m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i, s: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, s: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        partial(_qi_pt_kernel, pa=pa, pb=pb, stochastic=stochastic),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.float32),
+                   jax.ShapeDtypeStruct((m, k), jnp.int8)],
+        interpret=interpret,
+    )(*operands)
+
+
+@partial(jax.jit, static_argnames=("pa", "pb", "bm", "interpret"))
+def fused_ii_pt_pallas(a_m, b_m, ea, eb, *, pa=7, pb=7, bm=256,
+                       interpret=False):
+    """Pure int8 GEMM on residual mantissas, per-tensor scale via SMEM.
+
+    a_m (M, K) int8, b_m (N, K) int8 -> y (M, N) f32.
+    """
+    m, k = a_m.shape
+    n = b_m.shape[0]
+    assert m % bm == 0, (m, bm)
+    es = jnp.stack([jnp.asarray(ea), jnp.asarray(eb)]).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, s: (i, 0)),
+            pl.BlockSpec((n, k), lambda i, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i, s: (i, 0)),
+    )
+    return pl.pallas_call(
+        partial(_ii_pt_kernel, pa=pa, pb=pb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(es, a_m, b_m)
+
+
+# ---------------------------------------------------------------------------
+# per-block (along-K) scale kernel — the MX-style TPU adaptation
+# ---------------------------------------------------------------------------
+
+def _bcast_blk(e, blk):
+    """Per-block exponents (R, nb) -> per-element (R, nb*blk)."""
+    return jnp.broadcast_to(e[:, :, None],
+                            (*e.shape, blk)).reshape(e.shape[0], -1)
+
+
+def _blk_combine(am, bq, sea, seb, blk, out_shape):
+    """Sequential f32 combine of per-block int32 partials, in block order
+    (= the order of ref.bfp_block_matmul_ref, so parity tests are exact)."""
+    nb = sea.shape[1]
+
+    def body(bi, acc):
+        a_blk = lax.dynamic_slice_in_dim(am, bi * blk, blk, axis=1)
+        b_blk = lax.dynamic_slice_in_dim(bq, bi * blk, blk, axis=1)
+        part = _int8_dot(a_blk, b_blk)
+        sa = lax.dynamic_slice_in_dim(sea, bi, 1, axis=1)        # (bm, 1)
+        sb = lax.dynamic_slice_in_dim(seb, bi, 1, axis=1)        # (N, 1)
+        return acc + part.astype(jnp.float32) * _pow2_f32(sa + sb.reshape(1, -1))
+
+    return lax.fori_loop(0, nb, body, jnp.zeros(out_shape, jnp.float32))
+
+
+def _qq_blk_kernel(*refs, p, blk, stochastic, emit_residuals):
+    """Inputs (a[, ra], ea, b[, rb], eb); outputs (y, am, bm) with
+    residuals, else (y,) + a bm VMEM scratch (the quantized-b cache)."""
+    if stochastic:
+        a_ref, ra_ref, ea_ref, b_ref, rb_ref, eb_ref = refs[:6]
+        rest = refs[6:]
+    else:
+        a_ref, ea_ref, b_ref, eb_ref = refs[:4]
+        ra_ref = rb_ref = None
+        rest = refs[4:]
+    if emit_residuals:
+        y_ref, am_ref, bm_ref = rest
+    else:
+        y_ref, bm_ref = rest
+        am_ref = None
+    ea = ea_ref[...]                                     # (bm, nb) int32
+    eb = eb_ref[...]                                     # (N, nb) int32
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        bm_ref[...] = _quantize_tile(
+            b_ref[...], None if rb_ref is None else rb_ref[...],
+            _bcast_blk(eb, blk), p, stochastic)
+
+    am = _quantize_tile(a_ref[...],
+                        None if ra_ref is None else ra_ref[...],
+                        _bcast_blk(ea, blk), p, stochastic)
+    if am_ref is not None:
+        am_ref[...] = am
+    y_ref[...] = _blk_combine(am, bm_ref[...], _scale_exp(ea, p),
+                              _scale_exp(eb, p), blk, y_ref.shape)
+
+
+@partial(jax.jit, static_argnames=("p", "blk", "bm", "stochastic",
+                                   "interpret", "emit_residuals"))
+def fused_qq_blk_pallas(a, ra, ea, b, rb, eb, *, p=7, blk=32, bm=256,
+                        stochastic=True, interpret=False,
+                        emit_residuals=True):
+    """Fused quantize-both + GEMM with per-K-block shared exponents.
+
+    a (M, K) f32, ra (M, K) uint32, ea (M, K/blk) int32,
+    b (N, K) f32, rb (N, K) uint32, eb (N, K/blk) int32 ->
+    (y (M, N) f32, a mantissas (M, K) int8, b mantissas (N, K) int8),
+    or just y (M, N) when ``emit_residuals=False`` — the backward
+    requantization path has no use for the mantissas, so they never touch
+    HBM (the quantized-b cache is a VMEM scratch instead of an output).
+    ``stochastic=False`` takes ra = rb = None — no rand is streamed.
+    Per-block int32 partials are rescaled and combined in f32 inside VMEM —
+    the accumulator never sums more than ``blk`` int8 x int8 products.
+    """
+    m, k = a.shape
+    n = b.shape[0]
+    assert m % bm == 0 and k % blk == 0, (m, bm, k, blk)
+    nb = k // blk
+    a_spec = pl.BlockSpec((bm, k), lambda i: (i, 0))
+    ea_spec = pl.BlockSpec((bm, nb), lambda i: (i, 0))
+    b_spec = pl.BlockSpec((n, k), lambda i: (0, 0))
+    eb_spec = pl.BlockSpec((n, nb), lambda i: (0, 0))
+    if stochastic:
+        in_specs = [a_spec, a_spec, ea_spec, b_spec, b_spec, eb_spec]
+        operands = (a, ra, ea, b, rb, eb)
+    else:
+        in_specs = [a_spec, ea_spec, b_spec, eb_spec]
+        operands = (a, ea, b, eb)
+    kernel = partial(_qq_blk_kernel, p=p, blk=blk, stochastic=stochastic,
+                     emit_residuals=emit_residuals)
+    if emit_residuals:
+        return pl.pallas_call(
+            kernel,
+            grid=(m // bm,),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((bm, n), lambda i: (i, 0)),
+                pl.BlockSpec((bm, k), lambda i: (i, 0)),
+                pl.BlockSpec((n, k), lambda i: (0, 0)),
+            ],
+            out_shape=[jax.ShapeDtypeStruct((m, n), jnp.float32),
+                       jax.ShapeDtypeStruct((m, k), jnp.int8),
+                       jax.ShapeDtypeStruct((n, k), jnp.int8)],
+            interpret=interpret,
+        )(*operands)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, k), jnp.int8)],
+        interpret=interpret,
+    )(*operands)

@@ -5,6 +5,12 @@ tiles stream HBM -> VMEM, the MXU accumulates int32 into a VMEM scratch
 across the K grid axis, and the final K step applies the shared-exponent
 scale (exponents add: one f32 multiply per output tile) and writes f32.
 
+The combined scale is a *scalar-prefetch* argument
+(``pltpu.PrefetchScalarGridSpec``): it lives in SMEM, is available before
+the kernel body runs, and never occupies a VMEM block or a DMA slot — the
+(1, 1) VMEM block it used to ride in was a whole pipelined buffer for four
+bytes of payload.
+
 Tile geometry targets the 128x128 MXU: (bm, bk) x (bk, bn) with all of
 bm/bn/bk multiples of 128 (int8 sublane packing is 32; 128 keeps both the
 MXU and the VPU happy). K-innermost grid order makes the accumulator
@@ -23,7 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["int8_matmul_pallas"]
 
 
-def _kernel(a_ref, b_ref, scale_ref, out_ref, acc_ref, *, n_k: int):
+def _kernel(scale_ref, a_ref, b_ref, out_ref, acc_ref, *, n_k: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -34,7 +40,7 @@ def _kernel(a_ref, b_ref, scale_ref, out_ref, acc_ref, *, n_k: int):
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
-        out_ref[...] = acc_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+        out_ref[...] = acc_ref[...].astype(jnp.float32) * scale_ref[0]
 
 
 @partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
@@ -43,26 +49,31 @@ def int8_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, scale: jnp.ndarray, *,
                        interpret: bool = False) -> jnp.ndarray:
     """a (M, K) int8, b (K, N) int8, scale f32 () -> f32 (M, N).
 
-    M % bm == N % bn == K % bk == 0 (the ops.py wrapper pads). VMEM per
-    instance: bm*bk + bk*bn bytes of int8 in + bm*bn*4 acc + bm*bn*4 out —
-    at the 256 defaults ~0.66 MB, comfortably inside 16 MB VMEM with
-    double buffering.
+    M % bm == N % bn == K % bk == 0 (the ops.py / dispatch wrappers pad;
+    zero-padded mantissas are exact through the rescale — zeros contribute
+    nothing to the int32 accumulator, so the unpadded scale applies).
+    VMEM per instance: bm*bk + bk*bn bytes of int8 in + bm*bn*4 acc +
+    bm*bn*4 out — at the 256 defaults ~0.66 MB, comfortably inside 16 MB
+    VMEM with double buffering.  The scale rides in SMEM via scalar
+    prefetch.
     """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
     n_k = k // bk
-    grid = (m // bm, n // bn, n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l, s: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l, s: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l, s: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    )
     return pl.pallas_call(
         partial(_kernel, n_k=n_k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
-            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
-            pl.BlockSpec((1, 1), lambda i, j, l: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(a, b, scale.reshape(1, 1))
+    )(jnp.asarray(scale, jnp.float32).reshape(1), a, b)

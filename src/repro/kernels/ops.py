@@ -1,10 +1,18 @@
-"""jit'd wrappers for the Pallas kernels: padding, shared-exponent prep,
-random-bit generation, and an automatic jnp fallback.
+"""jit'd wrappers for the *unfused* Pallas kernels: padding, shared-exponent
+prep, random-bit generation, and an automatic jnp fallback.
+
+These are the standalone building blocks (quantizer kernel -> HBM int8 ->
+GEMM kernel).  Routing between them, the fused pipeline in
+``kernels.fused_linear`` and the jnp oracle is owned by
+``kernels.dispatch`` — model code goes through ``core.qops``, which plans
+via dispatch; call these wrappers directly only for sweeps and benchmarks.
 
 ``use_pallas`` selects the kernel path (interpret=True on CPU so the same
-code validates here and compiles for TPU). The wrappers keep kernel
-contracts honest: callers see the same semantics as core.bfp quantization
-with per-row-block scales.
+code validates here and compiles for TPU).  Note ``quantize_op`` exposes
+*per-row-block* scale granularity (one exponent per ``block_rows`` rows),
+which differs from ``core.bfp`` per-tensor / per-K-block modes; per-tensor
+(``per_tensor=True``) matches ``core.bfp.quantize`` bit-for-bit given the
+same random bits.
 """
 
 from __future__ import annotations
@@ -69,7 +77,10 @@ def int8_matmul_op(a_m: jnp.ndarray, b_m: jnp.ndarray, ea: jnp.ndarray,
     """(M,K) x (K,N) int8 mantissas with scalar biased exponents -> f32.
 
     Exponents add (integer add); the combined scale is one f32 multiply on
-    the accumulator (Fig. 2)."""
+    the accumulator (Fig. 2), delivered to the kernel through SMEM scalar
+    prefetch.  Operands are zero-padded up to tile multiples; padding is
+    exact through the rescale because zero mantissas contribute nothing to
+    the int32 accumulator (tested in test_kernels.py)."""
     scale = pow2((ea - 133) + (eb - 133))
     if not use_pallas:
         return ref.int8_matmul_ref(a_m, b_m, scale)

@@ -10,7 +10,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["bfp_quantize_ref", "int8_matmul_ref", "dequant_ref"]
+__all__ = [
+    "bfp_quantize_ref",
+    "bfp_block_quantize_ref",
+    "bfp_block_matmul_ref",
+    "int8_matmul_ref",
+    "max_biased_exp_ref",
+    "max_biased_exp_blocks_ref",
+    "dequant_ref",
+]
 
 _BASE_SHIFT = 17  # 24-bit mantissa -> 7 magnitude bits (int8)
 
@@ -49,6 +57,43 @@ def bfp_quantize_ref(x: jnp.ndarray, rand: jnp.ndarray, e_shared: jnp.ndarray):
 def max_biased_exp_ref(x: jnp.ndarray, axis=None) -> jnp.ndarray:
     _, eff, _ = _unpack(x)
     return jnp.max(eff, axis=axis)
+
+
+def max_biased_exp_blocks_ref(x: jnp.ndarray, blk: int) -> jnp.ndarray:
+    """Shared exponent per trailing-axis block: (..., K) -> (..., K/blk)."""
+    _, eff, _ = _unpack(x)
+    return eff.reshape(*eff.shape[:-1], eff.shape[-1] // blk, blk).max(-1)
+
+
+def bfp_block_quantize_ref(x: jnp.ndarray, rand: jnp.ndarray,
+                           e_blocks: jnp.ndarray, blk: int) -> jnp.ndarray:
+    """Per-K-block quantization: e_blocks (..., K/blk) broadcast per element."""
+    e_bcast = jnp.repeat(e_blocks, blk, axis=-1)
+    return bfp_quantize_ref(x, rand, e_bcast)
+
+
+def bfp_block_matmul_ref(a_m: jnp.ndarray, b_m: jnp.ndarray,
+                         sea: jnp.ndarray, seb: jnp.ndarray,
+                         blk: int) -> jnp.ndarray:
+    """Per-K-block int8 contraction oracle, contraction-last operands.
+
+    a_m (M, K) int8, b_m (N, K) int8, sea (M, K/blk) / seb (N, K/blk)
+    *unbiased scale exponents* -> f32 (M, N).  Per-block int32 partials are
+    rescaled and summed sequentially in block order — the exact combine
+    order of the fused per-block Pallas kernel, so comparisons are
+    bit-strict.
+    """
+    from ..core.bfp import pow2
+    nb = a_m.shape[-1] // blk
+    acc = jnp.zeros((a_m.shape[0], b_m.shape[0]), jnp.float32)
+    for b in range(nb):
+        part = lax.dot_general(a_m[:, b * blk:(b + 1) * blk],
+                               b_m[:, b * blk:(b + 1) * blk],
+                               (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+        scale = pow2(sea[:, b:b + 1] + seb[None, :, b])
+        acc = acc + part.astype(jnp.float32) * scale
+    return acc
 
 
 def int8_matmul_ref(a_m: jnp.ndarray, b_m: jnp.ndarray,

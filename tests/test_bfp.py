@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (installed in CI)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bfp
 from repro.core.bfp import BFP, QuantConfig, quantize, dequantize, pow2, requantize_i32

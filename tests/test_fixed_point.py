@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (installed in CI)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.fixed_point import (Fx, KeyGen, fx_add, fx_const, fx_div_n,
                                     fx_mul, fx_narrow, fx_quantize, fx_rsqrt,

@@ -1,0 +1,253 @@
+"""Parity sweeps for the fused quantize->GEMM Pallas pipeline (interpret
+mode on CPU): bit-identical against the composed jnp oracles
+``ref.bfp_quantize_ref`` + ``ref.int8_matmul_ref`` given the same random
+bits, for per-tensor and per-K-block scales, including non-divisible shapes
+that exercise the zero-padding path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bfp import QuantConfig, quantize, rounding_bits
+from repro.kernels import ref
+from repro.kernels.dispatch import (Decision, FUSED, contract_ii, contract_qi,
+                                    contract_qq)
+from repro.kernels.fused_linear import (fused_ii_pt_pallas, fused_qi_pt_pallas,
+                                        fused_qq_blk_pallas,
+                                        fused_qq_pt_pallas)
+
+KEY = jax.random.key(0)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+def _bits(key, shape):
+    return jax.random.bits(key, shape, jnp.uint32)
+
+
+def _fused_dec(op="t", m=0, k=0, n=0, bm=32):
+    return Decision(op, FUSED, "test", m, k, n, bm, interpret=True)
+
+
+def _compose_pt_ref(a, ra, b, rb, p=7):
+    """quantize-both + int8 GEMM + rescale, via the standalone oracles."""
+    ea = ref.max_biased_exp_ref(a)
+    eb = ref.max_biased_exp_ref(b)
+    am = ref.bfp_quantize_ref(a, ra, ea)
+    bm = ref.bfp_quantize_ref(b, rb, eb)
+    scale = 2.0 ** (float(ea) - 126 - p) * 2.0 ** (float(eb) - 126 - p)
+    y = ref.int8_matmul_ref(am, bm.T, jnp.float32(scale))
+    return y, am, bm, ea, eb
+
+
+# ---------------------------------------------------------------------------
+# per-tensor fused qq: forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,bm", [(32, 128, 128, 32), (64, 256, 128, 32),
+                                      (96, 128, 256, 32)])
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 512.0])
+def test_fused_qq_pt_bit_identical_to_composed_refs(m, k, n, bm, scale):
+    a = _rand((m, k), seed=m + n, scale=scale)
+    b = _rand((n, k), seed=m + n + 1, scale=scale)
+    ka, kb = jax.random.split(jax.random.key(m + k + n))
+    ra, rb = _bits(ka, (m, k)), _bits(kb, (n, k))
+    ea = ref.max_biased_exp_ref(a)
+    eb = ref.max_biased_exp_ref(b)
+    y, am, bmant = fused_qq_pt_pallas(a, ra, b, rb, ea, eb, p=7, bm=bm,
+                                      interpret=True)
+    y_ref, am_ref, bm_ref, _, _ = _compose_pt_ref(a, ra, b, rb)
+    np.testing.assert_array_equal(np.asarray(am), np.asarray(am_ref))
+    np.testing.assert_array_equal(np.asarray(bmant), np.asarray(bm_ref))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_fused_qq_pt_nearest_rounding_matches_core():
+    """stochastic=False: half-up rounding, no random bits consumed."""
+    a = _rand((32, 128), seed=5)
+    b = _rand((64, 128), seed=6)
+    cfg = QuantConfig(8, stochastic=False)
+    ea = ref.max_biased_exp_ref(a)
+    eb = ref.max_biased_exp_ref(b)
+    zeros_a = jnp.zeros(a.shape, jnp.uint32)
+    zeros_b = jnp.zeros(b.shape, jnp.uint32)
+    _, am, bmant = fused_qq_pt_pallas(a, zeros_a, b, zeros_b, ea, eb, p=7,
+                                      bm=32, stochastic=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(am),
+                                  np.asarray(quantize(a, cfg).m))
+    np.testing.assert_array_equal(np.asarray(bmant),
+                                  np.asarray(quantize(b, cfg).m))
+
+
+def test_fused_qq_pt_mantissas_bit_identical_to_core_quantize():
+    """The residuals coming out of the fused kernel ARE core quantizations:
+    same key -> same bits -> same mantissas (the memory-saving contract)."""
+    a = _rand((64, 128), seed=7)
+    cfg = QuantConfig(8)
+    ka = jax.random.key(3)
+    ra = rounding_bits(ka, a.shape, cfg.rng)
+    ea = ref.max_biased_exp_ref(a)
+    b = _rand((32, 128), seed=8)
+    rb = _bits(jax.random.key(4), b.shape)
+    _, am, _ = fused_qq_pt_pallas(a, ra, b, rb, ea,
+                                  ref.max_biased_exp_ref(b), p=7, bm=32,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(am),
+                                  np.asarray(quantize(a, cfg, ka).m))
+
+
+# ---------------------------------------------------------------------------
+# per-tensor fused qi / ii: the two backward contractions
+# ---------------------------------------------------------------------------
+
+def test_fused_qi_pt_bit_identical_to_refs():
+    g = _rand((32, 128), seed=9)            # fresh "gradient": quantized fused
+    rg = _bits(jax.random.key(5), g.shape)
+    w_m = jnp.asarray(np.random.RandomState(1).randint(-127, 128, (64, 128))
+                      .astype(np.int8))     # stored residual mantissas
+    eg = ref.max_biased_exp_ref(g)
+    ew = jnp.int32(140)
+    y, gm = fused_qi_pt_pallas(g, rg, w_m, eg, ew, pa=7, pb=7, bm=32,
+                               interpret=True)
+    gm_ref = ref.bfp_quantize_ref(g, rg, eg)
+    scale = (2.0 ** (float(eg) - 133)) * (2.0 ** (140 - 133))
+    y_ref = ref.int8_matmul_ref(gm_ref, w_m.T, jnp.float32(scale))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(gm_ref))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_fused_ii_pt_bit_identical_to_ref():
+    rng = np.random.RandomState(2)
+    a_m = jnp.asarray(rng.randint(-127, 128, (64, 128)).astype(np.int8))
+    b_m = jnp.asarray(rng.randint(-127, 128, (32, 128)).astype(np.int8))
+    y = fused_ii_pt_pallas(a_m, b_m, jnp.int32(120), jnp.int32(125),
+                           pa=7, pb=7, bm=32, interpret=True)
+    scale = (2.0 ** (120 - 133)) * (2.0 ** (125 - 133))
+    y_ref = ref.int8_matmul_ref(a_m, b_m.T, jnp.float32(scale))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+# ---------------------------------------------------------------------------
+# per-K-block fused qq
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("blk", [32, 64])
+def test_fused_qq_blk_bit_identical_to_block_refs(blk):
+    m, k, n = 64, 256, 128
+    # rows of very different magnitude so block exponents actually differ
+    a = _rand((m, k), seed=11) * jnp.float32(2.0) ** (
+        jnp.arange(k // blk).repeat(blk) % 7)[None, :]
+    b = _rand((n, k), seed=12)
+    ra, rb = _bits(jax.random.key(6), (m, k)), _bits(jax.random.key(7), (n, k))
+    ea = ref.max_biased_exp_blocks_ref(a, blk)
+    eb = ref.max_biased_exp_blocks_ref(b, blk)
+    y, am, bmant = fused_qq_blk_pallas(a, ra, ea, b, rb, eb, p=7, blk=blk,
+                                       bm=32, interpret=True)
+    am_ref = ref.bfp_block_quantize_ref(a, ra, ea, blk)
+    bm_ref = ref.bfp_block_quantize_ref(b, rb, eb, blk)
+    np.testing.assert_array_equal(np.asarray(am), np.asarray(am_ref))
+    np.testing.assert_array_equal(np.asarray(bmant), np.asarray(bm_ref))
+    y_ref = ref.bfp_block_matmul_ref(am_ref, bm_ref, ea - 133, eb - 133, blk)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_fused_qq_blk_noresid_variant_same_y():
+    """emit_residuals=False (backward requantization) keeps mantissas in
+    VMEM; the contraction result must be identical."""
+    blk, m, k, n = 32, 64, 128, 128
+    a, b = _rand((m, k), seed=15), _rand((n, k), seed=16)
+    ra, rb = _bits(jax.random.key(10), (m, k)), _bits(jax.random.key(11), (n, k))
+    ea = ref.max_biased_exp_blocks_ref(a, blk)
+    eb = ref.max_biased_exp_blocks_ref(b, blk)
+    y3, _, _ = fused_qq_blk_pallas(a, ra, ea, b, rb, eb, p=7, blk=blk, bm=32,
+                                   interpret=True)
+    y1 = fused_qq_blk_pallas(a, ra, ea, b, rb, eb, p=7, blk=blk, bm=32,
+                             interpret=True, emit_residuals=False)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y3))
+
+
+def test_fused_qq_blk_mantissas_match_core_per_block_quantize():
+    blk, m, k = 32, 32, 128
+    a = _rand((m, k), seed=13)
+    cfg = QuantConfig(8, block=blk)
+    ka = jax.random.key(8)
+    ra = rounding_bits(ka, a.shape, cfg.rng)
+    ea = ref.max_biased_exp_blocks_ref(a, blk)
+    b = _rand((32, k), seed=14)
+    _, am, _ = fused_qq_blk_pallas(a, ra, ea, b, _bits(jax.random.key(9),
+                                                       b.shape),
+                                   ref.max_biased_exp_blocks_ref(b, blk),
+                                   p=7, blk=blk, bm=32, interpret=True)
+    qc = quantize(a, cfg, ka)
+    np.testing.assert_array_equal(np.asarray(am), np.asarray(qc.m))
+    np.testing.assert_array_equal(np.asarray(ea), np.asarray(qc.e))
+
+
+# ---------------------------------------------------------------------------
+# padding path through the dispatch executors (non-divisible shapes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(13, 70, 30), (100, 129, 65), (8, 32, 8)])
+def test_contract_qq_padding_exact_vs_core(m, k, n):
+    """Dispatch pads to tile multiples; the result must still be bit-equal
+    to quantize+contract on the *unpadded* tensors."""
+    a = _rand((m, k), seed=m)
+    b = _rand((n, k), seed=m + 1)
+    cfg = QuantConfig(8)
+    ka, kb = jax.random.split(jax.random.key(m + k + n))
+    dec = _fused_dec(m=m, k=k, n=n, bm=32)
+    y, aq, bq = contract_qq(a, b, cfg, ka, kb, dec)
+    aq_ref = quantize(a, cfg, ka)
+    bq_ref = quantize(b, cfg, kb)
+    np.testing.assert_array_equal(np.asarray(aq.m), np.asarray(aq_ref.m))
+    np.testing.assert_array_equal(np.asarray(bq.m), np.asarray(bq_ref.m))
+    acc = np.asarray(aq_ref.m, np.int32) @ np.asarray(bq_ref.m, np.int32).T
+    scale = 2.0 ** (int(aq_ref.e) - 133) * 2.0 ** (int(bq_ref.e) - 133)
+    np.testing.assert_array_equal(
+        np.asarray(y), (acc.astype(np.float32) * np.float32(scale)))
+
+
+def test_contract_qi_ii_padding_exact(m=23, k=40, n=17):
+    g = _rand((m, n), seed=3)
+    cfg = QuantConfig(8)
+    kg = jax.random.key(11)
+    wq = quantize(_rand((n, k), seed=4), cfg, jax.random.key(12))
+    from repro.core.qops import _tq
+    dec = _fused_dec(m=m, k=n, n=k, bm=32)
+    dx, gq = contract_qi(g, _tq(wq), cfg, kg, dec)
+    gq_ref = quantize(g, cfg, kg)
+    np.testing.assert_array_equal(np.asarray(gq.m), np.asarray(gq_ref.m))
+    acc = np.asarray(gq_ref.m, np.int32) @ np.asarray(wq.m, np.int32)
+    scale = 2.0 ** (int(gq_ref.e) - 133) * 2.0 ** (int(wq.e) - 133)
+    np.testing.assert_array_equal(np.asarray(dx),
+                                  acc.astype(np.float32) * np.float32(scale))
+
+    dec2 = _fused_dec(m=k, k=m, n=n, bm=32)
+    xq = quantize(_rand((m, k), seed=5), cfg, jax.random.key(13))
+    dw = contract_ii(_tq(xq), _tq(gq), dec2)
+    acc2 = np.asarray(xq.m, np.int32).T @ np.asarray(gq.m, np.int32)
+    scale2 = 2.0 ** (int(xq.e) - 133) * 2.0 ** (int(gq.e) - 133)
+    np.testing.assert_array_equal(np.asarray(dw),
+                                  acc2.astype(np.float32) * np.float32(scale2))
+
+
+def test_contract_qq_batched_matches_core(mb=3, m=12, k=40, n=9):
+    a = _rand((mb, m, k), seed=21)
+    b = _rand((mb, n, k), seed=22)
+    cfg = QuantConfig(8)
+    ka, kb = jax.random.split(jax.random.key(31))
+    dec = _fused_dec(m=m, k=k, n=n, bm=32)
+    y, aq, bq = contract_qq(a, b, cfg, ka, kb, dec, nbatch=1)
+    aq_ref = quantize(a, cfg, ka)      # ONE shared scale across the batch
+    bq_ref = quantize(b, cfg, kb)
+    np.testing.assert_array_equal(np.asarray(aq.m), np.asarray(aq_ref.m))
+    np.testing.assert_array_equal(np.asarray(bq.m), np.asarray(bq_ref.m))
+    acc = np.einsum("bmk,bnk->bmn", np.asarray(aq_ref.m, np.int64),
+                    np.asarray(bq_ref.m, np.int64))
+    scale = 2.0 ** (int(aq_ref.e) - 133) * 2.0 ** (int(bq_ref.e) - 133)
+    np.testing.assert_array_equal(
+        np.asarray(y), acc.astype(np.float32) * np.float32(scale))

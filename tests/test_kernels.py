@@ -110,6 +110,42 @@ def test_int8_matmul_op_padding_and_scale():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
 
 
+@pytest.mark.parametrize("m,k,n", [(100, 70, 30), (13, 257, 9)])
+def test_int8_matmul_zero_padding_exact_through_rescale(m, k, n):
+    """ops.py pads mantissas with zeros but passes the *unpadded* scale:
+    zero mantissas contribute nothing to the int32 accumulator, so the
+    rescaled valid region must be BIT-identical to the unpadded reference
+    (not merely close)."""
+    rng = np.random.RandomState(m + k + n)
+    a = jnp.asarray(rng.randint(-127, 128, (m, k)).astype(np.int8))
+    b = jnp.asarray(rng.randint(-127, 128, (k, n)).astype(np.int8))
+    ea, eb = jnp.int32(141), jnp.int32(118)
+    got = int8_matmul_op(a, b, ea, eb, use_pallas=True)
+    scale = np.float32(2.0 ** (141 - 133) * 2.0 ** (118 - 133))
+    want = (np.asarray(a, np.int32) @ np.asarray(b, np.int32)
+            ).astype(np.float32) * scale
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_int8_matmul_scale_rides_in_smem_scalar_prefetch():
+    """The kernel takes the combined scale through PrefetchScalarGridSpec
+    (SMEM), not a (1, 1) VMEM block: a traced scalar must work and scale
+    the whole output."""
+    rng = np.random.RandomState(3)
+    a = jnp.asarray(rng.randint(-127, 128, (128, 128)).astype(np.int8))
+    b = jnp.asarray(rng.randint(-127, 128, (128, 128)).astype(np.int8))
+
+    @jax.jit
+    def run(scale):
+        return int8_matmul_pallas(a, b, scale, bm=128, bn=128, bk=128,
+                                  interpret=True)
+
+    y1 = run(jnp.float32(1.0))
+    y2 = run(jnp.float32(0.25))
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y1) * 0.25)
+
+
 def test_end_to_end_kernel_pipeline_vs_core():
     """quantize -> int8 GEMM via kernels ~= core qmatmul-style contraction."""
     x = _rand((64, 128), seed=11)

@@ -67,6 +67,30 @@ def test_accum_chunking_matches_unchunked():
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6, atol=1e-6)
 
 
+def test_chunk_count_prime_k_regression():
+    """The old divisor search (`while k % n: n += 1`) degenerated for prime
+    K: ceil(509/128)=4 walked all the way to n=509, i.e. 509 chunks of ONE
+    element.  _pt_dot now zero-pads K instead, so the count stays ceil."""
+    from repro.core.qops import _chunk_count
+    assert _chunk_count(509, 128) == 4          # was 509 before the fix
+    assert _chunk_count(509, 509) == 1
+    assert _chunk_count(510, 128) == 4
+    assert _chunk_count(128, 128) == 1
+    assert _chunk_count(7, 2) == 4
+    for k in (509, 521, 1031):                  # primes stay bounded
+        n = _chunk_count(k, 128)
+        assert n == -(-k // 128)
+        assert n * (-(-k // n)) >= k            # padded chunks cover K
+
+
+def test_accum_chunking_prime_k_matches_unchunked():
+    x, w = _rand((4, 509), 33), _rand((509, 8), 34)   # prime K
+    y1 = qmatmul(x, w, KEY, NumericPolicy(accum_chunk=128))
+    y2 = qmatmul(x, w, KEY, NumericPolicy())
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-6, atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # forward unbiasedness (Eq. 1)
 # ---------------------------------------------------------------------------
