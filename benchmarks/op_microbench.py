@@ -14,8 +14,15 @@ bytes-moved model from ``kernels.dispatch`` — so the perf trajectory is
 trackable across PRs.  The fused path's bytes are strictly below the
 unfused path's: the intermediate mantissa round-trip between quantizer
 and GEMM never touches HBM.
+
+The dataflow section traces one transformer train step with ``qflow``
+off/on, counts quantize executions via the jaxpr scanner in
+``repro.introspect`` (scan-trip-weighted), and writes the reduction to
+``BENCH_dataflow.json`` — the quantize-once claim of docs/DATAFLOW.md as
+a tracked number.
 """
 
+import dataclasses
 import json
 import os
 
@@ -23,20 +30,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PAPER_INT8, NumericPolicy, QuantConfig, qmatmul,
-                        quantize)
+from repro.configs import get_smoke_config
+from repro.core import (BFP, PAPER_INT8, NumericPolicy, QuantConfig,
+                        dequantize, qmatmul, quantize)
 from repro.core.bfp import rounding_bits
 from repro.core.qnorm import qlayernorm
+from repro.introspect import count_named_calls
 from repro.kernels import dispatch, ref
 from repro.kernels.fused_linear import fused_qq_pt_pallas
 from repro.kernels.ops import int8_matmul_op, quantize_op
+from repro.models import get_model
 
 from .common import row, time_op
 
 KEY = jax.random.key(0)
 
-BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_kernels.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_kernels.json")
+DATAFLOW_JSON = os.path.join(_ROOT, "BENCH_dataflow.json")
 
 KERNEL_SHAPES = [(256, 256, 256), (512, 512, 512)]
 
@@ -84,6 +95,63 @@ def _gemm_pipeline_records():
         records.append(dict(op="qmatmul", path="fused", shape=shape, us=us,
                             bytes_moved=dispatch.bytes_moved(
                                 dispatch.FUSED, m, k, n)))
+
+        # q-in (pre-quantized activation, qflow dataflow): the quantize
+        # stage runs for the weight only — measure + model the cut.
+        def qin(xb, w, key):
+            return qmatmul(xb, w, key, NumericPolicy(kernel_mode="jnp"))
+        xq = quantize(x, QuantConfig(8), kx)
+        xb = BFP(xq.m, xq.e, xq.cfg, dequantize(xq))
+        us = time_op(jax.jit(qin), xb, w, KEY)
+        records.append(dict(op="qmatmul_qin", path="jnp", shape=shape, us=us,
+                            bytes_moved=dispatch.bytes_moved(
+                                dispatch.JNP, m, k, n, kind="iq")))
+        records.append(dict(op="qmatmul_qin", path="fused", shape=shape,
+                            us=None, modeled_only=True,
+                            bytes_moved=dispatch.bytes_moved(
+                                dispatch.FUSED, m, k, n, kind="iq")))
+    return records
+
+
+# ---------------------------------------------------------------------------
+# dataflow: quantize executions per train step (jaxpr scan), qflow off vs on
+# ---------------------------------------------------------------------------
+
+DATAFLOW_ARCH = "qwen2_0_5b"
+DATAFLOW_BATCH, DATAFLOW_SEQ, DATAFLOW_CHUNK = 2, 256, 32
+
+
+def dataflow_records():
+    """Trace one transformer train step per setting and count quantize ops.
+
+    Counts are execution-weighted (scan trip counts — see repro.introspect);
+    tracing only, nothing is compiled or run. The attention chunk is set so
+    the KV scan has several trips: that is where qflow's quantize-once Q/K/V
+    pays repeatedly.
+    """
+    cfg = dataclasses.replace(get_smoke_config(DATAFLOW_ARCH),
+                              attn_chunk=DATAFLOW_CHUNK)
+    mod = get_model(cfg)
+    key = jax.random.key(0)
+    params = mod.init_params(key, cfg)
+    batch = {"tokens": jnp.zeros((DATAFLOW_BATCH, DATAFLOW_SEQ), jnp.int32),
+             "labels": jnp.zeros((DATAFLOW_BATCH, DATAFLOW_SEQ), jnp.int32)}
+    records = []
+    for setting, pol in [
+            ("qflow_off", PAPER_INT8),
+            ("qflow_on", dataclasses.replace(PAPER_INT8, qflow=True)),
+            ("qflow_on_fused_proj",
+             dataclasses.replace(PAPER_INT8, qflow=True, fused_proj=True))]:
+        def step(params, batch, key):
+            return mod.loss_fn(params, batch, key, pol, cfg)
+        counts = count_named_calls(jax.grad(step), params, batch, key)
+        records.append(dict(setting=setting, arch=cfg.name,
+                            batch=DATAFLOW_BATCH, seq=DATAFLOW_SEQ,
+                            attn_chunk=DATAFLOW_CHUNK,
+                            quantize_ops=counts["total"]))
+    base = records[0]["quantize_ops"]
+    for r in records:
+        r["reduction_vs_off_pct"] = round(100.0 * (1 - r["quantize_ops"] / base), 2)
     return records
 
 
@@ -120,11 +188,23 @@ def run():
     # kernel pipeline: fused vs unfused vs float, + BENCH_kernels.json
     records = _gemm_pipeline_records()
     for r in records:
-        row(f"{r['op']}_{r['path']}_{r['shape']}", r["us"],
+        row(f"{r['op']}_{r['path']}_{r['shape']}",
+            "" if r["us"] is None else r["us"],
             f"bytes_moved={r['bytes_moved']}")
     with open(BENCH_JSON, "w") as f:
         json.dump(records, f, indent=1)
     row("bench_kernels_json", 0.0, f"wrote={BENCH_JSON};records={len(records)}")
+
+    # quantize-op count per train step: the qflow dataflow's perf trail
+    drecords = dataflow_records()
+    for r in drecords:
+        row(f"dataflow_{r['setting']}", 0.0,
+            f"quantize_ops={r['quantize_ops']};"
+            f"reduction={r['reduction_vs_off_pct']}%")
+    with open(DATAFLOW_JSON, "w") as f:
+        json.dump(drecords, f, indent=1)
+    row("bench_dataflow_json", 0.0,
+        f"wrote={DATAFLOW_JSON};records={len(drecords)}")
 
 
 if __name__ == "__main__":

@@ -1,19 +1,21 @@
 """Core: the paper's fully-integer training pipeline as composable JAX ops."""
 
-from .bfp import (BFP, PER_TENSOR, QuantConfig, bit_length, dequantize, pow2,
-                  quantize, requantize_i32, scale_exponent, sr_shift_signed)
+from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_from_fx, bfp_value,
+                  biased_exponent, bit_length, dequantize, pow2, quantize,
+                  requantize_i32, scale_exponent, sr_shift_signed)
 from .policy import FLOAT32, PAPER_INT8, NumericPolicy, int_policy
-from .qops import qbmm, qcontract, qconv, qembed, qmatmul
+from .qops import qbmm, qcontract, qconv, qembed, qmatmul, qrelu
 from .qnorm import qbatchnorm, qlayernorm, qrmsnorm
 from .integer_sgd import (IntSGDState, integer_sgd_init, integer_sgd_step,
                           master_params_f32)
 from .baseline_quant import uniform_qmatmul, uniform_quantize
 
 __all__ = [
-    "BFP", "PER_TENSOR", "QuantConfig", "bit_length", "dequantize", "pow2",
+    "BFP", "PER_TENSOR", "QuantConfig", "bfp_from_fx", "bfp_value",
+    "biased_exponent", "bit_length", "dequantize", "pow2",
     "quantize", "requantize_i32", "scale_exponent", "sr_shift_signed",
     "FLOAT32", "PAPER_INT8", "NumericPolicy", "int_policy",
-    "qbmm", "qcontract", "qconv", "qembed", "qmatmul",
+    "qbmm", "qcontract", "qconv", "qembed", "qmatmul", "qrelu",
     "qbatchnorm", "qlayernorm", "qrmsnorm",
     "IntSGDState", "integer_sgd_init", "integer_sgd_step", "master_params_f32",
     "uniform_qmatmul", "uniform_quantize",

@@ -45,6 +45,9 @@ __all__ = [
     "rounding_bits",
     "storage_dtype",
     "scale_exponent",
+    "biased_exponent",
+    "bfp_from_fx",
+    "bfp_value",
     "PER_TENSOR",
 ]
 
@@ -115,21 +118,38 @@ class BFP:
     ``m`` has the logical shape of the tensor. ``e`` is the IEEE-biased
     shared exponent: shape ``()`` for per-tensor scale, or the tensor shape
     with the trailing axis divided by ``block`` for per-block scale.
+
+    ``g`` is an optional float32 *gradient carrier* set by the q-out ops
+    (see docs/DATAFLOW.md): it holds the dequantized value as an autodiff
+    edge so that reverse-mode gradients can cross an integer-valued seam
+    (integer leaves have float0 tangents, which would sever the chain).
+    Forward compute never reads ``g`` — consumers use the mantissas — so
+    XLA dead-code-eliminates its producer; only the cotangent edge is real.
+    A ``BFP`` without ``g`` (residuals, checkpoints) flattens to two leaves
+    exactly as before.
     """
 
-    __slots__ = ("m", "e", "cfg")
+    __slots__ = ("m", "e", "cfg", "g")
 
-    def __init__(self, m: jnp.ndarray, e: jnp.ndarray, cfg: QuantConfig):
+    def __init__(self, m: jnp.ndarray, e: jnp.ndarray, cfg: QuantConfig,
+                 g: Optional[jnp.ndarray] = None):
         self.m = m
         self.e = e
         self.cfg = cfg
+        self.g = g
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.m, self.e), self.cfg
+        if self.g is None:
+            return (self.m, self.e), (self.cfg, False)
+        return (self.m, self.e, self.g), (self.cfg, True)
 
     @classmethod
-    def tree_unflatten(cls, cfg, children):
+    def tree_unflatten(cls, aux, children):
+        cfg, has_g = aux if isinstance(aux, tuple) else (aux, False)
+        if has_g:
+            m, e, g = children
+            return cls(m, e, cfg, g)
         m, e = children
         return cls(m, e, cfg)
 
@@ -160,6 +180,32 @@ class BFP:
 def scale_exponent(e_biased: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
     """Unbiased exponent of the scale: x = m * 2^E with E returned here."""
     return e_biased - _F32_EXP_BIAS - _F32_MANT_BITS + cfg.base_shift
+
+
+def biased_exponent(e_unbiased: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Inverse of :func:`scale_exponent`: store x = m * 2^E as a biased e."""
+    return e_unbiased + _F32_EXP_BIAS + _F32_MANT_BITS - cfg.base_shift
+
+
+def bfp_from_fx(m: jnp.ndarray, e_unbiased: jnp.ndarray, cfg: QuantConfig,
+                g: Optional[jnp.ndarray] = None) -> BFP:
+    """Wrap an integer mantissa + unbiased power-of-two exponent as BFP.
+
+    The bridge from the ``core.fixed_point`` calculus (norm layers) into the
+    inter-layer BFP currency: ``m`` must already fit ``cfg.p`` magnitude
+    bits (callers narrow with ``fx_narrow``); no rounding happens here.
+    """
+    return BFP(m.astype(storage_dtype(cfg.bits)),
+               biased_exponent(jnp.asarray(e_unbiased), cfg).astype(jnp.int32),
+               cfg, g)
+
+
+def bfp_value(x) -> jnp.ndarray:
+    """Float32 view of ``f32 | BFP``: the gradient carrier when present
+    (keeps autodiff connectivity), else a dequantize."""
+    if isinstance(x, BFP):
+        return x.g if x.g is not None else dequantize(x)
+    return x
 
 
 def pow2(e: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:

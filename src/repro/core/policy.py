@@ -55,6 +55,13 @@ class NumericPolicy:
     # under the paper's per-tensor rule), and the input is quantized once
     # instead of 3x/2x.
     fused_proj: bool = False
+    # qflow: quantized activations as the inter-layer currency (see
+    # docs/DATAFLOW.md). Off (default): every op dequantizes its output and
+    # the next op re-quantizes — bit-identical to the pre-qflow pipeline.
+    # On: norms and q-out ops emit BFP tensors that q-in ops consume
+    # directly (quantize-once per activation tensor): the norm->projection
+    # and attention QKV seams exchange int8 mantissas, never float32.
+    qflow: bool = False
     # rng: "threefry" (jax default) or "hash" — a per-element avalanche
     # hash for the stochastic-rounding draws, the software analogue of the
     # paper's Fig.-4 on-the-fly hardware RNG (~8x less arithmetic).
@@ -80,6 +87,12 @@ class NumericPolicy:
     # and persist to the JSON cache (kernels.autotune); False uses the
     # cache when present, else a deterministic heuristic.
     kernel_autotune: bool = False
+
+    @property
+    def qflow_seams(self) -> bool:
+        """Whether model block seams exchange BFP activations: the single
+        gate the whole zoo keys q-in/q-out emission on (docs/DATAFLOW.md)."""
+        return self.enabled and self.qflow and self.quantize_norms
 
     def fwd_cfg(self) -> QuantConfig:
         return QuantConfig(self.fwd_bits, self.block, self.stochastic, self.rng)

@@ -24,12 +24,42 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_from_fx, bfp_value,
+                  dequantize, scale_exponent)
 from .fixed_point import (Fx, KeyGen, fx_add, fx_const, fx_div_n, fx_mul,
                           fx_narrow, fx_quantize, fx_rsqrt, fx_sub, fx_sum,
                           fx_to_f32, fx_unify)
 from .policy import NumericPolicy
 
 __all__ = ["qlayernorm", "qrmsnorm", "qbatchnorm"]
+
+
+# ---------------------------------------------------------------------------
+# q-in / q-out plumbing (docs/DATAFLOW.md): a BFP input enters the fixed-
+# point datapath directly (its mantissas ARE the fx value — no fx_quantize
+# pass), and a q-out norm leaves it as a per-tensor BFP (unify + narrow, no
+# float32 round-trip). Gradients ride the BFP float32 carrier, exactly as
+# in core.qops.
+# ---------------------------------------------------------------------------
+
+
+def _fx_from_bfp(m: jnp.ndarray, e_biased: jnp.ndarray, cfg: QuantConfig) -> Fx:
+    """Adopt per-tensor BFP mantissas as an Fx value (pure reinterpretation)."""
+    return Fx(m.astype(jnp.int32), scale_exponent(e_biased, cfg), cfg.p)
+
+
+def _norm_out_cfg(policy: NumericPolicy) -> QuantConfig:
+    return QuantConfig(policy.fwd_bits, PER_TENSOR, policy.stochastic,
+                       policy.rng)
+
+
+def _emit_bfp(o: Fx, policy: NumericPolicy, kg: KeyGen):
+    """q-out epilogue: per-row Fx -> per-tensor int8-grade (m, e, carrier)."""
+    ocfg = _norm_out_cfg(policy)
+    u = fx_unify(o, kg)
+    o8 = fx_narrow(u, ocfg.p, kg)
+    q = bfp_from_fx(o8.m, o8.e, ocfg)
+    return q.m, q.e, dequantize(q)
 
 
 def _row(v: Fx) -> Fx:
@@ -53,19 +83,25 @@ def _ln_stats(xf: Fx, n: int, kg: KeyGen, eps: float) -> Tuple[Fx, Fx]:
 # layer-norm (and rms-norm) over the last axis
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
-def _qln(x, gamma, beta, key, policy: NumericPolicy, eps: float, rms: bool):
-    y, _ = _qln_fwd(x, gamma, beta, key, policy, eps, rms)
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
+def _qln(x, xe, xg, gamma, beta, key, policy: NumericPolicy, eps: float,
+         rms: bool, xcfg, out_q: bool):
+    y, _ = _qln_fwd(x, xe, xg, gamma, beta, key, policy, eps, rms, xcfg, out_q)
     return y
 
 
-def _qln_fwd(x, gamma, beta, key, policy: NumericPolicy, eps: float, rms: bool):
+def _qln_fwd(x, xe, xg, gamma, beta, key, policy: NumericPolicy, eps: float,
+             rms: bool, xcfg, out_q: bool):
     n = x.shape[-1]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, n)
     kg = KeyGen(key)
     pb = policy.fwd_bits
-    xf = fx_quantize(x2, pb, kg(), rng=policy.rng)
+    if xcfg is None:
+        xf = fx_quantize(x2, pb, kg(), rng=policy.rng)
+    else:
+        # q-in: the BFP mantissas enter the fixed-point datapath directly.
+        xf = _fx_from_bfp(x2, xe, xcfg)
     if rms:
         # RMSNorm: no centering; "c" is x itself narrowed to int8 grade.
         c7 = fx_narrow(Fx(xf.m, xf.e, xf.bits), 7, kg)
@@ -77,18 +113,25 @@ def _qln_fwd(x, gamma, beta, key, policy: NumericPolicy, eps: float, rms: bool):
     gf = fx_quantize(gamma, pb, kg())
     xhat = fx_mul(c7, _row(rs), kg)
     o = fx_mul(xhat, gf, kg)
+    res = (Fx(c7.m.astype(jnp.int8), c7.e, c7.bits), rs, gf,
+           jax.random.fold_in(key, 0xBACC))
+    if out_q:
+        of = o if beta is None else fx_add(o, fx_quantize(beta, pb, kg()), kg)
+        m_, e_, carrier = _emit_bfp(of, policy, kg)
+        shp = (*lead, n)
+        return (m_.reshape(shp), e_, carrier.reshape(shp)), res
     if beta is None:
         y = fx_to_f32(o)
     else:
         bf = fx_quantize(beta, pb, kg())
         y = fx_to_f32(fx_add(o, bf, kg))
-    res = (Fx(c7.m.astype(jnp.int8), c7.e, c7.bits), rs, gf,
-           jax.random.fold_in(key, 0xBACC))
     return y.reshape(*lead, n), res
 
 
-def _qln_bwd(policy: NumericPolicy, eps: float, rms: bool, res, gy):
+def _qln_bwd(policy: NumericPolicy, eps: float, rms: bool, xcfg, out_q: bool,
+             res, cts):
     c7s, rs, gf, kb = res
+    gy = cts[2] if out_q else cts
     n = gy.shape[-1]
     g2 = gy.reshape(-1, n)
     c7 = Fx(c7s.m.astype(jnp.int32), c7s.e, c7s.bits)
@@ -108,36 +151,64 @@ def _qln_bwd(policy: NumericPolicy, eps: float, rms: bool, res, gy):
     dgamma = fx_to_f32(fx_sum(fx_unify(fx_mul(gq, xhat, kg), kg), m_rows, kg, axis=0))
     # beta exists iff not rms (qrmsnorm passes beta=None)
     dbeta = None if rms else fx_to_f32(fx_sum(gq, m_rows, kg, axis=0))
-    return dx, dgamma, dbeta, None
+    if xcfg is None:
+        return dx, None, None, dgamma, dbeta, None
+    return None, None, dx, dgamma, dbeta, None
 
 
 _qln.defvjp(_qln_fwd, _qln_bwd)
 
 
-def qlayernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: Optional[jnp.ndarray],
+def _norm_call(x, gamma, beta, key, policy, eps, rms, out_q):
+    """Shared q-in/q-out entry: unpack a BFP input, wrap a BFP output."""
+    if isinstance(x, BFP) and x.cfg.block != PER_TENSOR:
+        x = bfp_value(x)       # per-block scale varies along the norm axis
+    if isinstance(x, BFP):
+        out = _qln(x.m, x.e, x.g, gamma, beta, key, policy, eps, rms,
+                   x.cfg, out_q)
+    else:
+        out = _qln(x, None, None, gamma, beta, key, policy, eps, rms,
+                   None, out_q)
+    if out_q:
+        m_, e_, g_ = out
+        return BFP(m_, e_, _norm_out_cfg(policy), g_)
+    return out
+
+
+def qlayernorm(x, gamma: jnp.ndarray, beta: Optional[jnp.ndarray],
                key: Optional[jax.Array] = None,
-               policy: NumericPolicy = NumericPolicy(), eps: float = 1e-5) -> jnp.ndarray:
-    """Integer layer-norm over the last axis (fwd+bwd in integer arithmetic)."""
+               policy: NumericPolicy = NumericPolicy(), eps: float = 1e-5,
+               *, out_q: bool = False):
+    """Integer layer-norm over the last axis (fwd+bwd in integer arithmetic).
+
+    ``x`` may be a per-tensor ``BFP`` (q-in: skips the input fx_quantize)
+    and ``out_q=True`` emits a per-tensor ``BFP`` (unify + narrow, no
+    float32 round-trip) — the norm -> projection seam of the qflow
+    dataflow.  The float path ignores ``out_q`` and returns float32.
+    """
     if not (policy.enabled and policy.quantize_norms):
+        x = bfp_value(x)
         mu = jnp.mean(x, axis=-1, keepdims=True)
         v = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
         y = (x - mu) * jax.lax.rsqrt(v + eps) * gamma
         return y if beta is None else y + beta
     if key is None:
         raise ValueError("qlayernorm with an integer policy needs a PRNG key")
-    return _qln(x, gamma, beta, key, policy, eps, False)
+    return _norm_call(x, gamma, beta, key, policy, eps, False, out_q)
 
 
-def qrmsnorm(x: jnp.ndarray, gamma: jnp.ndarray,
+def qrmsnorm(x, gamma: jnp.ndarray,
              key: Optional[jax.Array] = None,
-             policy: NumericPolicy = NumericPolicy(), eps: float = 1e-6) -> jnp.ndarray:
+             policy: NumericPolicy = NumericPolicy(), eps: float = 1e-6,
+             *, out_q: bool = False):
     """Integer RMSNorm (the LM-zoo norm): same machinery without centering."""
     if not (policy.enabled and policy.quantize_norms):
+        x = bfp_value(x)
         v = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
         return x * jax.lax.rsqrt(v + eps) * gamma
     if key is None:
         raise ValueError("qrmsnorm with an integer policy needs a PRNG key")
-    return _qln(x, gamma, None, key, policy, eps, True)
+    return _norm_call(x, gamma, None, key, policy, eps, True, out_q)
 
 
 # ---------------------------------------------------------------------------
@@ -150,19 +221,24 @@ def _col(v: Fx) -> Fx:
     return Fx(v.m[None, :], e, v.bits)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
-def _qbn(x, gamma, beta, key, policy: NumericPolicy, eps: float):
-    y, _ = _qbn_fwd(x, gamma, beta, key, policy, eps)
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _qbn(x, xe, xg, gamma, beta, key, policy: NumericPolicy, eps: float,
+         xcfg, out_q: bool):
+    y, _ = _qbn_fwd(x, xe, xg, gamma, beta, key, policy, eps, xcfg, out_q)
     return y
 
 
-def _qbn_fwd(x, gamma, beta, key, policy: NumericPolicy, eps: float):
+def _qbn_fwd(x, xe, xg, gamma, beta, key, policy: NumericPolicy, eps: float,
+             xcfg, out_q: bool):
     c = x.shape[-1]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, c)
     m_rows = x2.shape[0]
     kg = KeyGen(key)
-    xf = fx_quantize(x2, policy.fwd_bits, kg(), rng=policy.rng)
+    if xcfg is None:
+        xf = fx_quantize(x2, policy.fwd_bits, kg(), rng=policy.rng)
+    else:
+        xf = _fx_from_bfp(x2, xe, xcfg)
     mu = fx_div_n(fx_sum(xf, m_rows, kg, axis=0), m_rows, kg)       # (C,)
     cent = fx_sub(xf, _col(mu), kg)
     c7 = fx_narrow(cent, 7, kg)
@@ -172,18 +248,25 @@ def _qbn_fwd(x, gamma, beta, key, policy: NumericPolicy, eps: float):
     gf = fx_quantize(gamma, policy.fwd_bits, kg())
     bf = fx_quantize(beta, policy.fwd_bits, kg())
     xhat = fx_mul(c7, _col(rs), kg)
-    y = fx_to_f32(fx_add(fx_mul(xhat, _col(gf), kg), _col(bf), kg))
+    o = fx_add(fx_mul(xhat, _col(gf), kg), _col(bf), kg)
     # batch statistics (dequantized) for the running-stat EMA, outside the
     # training compute path
     batch_mean = fx_to_f32(mu)
     batch_var = fx_to_f32(var)
     res = (Fx(c7.m.astype(jnp.int8), c7.e, c7.bits), rs, gf,
            jax.random.fold_in(key, 0xBACC))
+    if out_q:
+        m_, e_, carrier = _emit_bfp(o, policy, kg)
+        shp = (*lead, c)
+        return ((m_.reshape(shp), e_, carrier.reshape(shp)),
+                batch_mean, batch_var), res
+    y = fx_to_f32(o)
     return (y.reshape(*lead, c), batch_mean, batch_var), res
 
 
-def _qbn_bwd(policy: NumericPolicy, eps: float, res, gys):
-    gy, _, _ = gys  # no gradients flow through the returned batch stats
+def _qbn_bwd(policy: NumericPolicy, eps: float, xcfg, out_q: bool, res, gys):
+    # no gradients flow through the returned batch stats
+    gy = gys[0][2] if out_q else gys[0]
     c7s, rs, gf, kb = res
     n = gy.shape[-1]
     g2 = gy.reshape(-1, n)
@@ -200,28 +283,36 @@ def _qbn_bwd(policy: NumericPolicy, eps: float, res, gys):
     dx = fx_to_f32(fx_mul(diff, _col(rs), kg)).reshape(gy.shape)
     dgamma = fx_to_f32(fx_sum(fx_unify(fx_mul(gq, xhat, kg), kg), m_rows, kg, axis=0))
     dbeta = fx_to_f32(fx_sum(gq, m_rows, kg, axis=0))
-    return dx, dgamma, dbeta, None
+    if xcfg is None:
+        return dx, None, None, dgamma, dbeta, None
+    return None, None, dx, dgamma, dbeta, None
 
 
 _qbn.defvjp(_qbn_fwd, _qbn_bwd)
 
 
-def qbatchnorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+def qbatchnorm(x, gamma: jnp.ndarray, beta: jnp.ndarray,
                key: Optional[jax.Array] = None,
                policy: NumericPolicy = NumericPolicy(), eps: float = 1e-5,
                *, running: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-               training: bool = True):
+               training: bool = True, out_q: bool = False):
     """Integer batch-norm (channels-last). Returns (y, batch_mean, batch_var).
 
     ``training=False`` (or frozen BN, as the paper uses for detection /
     segmentation) normalizes with the supplied ``running`` stats and returns
     them unchanged. The running-stat EMA itself is the caller's bookkeeping.
+
+    ``x`` may be a per-tensor ``BFP`` (q-in) and ``out_q=True`` returns
+    ``y`` as a per-tensor ``BFP`` — the conv -> bn -> relu -> conv chain of
+    the qflow dataflow stays on integer activations.
     """
     if not training:
         rm, rv = running
+        x = bfp_value(x)
         y = (x - rm) * jax.lax.rsqrt(rv + eps) * gamma + beta
         return y, rm, rv
     if not (policy.enabled and policy.quantize_norms):
+        x = bfp_value(x)
         axes = tuple(range(x.ndim - 1))
         mu = jnp.mean(x, axis=axes)
         var = jnp.mean(jnp.square(x - mu), axis=axes)
@@ -229,4 +320,13 @@ def qbatchnorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
         return y, mu, var
     if key is None:
         raise ValueError("qbatchnorm with an integer policy needs a PRNG key")
-    return _qbn(x, gamma, beta, key, policy, eps)
+    if isinstance(x, BFP) and x.cfg.block != PER_TENSOR:
+        x = bfp_value(x)
+    if isinstance(x, BFP):
+        out = _qbn(x.m, x.e, x.g, gamma, beta, key, policy, eps, x.cfg, out_q)
+    else:
+        out = _qbn(x, None, None, gamma, beta, key, policy, eps, None, out_q)
+    if out_q:
+        (m_, e_, g_), mean, var = out
+        return BFP(m_, e_, _norm_out_cfg(policy), g_), mean, var
+    return out

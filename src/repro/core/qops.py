@@ -33,11 +33,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..kernels import dispatch as kdispatch
-from .bfp import (BFP, PER_TENSOR, QuantConfig, dequantize, pow2, quantize,
-                  scale_exponent)
+from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_value, dequantize, pow2,
+                  quantize, scale_exponent)
 from .policy import NumericPolicy
 
-__all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract"]
+__all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract", "qrelu"]
 
 
 # ---------------------------------------------------------------------------
@@ -251,14 +251,132 @@ def _qmatmul_bwd(policy: NumericPolicy, res, gy):
 _qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
 
 
-def qmatmul(x: jnp.ndarray, w: jnp.ndarray, key: Optional[jax.Array] = None,
-            policy: NumericPolicy = NumericPolicy()) -> jnp.ndarray:
-    """Quantized linear contraction x(..., K) @ w(K, N); float path if disabled."""
+# ---------------------------------------------------------------------------
+# q-in / q-out (qflow): BFP operands in, BFP outputs out (docs/DATAFLOW.md)
+#
+# Integer pytree leaves have float0 tangents, so a BFP-valued edge between
+# two ops would sever reverse-mode autodiff. The flex variants below route
+# gradients through the BFP's float32 carrier ``g`` instead: the custom_vjp
+# takes (m, e, g) as separate arguments, computes on the mantissas, ignores
+# ``g`` in the forward (XLA dead-code-eliminates its producer), and returns
+# the A.2 input gradient as the cotangent of ``g``.  Cotangents for the
+# integer mantissa/exponent arguments are None (zero).
+# ---------------------------------------------------------------------------
+
+
+def _wcfg_for(xcfg: QuantConfig, policy: NumericPolicy) -> QuantConfig:
+    """Fresh-operand quantization config matching a pre-quantized operand's
+    blocking (mixed blockings cannot share one integer contraction)."""
+    return QuantConfig(policy.fwd_bits, xcfg.block, policy.stochastic,
+                       policy.rng)
+
+
+def _flat2d(m: jnp.ndarray, e: jnp.ndarray, cfg: QuantConfig) -> BFP:
+    """Flatten the leading dims of contraction-last (m, e) into a 2-D BFP."""
+    m2 = m.reshape(-1, m.shape[-1])
+    e2 = e if cfg.block == PER_TENSOR else e.reshape(-1, e.shape[-1])
+    return BFP(m2, e2, cfg)
+
+
+def _quantize_out(y: jnp.ndarray, n: int, policy: NumericPolicy,
+                  kq: jax.Array):
+    """The q-out epilogue: quantize the f32 accumulator output once (the
+    quantize the consumer would otherwise perform) and emit (m, e, carrier)."""
+    ocfg = _cfg_for_dim(policy.fwd_cfg(), n)
+    yq = quantize(y, ocfg, kq)
+    return yq.m, yq.e, dequantize(yq)
+
+
+def _out_cfg(policy: NumericPolicy, n: int) -> QuantConfig:
+    return _cfg_for_dim(policy.fwd_cfg(), n)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _qmatmul_flex(x, xe, xg, w, key, policy: NumericPolicy,
+                  xcfg: Optional[QuantConfig], out_q: bool):
+    y, _ = _qmatmul_flex_fwd(x, xe, xg, w, key, policy, xcfg, out_q)
+    return y
+
+
+def _qmatmul_flex_fwd(x, xe, xg, w, key, policy: NumericPolicy,
+                      xcfg: Optional[QuantConfig], out_q: bool):
+    # Same (kx, kw, kb) split as the plain path, so out_q only *adds* the
+    # output quantization (drawn from a separately folded key): the
+    # contraction mantissas stay bit-identical with out_q on or off.
+    kx, kw, kb = jax.random.split(key, 3)
+    kq = jax.random.fold_in(key, 0xD0)
+    lead = x.shape[:-1]
+    k, n = x.shape[-1], w.shape[-1]
+    x2 = x.reshape(-1, k)
+    if xcfg is None:
+        cfg = _cfg_for_dim(policy.fwd_cfg(), k)
+        plan = _plan("qmatmul_fwd", x2.shape[0], k, n, cfg, policy)
+        if plan.path == kdispatch.JNP:
+            xq = quantize(x2, cfg, kx)
+            wq = quantize(_t(w), cfg, kw)
+            y = _contract_q(xq, wq, 0, policy.accum_chunk)
+        else:
+            y, xq, wq = kdispatch.contract_qq(x2, _t(w), cfg, kx, kw, plan)
+    else:
+        xq = _flat2d(x, xe, xcfg)
+        wcfg = _wcfg_for(xcfg, policy)
+        plan = _plan("qmatmul_fwd", x2.shape[0], k, n, wcfg, policy,
+                     kind="iq", cfg2=xcfg)
+        if plan.path == kdispatch.JNP:
+            wq = quantize(_t(w), wcfg, kw)
+            y = _contract_q(xq, wq, 0, policy.accum_chunk)
+        else:
+            y, wq = kdispatch.contract_iq(xq, _t(w), wcfg, kw, plan)
+    y = y.reshape(*lead, n)
+    res = (xq, wq, kb, lead)
+    if not out_q:
+        return y, res
+    return _quantize_out(y, n, policy, kq), res
+
+
+def _qmatmul_flex_bwd(policy: NumericPolicy, xcfg: Optional[QuantConfig],
+                      out_q: bool, res, cts):
+    gy = cts[2] if out_q else cts        # q-out: ct arrives on the carrier
+    dx, dw, _ = _qmatmul_bwd(policy, res, gy)
+    if xcfg is None:
+        return dx, None, None, dw, None
+    return None, None, dx, dw, None      # BFP input: ct rides its carrier
+
+
+_qmatmul_flex.defvjp(_qmatmul_flex_fwd, _qmatmul_flex_bwd)
+
+
+def qmatmul(x, w: jnp.ndarray, key: Optional[jax.Array] = None,
+            policy: NumericPolicy = NumericPolicy(), *,
+            out_q: bool = False):
+    """Quantized linear contraction x(..., K) @ w(K, N).
+
+    ``x`` may be float32 or a pre-quantized ``BFP`` (blocked along K by
+    construction): a BFP input skips the in-op activation quantization —
+    the quantize-once rule of the qflow dataflow.  ``out_q=True`` returns a
+    ``BFP`` (with gradient carrier) instead of float32; gradients follow
+    the paper's A.2 integer contractions in every combination.  With the
+    policy disabled, BFP inputs fall back to their float32 view.
+    """
     if not policy.enabled:
-        return x @ w
+        return bfp_value(x) @ w
     if key is None:
         raise ValueError("qmatmul with an enabled integer policy needs a PRNG key")
-    return _qmatmul(x, w, key, policy)
+    if isinstance(x, BFP) and x.cfg.block != PER_TENSOR \
+            and policy.block == PER_TENSOR:
+        # backward residual handling follows the *policy* blocking; a
+        # per-block input under a per-tensor policy has no residual path
+        x = bfp_value(x)
+    if isinstance(x, BFP):
+        out = _qmatmul_flex(x.m, x.e, x.g, w, key, policy, x.cfg, out_q)
+    elif out_q:
+        out = _qmatmul_flex(x, None, None, w, key, policy, None, True)
+    else:
+        return _qmatmul(x, w, key, policy)
+    if out_q:
+        m_, e_, g_ = out
+        return BFP(m_, e_, _out_cfg(policy, w.shape[-1]), g_)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -340,14 +458,91 @@ def _qbmm_bwd(policy: NumericPolicy, res, gy):
 _qbmm.defvjp(_qbmm_fwd, _qbmm_bwd)
 
 
-def qbmm(a: jnp.ndarray, b: jnp.ndarray, key: Optional[jax.Array] = None,
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _qbmm_flex(a, ae, ag, b, be, bg, key, policy: NumericPolicy,
+               acfg: Optional[QuantConfig], bcfg: Optional[QuantConfig]):
+    y, _ = _qbmm_flex_fwd(a, ae, ag, b, be, bg, key, policy, acfg, bcfg)
+    return y
+
+
+def _qbmm_flex_fwd(a, ae, ag, b, be, bg, key, policy: NumericPolicy,
+                   acfg: Optional[QuantConfig], bcfg: Optional[QuantConfig]):
+    """a (*B, M, K) and b (*B, K, N), each f32 or pre-quantized mantissas.
+
+    Pre-quantized ``b`` must carry a per-tensor scale (the transpose into
+    contraction-last layout is then pure int8 data movement); the public
+    wrapper enforces this.
+    """
+    ka, kb_, kres = jax.random.split(key, 3)
+    nbatch = a.ndim - 2
+    m, k, n = a.shape[-2], a.shape[-1], b.shape[-1]
+    if acfg is not None and bcfg is not None:
+        aq = BFP(a, ae, acfg)
+        bq = _tq(BFP(b, be, bcfg))
+        plan = _plan("qbmm_fwd", m, k, n, acfg, policy, kind="ii", cfg2=bcfg)
+        if plan.path == kdispatch.JNP:
+            y = _contract_q(aq, bq, nbatch, policy.accum_chunk)
+        else:
+            y = kdispatch.contract_ii(aq, bq, plan, nbatch=nbatch)
+    elif acfg is not None:
+        aq = BFP(a, ae, acfg)
+        bcfg_f = _wcfg_for(acfg, policy)
+        plan = _plan("qbmm_fwd", m, k, n, bcfg_f, policy, kind="iq", cfg2=acfg)
+        if plan.path == kdispatch.JNP:
+            bq = quantize(_t(b), bcfg_f, kb_)
+            y = _contract_q(aq, bq, nbatch, policy.accum_chunk)
+        else:
+            y, bq = kdispatch.contract_iq(aq, _t(b), bcfg_f, kb_, plan,
+                                          nbatch=nbatch)
+    else:
+        bq = _tq(BFP(b, be, bcfg))
+        acfg_f = _wcfg_for(bcfg, policy)
+        plan = _plan("qbmm_fwd", m, k, n, acfg_f, policy, kind="qi", cfg2=bcfg)
+        if plan.path == kdispatch.JNP:
+            aq = quantize(a, acfg_f, ka)
+            y = _contract_q(aq, bq, nbatch, policy.accum_chunk)
+        else:
+            y, aq = kdispatch.contract_qi(a, bq, acfg_f, ka, plan,
+                                          nbatch=nbatch)
+    return y, (aq, bq, kres)
+
+
+def _qbmm_flex_bwd(policy: NumericPolicy, acfg: Optional[QuantConfig],
+                   bcfg: Optional[QuantConfig], res, gy):
+    da, db, _ = _qbmm_bwd(policy, res, gy)
+    cts_a = (da, None, None) if acfg is None else (None, None, da)
+    cts_b = (db, None, None) if bcfg is None else (None, None, db)
+    return (*cts_a, *cts_b, None)
+
+
+_qbmm_flex.defvjp(_qbmm_flex_fwd, _qbmm_flex_bwd)
+
+
+def qbmm(a, b, key: Optional[jax.Array] = None,
          policy: NumericPolicy = NumericPolicy()) -> jnp.ndarray:
-    """Quantized batched matmul a(*B, M, K) @ b(*B, K, N) with integer bwd."""
+    """Quantized batched matmul a(*B, M, K) @ b(*B, K, N) with integer bwd.
+
+    Either operand may be a pre-quantized ``BFP`` (q-in: the quantize-once
+    rule). A pre-quantized ``b`` needs a per-tensor scale and a pre-
+    quantized pair needs matching blockings; unsupported combinations fall
+    back to the operand's float32 view (gradient-preserving).
+    """
     if not policy.enabled:
-        return a @ b
+        return bfp_value(a) @ bfp_value(b)
     if key is None:
         raise ValueError("qbmm with an enabled integer policy needs a PRNG key")
-    return _qbmm(a, b, key, policy)
+    a_q, b_q = isinstance(a, BFP), isinstance(b, BFP)
+    if a_q and a.cfg.block != PER_TENSOR and policy.block == PER_TENSOR:
+        a, a_q = bfp_value(a), False     # see qmatmul: residuals follow policy
+    if b_q and b.cfg.block != PER_TENSOR:
+        b, b_q = bfp_value(b), False
+    if b_q and a_q and a.cfg.block != PER_TENSOR:
+        b, b_q = bfp_value(b), False     # mixed blocking: keep `a` integer
+    if not (a_q or b_q):
+        return _qbmm(a, b, key, policy)
+    am, ae, ag, acfg = (a.m, a.e, a.g, a.cfg) if a_q else (a, None, None, None)
+    bm, be, bg, bcfg = (b.m, b.e, b.g, b.cfg) if b_q else (b, None, None, None)
+    return _qbmm_flex(am, ae, ag, bm, be, bg, key, policy, acfg, bcfg)
 
 
 # ---------------------------------------------------------------------------
@@ -395,14 +590,50 @@ def _qembed_bwd(policy: NumericPolicy, res, gy):
 _qembed.defvjp(_qembed_fwd, _qembed_bwd)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qembed_q(tokens, table, key, policy: NumericPolicy):
+    y, _ = _qembed_q_fwd(tokens, table, key, policy)
+    return y
+
+
+def _qembed_q_fwd(tokens, table, key, policy: NumericPolicy):
+    """q-out embedding: the int8 row gather IS the quantized activation."""
+    cfg = _cfg_for_dim(policy.fwd_cfg(), table.shape[-1])
+    kt, kb = jax.random.split(key)
+    tq = quantize(table, cfg, kt)
+    rows = jnp.take(tq.m, tokens, axis=0)
+    if cfg.block == PER_TENSOR:
+        e = tq.e
+    else:
+        e = jnp.take(tq.e, tokens, axis=0)               # (..., D/blk)
+    carrier = dequantize(BFP(rows, e, cfg))
+    return (rows, e, carrier), (tokens, table.shape[0], kb)
+
+
+def _qembed_q_bwd(policy: NumericPolicy, res, cts):
+    _, dtable, _ = _qembed_bwd(policy, res, cts[2])
+    return None, dtable, None
+
+
+_qembed_q.defvjp(_qembed_q_fwd, _qembed_q_bwd)
+
+
 def qembed(tokens: jnp.ndarray, table: jnp.ndarray, key: Optional[jax.Array] = None,
-           policy: NumericPolicy = NumericPolicy()) -> jnp.ndarray:
-    """Integer embedding lookup (int8 table) with integer scatter-add grads."""
+           policy: NumericPolicy = NumericPolicy(), *, out_q: bool = False):
+    """Integer embedding lookup (int8 table) with integer scatter-add grads.
+
+    ``out_q=True`` returns the gathered rows as a ``BFP`` sharing the
+    table's scale — the gather itself is the (single) quantization of the
+    activation.
+    """
     if not (policy.enabled and policy.quantize_embed):
         return jnp.take(table, tokens, axis=0)
     if key is None:
         raise ValueError("qembed with an enabled integer policy needs a PRNG key")
-    return _qembed(tokens, table, key, policy)
+    if not out_q:
+        return _qembed(tokens, table, key, policy)
+    rows, e, g = _qembed_q(tokens, table, key, policy)
+    return BFP(rows, e, _out_cfg(policy, table.shape[-1]), g)
 
 
 # ---------------------------------------------------------------------------
@@ -434,22 +665,78 @@ def _qdq_bwd(cfg, res, g):
 qdq_st.defvjp(_qdq_fwd, _qdq_bwd)
 
 
-def qconv(x: jnp.ndarray, w: jnp.ndarray, key: Optional[jax.Array] = None,
+def _int_patches(m: jnp.ndarray, kh: int, kw: int,
+                 stride: Tuple[int, int], padding: str) -> jnp.ndarray:
+    """im2col on integer mantissas: (N, H, W, C) -> (N, Ho, Wo, C*kh*kw).
+
+    Pure data movement (pad with zero mantissas + strided slices), emitting
+    the same (cin, kh, kw)-major feature order as
+    ``lax.conv_general_dilated_patches`` so weights reshape identically.
+    """
+    n, h, w_, c = m.shape
+    sh, sw = stride
+    if padding == "SAME":
+        ho, wo = -(-h // sh), -(-w_ // sw)
+        ph = max((ho - 1) * sh + kh - h, 0)
+        pw = max((wo - 1) * sw + kw - w_, 0)
+        pads = ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2))
+    elif padding == "VALID":
+        ho, wo = (h - kh) // sh + 1, (w_ - kw) // sw + 1
+        pads = ((0, 0), (0, 0))
+    else:
+        raise ValueError(f"unsupported padding {padding!r}")
+    mp = jnp.pad(m, ((0, 0), pads[0], pads[1], (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(mp[:, dy:dy + (ho - 1) * sh + 1:sh,
+                           dx:dx + (wo - 1) * sw + 1:sw, :])
+    pat = jnp.stack(cols, axis=-1)                       # (N,Ho,Wo,C,kh*kw)
+    return pat.reshape(n, ho, wo, c * kh * kw)
+
+
+def qconv(x, w: jnp.ndarray, key: Optional[jax.Array] = None,
           policy: NumericPolicy = NumericPolicy(), *,
-          stride: Tuple[int, int] = (1, 1), padding: str = "SAME") -> jnp.ndarray:
+          stride: Tuple[int, int] = (1, 1), padding: str = "SAME",
+          out_q: bool = False):
     """2-D convolution, NHWC x HWIO -> NHWC, via integer GEMM.
 
     The im2col patch extraction / fold-back is pure data movement (gather /
     scatter-add of already-quantized values); every multiply of both the
     forward and backward pass happens inside the integer ``qmatmul``.
+
+    ``x`` may be a per-tensor-scale ``BFP`` (q-in: patches are sliced from
+    the int8 mantissas, no re-quantization) and ``out_q=True`` returns a
+    ``BFP`` — together they keep the conv -> norm -> relu -> conv chain on
+    integer activations (docs/DATAFLOW.md).
     """
     kh, kw_, cin, cout = w.shape
     if not policy.enabled:
         return lax.conv_general_dilated(
-            x, w, stride, padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    patches = lax.conv_general_dilated_patches(
-        x, (kh, kw_), stride, padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))      # (N, Ho, Wo, kh*kw*cin) [CIHW order]
+            bfp_value(x), w, stride, padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if isinstance(x, BFP) and x.cfg.block != PER_TENSOR:
+        x = bfp_value(x)      # per-block scales don't survive the reshuffle
+    if isinstance(x, BFP):
+        pm = _int_patches(x.m, kh, kw_, stride, padding)
+        pg = None if x.g is None else lax.conv_general_dilated_patches(
+            x.g, (kh, kw_), stride, padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        patches = BFP(pm, x.e, x.cfg, pg)
+    else:
+        patches = lax.conv_general_dilated_patches(
+            x, (kh, kw_), stride, padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))  # (N, Ho, Wo, kh*kw*cin) [CIHW order]
     # conv_general_dilated_patches emits feature order (cin, kh, kw); match w.
     w2 = jnp.moveaxis(w, 2, 0).reshape(cin * kh * kw_, cout)
-    return qmatmul(patches, w2, key, policy)
+    return qmatmul(patches, w2, key, policy, out_q=out_q)
+
+
+def qrelu(x):
+    """ReLU on ``f32 | BFP``. Exact on mantissas: relu(m * 2^E) = relu(m) * 2^E
+    (the shared scale is positive), so no dequantize/requantize is needed;
+    the gradient mask rides the float32 carrier (g > 0 iff m > 0)."""
+    if isinstance(x, BFP):
+        g = None if x.g is None else jax.nn.relu(x.g)
+        return BFP(jnp.maximum(x.m, 0), x.e, x.cfg, g)
+    return jax.nn.relu(x)

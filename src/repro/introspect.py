@@ -1,0 +1,74 @@
+"""Jaxpr introspection: count representation-mapping ops in a traced step.
+
+The qflow dataflow (docs/DATAFLOW.md) claims to remove redundant
+quantize passes between layers.  This module makes that claim measurable:
+:func:`count_quantize_ops` traces a function and walks its jaxpr —
+recursing through pjit / scan / while / cond / remat / custom_vjp call
+primitives — counting every call of the named quantization routines
+(``core.bfp.quantize``; ``fx_quantize`` and the norm layers route through
+it too, so one number covers GEMM and norm quantization alike).
+
+Counts are *execution-weighted*: an op inside a ``lax.scan`` body counts
+once per trip (``length`` param), so a quantize hoisted out of the KV-chunk
+scan or the layer scan shows up as the multiple it actually saves.  Ops on
+the cotangent side of ``jax.grad`` and inside ``jax.checkpoint`` replays
+are included — the number is "quantize executions per step", not "call
+sites in source".
+
+Used by ``benchmarks/op_microbench.py`` to emit ``BENCH_dataflow.json``
+and by the qflow tests to assert the reduction.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable
+
+import jax
+
+__all__ = ["count_quantize_ops", "count_named_calls", "QUANTIZE_NAMES"]
+
+# pjit names of the quantization entry points (jitted functions keep their
+# Python function name as the jaxpr call name).
+QUANTIZE_NAMES = ("quantize",)
+
+
+def _jaxprs_of(eqn) -> Iterable[tuple]:
+    """Yield (sub_jaxpr, trip_multiplier) for every jaxpr-valued param."""
+    length = eqn.params.get("length", 1) if eqn.primitive.name == "scan" else 1
+    for v in eqn.params.values():
+        if isinstance(v, jax.core.ClosedJaxpr):
+            yield v.jaxpr, length
+        elif isinstance(v, jax.core.Jaxpr):
+            yield v, length
+        elif isinstance(v, (tuple, list)):
+            for w in v:
+                if isinstance(w, jax.core.ClosedJaxpr):
+                    yield w.jaxpr, length
+                elif isinstance(w, jax.core.Jaxpr):
+                    yield w, length
+
+
+def _walk(jaxpr, names, mult: int, counts: Dict[str, int]) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.params.get("name", "") if eqn.primitive.name == "pjit" else ""
+        if name in names:
+            counts[name] = counts.get(name, 0) + mult
+            continue                      # a counted call is a leaf
+        for sub, length in _jaxprs_of(eqn):
+            _walk(sub, names, mult * length, counts)
+
+
+def count_named_calls(fn: Callable, *args, names=QUANTIZE_NAMES,
+                      **kwargs) -> Dict[str, int]:
+    """Trace ``fn(*args, **kwargs)`` and count named pjit calls, weighted by
+    scan trip counts.  Returns {name: executions} plus a "total" key."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    counts: Dict[str, int] = {}
+    _walk(jaxpr.jaxpr, tuple(names), 1, counts)
+    counts["total"] = sum(counts.values())
+    return counts
+
+
+def count_quantize_ops(fn: Callable, *args, **kwargs) -> int:
+    """Quantize executions per call of ``fn`` (see module docstring)."""
+    return count_named_calls(fn, *args, names=QUANTIZE_NAMES, **kwargs)["total"]

@@ -97,18 +97,42 @@ class AutotuneCache:
 
     def get(self, key: str) -> Optional[dict]:
         entry = self.load().get(key)
-        return entry if isinstance(entry, dict) and "bm" in entry else None
+        if not (isinstance(entry, dict) and "bm" in entry):
+            return None
+        try:
+            int(entry["bm"])
+        except (TypeError, ValueError):
+            return None       # hand-edited / corrupt entry: re-measure
+        return entry
 
     def put(self, key: str, entry: dict) -> None:
+        """Atomic load-modify-write: serialize to a temp file in the same
+        directory, fsync, then ``os.replace`` — a concurrent reader can only
+        ever observe a complete JSON document (no partial writes survive a
+        crash), and a failed write leaves no temp litter behind."""
         data = dict(self.load())   # copy: never mutate the read memo
         data[key] = entry
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
         tmp = f"{self.path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump(data, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        try:
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        try:
+            mtime = os.stat(self.path).st_mtime_ns
+        except OSError:
+            return
+        _load_memo[self.path] = (mtime, data)
 
 
 def time_call_us(fn: Callable[[], object], iters: int = 3) -> float:

@@ -2,7 +2,11 @@
 
 ``core.qops`` routes every integer contraction (``qmatmul`` / ``qbmm``
 forward and both Appendix-A.2 backward GEMMs) through :func:`plan_contract`,
-which picks one of three execution paths:
+which picks one of three execution paths.  Contractions come in four
+operand kinds: ``qq`` (both operands quantized in-op), ``qi``/``iq`` (one
+operand pre-quantized — a stored residual or a q-in BFP activation from
+the qflow dataflow, see docs/DATAFLOW.md) and ``ii`` (both pre-quantized).
+Pre-quantized entry points skip the quantize stage for that operand:
 
   ``fused``    one ``pallas_call`` from ``kernels.fused_linear``: in-VMEM
                quantization feeding the MXU, no intermediate HBM round-trip.
@@ -55,8 +59,8 @@ from .int8_matmul import int8_matmul_pallas
 
 __all__ = [
     "FUSED", "UNFUSED", "JNP", "Decision", "plan_contract",
-    "record_decisions", "contract_qq", "contract_qi", "contract_ii",
-    "bytes_moved", "DEFAULT_VMEM_BUDGET",
+    "record_decisions", "contract_qq", "contract_qi", "contract_iq",
+    "contract_ii", "bytes_moved", "DEFAULT_VMEM_BUDGET",
 ]
 
 FUSED = "fused"
@@ -154,38 +158,53 @@ def _vmem_bytes(kind: str, bm: int, k: int, n: int, nb: int) -> int:
 
 
 def bytes_moved(path: str, m: int, k: int, n: int, *, stochastic: bool = True,
-                bm: int = 128, bn: int = 128, bk: int = 128) -> int:
+                bm: int = 128, bn: int = 128, bk: int = 128,
+                kind: str = "qq") -> int:
     """Analytic HBM traffic of one quantize+contract, in bytes.
 
     Counts, for a (M, K) x (N, K)^T -> (M, N) integer contraction:
-    the shared-exponent scan (one f32 read of both operands — paid by every
-    integer path), f32 + random-bit reads into the quantizer, int8 mantissa
-    writes (the custom_vjp residuals), any intermediate HBM round-trip, the
-    tiled GEMM's operand re-reads, and the f32 output write.  ``float`` is
-    the plain f32 GEMM (no quantizer, f32 tile re-reads).  The default
-    (bm, bn, bk) matches the 128-tile geometry the unfused pipeline
-    actually executes (_matmul_unfused and the microbenchmarks).
+    the shared-exponent scan (one f32 read of each *freshly quantized*
+    operand — paid by every integer path), f32 + random-bit reads into the
+    quantizer, int8 mantissa writes (the custom_vjp residuals), any
+    intermediate HBM round-trip, the tiled GEMM's operand re-reads, and the
+    f32 output write.  ``float`` is the plain f32 GEMM (no quantizer, f32
+    tile re-reads).  The default (bm, bn, bk) matches the 128-tile geometry
+    the unfused pipeline actually executes (_matmul_unfused and the
+    microbenchmarks).
+
+    ``kind`` states which operands arrive pre-quantized (the q-in paths of
+    the qflow dataflow): "qq" both fresh, "iq" a pre-quantized, "qi" b
+    pre-quantized, "ii" both.  A pre-quantized operand pays one int8 read
+    in place of the f32 scan + quantizer reads and writes no residual —
+    the 4-9x per-operand traffic cut that makes BFP the cheaper inter-layer
+    currency.
     """
     f32, r8, i8 = 4, (4 if stochastic else 0), 1
     ni, nj = math.ceil(m / bm), math.ceil(n / bn)
     if path == "float":
         return f32 * (nj * m * k + ni * n * k + m * n)
-    scan = f32 * (m * k + n * k)
-    quant_in = (f32 + r8) * (m * k + n * k)
-    resid_out = i8 * (m * k + n * k)
+    a_fresh = kind in ("qq", "qi")
+    b_fresh = kind in ("qq", "iq")
+    fresh = (m * k if a_fresh else 0) + (n * k if b_fresh else 0)
+    pre = (m * k if not a_fresh else 0) + (n * k if not b_fresh else 0)
+    scan = f32 * fresh
+    quant_in = (f32 + r8) * fresh
+    resid_out = i8 * fresh
     y_out = f32 * m * n
     if path == FUSED:
         # One pallas_call: a-strips fetched once, b resident — the quantizer
-        # feeds the MXU through VMEM, nothing int8 round-trips HBM.
-        return scan + quant_in + resid_out + y_out
+        # feeds the MXU through VMEM, nothing int8 round-trips HBM; a
+        # pre-quantized operand is read once as int8.
+        return scan + quant_in + resid_out + i8 * pre + y_out
     # Unfused: quantizer writes mantissas to HBM, the GEMM re-reads them
-    # once per output tile row/column; jnp adds the elementwise emulation's
-    # extra f32 round-trips through the ~6-op quantizer chain.
+    # (pre-quantized mantissas included) once per output tile row/column;
+    # jnp adds the elementwise emulation's extra f32 round-trips through
+    # the ~6-op quantizer chain.
     gemm_reads = i8 * (nj * m * k + ni * n * k)
     unfused = scan + quant_in + resid_out + gemm_reads + y_out
     if path == UNFUSED:
         return unfused
-    return unfused + 2 * f32 * (m * k + n * k)   # JNP emulation overhead
+    return unfused + 2 * f32 * fresh             # JNP emulation overhead
 
 
 # ---------------------------------------------------------------------------
@@ -201,8 +220,11 @@ def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
     """Choose the execution path for one (M, K) x (N, K)^T contraction.
 
     ``cfg`` is the quantization config of the freshly-quantized operand(s);
-    ``cfg2`` (if given) the config of a pre-quantized residual operand
-    (``qi``/``ii`` kinds).  Called at trace time with static shapes.
+    ``cfg2`` (if given) the config of a pre-quantized operand — a stored
+    residual (``qi``/``ii``) or a q-in activation flowing between layers
+    (``iq``: the a side arrives as int8 mantissas + scale and the in-kernel
+    quantize stage is skipped for it).  Called at trace time with static
+    shapes.
     """
     backend = backend or jax.default_backend()
     interpret = backend != "tpu"
@@ -238,21 +260,31 @@ def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
     vkind = "qq_blk" if (kind == "qq" and blk != PER_TENSOR) else kind
 
     # -- fused feasibility ---------------------------------------------------
+    # "iq" runs the qi kernel with the operand roles swapped: the row strip
+    # walks the freshly-quantized side (N rows) while the pre-quantized int8
+    # mantissas (M rows) stay resident.
+    strip_rows = n if kind == "iq" else m
+    res_cols = _round_up(m, _LANE) if kind == "iq" else np_
+    vmem_kind = "qi" if vkind == "iq" else vkind
     fused_block = None
     if kernel_mode in ("auto", "fused"):
         if blk != PER_TENSOR and kind != "qq":
             fused_block = (0, "per-block residuals require the qq variant")
         else:
             def fits(bm):
-                return _vmem_bytes(vkind, bm, kp, np_, nb) <= vmem_budget
+                return _vmem_bytes(vmem_kind, bm, kp, res_cols, nb) <= vmem_budget
             key = autotune.shape_key(vkind, m, k, n, cfg.bits, blk, backend)
             # Measure only when the requested backend IS the local one:
             # interpret-mode timings must never be persisted under a TPU key.
             measure = ((autotune_measure or autotune.autotune_enabled_by_env())
                        and backend == jax.default_backend())
-            bench = (_make_bench(vkind, m, k, n, cfg, interpret)
-                     if measure else None)
-            bm = autotune.select_bm(key, m, fits, measure=measure,
+            if not measure:
+                bench = None
+            elif kind == "iq":
+                bench = _make_bench("qi", n, k, m, cfg, interpret)
+            else:
+                bench = _make_bench(vkind, m, k, n, cfg, interpret)
+            bm = autotune.select_bm(key, strip_rows, fits, measure=measure,
                                     bench=bench)
             if bm:
                 return decide(FUSED, "fused pipeline fits VMEM budget", bm)
@@ -468,6 +500,46 @@ def contract_qi(a: jnp.ndarray, bq: BFP, cfg: QuantConfig, ka: jax.Array,
 
     y, am = _batched_call(one, arrays, nbatch, [(m, n), (m, k)])
     return y, BFP(am, ea.astype(jnp.int32), cfg)
+
+
+def contract_iq(aq: BFP, b: jnp.ndarray, cfg: QuantConfig, kb: jax.Array,
+                dec: Decision, nbatch: int = 0) -> Tuple[jnp.ndarray, BFP]:
+    """Contract pre-quantized mantissas ``aq`` against freshly-quantized ``b``.
+
+    aq.m (*B, M, K) int8 (per-tensor scale), b (*B, N, K) f32 ->
+    (y (*B, M, N) f32, bq).  The q-in forward path: an activation that
+    already flows as BFP skips the in-kernel quantize stage entirely —
+    kernel-wise this is the qi kernel with the operand roles swapped (the
+    row strip walks the fresh side, the int8 mantissas stay resident, and
+    the tile output is transposed back).
+    """
+    assert aq.cfg.block == PER_TENSOR
+    m, k = aq.m.shape[-2], aq.m.shape[-1]
+    n = b.shape[-2]
+    sr = cfg.stochastic
+    eb = ref.max_biased_exp_ref(b)
+    rb = rounding_bits(kb, b.shape, cfg.rng) if sr else None
+    if dec.path == UNFUSED:
+        bmant = _quantize_rows(b, rb, eb, dec.interpret)
+        y = _matmul_unfused(aq.m, bmant, aq.e, eb, aq.cfg.p, cfg.p,
+                            dec.interpret, nbatch)
+        return y, BFP(bmant, eb.astype(jnp.int32), cfg)
+    arrays = [_pad2(b, dec.bm, _LANE)] + \
+        ([_pad2(rb, dec.bm, _LANE)] if sr else []) + \
+        [_pad2(aq.m, _LANE, _LANE)]
+
+    def one(args):
+        if sr:
+            b2, rb2, a2 = args
+        else:
+            (b2, a2), rb2 = args, None
+        yt, bm8 = fused_qi_pt_pallas(b2, rb2, a2, eb, aq.e, pa=cfg.p,
+                                     pb=aq.cfg.p, bm=dec.bm, stochastic=sr,
+                                     interpret=dec.interpret)
+        return jnp.swapaxes(yt, -1, -2), bm8
+
+    y, bmant = _batched_call(one, arrays, nbatch, [(m, n), (n, k)])
+    return y, BFP(bmant, eb.astype(jnp.int32), cfg)
 
 
 def contract_ii(aq: BFP, bq: BFP, dec: Decision,

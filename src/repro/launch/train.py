@@ -12,6 +12,7 @@ feeding the straggler monitor.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from typing import Optional
 
@@ -33,6 +34,7 @@ from .steps import TrainHyper, make_float_train_step, make_train_step
 
 POLICIES = {"int8": PAPER_INT8, "float32": FLOAT32,
             "int8_block": NumericPolicy(block=128),
+            "int8_qflow": NumericPolicy(qflow=True),
             "int4": NumericPolicy(fwd_bits=4, bwd_bits=4)}
 
 
@@ -41,9 +43,11 @@ def train(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
           microbatch: int = 1, ckpt_dir: Optional[str] = None,
           ckpt_every: int = 25, log_every: int = 10, seed: int = 0,
           momentum: float = 0.9, weight_decay: float = 0.0,
-          use_wsd: bool = False, quiet: bool = False):
+          use_wsd: bool = False, quiet: bool = False, qflow: bool = False):
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     policy = POLICIES[policy_name]
+    if qflow and policy.enabled:
+        policy = dataclasses.replace(policy, qflow=True)
     mod = get_model(cfg)
     key = jax.random.key(seed)
 
@@ -72,7 +76,10 @@ def train(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
             print(f"resumed from step {start_step}")
 
     losses = []
-    with use_rules(DEFAULT_RULES, None):
+    # a concrete (possibly 1x1) mesh: logical_constraint needs one to turn
+    # PartitionSpecs into NamedShardings (bare specs require a mesh context
+    # manager, which jitted step functions don't have)
+    with use_rules(DEFAULT_RULES, make_local_mesh()):
         for step in range(start_step, steps):
             t0 = time.time()
             hb = ds.batch_for_step(step)
@@ -112,11 +119,15 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--wsd", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--qflow", action="store_true",
+                    help="quantized activations as the inter-layer currency "
+                         "(docs/DATAFLOW.md); no-op for --policy float32")
     args = ap.parse_args()
     losses, _ = train(args.arch, smoke=args.smoke, steps=args.steps,
                       batch=args.batch, seq=args.seq, policy_name=args.policy,
                       lr=args.lr, microbatch=args.microbatch,
-                      ckpt_dir=args.ckpt_dir, use_wsd=args.wsd, seed=args.seed)
+                      ckpt_dir=args.ckpt_dir, use_wsd=args.wsd, seed=args.seed,
+                      qflow=args.qflow)
     print(f"final loss: {losses[-1]:.4f} (start {losses[0]:.4f})")
 
 

@@ -27,8 +27,8 @@ import jax.numpy as jnp
 
 import dataclasses
 
-from ..core import NumericPolicy, qbmm
-from ..core.qops import qdq_st
+from ..core import BFP, PER_TENSOR, NumericPolicy, qbmm, quantize
+from ..core.qops import _cfg_for_dim, qdq_st
 
 __all__ = ["chunked_attention", "local_attention", "decode_attention"]
 
@@ -70,12 +70,33 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     qg = _group_q(q, n_kv) * sc
     qpos = _qpos(s, g, q_offset)                             # (g*S,)
 
-    # RNG deduplication: one stochastic QDQ of Q and K up front puts their
-    # values exactly on the int8 grid; inside the chunk scan the QK^T
-    # integer matmul requantizes with *nearest* rounding, which is exact
-    # for on-grid values — Q is otherwise re-randomized n_chunks times.
+    # Two RNG-dedup strategies for the chunk scan (Q is otherwise
+    # re-randomized n_chunks times):
+    #  * qflow (policy.qflow): quantize Q, K and V ONCE up front and pass
+    #    their BFP mantissas into the scan — the integer matmuls consume
+    #    them directly (q-in), no re-quantization at all.  K/V chunks are
+    #    int8 slices sharing the whole-tensor scale; gradients ride the
+    #    float32 carriers.
+    #  * legacy QDQ: one stochastic QDQ of Q and K up front puts their
+    #    values exactly on the int8 grid; inside the chunk scan the QK^T
+    #    integer matmul requantizes with *nearest* rounding, which is exact
+    #    for on-grid values.
     qk_policy = policy
-    if policy.enabled and policy.stochastic and n_chunks > 1 and key is not None:
+    qg_b = kq = vq = None
+    if policy.enabled and policy.qflow and key is not None:
+        cfg_d = _cfg_for_dim(policy.fwd_cfg(), d)
+        qgq = quantize(qg, cfg_d, jax.random.fold_in(key, 0x71))
+        # carrier = the PRE-quantization float (straight-through): quantize
+        # itself is non-differentiable bit manipulation, so a carrier
+        # derived from the mantissas would silently zero dL/dQ.  The K/V
+        # chunks below use their raw float slices for the same reason.
+        qg_b = BFP(qgq.m, qgq.e, qgq.cfg, qg)
+        if cfg_d.block == PER_TENSOR:
+            # K/V scales must survive chunk slicing (K) and a contraction
+            # along the chunk axis (V): per-tensor only.
+            kq = quantize(k, cfg_d, jax.random.fold_in(key, 0x72))
+            vq = quantize(v, cfg_d, jax.random.fold_in(key, 0x73))
+    elif policy.enabled and policy.stochastic and n_chunks > 1 and key is not None:
         cfgf = policy.fwd_cfg()
         qg = qdq_st(qg, jax.random.fold_in(key, 0x71), cfgf)
         k = qdq_st(k, jax.random.fold_in(key, 0x72), cfgf)
@@ -83,12 +104,17 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
     kc = k.reshape(b, n_kv, n_chunks, chunk, d)
     vc = v.reshape(b, n_kv, n_chunks, chunk, d)
+    kmc = None if kq is None else kq.m.reshape(b, n_kv, n_chunks, chunk, d)
+    vmc = None if vq is None else vq.m.reshape(b, n_kv, n_chunks, chunk, d)
 
     def body(carry, inp):
         m, l, acc = carry
-        ci, kb, vb = inp                                     # (B,Hkv,C,D)
+        ci, kb, vb, kbm, vbm = inp                           # (B,Hkv,C,D)
         ckey = None if key is None else jax.random.fold_in(key, ci)
-        sck = qbmm(qg, jnp.swapaxes(kb, -1, -2),
+        kb_in = jnp.swapaxes(kb, -1, -2)                     # logical (D, C)
+        if kbm is not None:
+            kb_in = BFP(jnp.swapaxes(kbm, -1, -2), kq.e, kq.cfg, kb_in)
+        sck = qbmm(qg if qg_b is None else qg_b, kb_in,
                    None if ckey is None else jax.random.fold_in(ckey, 0),
                    qk_policy)                                # (B,Hkv,gS,C)
         kpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
@@ -103,7 +129,8 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         m_new = jnp.maximum(m, sck.max(axis=-1))
         p = jnp.where(mask, jnp.exp(sck - m_new[..., None]), 0.0)
         alpha = jnp.exp(m - m_new)
-        pv = qbmm(p, vb, None if ckey is None else jax.random.fold_in(ckey, 1),
+        vb_in = vb if vbm is None else BFP(vbm, vq.e, vq.cfg, vb)
+        pv = qbmm(p, vb_in, None if ckey is None else jax.random.fold_in(ckey, 1),
                   policy)                                    # (B,Hkv,gS,D)
         return (m_new, l * alpha + p.sum(axis=-1), acc * alpha[..., None] + pv), None
 
@@ -113,7 +140,9 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     (m, l, acc), _ = jax.lax.scan(
         body, init,
         (jnp.arange(n_chunks, dtype=jnp.int32),
-         jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0)))
+         jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0),
+         None if kmc is None else jnp.moveaxis(kmc, 2, 0),
+         None if vmc is None else jnp.moveaxis(vmc, 2, 0)))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return _ungroup(out, hq)
 

@@ -63,6 +63,11 @@ class ArchConfig:
     patch_positions: int = 0
     # attention softmax scale override (0 -> 1/sqrt(head_dim))
     logit_scale: float = 0.0
+    # online-softmax KV chunk length for training/prefill (0 -> the
+    # chunked_attention default); smaller chunks bound score memory and,
+    # under qflow, amortize the single Q/K/V quantization over more steps
+    # of the chunk scan (docs/DATAFLOW.md)
+    attn_chunk: int = 0
 
     @property
     def hd(self) -> int:

@@ -15,7 +15,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import NumericPolicy, qconv, qmatmul
+from ..core import NumericPolicy, bfp_value, qconv, qmatmul, qrelu
 from ..core.qnorm import qbatchnorm
 from .common import dense_init
 
@@ -70,29 +70,39 @@ def block_plan(cfg: CNNConfig):
     return plan
 
 
+def _qout(policy):
+    return policy.qflow_seams
+
+
 def _block(x, blk, stride_i, key, policy):
+    # qflow: the conv -> bn -> relu -> conv chain stays on integer
+    # activations (conv emits BFP, bn adopts the mantissas, relu acts on
+    # them exactly); bn2 returns float32 for the residual add.
+    oq = _qout(policy)
     ks = jax.random.split(key, 4)
     stride = (stride_i, stride_i)
-    h = qconv(x, blk["conv1"], ks[0], policy, stride=stride)
-    h, _, _ = qbatchnorm(h, blk["bn1"]["g"], blk["bn1"]["b"], ks[1], policy)
-    h = jax.nn.relu(h)
-    h = qconv(h, blk["conv2"], ks[2], policy)
+    h = qconv(x, blk["conv1"], ks[0], policy, stride=stride, out_q=oq)
+    h, _, _ = qbatchnorm(h, blk["bn1"]["g"], blk["bn1"]["b"], ks[1], policy,
+                         out_q=oq)
+    h = qrelu(h)
+    h = qconv(h, blk["conv2"], ks[2], policy, out_q=oq)
     h, _, _ = qbatchnorm(h, blk["bn2"]["g"], blk["bn2"]["b"], ks[3], policy)
     sc = x
     if "proj" in blk:
         sc = qconv(x, blk["proj"], jax.random.fold_in(key, 9), policy,
                    stride=stride)
-    return jax.nn.relu(h + sc)
+    return jax.nn.relu(h + bfp_value(sc))
 
 
 def apply(params, x, key, policy: NumericPolicy,
           cfg: CNNConfig = CNNConfig()) -> jnp.ndarray:
     """x: (B, H, W, C) -> logits (B, n_classes)."""
+    oq = _qout(policy)
     ks = jax.random.split(key, 3)
-    h = qconv(x, params["stem"], ks[0], policy)
+    h = qconv(x, params["stem"], ks[0], policy, out_q=oq)
     h, _, _ = qbatchnorm(h, params["stem_bn"]["g"], params["stem_bn"]["b"],
-                         ks[1], policy)
-    h = jax.nn.relu(h)
+                         ks[1], policy, out_q=oq)
+    h = qrelu(h)
     for i, ((_, _, stride), blk) in enumerate(zip(block_plan(cfg),
                                                   params["blocks"])):
         h = _block(h, blk, stride, jax.random.fold_in(key, 100 + i), policy)

@@ -117,11 +117,27 @@ def _unheads(x):
     return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
 
 
+def _qout(policy):
+    return policy.qflow_seams
+
+
 def _proj_qkv(x_q, x_kv, ap, key, policy, cfg, positions_q=None, positions_k=None):
     ks = jax.random.split(key, 3)
-    q = _heads(qmatmul(x_q, ap["wq"], ks[0], policy), cfg.n_heads, cfg.hd)
-    k = _heads(qmatmul(x_kv, ap["wk"], ks[1], policy), cfg.n_kv_heads, cfg.hd)
-    v = _heads(qmatmul(x_kv, ap["wv"], ks[2], policy), cfg.n_kv_heads, cfg.hd)
+    if policy.enabled and policy.fused_proj and x_q is x_kv:
+        # self-attention: one integer GEMM, one input quantization, one
+        # merged weight scale (fused_proj; cross-attention keeps separate
+        # projections — its Q and KV inputs are different tensors)
+        nq, nk = ap["wq"].shape[-1], ap["wk"].shape[-1]
+        wqkv = jnp.concatenate([ap["wq"], ap["wk"], ap["wv"]], axis=-1)
+        qkv = qmatmul(x_q, wqkv, ks[0], policy)
+        qf, kf, vf = jnp.split(qkv, (nq, nq + nk), axis=-1)
+        q = _heads(qf, cfg.n_heads, cfg.hd)
+        k = _heads(kf, cfg.n_kv_heads, cfg.hd)
+        v = _heads(vf, cfg.n_kv_heads, cfg.hd)
+    else:
+        q = _heads(qmatmul(x_q, ap["wq"], ks[0], policy), cfg.n_heads, cfg.hd)
+        k = _heads(qmatmul(x_kv, ap["wk"], ks[1], policy), cfg.n_kv_heads, cfg.hd)
+        v = _heads(qmatmul(x_kv, ap["wv"], ks[2], policy), cfg.n_kv_heads, cfg.hd)
     if positions_q is not None:
         cq, sq = rope(positions_q, cfg.hd, cfg.rope_theta)
         q = apply_rope(q, cq[None, None], sq[None, None])
@@ -143,35 +159,42 @@ def encode(params, src_embeds, key, policy: NumericPolicy, cfg: ArchConfig):
     s = h.shape[1]
     positions = jnp.arange(s, dtype=jnp.int32)
 
+    oq = _qout(policy)
+
     def body(h, xs):
         lp, idx = xs
         lkey = jax.random.fold_in(key, idx)
 
         def inner(h):
             hn = qlayernorm(h, lp["ln1_g"], lp["ln1_b"],
-                            jax.random.fold_in(lkey, 0), policy)
+                            jax.random.fold_in(lkey, 0), policy, out_q=oq)
             q, k, v = _proj_qkv(hn, hn, lp["attn"], jax.random.fold_in(lkey, 1),
                                 policy, cfg, positions, positions)
             o = chunked_attention(q, k, v, jax.random.fold_in(lkey, 2), policy,
-                                  causal=False)
+                                  causal=False, chunk=cfg.attn_chunk or 1024)
             h = h + qmatmul(_unheads(o), lp["attn"]["wo"],
                             jax.random.fold_in(lkey, 3), policy)
             hn = qlayernorm(h, lp["ln2_g"], lp["ln2_b"],
-                            jax.random.fold_in(lkey, 4), policy)
+                            jax.random.fold_in(lkey, 4), policy, out_q=oq)
             return h + _ffn(hn, lp, jax.random.fold_in(lkey, 5), policy)
 
         return jax.checkpoint(inner)(h), None
 
     h, _ = jax.lax.scan(body, h, (params["enc"],
                                   jnp.arange(cfg.enc_layers, dtype=jnp.int32)))
+    # q-out final norm: under qflow every decoder layer's cross-attention
+    # K/V projection consumes this one quantization of the encoder output
+    # (2 * n_layers quantize passes collapse into one).
     return qlayernorm(h, params["enc_fn_g"], params["enc_fn_b"],
-                      jax.random.fold_in(key, 0xEF), policy)
+                      jax.random.fold_in(key, 0xEF), policy, out_q=oq)
 
 
 def _dec_layer(h, lp, lkey, policy, cfg, positions, enc_kv=None, enc_out=None,
                self_kv=None, pos=None):
     """enc_kv: precomputed cross (k, v); self_kv: decode self cache (k, v)."""
-    hn = qlayernorm(h, lp["ln1_g"], lp["ln1_b"], jax.random.fold_in(lkey, 0), policy)
+    oq = _qout(policy)
+    hn = qlayernorm(h, lp["ln1_g"], lp["ln1_b"], jax.random.fold_in(lkey, 0),
+                    policy, out_q=oq)
     q, k, v = _proj_qkv(hn, hn, lp["self"], jax.random.fold_in(lkey, 1),
                         policy, cfg, positions, positions)
     if self_kv is None:
@@ -188,7 +211,8 @@ def _dec_layer(h, lp, lkey, policy, cfg, positions, enc_kv=None, enc_out=None,
     h = h + qmatmul(_unheads(o), lp["self"]["wo"], jax.random.fold_in(lkey, 3),
                     policy)
     # cross-attention
-    hn = qlayernorm(h, lp["ln2_g"], lp["ln2_b"], jax.random.fold_in(lkey, 4), policy)
+    hn = qlayernorm(h, lp["ln2_g"], lp["ln2_b"], jax.random.fold_in(lkey, 4),
+                    policy, out_q=oq)
     qx = _heads(qmatmul(hn, lp["cross"]["wq"], jax.random.fold_in(lkey, 5), policy),
                 cfg.n_heads, cfg.hd)
     if enc_kv is None:
@@ -203,7 +227,8 @@ def _dec_layer(h, lp, lkey, policy, cfg, positions, enc_kv=None, enc_out=None,
                            jax.random.fold_in(lkey, 7), policy, causal=False)
     h = h + qmatmul(_unheads(ox), lp["cross"]["wo"], jax.random.fold_in(lkey, 8),
                     policy)
-    hn = qlayernorm(h, lp["ln3_g"], lp["ln3_b"], jax.random.fold_in(lkey, 9), policy)
+    hn = qlayernorm(h, lp["ln3_g"], lp["ln3_b"], jax.random.fold_in(lkey, 9),
+                    policy, out_q=oq)
     h = h + _ffn(hn, lp, jax.random.fold_in(lkey, 10), policy)
     h = logical_constraint(h, "batch", "seq", "embed")
     return h, new_self, enc_kv
@@ -229,7 +254,8 @@ def _decode_stack(params, tokens, enc_out, key, policy, cfg):
     h, _ = jax.lax.scan(body, h, (params["dec"],
                                   jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     return qlayernorm(h, params["dec_fn_g"], params["dec_fn_b"],
-                      jax.random.fold_in(key, 0xF1), policy)
+                      jax.random.fold_in(key, 0xF1), policy,
+                      out_q=_qout(policy))
 
 
 def loss_fn(params, batch, key, policy: NumericPolicy, cfg: ArchConfig):

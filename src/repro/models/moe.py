@@ -14,15 +14,43 @@ no N x (E*C) one-hot matmul.
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core import NumericPolicy, qbmm, qmatmul
+from ..core import BFP, PER_TENSOR, NumericPolicy, bfp_value, qbmm, qmatmul
 from .common import ArchConfig, dense_init
 
 __all__ = ["moe_params_init", "moe_param_specs", "moe_block"]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qdispatch(m, g, flat, ecap: int):
+    """Capacity scatter of int8 mantissas + their f32 gradient carrier.
+
+    A custom_vjp so the integer scatter is never JVP-traced: mantissas have
+    float0 tangents, which jax's scatter jvp rule cannot instantiate. The
+    backward is the scatter's exact transpose on the carrier (gather rows,
+    dropped tokens get zero).
+    """
+    xe_m = jnp.zeros((ecap, m.shape[-1]), m.dtype).at[flat].set(m, mode="drop")
+    xe_g = jnp.zeros((ecap, g.shape[-1]), g.dtype).at[flat].set(g, mode="drop")
+    return xe_m, xe_g
+
+
+def _qdispatch_fwd(m, g, flat, ecap):
+    return _qdispatch(m, g, flat, ecap), flat
+
+
+def _qdispatch_bwd(ecap, flat, cts):
+    _, ct_g = cts
+    dg = ct_g.at[flat].get(mode="fill", fill_value=0)
+    return None, dg, None
+
+
+_qdispatch.defvjp(_qdispatch_fwd, _qdispatch_bwd)
 
 
 def moe_params_init(key: jax.Array, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
@@ -67,14 +95,23 @@ def _expert_ffn(xe: jnp.ndarray, lp, key, policy: NumericPolicy, cfg: ArchConfig
     return qbmm(act, lp["we_down"], k3, policy)
 
 
-def moe_block(h: jnp.ndarray, lp, key, policy: NumericPolicy,
+def moe_block(h, lp, key, policy: NumericPolicy,
               cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """h: (B, S, d) -> (out, aux_load_balance_loss). Top-1 routing."""
+    """h: (B, S, d) f32 | BFP -> (out, aux_load_balance_loss). Top-1 routing.
+
+    Under qflow ``h`` arrives as the pre-norm's BFP (quantized once): the
+    router reads its float32 carrier (softmax stays float), the dispatch
+    scatter moves *int8 mantissas* (per-tensor scale survives any row
+    shuffle), and both the routed gate/up and the shared-expert gate/up
+    GEMMs consume the same single quantization of the activation.
+    """
     b, s, d = h.shape
     n = b * s
     e = cfg.moe_experts
     cap = max(int(n * cfg.capacity_factor / e), 1)
-    x2 = h.reshape(n, d)
+    h_q = isinstance(h, BFP) and h.cfg.block == PER_TENSOR and h.g is not None
+    x2 = bfp_value(h).reshape(n, d)
+    x2_in = BFP(h.m.reshape(n, d), h.e, h.cfg, x2) if h_q else x2
 
     # -- float router ------------------------------------------------------
     logits = x2 @ lp["router"]                     # (N, E) float
@@ -90,17 +127,22 @@ def moe_block(h: jnp.ndarray, lp, key, policy: NumericPolicy,
     flat = jnp.where(keep, eid * cap + slot, e * cap)         # sentinel drops
 
     # -- dispatch / expert compute / combine --------------------------------
-    xe = jnp.zeros((e * cap, d), h.dtype).at[flat].set(x2, mode="drop")
-    ye = _expert_ffn(xe.reshape(e, cap, d), lp,
-                     jax.random.fold_in(key, 1), policy, cfg)
+    if h_q:
+        xe_m, xe_g = _qdispatch(x2_in.m, x2, flat, e * cap)
+        xe = BFP(xe_m.reshape(e, cap, d), x2_in.e, x2_in.cfg,
+                 xe_g.reshape(e, cap, d))
+    else:
+        xe = jnp.zeros((e * cap, d), x2.dtype).at[flat].set(
+            x2, mode="drop").reshape(e, cap, d)
+    ye = _expert_ffn(xe, lp, jax.random.fold_in(key, 1), policy, cfg)
     y = ye.reshape(e * cap, d).at[flat].get(mode="fill", fill_value=0)
     y = y * (gate * keep)[:, None]
 
     # -- shared expert (llama4) ---------------------------------------------
     if cfg.moe_shared:
         ks = jax.random.split(jax.random.fold_in(key, 2), 3)
-        sg = qmatmul(x2, lp["ws_gate"], ks[0], policy)
-        su = qmatmul(x2, lp["ws_up"], ks[1], policy)
+        sg = qmatmul(x2_in, lp["ws_gate"], ks[0], policy)
+        su = qmatmul(x2_in, lp["ws_up"], ks[1], policy)
         y = y + qmatmul(jax.nn.silu(sg) * su, lp["ws_down"], ks[2], policy)
 
     # -- Switch aux loss: E * sum_e f_e * p_e --------------------------------

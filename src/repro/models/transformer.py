@@ -18,7 +18,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import NumericPolicy, qembed, qmatmul
+from ..core import BFP, NumericPolicy, qembed, qmatmul
 from ..core.qnorm import qlayernorm, qrmsnorm
 from ..runtime.sharding import logical_constraint
 from .attention import chunked_attention, decode_attention, local_attention
@@ -110,10 +110,14 @@ def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
 # blocks
 # ---------------------------------------------------------------------------
 
-def _norm(x, g, b, key, policy, cfg):
+def _norm(x, g, b, key, policy, cfg, out_q=False):
     if cfg.norm == "layernorm":
-        return qlayernorm(x, g, b, key, policy)
-    return qrmsnorm(x, g, key, policy)
+        return qlayernorm(x, g, b, key, policy, out_q=out_q)
+    return qrmsnorm(x, g, key, policy, out_q=out_q)
+
+
+def _qout(policy):
+    return policy.qflow_seams
 
 
 def _heads(x, n, hd):
@@ -161,7 +165,8 @@ def _attn_block(h, lp, key, policy, cfg, *, positions, kv=None, pos=None):
             o = local_attention(q, k, v, ka, policy, window=cfg.local_window)
         else:
             o = chunked_attention(q, k, v, ka, policy, causal=True,
-                                  window=cfg.local_window)
+                                  window=cfg.local_window,
+                                  chunk=cfg.attn_chunk or 1024)
         new_kv = (k, v)
     else:
         kc, vc = kv
@@ -190,12 +195,16 @@ def _mlp_block(h, lp, key, policy, cfg):
 
 
 def _layer(h, lp, key, policy, cfg, *, positions, kv=None, pos=None):
+    # With qflow on, both pre-norms emit BFP: the norm -> projection seams
+    # (QKV and gate/up) exchange int8 mantissas, quantized exactly once.
+    # The residual stream itself stays float32 (cheap adds, no drift).
+    oq = _qout(policy)
     kn1, kattn, kn2, kmlp = jax.random.split(key, 4)
-    hn = _norm(h, lp["ln1_g"], lp.get("ln1_b"), kn1, policy, cfg)
+    hn = _norm(h, lp["ln1_g"], lp.get("ln1_b"), kn1, policy, cfg, out_q=oq)
     a, new_kv = _attn_block(hn, lp, kattn, policy, cfg,
                             positions=positions, kv=kv, pos=pos)
     h = h + a
-    hn = _norm(h, lp["ln2_g"], lp.get("ln2_b"), kn2, policy, cfg)
+    hn = _norm(h, lp["ln2_g"], lp.get("ln2_b"), kn2, policy, cfg, out_q=oq)
     m, aux = _mlp_block(hn, lp, kmlp, policy, cfg)
     h = h + m
     h = logical_constraint(h, "batch", "seq", "embed")
@@ -247,7 +256,7 @@ def forward_hidden(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
         body, (h, 0.0),
         (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     h = _norm(h, params["fn_g"], params.get("fn_b"),
-              jax.random.fold_in(key, 0xF1), policy, cfg)
+              jax.random.fold_in(key, 0xF1), policy, cfg, out_q=_qout(policy))
     return h, kvs, aux
 
 
@@ -275,13 +284,18 @@ def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
     b, s = tokens.shape
     h, kvs, _ = forward_hidden(params, tokens, key, policy, cfg,
                                patch_embeds, collect_kv=True)
+    if isinstance(h, BFP):     # qflow: slice the last-token mantissa rows
+        h = BFP(h.m[:, -1:], h.e, h.cfg,
+                None if h.g is None else h.g[:, -1:])
+    else:
+        h = h[:, -1:]
     k, v = kvs
     pad = max_len - s
     cache = {
         "k": jnp.pad(k.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
         "v": jnp.pad(v.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
     }
-    logits = _lm_logits(params, h[:, -1:], jax.random.fold_in(key, 0xF3),
+    logits = _lm_logits(params, h, jax.random.fold_in(key, 0xF3),
                         policy, cfg)
     return cache, logits[:, 0]
 
@@ -305,6 +319,6 @@ def decode_step(params, cache, token, pos, key, policy: NumericPolicy,
         (params["layers"], cache["k"], cache["v"],
          jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     h = _norm(h, params["fn_g"], params.get("fn_b"),
-              jax.random.fold_in(key, 0xF1), policy, cfg)
+              jax.random.fold_in(key, 0xF1), policy, cfg, out_q=_qout(policy))
     logits = _lm_logits(params, h, jax.random.fold_in(key, 0xF2), policy, cfg)
     return logits[:, 0], {"k": ks, "v": vs}

@@ -1,0 +1,82 @@
+"""Autotune cache persistence hardening: atomic writes, corrupt-load
+fallback, garbage-entry tolerance (ISSUE-2 satellite)."""
+
+import json
+import os
+
+import pytest
+
+from repro.kernels import autotune
+
+
+@pytest.fixture()
+def cache(tmp_path):
+    return autotune.AutotuneCache(str(tmp_path / "autotune.json"))
+
+
+def test_missing_file_loads_empty(cache):
+    assert cache.load() == {}
+    assert cache.get("anything") is None
+
+
+def test_put_then_get_roundtrip(cache):
+    cache.put("k1", {"bm": 128, "us": {"128": 10.0}})
+    assert cache.get("k1")["bm"] == 128
+    # reload from disk through a fresh instance
+    fresh = autotune.AutotuneCache(cache.path)
+    assert fresh.get("k1")["bm"] == 128
+
+
+@pytest.mark.parametrize("garbage", [
+    "not json at all",
+    '{"truncated": ',          # partial write
+    '[1, 2, 3]',               # valid JSON, wrong container
+    "",                        # empty file
+])
+def test_corrupt_file_falls_back_to_empty(cache, garbage):
+    with open(cache.path, "w") as f:
+        f.write(garbage)
+    assert cache.load() == {} or isinstance(cache.load(), dict)
+    assert cache.get("k") is None
+    # and a put() recovers the file to valid JSON
+    cache.put("k2", {"bm": 64, "us": {}})
+    with open(cache.path) as f:
+        data = json.load(f)
+    assert data["k2"]["bm"] == 64
+
+
+def test_non_dict_and_malformed_entries_ignored(cache):
+    with open(cache.path, "w") as f:
+        json.dump({"a": 17, "b": {"no_bm": 1}, "c": {"bm": "garbage"},
+                   "d": {"bm": 256}}, f)
+    assert cache.get("a") is None
+    assert cache.get("b") is None
+    assert cache.get("c") is None
+    assert cache.get("d")["bm"] == 256
+
+
+def test_put_is_atomic_no_tmp_litter(cache):
+    for i in range(3):
+        cache.put(f"k{i}", {"bm": 32 * (i + 1), "us": {}})
+    d = os.path.dirname(cache.path)
+    assert [f for f in os.listdir(d) if ".tmp." in f] == []
+    with open(cache.path) as f:
+        data = json.load(f)
+    assert len(data) == 3
+
+
+def test_put_failure_cleans_tmp(cache, monkeypatch):
+    def boom(*a, **kw):
+        raise OSError("disk full")
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError):
+        cache.put("k", {"bm": 128, "us": {}})
+    d = os.path.dirname(cache.path)
+    assert [f for f in os.listdir(d) if ".tmp." in f] == []
+
+
+def test_select_bm_survives_corrupt_cached_entry(cache):
+    with open(cache.path, "w") as f:
+        json.dump({"key": {"bm": "bogus"}}, f)
+    bm = autotune.select_bm("key", 64, lambda bm: True, cache=cache)
+    assert bm in autotune.BM_CANDIDATES

@@ -1,0 +1,397 @@
+"""Tests for the qflow dataflow: BFP as the inter-layer currency.
+
+Covers the ISSUE-2 acceptance surface:
+  * BFP as a pytree citizen — jit, lax.scan, jax.grad residual routing,
+    checkpoint save/restore;
+  * q-in ops consume pre-quantized operands EXACTLY as the quantize-once
+    oracle (same mantissas -> same integer contraction);
+  * q-out ops emit exactly the quantization the consumer would have done
+    (qflow=off therefore stays bit-identical to the documented spec);
+  * norms consume/produce BFP with near-f32 accuracy and working grads;
+  * the iq dispatch paths (fused/unfused interpret kernels) are
+    bit-identical to the jnp oracle;
+  * model-level: quantize-op count per train step drops >= 30% with
+    qflow=on while the loss stays close to qflow=off.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import (BFP, PAPER_INT8, NumericPolicy, QuantConfig,
+                        bfp_value, dequantize, qbmm, qconv, qembed, qmatmul,
+                        qrelu, quantize)
+from repro.core.qnorm import qbatchnorm, qlayernorm, qrmsnorm
+from repro.core.qops import _cfg_for_dim, _contract_q, _int_patches, _t
+from repro.introspect import count_named_calls
+from repro.kernels import dispatch
+
+KEY = jax.random.key(7)
+P8 = PAPER_INT8
+QF = dataclasses.replace(PAPER_INT8, qflow=True)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+def _as_flow(q: BFP) -> BFP:
+    """Attach the gradient carrier, as the q-out ops do."""
+    return BFP(q.m, q.e, q.cfg, dequantize(q))
+
+
+# ---------------------------------------------------------------------------
+# BFP as a pytree citizen
+# ---------------------------------------------------------------------------
+
+def test_bfp_jit_roundtrip():
+    q = quantize(_rand((6, 8), 1), QuantConfig(8), KEY)
+    out = jax.jit(lambda t: t)(q)
+    assert isinstance(out, BFP) and out.g is None
+    np.testing.assert_array_equal(np.asarray(out.m), np.asarray(q.m))
+    qg = _as_flow(q)
+    out = jax.jit(dequantize)(qg)          # g rides along as a third leaf
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dequantize(q)))
+    assert len(jax.tree.leaves(q)) == 2 and len(jax.tree.leaves(qg)) == 3
+
+
+def test_bfp_through_scan():
+    xs = _rand((4, 5, 16), 2)
+    qs = jax.vmap(lambda x, k: quantize(x, QuantConfig(8), k))(
+        xs, jax.random.split(KEY, 4))     # stacked BFP: leading axis on m, e
+
+    def body(acc, q):
+        return acc + dequantize(q), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((5, 16)), qs)
+    ref = sum(dequantize(quantize(xs[i], QuantConfig(8),
+                                  jax.random.split(KEY, 4)[i]))
+              for i in range(4))
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(ref), rtol=1e-6)
+
+
+def test_bfp_checkpoint_roundtrip(tmp_path):
+    q = quantize(_rand((6, 8), 3), QuantConfig(8), KEY)
+    state = {"act": q, "step_scale": jnp.float32(2.0)}
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(1, state)
+    restored_step, restored = CheckpointManager(str(tmp_path)).restore_latest(state)
+    assert restored_step == 1
+    assert isinstance(restored["act"], BFP)
+    np.testing.assert_array_equal(np.asarray(restored["act"].m), np.asarray(q.m))
+    np.testing.assert_array_equal(np.asarray(restored["act"].e), np.asarray(q.e))
+
+
+def test_grad_flows_through_carrier_only():
+    x, w = _rand((8, 16), 4), _rand((16, 12), 5)
+    cfg = P8.fwd_cfg()
+    xq = quantize(x, cfg, KEY)
+
+    def loss_via_carrier(xf):
+        xb = BFP(xq.m, xq.e, xq.cfg, xf)
+        return (qmatmul(xb, w, KEY, P8) ** 2).sum()
+
+    g = jax.grad(loss_via_carrier)(dequantize(xq))
+    assert float(jnp.linalg.norm(g)) > 0
+    # without a carrier the input edge is severed but dW still works
+    gw = jax.grad(lambda w: qmatmul(xq, w, KEY, P8).sum())(w)
+    assert bool(jnp.isfinite(gw).all()) and float(jnp.linalg.norm(gw)) > 0
+
+
+# ---------------------------------------------------------------------------
+# exact oracles
+# ---------------------------------------------------------------------------
+
+def test_qmatmul_qin_matches_quantize_once_oracle():
+    x, w = _rand((8, 16), 6), _rand((16, 12), 7)
+    cfg = P8.fwd_cfg()
+    k0, kop = jax.random.split(KEY)
+    xq = quantize(x, cfg, k0)
+    y = qmatmul(_as_flow(xq), w, kop, P8)
+    _, kw, _ = jax.random.split(kop, 3)
+    wq = quantize(_t(w), cfg, kw)
+    oracle = _contract_q(xq, wq, 0, P8.accum_chunk)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(oracle))
+
+
+def test_qmatmul_qout_matches_consumer_quantize():
+    x, w = _rand((8, 16), 8), _rand((16, 12), 9)
+    yq = qmatmul(x, w, KEY, P8, out_q=True)
+    y = qmatmul(x, w, KEY, P8)             # same key split -> same mantissas
+    kq = jax.random.fold_in(KEY, 0xD0)
+    oracle = quantize(y, _cfg_for_dim(P8.fwd_cfg(), 12), kq)
+    np.testing.assert_array_equal(np.asarray(yq.m), np.asarray(oracle.m))
+    np.testing.assert_array_equal(np.asarray(yq.e), np.asarray(oracle.e))
+    np.testing.assert_array_equal(np.asarray(yq.g), np.asarray(dequantize(oracle)))
+
+
+def test_qflow_off_matches_documented_spec():
+    """qflow=off must stay bit-identical to the pre-qflow pipeline: quantize
+    x and w with the documented (kx, kw) key split and contract."""
+    x, w = _rand((8, 16), 10), _rand((16, 12), 11)
+    y = qmatmul(x, w, KEY, P8)
+    cfg = _cfg_for_dim(P8.fwd_cfg(), 16)
+    kx, kw, _ = jax.random.split(KEY, 3)
+    oracle = _contract_q(quantize(x, cfg, kx), quantize(_t(w), cfg, kw),
+                         0, P8.accum_chunk)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(oracle))
+
+
+def test_qbmm_ii_matches_oracle():
+    a, b = _rand((2, 3, 8, 16), 12), _rand((2, 3, 16, 8), 13)
+    cfg = P8.fwd_cfg()
+    ka, kb = jax.random.split(KEY)
+    aq = quantize(a, cfg, ka)
+    bq_cl = quantize(jnp.swapaxes(b, -1, -2), cfg, kb)   # contraction-last
+    b_logical = BFP(jnp.swapaxes(bq_cl.m, -1, -2), bq_cl.e, bq_cl.cfg,
+                    jnp.swapaxes(dequantize(bq_cl), -1, -2))
+    y = qbmm(_as_flow(aq), b_logical, KEY, P8)
+    oracle = _contract_q(aq, bq_cl, 2, P8.accum_chunk)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(oracle))
+
+
+def test_per_block_input_under_per_tensor_policy_demotes():
+    """Regression: a per-block BFP input under a per-tensor policy must fall
+    back to its float view — the backward residual branch follows the
+    policy blocking and would otherwise assert in _tq."""
+    x, w = _rand((8, 16), 30), _rand((16, 12), 31)
+    xq = quantize(x, QuantConfig(8, block=8), KEY)
+    xb = BFP(xq.m, xq.e, xq.cfg, dequantize(xq))
+    g = jax.grad(lambda c: qmatmul(BFP(xq.m, xq.e, xq.cfg, c), w, KEY,
+                                   P8).sum())(dequantize(xq))
+    assert bool(jnp.isfinite(g).all())
+    a = _rand((2, 8, 16), 32)
+    aq = quantize(a, QuantConfig(8, block=8), KEY)
+    b = _rand((2, 16, 8), 33)
+    g = jax.grad(lambda c: qbmm(BFP(aq.m, aq.e, aq.cfg, c), b, KEY,
+                                P8).sum())(dequantize(aq))
+    assert bool(jnp.isfinite(g).all())
+    y = qmatmul(xb, w, KEY, P8)
+    assert y.shape == (8, 12)
+
+
+def test_qbmm_per_block_b_falls_back():
+    a, b = _rand((2, 8, 16), 14), _rand((2, 16, 8), 15)
+    cfg = QuantConfig(8, block=8)
+    bq = quantize(jnp.swapaxes(b, -1, -2), cfg, KEY)
+    b_logical = BFP(jnp.swapaxes(bq.m, -1, -2), bq.e, bq.cfg,
+                    jnp.swapaxes(dequantize(bq), -1, -2))
+    y = qbmm(a, b_logical, KEY, dataclasses.replace(P8, block=8))
+    ref = a @ jnp.swapaxes(dequantize(bq), -1, -2)
+    assert np.abs(np.asarray(y - ref)).max() < 0.15 * float(jnp.abs(ref).max()) + 0.1
+
+
+def test_qembed_qout_shares_table_scale():
+    table = _rand((32, 16), 16)
+    toks = jnp.array([[1, 5, 9], [2, 0, 31]])
+    eq = qembed(toks, table, KEY, P8, out_q=True)
+    kt, _ = jax.random.split(KEY)
+    tq = quantize(table, _cfg_for_dim(P8.fwd_cfg(), 16), kt)
+    np.testing.assert_array_equal(np.asarray(eq.m),
+                                  np.asarray(jnp.take(tq.m, toks, axis=0)))
+    np.testing.assert_array_equal(np.asarray(eq.e), np.asarray(tq.e))
+    ref = qembed(toks, table, KEY, P8)
+    np.testing.assert_allclose(np.asarray(eq.g), np.asarray(ref), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernels: iq dispatch bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["fused", "unfused"])
+def test_qin_kernel_paths_bit_identical(mode):
+    x, w = _rand((32, 64), 17), _rand((64, 48), 18)
+    cfg = QuantConfig(8)
+    k0, kop = jax.random.split(KEY)
+    xb = _as_flow(quantize(x, cfg, k0))
+    pol = NumericPolicy(kernel_mode=mode)
+    with dispatch.record_decisions() as log:
+        y = qmatmul(xb, w, kop, pol)
+        y_ref = qmatmul(xb, w, kop, NumericPolicy(kernel_mode="jnp"))
+    assert log[0].path == mode
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    g = jax.grad(lambda w: qmatmul(xb, w, kop, pol).sum())(w)
+    gj = jax.grad(lambda w: qmatmul(xb, w, kop,
+                                    NumericPolicy(kernel_mode="jnp")).sum())(w)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(gj))
+
+
+def test_plan_iq_kind_and_traffic_rows():
+    dec = dispatch.plan_contract("qmatmul_fwd", 32, 64, 48, QuantConfig(8),
+                                 kind="iq", cfg2=QuantConfig(8),
+                                 kernel_mode="fused")
+    assert dec.path == dispatch.FUSED and dec.bm > 0
+    qq = dispatch.bytes_moved(dispatch.FUSED, 32, 64, 48, kind="qq")
+    iq = dispatch.bytes_moved(dispatch.FUSED, 32, 64, 48, kind="iq")
+    ii = dispatch.bytes_moved(dispatch.FUSED, 32, 64, 48, kind="ii")
+    assert ii < iq < qq
+    # per-block pre-quantized operands stay on the jnp oracle
+    dec = dispatch.plan_contract("qmatmul_fwd", 32, 64, 48,
+                                 QuantConfig(8, block=32), kind="iq",
+                                 cfg2=QuantConfig(8, block=32),
+                                 kernel_mode="fused")
+    assert dec.path == dispatch.JNP
+
+
+# ---------------------------------------------------------------------------
+# norms and elementwise ops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("norm", ["rms", "ln"])
+def test_norm_qin_qout_accuracy_and_grads(norm):
+    x = _rand((12, 32), 19)
+    gamma = jnp.ones((32,)) * 1.1
+    beta = None if norm == "rms" else jnp.zeros((32,))
+    fn = (lambda x, oq: qrmsnorm(x, gamma, KEY, P8, out_q=oq)) if norm == "rms" \
+        else (lambda x, oq: qlayernorm(x, gamma, beta, KEY, P8, out_q=oq))
+    y_f = fn(x, False)
+    y_q = fn(x, True)
+    assert isinstance(y_q, BFP) and y_q.m.dtype == jnp.int8
+    err = np.abs(np.asarray(dequantize(BFP(y_q.m, y_q.e, y_q.cfg)) - y_f)).max()
+    assert err < 0.05 * float(jnp.abs(y_f).max()) + 1e-3
+    # q-in: BFP input skips the fx_quantize pass but normalizes the same
+    xq = _as_flow(quantize(x, P8.fwd_cfg(), KEY))
+    y_qin = fn(xq, False)
+    assert np.abs(np.asarray(y_qin - y_f)).max() < 0.1 * float(jnp.abs(y_f).max()) + 1e-2
+    # grads route through the carrier (bfp_value), not the mantissas
+    g = jax.grad(lambda x: (bfp_value(fn(x, True)) ** 2).sum())(x)
+    assert bool(jnp.isfinite(g).all()) and float(jnp.linalg.norm(g)) > 0
+
+
+def test_batchnorm_qflow_chain():
+    x = _rand((4, 6, 6, 8), 20)
+    gamma, beta = jnp.ones((8,)), jnp.zeros((8,))
+    y, mu, var = qbatchnorm(x, gamma, beta, KEY, P8, out_q=True)
+    assert isinstance(y, BFP)
+    y_f, mu_f, var_f = qbatchnorm(x, gamma, beta, KEY, P8)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_f), rtol=1e-6)
+    err = np.abs(np.asarray(dequantize(BFP(y.m, y.e, y.cfg)) - y_f)).max()
+    assert err < 0.05 * float(jnp.abs(y_f).max()) + 1e-3
+    r = qrelu(y)
+    np.testing.assert_array_equal(np.asarray(r.m), np.maximum(np.asarray(y.m), 0))
+
+
+def test_qrelu_exact_on_mantissas():
+    q = _as_flow(quantize(_rand((5, 8), 21), QuantConfig(8), KEY))
+    r = qrelu(q)
+    np.testing.assert_allclose(np.asarray(dequantize(BFP(r.m, r.e, r.cfg))),
+                               np.maximum(np.asarray(dequantize(q)), 0),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("stride,padding", [((1, 1), "SAME"), ((2, 2), "SAME"),
+                                            ((1, 1), "VALID")])
+def test_int_patches_match_lax(stride, padding):
+    from jax import lax
+    q = quantize(_rand((2, 9, 9, 3), 22), QuantConfig(8), KEY)
+    pm = _int_patches(q.m, 3, 3, stride, padding)
+    ref = lax.conv_general_dilated_patches(
+        dequantize(q), (3, 3), stride, padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    scale = float(np.asarray(dequantize(BFP(jnp.ones_like(q.m), q.e, q.cfg))).flat[0])
+    np.testing.assert_allclose(np.asarray(pm).astype(np.float32) * scale,
+                               np.asarray(ref), rtol=1e-6)
+
+
+def test_qconv_bfp_input_matches_f32_input():
+    x = _rand((2, 8, 8, 3), 23)
+    w = _rand((3, 3, 3, 4), 24, scale=0.3)
+    q = quantize(x, QuantConfig(8), KEY)
+    y_bfp = qconv(_as_flow(q), w, KEY, P8)
+    y_f32 = qconv(dequantize(q), w, KEY, P8)
+    # same values on the grid -> the fresh stochastic quantize inside the
+    # f32 path sees on-grid values; outputs agree closely (not bit-equal:
+    # the f32 path re-quantizes, the BFP path reuses mantissas)
+    assert np.abs(np.asarray(y_bfp - y_f32)).max() < \
+        0.1 * float(jnp.abs(y_f32).max()) + 0.1
+
+
+# ---------------------------------------------------------------------------
+# model level: quantize-once reduction + loss parity
+# ---------------------------------------------------------------------------
+
+def _smoke_setup(attn_chunk=32, seq=256):
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    cfg = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                              attn_chunk=attn_chunk)
+    mod = get_model(cfg)
+    params = mod.init_params(KEY, cfg)
+    batch = {"tokens": jnp.zeros((2, seq), jnp.int32),
+             "labels": jnp.zeros((2, seq), jnp.int32)}
+    return cfg, mod, params, batch
+
+
+def test_transformer_quantize_count_drops_30pct():
+    cfg, mod, params, batch = _smoke_setup()
+    counts = {}
+    for name, pol in [("off", P8), ("on", QF)]:
+        def f(params, batch, key, pol=pol):
+            return mod.loss_fn(params, batch, key, pol, cfg)
+        counts[name] = count_named_calls(jax.grad(f), params, batch, KEY)["total"]
+    reduction = 1 - counts["on"] / counts["off"]
+    assert reduction >= 0.30, counts
+
+
+def test_transformer_qflow_loss_close_to_off():
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    cfg = get_smoke_config("qwen2_0_5b")
+    mod = get_model(cfg)
+    params = mod.init_params(KEY, cfg)
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (2, 16))),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab, (2, 16)))}
+    l_off = mod.loss_fn(params, batch, KEY, P8, cfg)
+    l_on = mod.loss_fn(params, batch, KEY, QF, cfg)
+    assert abs(float(l_on) - float(l_off)) < 0.05 * abs(float(l_off))
+
+
+def test_moe_block_qflow_bfp_dispatch():
+    from repro.configs import get_smoke_config
+    from repro.models import moe
+    cfg = get_smoke_config("llama4_scout_17b_16e")
+    lp = moe.moe_params_init(KEY, cfg)
+    h = _rand((2, 8, cfg.d_model), 25)
+    hq = _as_flow(quantize(h, QF.fwd_cfg(), KEY))
+    y, aux = moe.moe_block(hq, lp, KEY, QF, cfg)
+    y_f, _ = moe.moe_block(dequantize(BFP(hq.m, hq.e, hq.cfg)), lp, KEY, QF, cfg)
+    assert np.abs(np.asarray(y - y_f)).max() < 0.15 * float(jnp.abs(y_f).max()) + 0.1
+    g = jax.grad(lambda hf: moe.moe_block(
+        BFP(hq.m, hq.e, hq.cfg, hf), lp, KEY, QF, cfg)[0].sum())(bfp_value(hq))
+    assert bool(jnp.isfinite(g).all()) and float(jnp.linalg.norm(g)) > 0
+
+
+def test_attention_qflow_all_gradients_flow():
+    """Regression: the Q carrier must be the PRE-quantization float —
+    dequantize(quantize(q)) severs autodiff and silently zeroed dL/dQ."""
+    from repro.models.attention import chunked_attention
+    q = _rand((2, 2, 16, 8), 26)
+    k = _rand((2, 2, 64, 8), 27)
+    v = _rand((2, 2, 64, 8), 28)
+    for pol in (P8, QF):
+        gq, gk, gv = jax.grad(
+            lambda q, k, v: chunked_attention(q, k, v, KEY, pol, chunk=16).sum(),
+            argnums=(0, 1, 2))(q, k, v)
+        for name, g in [("dQ", gq), ("dK", gk), ("dV", gv)]:
+            assert float(jnp.abs(g).sum()) > 1.0, (pol.qflow, name)
+
+
+def test_fused_proj_close_to_split():
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    cfg = get_smoke_config("qwen2_0_5b")
+    mod = get_model(cfg)
+    params = mod.init_params(KEY, cfg)
+    rng = np.random.RandomState(1)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (2, 16))),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab, (2, 16)))}
+    l_split = mod.loss_fn(params, batch, KEY, P8, cfg)
+    l_fused = mod.loss_fn(params, batch, KEY,
+                          dataclasses.replace(P8, fused_proj=True), cfg)
+    assert abs(float(l_fused) - float(l_split)) < 0.05 * abs(float(l_split))
