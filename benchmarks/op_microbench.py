@@ -32,14 +32,16 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import (BFP, PAPER_INT8, NumericPolicy, QuantConfig,
-                        dequantize, qmatmul, quantize)
+                        dequantize, integer_sgd_init, qmatmul, quantize)
 from repro.core.bfp import rounding_bits
 from repro.core.qnorm import qlayernorm
-from repro.introspect import count_named_calls
+from repro.introspect import (WEIGHT_QUANTIZE_NAMES, count_named_calls)
 from repro.kernels import dispatch, ref
 from repro.kernels.fused_linear import fused_qq_pt_pallas
 from repro.kernels.ops import int8_matmul_op, quantize_op
+from repro.launch.steps import TrainHyper, make_train_step
 from repro.models import get_model
+from repro.models.common import weight_t
 
 from .common import row, time_op
 
@@ -110,6 +112,23 @@ def _gemm_pipeline_records():
                             us=None, modeled_only=True,
                             bytes_moved=dispatch.bytes_moved(
                                 dispatch.FUSED, m, k, n, kind="iq")))
+
+        # fully pre-quantized (persistent weight currency, dispatch kind
+        # "pp"): q-in activation x load-time-quantized weight — NO
+        # quantize stage runs; the weight side pays one int8 read instead
+        # of f32 scan + quantizer + residual write.
+        wq_cl = quantize(wT, QuantConfig(8), kw)
+        wb = weight_t(BFP(wq_cl.m, wq_cl.e, wq_cl.cfg, dequantize(wq_cl)))
+        def pp(xb, wb, key):
+            return qmatmul(xb, wb, key, NumericPolicy(kernel_mode="jnp"))
+        us = time_op(jax.jit(pp), xb, wb, KEY)
+        records.append(dict(op="qmatmul_pp", path="jnp", shape=shape, us=us,
+                            bytes_moved=dispatch.bytes_moved(
+                                dispatch.JNP, m, k, n, kind="pp")))
+        records.append(dict(op="qmatmul_pp", path="fused", shape=shape,
+                            us=None, modeled_only=True,
+                            bytes_moved=dispatch.bytes_moved(
+                                dispatch.FUSED, m, k, n, kind="pp")))
     return records
 
 
@@ -122,12 +141,16 @@ DATAFLOW_BATCH, DATAFLOW_SEQ, DATAFLOW_CHUNK = 2, 256, 32
 
 
 def dataflow_records():
-    """Trace one transformer train step per setting and count quantize ops.
+    """Trace one transformer train step per setting; count quantize ops and
+    (separately) weight-quantize ops.
 
     Counts are execution-weighted (scan trip counts — see repro.introspect);
     tracing only, nothing is compiled or run. The attention chunk is set so
     the KV scan has several trips: that is where qflow's quantize-once Q/K/V
-    pays repeatedly.
+    pays repeatedly.  The qweights settings trace the FULL train step
+    (derivation + loss grad + SGD) so the claim "weights derived once per
+    optimizer step, zero per-GEMM weight quantizes" is the number written
+    to BENCH_dataflow.json and gated in CI.
     """
     cfg = dataclasses.replace(get_smoke_config(DATAFLOW_ARCH),
                               attn_chunk=DATAFLOW_CHUNK)
@@ -136,22 +159,33 @@ def dataflow_records():
     params = mod.init_params(key, cfg)
     batch = {"tokens": jnp.zeros((DATAFLOW_BATCH, DATAFLOW_SEQ), jnp.int32),
              "labels": jnp.zeros((DATAFLOW_BATCH, DATAFLOW_SEQ), jnp.int32)}
+    state = integer_sgd_init(params, PAPER_INT8, key=key)
+    raw_key = jax.random.key_data(key)
     records = []
     for setting, pol in [
             ("qflow_off", PAPER_INT8),
             ("qflow_on", dataclasses.replace(PAPER_INT8, qflow=True)),
             ("qflow_on_fused_proj",
-             dataclasses.replace(PAPER_INT8, qflow=True, fused_proj=True))]:
-        def step(params, batch, key):
-            return mod.loss_fn(params, batch, key, pol, cfg)
-        counts = count_named_calls(jax.grad(step), params, batch, key)
+             dataclasses.replace(PAPER_INT8, qflow=True, fused_proj=True)),
+            ("qweights_on", dataclasses.replace(PAPER_INT8, qweights=True)),
+            ("qflow_qweights_on",
+             dataclasses.replace(PAPER_INT8, qflow=True, qweights=True))]:
+        step = make_train_step(cfg, pol, TrainHyper())
+        counts = count_named_calls(
+            step, state, batch, raw_key,
+            names=("quantize",) + WEIGHT_QUANTIZE_NAMES)
+        wq = counts.get("quantize_weight", 0)
         records.append(dict(setting=setting, arch=cfg.name,
                             batch=DATAFLOW_BATCH, seq=DATAFLOW_SEQ,
                             attn_chunk=DATAFLOW_CHUNK,
-                            quantize_ops=counts["total"]))
+                            quantize_ops=counts["total"],
+                            weight_quantize_ops=wq))
     base = records[0]["quantize_ops"]
+    wbase = records[0]["weight_quantize_ops"]
     for r in records:
         r["reduction_vs_off_pct"] = round(100.0 * (1 - r["quantize_ops"] / base), 2)
+        r["weight_quantize_reduction_pct"] = round(
+            100.0 * (1 - r["weight_quantize_ops"] / max(wbase, 1)), 2)
     return records
 
 

@@ -5,6 +5,13 @@ greedily through per-family caches (KV cache, RWKV state, RG-LRU state),
 reporting tokens/s. Try --arch rwkv6_3b for an O(1)-state decoder or
 --arch recurrentgemma_2b for the hybrid.
 
+By default the int8 policy quantizes every GEMM weight exactly once at
+model load (the persistent weight currency — docs/DATAFLOW.md §Weight
+currency), so decode never touches a float32 weight; the report prints
+the analytic prefill/decode HBM bytes-moved of load-time-quantized vs
+per-call weight quantization.  ``--per-call-weights`` restores the
+legacy quantize-inside-every-GEMM path for an A/B wall-clock comparison.
+
     PYTHONPATH=src python examples/serve_decode.py --arch qwen2_0_5b --gen 16
 """
 
@@ -23,10 +30,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--policy", default="int8", choices=["int8", "float32"])
+    ap.add_argument("--per-call-weights", dest="qweights",
+                    action="store_false", default=True,
+                    help="legacy path: re-quantize f32 weights inside every "
+                         "GEMM instead of once at model load")
     args = ap.parse_args()
     tokens, stats = serve(args.arch, smoke=True, batch=args.batch,
                           prompt_len=args.prompt_len, gen=args.gen,
-                          policy_name=args.policy)
+                          policy_name=args.policy, qweights=args.qweights)
+    # serve() already prints the timing and the analytic load-time-vs-
+    # per-call weight-traffic comparison (stats["weight_traffic"]).
     print("generated token ids (first sequence):", tokens[0].tolist())
 
 

@@ -122,6 +122,13 @@ class CheckpointManager:
                 raise ValueError(
                     f"leaf {i}: checkpoint shape {a.shape} != template "
                     f"{np.shape(tmpl)}")
+            t_dtype = getattr(tmpl, "dtype", None)
+            if t_dtype is not None and np.dtype(t_dtype) != a.dtype:
+                # e.g. int8 vs int16 BFP mantissas restore into the wrong
+                # master width silently without this (same shape!)
+                raise ValueError(
+                    f"leaf {i}: checkpoint dtype {a.dtype} != template "
+                    f"{np.dtype(t_dtype)}")
             out.append(jax.device_put(a, shard) if shard is not None
                        else jax.numpy.asarray(a))
         return jax.tree_util.tree_unflatten(treedef, out)

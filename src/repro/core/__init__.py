@@ -2,21 +2,27 @@
 
 from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_from_fx, bfp_value,
                   biased_exponent, bit_length, dequantize, pow2, quantize,
-                  requantize_i32, scale_exponent, sr_shift_signed)
-from .policy import FLOAT32, PAPER_INT8, NumericPolicy, int_policy
+                  quantize_weight, requantize_i32, scale_exponent,
+                  sr_shift_signed)
+from .policy import (FLOAT32, PAPER_INT8, QW_NONE, QW_STACKED, QW_STACKED2,
+                     QW_TENSOR, NumericPolicy, int_policy)
 from .qops import qbmm, qcontract, qconv, qembed, qmatmul, qrelu
 from .qnorm import qbatchnorm, qlayernorm, qrmsnorm
-from .integer_sgd import (IntSGDState, integer_sgd_init, integer_sgd_step,
-                          master_params_f32)
+from .integer_sgd import (IntSGDState, derive_qweights, integer_sgd_init,
+                          integer_sgd_step, master_params_f32,
+                          quantize_weights_once, qweight_grads)
 from .baseline_quant import uniform_qmatmul, uniform_quantize
 
 __all__ = [
     "BFP", "PER_TENSOR", "QuantConfig", "bfp_from_fx", "bfp_value",
     "biased_exponent", "bit_length", "dequantize", "pow2",
-    "quantize", "requantize_i32", "scale_exponent", "sr_shift_signed",
+    "quantize", "quantize_weight", "requantize_i32", "scale_exponent",
+    "sr_shift_signed",
     "FLOAT32", "PAPER_INT8", "NumericPolicy", "int_policy",
+    "QW_NONE", "QW_TENSOR", "QW_STACKED", "QW_STACKED2",
     "qbmm", "qcontract", "qconv", "qembed", "qmatmul", "qrelu",
     "qbatchnorm", "qlayernorm", "qrmsnorm",
     "IntSGDState", "integer_sgd_init", "integer_sgd_step", "master_params_f32",
+    "derive_qweights", "quantize_weights_once", "qweight_grads",
     "uniform_qmatmul", "uniform_quantize",
 ]

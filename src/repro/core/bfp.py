@@ -40,6 +40,7 @@ __all__ = [
     "BFP",
     "QuantConfig",
     "quantize",
+    "quantize_weight",
     "dequantize",
     "pow2",
     "rounding_bits",
@@ -374,6 +375,20 @@ def quantize_like(x: jnp.ndarray, q: BFP, key: Optional[jax.Array] = None) -> BF
     return quantize(x, q.cfg, key)
 
 
+@partial(jax.jit, static_argnames=("cfg",))
+def quantize_weight(w: jnp.ndarray, cfg: QuantConfig = QuantConfig(),
+                    key: Optional[jax.Array] = None) -> BFP:
+    """The same mapping as :func:`quantize`, under a separate jaxpr name.
+
+    Every *weight-operand* quantization inside the GEMM ops routes through
+    this wrapper so ``repro.introspect`` can count per-GEMM weight-quantize
+    executions separately from activation/gradient quantizations — the
+    number the persistent weight currency (``policy.qweights``) drives to
+    zero.  Bit-identical to ``quantize(w, cfg, key)``.
+    """
+    return quantize(w, cfg, key)
+
+
 # ---------------------------------------------------------------------------
 # int32 accumulator requantization (paper §3.3: integer layer outputs feed
 # the next layer without a float round-trip).
@@ -388,15 +403,18 @@ _bit_length = bit_length  # internal alias
 
 
 def sr_shift_signed(v: jnp.ndarray, shift: jnp.ndarray,
-                    key: Optional[jax.Array], stochastic: bool = True) -> jnp.ndarray:
+                    key: Optional[jax.Array], stochastic: bool = True,
+                    rng: str = "threefry") -> jnp.ndarray:
     """Signed stochastic right shift: round(v / 2^shift), unbiased in SR mode.
 
     The integer-arithmetic workhorse for fixed-point rescaling inside the
     integer norm layers and integer SGD (value-preserving when the caller
-    adds ``shift`` to the tracked scale exponent).
+    adds ``shift`` to the tracked scale exponent).  ``rng`` selects the
+    rounding-bit stream exactly as in :func:`rounding_bits`.
     """
     mag = jnp.abs(v).astype(jnp.uint32)
-    out = _shift_round(mag, jnp.broadcast_to(jnp.asarray(shift), v.shape), key, stochastic)
+    out = _shift_round(mag, jnp.broadcast_to(jnp.asarray(shift), v.shape), key,
+                       stochastic, rng)
     return jnp.where(v < 0, -out.astype(jnp.int32), out.astype(jnp.int32))
 
 

@@ -19,18 +19,24 @@ float32 SGD: the memory-footprint saving claimed in the abstract.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .bfp import BFP, QuantConfig, dequantize, quantize, scale_exponent
+from .bfp import (BFP, PER_TENSOR, QuantConfig, biased_exponent, bit_length,
+                  dequantize, pow2, quantize, quantize_weight, scale_exponent,
+                  sr_shift_signed, storage_dtype)
 from .fixed_point import (Fx, KeyGen, fx_add, fx_const, fx_mul, fx_narrow,
                           fx_quantize, fx_sub, fx_to_f32)
-from .policy import NumericPolicy
+from .policy import (QW_NONE, QW_STACKED, QW_STACKED2, QW_TENSOR,
+                     NumericPolicy)
 
-__all__ = ["IntSGDState", "integer_sgd_init", "integer_sgd_step", "master_params_f32"]
+__all__ = ["IntSGDState", "integer_sgd_init", "integer_sgd_step",
+           "master_params_f32", "derive_qweights", "quantize_weights_once",
+           "qweight_grads"]
 
 
 class IntSGDState(NamedTuple):
@@ -74,6 +80,139 @@ def master_params_f32(state: IntSGDState):
     """Non-linear inverse mapping of the masters -> float32 compute view."""
     return jax.tree_util.tree_map(
         dequantize, state.masters, is_leaf=lambda x: isinstance(x, BFP))
+
+
+# ---------------------------------------------------------------------------
+# persistent weight currency (docs/DATAFLOW.md §Weight currency): integer-
+# only master -> forward-weight derivation, load-time quantization for
+# serving, and the carrier-cotangent extraction that closes the dW loop.
+# ---------------------------------------------------------------------------
+
+
+def _is_bfp(x) -> bool:
+    return isinstance(x, BFP)
+
+
+_STACK_AXES = {QW_TENSOR: 0, QW_STACKED: 1, QW_STACKED2: 2}
+
+
+def _narrow_leaf(master: BFP, p: int, cfg: QuantConfig, key: jax.Array,
+                 nstack: int, stochastic: bool) -> BFP:
+    """Narrow one int16 master to a p-magnitude-bit BFP — pure integer
+    arithmetic: bit-length via CLZ, stochastic-rounded right shift, exponent
+    add.  No float32 value is ever formed on the mantissa path; the float32
+    carrier ``g`` is the non-linear inverse mapping of the *result* (an
+    int->float convert), attached only as the dW cotangent edge.
+
+    ``nstack`` leading axes each get their own shared scale (0 = one scale
+    for the whole leaf; layer stacks use 1 so ``lax.scan`` can slice the
+    BFP leaf into per-layer per-tensor BFPs, rglru's period blocks use 2).
+    """
+    m32 = master.m.astype(jnp.int32)
+    e_master = scale_exponent(master.e, master.cfg)      # unbiased, scalar
+    lead = m32.shape[:nstack]
+    axes = tuple(range(nstack, m32.ndim))
+    nb = bit_length(jnp.max(jnp.abs(m32), axis=axes))    # shape = lead
+    shift = jnp.maximum(nb - p, 0)
+    shift_b = jnp.broadcast_to(
+        shift.reshape(lead + (1,) * (m32.ndim - nstack)), m32.shape)
+    m = sr_shift_signed(m32, shift_b, key, stochastic, cfg.rng)
+    # Rounding overflow of a full-scale element (2^p - eps -> 2^p): clamp,
+    # exactly as the quantize mapping does.
+    lim = (1 << p) - 1
+    m = jnp.clip(m, -lim, lim).astype(storage_dtype(cfg.bits))
+    e_new = e_master + shift                             # shape = lead
+    scale = pow2(e_new).reshape(lead + (1,) * (m32.ndim - nstack))
+    g = m.astype(jnp.float32) * scale
+    return BFP(m, biased_exponent(e_new, cfg).astype(jnp.int32), cfg, g)
+
+
+def derive_qweights(state: IntSGDState, policy: NumericPolicy,
+                    key: jax.Array, mask):
+    """Integer-only master -> forward-weight derivation (the weight-side
+    twin of qflow's quantize-once rule).
+
+    ``mask`` is a pytree congruent with the parameter tree whose leaves are
+    ``QW_NONE`` / ``QW_TENSOR`` / ``QW_STACKED`` (see ``core.policy`` and
+    ``models.registry.get_weight_mask``).  Masked leaves are narrowed from
+    the int16 master mantissas straight to the op bit-width BFP — no
+    float32 round-trip, no per-GEMM weight quantize — with a float32
+    gradient carrier so the GEMM ops' custom_vjp can hand dW back for the
+    master update.  Unmasked leaves keep the master's float32 view
+    (norm gains, biases, routers: they are not GEMM weight operands).
+
+    Called once per optimizer step; every microbatch reuses the result.
+    """
+    if not policy.qweights_on:
+        return master_params_f32(state)
+    cfg = QuantConfig(policy.fwd_bits, PER_TENSOR, policy.stochastic,
+                      policy.rng)
+    leaves, treedef = jax.tree_util.tree_flatten(state.masters,
+                                                 is_leaf=_is_bfp)
+    mask_leaves = treedef.flatten_up_to(mask)
+    out = []
+    for i, (master, mk) in enumerate(zip(leaves, mask_leaves)):
+        if mk == QW_NONE:
+            out.append(dequantize(master))
+        else:
+            out.append(_narrow_leaf(master, cfg.p, cfg,
+                                    jax.random.fold_in(key, i),
+                                    _STACK_AXES[mk], policy.stochastic))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_weights_once(params, policy: NumericPolicy, key: jax.Array,
+                          mask, carrier: bool = False):
+    """Load-time weight quantization for serving (quantize-once inference).
+
+    Maps each masked float32 parameter leaf to a per-tensor (or per-layer-
+    slice, for ``QW_STACKED``) BFP exactly once, so prefill/decode never
+    touch a float32 weight again.  ``carrier=True`` attaches the float32
+    gradient carrier (only needed when the quantized tree will be
+    differentiated — serving leaves it off to keep the 4x weight-memory
+    saving).
+    """
+    if not policy.qweights_on:
+        return params
+    cfg = QuantConfig(policy.fwd_bits, PER_TENSOR, policy.stochastic,
+                      policy.rng)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    mask_leaves = treedef.flatten_up_to(mask)
+    out = []
+    for i, (leaf, mk) in enumerate(zip(leaves, mask_leaves)):
+        ki = jax.random.fold_in(key, i)
+        if mk == QW_NONE:
+            out.append(leaf)
+            continue
+        nstack = _STACK_AXES[mk]
+        quant = lambda xx, kk: quantize_weight(xx, cfg, kk)
+        for _ in range(nstack):                      # per-slice scale groups
+            quant = jax.vmap(quant)
+        if nstack:
+            keys = jax.random.split(
+                ki, math.prod(leaf.shape[:nstack])).reshape(leaf.shape[:nstack])
+            q = quant(jnp.asarray(leaf), keys)       # m leaf-shaped, e = lead
+        else:
+            q = quant(jnp.asarray(leaf), ki)
+        if carrier:
+            scale = pow2(scale_exponent(q.e, cfg)).reshape(
+                leaf.shape[:nstack] + (1,) * (leaf.ndim - nstack))
+            q = BFP(q.m, q.e, cfg, q.m.astype(jnp.float32) * scale)
+        out.append(q)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def qweight_grads(grads):
+    """Extract float32 parameter gradients from a qweights cotangent tree.
+
+    Differentiating a loss w.r.t. a BFP-valued parameter tree (with
+    ``allow_int=True``) yields BFP-structured cotangents: float0 for the
+    integer mantissa/exponent leaves and the real dW on the float32
+    carrier.  This pulls the carrier out so ``integer_sgd_step`` sees the
+    plain float32 gradient tree it always consumed.
+    """
+    return jax.tree_util.tree_map(
+        lambda l: l.g if isinstance(l, BFP) else l, grads, is_leaf=_is_bfp)
 
 
 def _update_leaf(master: BFP, mom: BFP, g: jnp.ndarray, lr_fx: Fx,

@@ -13,7 +13,27 @@ from typing import Optional
 
 from .bfp import PER_TENSOR, QuantConfig
 
-__all__ = ["NumericPolicy", "FLOAT32", "PAPER_INT8", "int_policy"]
+__all__ = ["NumericPolicy", "FLOAT32", "PAPER_INT8", "int_policy",
+           "QW_NONE", "QW_TENSOR", "QW_STACKED", "QW_STACKED2"]
+
+# Weight-mask leaf markers (models/<family>.weight_mask): how a parameter
+# leaf participates in the persistent quantized-weight currency
+# (docs/DATAFLOW.md §Weight currency).
+#   QW_NONE     consumed as float32 (norm gains, biases, routers, decay
+#               vectors): the train step keeps the master's f32 view.
+#   QW_TENSOR   GEMM weight with one shared scale for the whole leaf
+#               (embedding table, lm head, unstacked conv filters).
+#   QW_STACKED  GEMM weight stacked along a leading scan axis (layer
+#               stacks): one shared scale PER slice of axis 0, so
+#               ``lax.scan`` can slice the BFP leaf into per-layer
+#               per-tensor BFPs.
+#   QW_STACKED2 two leading stack axes (e.g. recurrentgemma's
+#               (periods, recs_per_period, ...) blocks): one scale per
+#               (axis0, axis1) slice.
+QW_NONE = 0
+QW_TENSOR = 1
+QW_STACKED = 2
+QW_STACKED2 = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +82,15 @@ class NumericPolicy:
     # directly (quantize-once per activation tensor): the norm->projection
     # and attention QKV seams exchange int8 mantissas, never float32.
     qflow: bool = False
+    # qweights: quantized weights as the *persistent* currency (the weight-
+    # side twin of qflow — docs/DATAFLOW.md §Weight currency). Off
+    # (default): every GEMM re-quantizes its float32 weight view from
+    # scratch — bit-identical to the pre-qweights pipeline. On: the train
+    # step derives int8 forward weights from the int16 masters once per
+    # optimizer step (integer narrow, no f32 round-trip) and every GEMM
+    # consumes the pre-quantized mantissas (dispatch kind "pp"/"qi");
+    # serving quantizes weights exactly once at model load.
+    qweights: bool = False
     # rng: "threefry" (jax default) or "hash" — a per-element avalanche
     # hash for the stochastic-rounding draws, the software analogue of the
     # paper's Fig.-4 on-the-fly hardware RNG (~8x less arithmetic).
@@ -87,6 +116,14 @@ class NumericPolicy:
     # and persist to the JSON cache (kernels.autotune); False uses the
     # cache when present, else a deterministic heuristic.
     kernel_autotune: bool = False
+
+    @property
+    def qweights_on(self) -> bool:
+        """Whether parameters flow as pre-quantized BFP leaves. Per-block
+        policies keep the f32 weight view: masters carry per-tensor scales
+        and a per-K-block weight cannot be derived by a pure integer
+        narrow."""
+        return self.enabled and self.qweights and self.block == PER_TENSOR
 
     @property
     def qflow_seams(self) -> bool:

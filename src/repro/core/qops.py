@@ -34,7 +34,7 @@ from jax import lax
 
 from ..kernels import dispatch as kdispatch
 from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_value, dequantize, pow2,
-                  quantize, scale_exponent)
+                  quantize, quantize_weight, scale_exponent)
 from .policy import NumericPolicy
 
 __all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract", "qrelu"]
@@ -188,7 +188,7 @@ def _qmatmul_fwd(x, w, key, policy: NumericPolicy):
                  cfg, policy)
     if plan.path == kdispatch.JNP:
         xq = quantize(x2, cfg, kx)                       # blocks along K
-        wq = quantize(_t(w), cfg, kw)                    # (N, K), blocks along K
+        wq = quantize_weight(_t(w), cfg, kw)             # (N, K), blocks along K
         y = _contract_q(xq, wq, 0, policy.accum_chunk)   # (M, N)
     else:
         y, xq, wq = kdispatch.contract_qq(x2, _t(w), cfg, kx, kw, plan)
@@ -313,7 +313,7 @@ def _qmatmul_flex_fwd(x, xe, xg, w, key, policy: NumericPolicy,
         plan = _plan("qmatmul_fwd", x2.shape[0], k, n, cfg, policy)
         if plan.path == kdispatch.JNP:
             xq = quantize(x2, cfg, kx)
-            wq = quantize(_t(w), cfg, kw)
+            wq = quantize_weight(_t(w), cfg, kw)
             y = _contract_q(xq, wq, 0, policy.accum_chunk)
         else:
             y, xq, wq = kdispatch.contract_qq(x2, _t(w), cfg, kx, kw, plan)
@@ -323,7 +323,7 @@ def _qmatmul_flex_fwd(x, xe, xg, w, key, policy: NumericPolicy,
         plan = _plan("qmatmul_fwd", x2.shape[0], k, n, wcfg, policy,
                      kind="iq", cfg2=xcfg)
         if plan.path == kdispatch.JNP:
-            wq = quantize(_t(w), wcfg, kw)
+            wq = quantize_weight(_t(w), wcfg, kw)
             y = _contract_q(xq, wq, 0, policy.accum_chunk)
         else:
             y, wq = kdispatch.contract_iq(xq, _t(w), wcfg, kw, plan)
@@ -346,20 +346,88 @@ def _qmatmul_flex_bwd(policy: NumericPolicy, xcfg: Optional[QuantConfig],
 _qmatmul_flex.defvjp(_qmatmul_flex_fwd, _qmatmul_flex_bwd)
 
 
-def qmatmul(x, w: jnp.ndarray, key: Optional[jax.Array] = None,
+# ---------------------------------------------------------------------------
+# persistent-weight variant: w arrives as pre-quantized BFP mantissas (a
+# forward weight derived from the int16 masters, or a load-time-quantized
+# serving weight — docs/DATAFLOW.md §Weight currency).  No weight quantize
+# runs in-op; dW is returned as the cotangent of the weight's float32
+# carrier ``wg`` (the same carrier contract as q-in activations).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _qmatmul_pw(x, xe, xg, wm, we, wg, key, policy: NumericPolicy,
+                xcfg: Optional[QuantConfig], wcfg: QuantConfig, out_q: bool):
+    y, _ = _qmatmul_pw_fwd(x, xe, xg, wm, we, wg, key, policy, xcfg, wcfg,
+                           out_q)
+    return y
+
+
+def _qmatmul_pw_fwd(x, xe, xg, wm, we, wg, key, policy: NumericPolicy,
+                    xcfg: Optional[QuantConfig], wcfg: QuantConfig,
+                    out_q: bool):
+    # (kx, kw, kb) keeps the plain path's split discipline; kw is never
+    # consumed (the weight is already on its int8 grid).
+    kx, kw, kb = jax.random.split(key, 3)
+    del kw
+    kq = jax.random.fold_in(key, 0xD0)
+    lead = x.shape[:-1]
+    k, n = x.shape[-1], wm.shape[-1]
+    x2 = x.reshape(-1, k)
+    wq = BFP(_t(wm), we, wcfg)                           # (N, K), per-tensor
+    if xcfg is None:
+        cfg = _wcfg_for(wcfg, policy)
+        plan = _plan("qmatmul_fwd", x2.shape[0], k, n, cfg, policy,
+                     kind="qi", cfg2=wcfg)
+        if plan.path == kdispatch.JNP:
+            xq = quantize(x2, cfg, kx)
+            y = _contract_q(xq, wq, 0, policy.accum_chunk)
+        else:
+            y, xq = kdispatch.contract_qi(x2, wq, cfg, kx, plan)
+    else:
+        xq = _flat2d(x, xe, xcfg)
+        plan = _plan("qmatmul_fwd", x2.shape[0], k, n, xcfg, policy,
+                     kind="pp", cfg2=wcfg)
+        if plan.path == kdispatch.JNP:
+            y = _contract_q(xq, wq, 0, policy.accum_chunk)
+        else:
+            y = kdispatch.contract_pp(xq, wq, plan)
+    y = y.reshape(*lead, n)
+    res = (xq, wq, kb, lead)
+    if not out_q:
+        return y, res
+    return _quantize_out(y, n, policy, kq), res
+
+
+def _qmatmul_pw_bwd(policy: NumericPolicy, xcfg: Optional[QuantConfig],
+                    wcfg: QuantConfig, out_q: bool, res, cts):
+    gy = cts[2] if out_q else cts
+    dx, dw, _ = _qmatmul_bwd(policy, res, gy)
+    cts_x = (dx, None, None) if xcfg is None else (None, None, dx)
+    return (*cts_x, None, None, dw, None)    # dW rides the weight carrier
+
+
+_qmatmul_pw.defvjp(_qmatmul_pw_fwd, _qmatmul_pw_bwd)
+
+
+def qmatmul(x, w, key: Optional[jax.Array] = None,
             policy: NumericPolicy = NumericPolicy(), *,
             out_q: bool = False):
     """Quantized linear contraction x(..., K) @ w(K, N).
 
     ``x`` may be float32 or a pre-quantized ``BFP`` (blocked along K by
     construction): a BFP input skips the in-op activation quantization —
-    the quantize-once rule of the qflow dataflow.  ``out_q=True`` returns a
+    the quantize-once rule of the qflow dataflow.  ``w`` may likewise be a
+    per-tensor ``BFP`` (a forward weight derived from the integer masters,
+    or a load-time-quantized serving weight): no weight quantize runs in
+    the op, and the contraction is fully pre-quantized (dispatch kind
+    ``pp``) when the activation is BFP too.  ``out_q=True`` returns a
     ``BFP`` (with gradient carrier) instead of float32; gradients follow
     the paper's A.2 integer contractions in every combination.  With the
     policy disabled, BFP inputs fall back to their float32 view.
     """
     if not policy.enabled:
-        return bfp_value(x) @ w
+        return bfp_value(x) @ bfp_value(w)
     if key is None:
         raise ValueError("qmatmul with an enabled integer policy needs a PRNG key")
     if isinstance(x, BFP) and x.cfg.block != PER_TENSOR \
@@ -367,7 +435,19 @@ def qmatmul(x, w: jnp.ndarray, key: Optional[jax.Array] = None,
         # backward residual handling follows the *policy* blocking; a
         # per-block input under a per-tensor policy has no residual path
         x = bfp_value(x)
-    if isinstance(x, BFP):
+    if isinstance(w, BFP) and (w.cfg.block != PER_TENSOR
+                               or policy.block != PER_TENSOR):
+        # persistent weights carry per-tensor scales; per-block policies
+        # re-quantize along their own blocking (residuals follow policy)
+        w = bfp_value(w)
+    if isinstance(w, BFP):
+        if isinstance(x, BFP):
+            out = _qmatmul_pw(x.m, x.e, x.g, w.m, w.e, w.g, key, policy,
+                              x.cfg, w.cfg, out_q)
+        else:
+            out = _qmatmul_pw(x, None, None, w.m, w.e, w.g, key, policy,
+                              None, w.cfg, out_q)
+    elif isinstance(x, BFP):
         out = _qmatmul_flex(x.m, x.e, x.g, w, key, policy, x.cfg, out_q)
     elif out_q:
         out = _qmatmul_flex(x, None, None, w, key, policy, None, True)
@@ -477,13 +557,15 @@ def _qbmm_flex_fwd(a, ae, ag, b, be, bg, key, policy: NumericPolicy,
     nbatch = a.ndim - 2
     m, k, n = a.shape[-2], a.shape[-1], b.shape[-1]
     if acfg is not None and bcfg is not None:
+        # fully pre-quantized forward (q-in activation x persistent weight,
+        # or two q-in activations): dispatch kind "pp" — no quantize stage.
         aq = BFP(a, ae, acfg)
         bq = _tq(BFP(b, be, bcfg))
-        plan = _plan("qbmm_fwd", m, k, n, acfg, policy, kind="ii", cfg2=bcfg)
+        plan = _plan("qbmm_fwd", m, k, n, acfg, policy, kind="pp", cfg2=bcfg)
         if plan.path == kdispatch.JNP:
             y = _contract_q(aq, bq, nbatch, policy.accum_chunk)
         else:
-            y = kdispatch.contract_ii(aq, bq, plan, nbatch=nbatch)
+            y = kdispatch.contract_pp(aq, bq, plan, nbatch=nbatch)
     elif acfg is not None:
         aq = BFP(a, ae, acfg)
         bcfg_f = _wcfg_for(acfg, policy)
@@ -558,7 +640,7 @@ def _qembed(tokens, table, key, policy: NumericPolicy):
 def _qembed_fwd(tokens, table, key, policy: NumericPolicy):
     cfg = _cfg_for_dim(policy.fwd_cfg(), table.shape[-1])
     kt, kb = jax.random.split(key)
-    tq = quantize(table, cfg, kt)                        # (V, D), blocks along D
+    tq = quantize_weight(table, cfg, kt)                 # (V, D), blocks along D
     rows = jnp.take(tq.m, tokens, axis=0)                # int8 gather
     scale = pow2(scale_exponent(tq.e, cfg))
     if cfg.block == PER_TENSOR:
@@ -600,7 +682,7 @@ def _qembed_q_fwd(tokens, table, key, policy: NumericPolicy):
     """q-out embedding: the int8 row gather IS the quantized activation."""
     cfg = _cfg_for_dim(policy.fwd_cfg(), table.shape[-1])
     kt, kb = jax.random.split(key)
-    tq = quantize(table, cfg, kt)
+    tq = quantize_weight(table, cfg, kt)
     rows = jnp.take(tq.m, tokens, axis=0)
     if cfg.block == PER_TENSOR:
         e = tq.e
@@ -618,18 +700,59 @@ def _qembed_q_bwd(policy: NumericPolicy, res, cts):
 _qembed_q.defvjp(_qembed_q_fwd, _qembed_q_bwd)
 
 
-def qembed(tokens: jnp.ndarray, table: jnp.ndarray, key: Optional[jax.Array] = None,
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _qembed_p(tokens, tm, te, tg, key, policy: NumericPolicy,
+              tcfg: QuantConfig, out_q: bool):
+    """Pre-quantized (persistent) table: the gather is pure int8 data
+    movement — no quantize runs at all.  dTable rides the table carrier."""
+    y, _ = _qembed_p_fwd(tokens, tm, te, tg, key, policy, tcfg, out_q)
+    return y
+
+
+def _qembed_p_fwd(tokens, tm, te, tg, key, policy: NumericPolicy,
+                  tcfg: QuantConfig, out_q: bool):
+    rows = jnp.take(tm, tokens, axis=0)                  # int8 gather
+    if out_q:
+        y = (rows, te, dequantize(BFP(rows, te, tcfg)))
+    else:
+        y = rows.astype(jnp.float32) * pow2(scale_exponent(te, tcfg))
+    return y, (tokens, tm.shape[0], key)
+
+
+def _qembed_p_bwd(policy: NumericPolicy, tcfg: QuantConfig, out_q: bool,
+                  res, cts):
+    gy = cts[2] if out_q else cts
+    _, dtable, _ = _qembed_bwd(policy, res, gy)
+    return None, None, None, dtable, None
+
+
+_qembed_p.defvjp(_qembed_p_fwd, _qembed_p_bwd)
+
+
+def qembed(tokens: jnp.ndarray, table, key: Optional[jax.Array] = None,
            policy: NumericPolicy = NumericPolicy(), *, out_q: bool = False):
     """Integer embedding lookup (int8 table) with integer scatter-add grads.
 
+    ``table`` may be a per-tensor-scale ``BFP`` (a derived forward weight
+    or a load-time-quantized serving table): the int8 row gather then runs
+    with *no* table quantization and dTable rides the table's carrier.
     ``out_q=True`` returns the gathered rows as a ``BFP`` sharing the
     table's scale — the gather itself is the (single) quantization of the
     activation.
     """
     if not (policy.enabled and policy.quantize_embed):
-        return jnp.take(table, tokens, axis=0)
+        return jnp.take(bfp_value(table), tokens, axis=0)
     if key is None:
         raise ValueError("qembed with an enabled integer policy needs a PRNG key")
+    if isinstance(table, BFP) and table.cfg.block != PER_TENSOR:
+        table = bfp_value(table)     # per-block rows don't survive the gather
+    if isinstance(table, BFP):
+        out = _qembed_p(tokens, table.m, table.e, table.g, key, policy,
+                        table.cfg, out_q)
+        if not out_q:
+            return out
+        rows, e, g = out
+        return BFP(rows, e, table.cfg, g)
     if not out_q:
         return _qembed(tokens, table, key, policy)
     rows, e, g = _qembed_q(tokens, table, key, policy)
@@ -708,13 +831,18 @@ def qconv(x, w: jnp.ndarray, key: Optional[jax.Array] = None,
     ``x`` may be a per-tensor-scale ``BFP`` (q-in: patches are sliced from
     the int8 mantissas, no re-quantization) and ``out_q=True`` returns a
     ``BFP`` — together they keep the conv -> norm -> relu -> conv chain on
-    integer activations (docs/DATAFLOW.md).
+    integer activations (docs/DATAFLOW.md).  ``w`` may be a per-tensor
+    ``BFP`` filter (persistent weight currency): the im2col weight
+    reshuffle is pure mantissa data movement and the GEMM runs fully
+    pre-quantized.
     """
     kh, kw_, cin, cout = w.shape
     if not policy.enabled:
         return lax.conv_general_dilated(
-            bfp_value(x), w, stride, padding,
+            bfp_value(x), bfp_value(w), stride, padding,
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if isinstance(w, BFP) and w.cfg.block != PER_TENSOR:
+        w = bfp_value(w)      # per-block filters don't survive the reshuffle
     if isinstance(x, BFP) and x.cfg.block != PER_TENSOR:
         x = bfp_value(x)      # per-block scales don't survive the reshuffle
     if isinstance(x, BFP):
@@ -728,7 +856,13 @@ def qconv(x, w: jnp.ndarray, key: Optional[jax.Array] = None,
             x, (kh, kw_), stride, padding,
             dimension_numbers=("NHWC", "HWIO", "NHWC"))  # (N, Ho, Wo, kh*kw*cin) [CIHW order]
     # conv_general_dilated_patches emits feature order (cin, kh, kw); match w.
-    w2 = jnp.moveaxis(w, 2, 0).reshape(cin * kh * kw_, cout)
+    if isinstance(w, BFP):
+        w2m = jnp.moveaxis(w.m, 2, 0).reshape(cin * kh * kw_, cout)
+        w2g = None if w.g is None else \
+            jnp.moveaxis(w.g, 2, 0).reshape(cin * kh * kw_, cout)
+        w2 = BFP(w2m, w.e, w.cfg, w2g)
+    else:
+        w2 = jnp.moveaxis(w, 2, 0).reshape(cin * kh * kw_, cout)
     return qmatmul(patches, w2, key, policy, out_q=out_q)
 
 

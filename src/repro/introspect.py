@@ -25,11 +25,20 @@ from typing import Callable, Dict, Iterable
 
 import jax
 
-__all__ = ["count_quantize_ops", "count_named_calls", "QUANTIZE_NAMES"]
+__all__ = ["count_quantize_ops", "count_weight_quantize_ops",
+           "count_named_calls", "QUANTIZE_NAMES", "WEIGHT_QUANTIZE_NAMES"]
 
 # pjit names of the quantization entry points (jitted functions keep their
-# Python function name as the jaxpr call name).
+# Python function name as the jaxpr call name).  Weight-operand
+# quantizations route through the separately-named ``quantize_weight``
+# wrapper (core.bfp) — same mapping, distinct jaxpr name — so the
+# persistent-weight-currency claim ("0 per-GEMM weight quantizes with
+# policy.qweights on") is countable.  ``quantize_weight`` calls
+# ``quantize`` internally, so counting QUANTIZE_NAMES alone still yields
+# the historical all-quantizes total (the walker recurses through the
+# un-counted outer call).
 QUANTIZE_NAMES = ("quantize",)
+WEIGHT_QUANTIZE_NAMES = ("quantize_weight",)
 
 
 def _jaxprs_of(eqn) -> Iterable[tuple]:
@@ -72,3 +81,11 @@ def count_named_calls(fn: Callable, *args, names=QUANTIZE_NAMES,
 def count_quantize_ops(fn: Callable, *args, **kwargs) -> int:
     """Quantize executions per call of ``fn`` (see module docstring)."""
     return count_named_calls(fn, *args, names=QUANTIZE_NAMES, **kwargs)["total"]
+
+
+def count_weight_quantize_ops(fn: Callable, *args, **kwargs) -> int:
+    """Per-GEMM *weight* quantize executions per call of ``fn``: the
+    quantizations the persistent weight currency (``policy.qweights``)
+    eliminates.  Scan-trip-weighted like :func:`count_quantize_ops`."""
+    return count_named_calls(fn, *args, names=WEIGHT_QUANTIZE_NAMES,
+                             **kwargs)["total"]

@@ -2,10 +2,14 @@
 
 ``core.qops`` routes every integer contraction (``qmatmul`` / ``qbmm``
 forward and both Appendix-A.2 backward GEMMs) through :func:`plan_contract`,
-which picks one of three execution paths.  Contractions come in four
+which picks one of three execution paths.  Contractions come in five
 operand kinds: ``qq`` (both operands quantized in-op), ``qi``/``iq`` (one
-operand pre-quantized — a stored residual or a q-in BFP activation from
-the qflow dataflow, see docs/DATAFLOW.md) and ``ii`` (both pre-quantized).
+operand pre-quantized — a stored residual, a q-in BFP activation from the
+qflow dataflow, or a persistent BFP weight against a fresh activation),
+``ii`` (both pre-quantized residuals, the backward dW) and ``pp`` (the
+fully-pre-quantized *forward*: a q-in activation against a derived /
+load-time-quantized weight — the persistent weight currency of
+docs/DATAFLOW.md §Weight currency, with its own autotune keys).
 Pre-quantized entry points skip the quantize stage for that operand:
 
   ``fused``    one ``pallas_call`` from ``kernels.fused_linear``: in-VMEM
@@ -60,7 +64,7 @@ from .int8_matmul import int8_matmul_pallas
 __all__ = [
     "FUSED", "UNFUSED", "JNP", "Decision", "plan_contract",
     "record_decisions", "contract_qq", "contract_qi", "contract_iq",
-    "contract_ii", "bytes_moved", "DEFAULT_VMEM_BUDGET",
+    "contract_ii", "contract_pp", "bytes_moved", "DEFAULT_VMEM_BUDGET",
 ]
 
 FUSED = "fused"
@@ -87,6 +91,7 @@ class Decision:
     n: int
     bm: int = 0        # fused row-strip height (0 when not fused)
     interpret: bool = False
+    kind: str = "qq"   # operand kind: qq | qi | iq | ii | pp
 
 
 _decision_log: Optional[List[Decision]] = None
@@ -151,7 +156,7 @@ def _vmem_bytes(kind: str, bm: int, k: int, n: int, nb: int) -> int:
     elif kind == "qi":
         a_strip = (4 + 4 + 1) * bm * k + y
         b_res = 1 * n * k
-    else:  # "ii"
+    else:  # "ii" / "pp": both operands arrive as int8 mantissas
         a_strip = 1 * bm * k + y
         b_res = 1 * n * k
     return 2 * a_strip + b_res
@@ -174,10 +179,13 @@ def bytes_moved(path: str, m: int, k: int, n: int, *, stochastic: bool = True,
 
     ``kind`` states which operands arrive pre-quantized (the q-in paths of
     the qflow dataflow): "qq" both fresh, "iq" a pre-quantized, "qi" b
-    pre-quantized, "ii" both.  A pre-quantized operand pays one int8 read
-    in place of the f32 scan + quantizer reads and writes no residual —
-    the 4-9x per-operand traffic cut that makes BFP the cheaper inter-layer
-    currency.
+    pre-quantized, "ii"/"pp" both ("pp" is the *forward* fully-pre-
+    quantized contraction of the persistent weight currency: a BFP
+    activation against a derived BFP weight; "ii" the residual-vs-residual
+    backward dW).  A pre-quantized operand pays one int8 read in place of
+    the f32 scan + quantizer reads and writes no residual — the 4-9x
+    per-operand traffic cut that makes BFP the cheaper inter-layer (and,
+    with ``policy.qweights``, inter-*step*) currency.
     """
     f32, r8, i8 = 4, (4 if stochastic else 0), 1
     ni, nj = math.ceil(m / bm), math.ceil(n / bn)
@@ -230,7 +238,8 @@ def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
     interpret = backend != "tpu"
 
     def decide(path, reason, bm=0):
-        return _record(Decision(op, path, reason, m, k, n, bm, interpret))
+        return _record(Decision(op, path, reason, m, k, n, bm, interpret,
+                                kind))
 
     if kernel_mode not in ("auto", "fused", "unfused", "jnp"):
         raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
@@ -240,9 +249,11 @@ def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
     if bits != {8}:
         return decide(JNP, f"bits={sorted(bits)} (kernels are int8-only)")
     if cfg2 is not None and cfg2.block != PER_TENSOR:
-        # qi/ii reuse residual mantissas against a *scalar* exponent; a
-        # per-block residual operand has no kernel path at all.
+        # qi/ii/pp reuse pre-quantized mantissas against a *scalar*
+        # exponent; a per-block pre-quantized operand has no kernel path.
         return decide(JNP, "per-block residual operands have no kernel path")
+    if kind == "pp" and cfg.block != PER_TENSOR:
+        return decide(JNP, "pp needs per-tensor scales on both operands")
     if kernel_mode == "auto" and interpret:
         return decide(JNP, f"auto keeps the jnp oracle on backend={backend}")
     if cfg.block == PER_TENSOR and k > accum_chunk:
@@ -282,6 +293,10 @@ def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
                 bench = None
             elif kind == "iq":
                 bench = _make_bench("qi", n, k, m, cfg, interpret)
+            elif kind == "pp":
+                # same kernel as ii, but timed (and cached) under its own
+                # forward-shaped key: the weight side is N-major resident.
+                bench = _make_bench("ii", m, k, n, cfg, interpret)
             else:
                 bench = _make_bench(vkind, m, k, n, cfg, interpret)
             bm = autotune.select_bm(key, strip_rows, fits, measure=measure,
@@ -292,7 +307,7 @@ def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
 
     # -- unfused fallback ----------------------------------------------------
     if blk == PER_TENSOR:
-        if kind != "ii" and not cfg.stochastic:
+        if kind not in ("ii", "pp") and not cfg.stochastic:
             # the standalone quantizer kernel only implements the
             # threshold-compare *stochastic* circuit; nearest rounding is
             # fused-or-jnp (the fused kernel handles both).
@@ -565,6 +580,20 @@ def contract_ii(aq: BFP, bq: BFP, dec: Decision,
 
     y, = _batched_call(one, arrays, nbatch, [(m, n)])
     return y
+
+
+def contract_pp(aq: BFP, bq: BFP, dec: Decision,
+                nbatch: int = 0) -> jnp.ndarray:
+    """Fully-pre-quantized *forward* contraction (persistent weight currency).
+
+    aq.m (*B, M, K) int8 (a q-in activation), bq.m (*B, N, K) int8 (a
+    derived / load-time-quantized weight) -> y (*B, M, N) f32.  No
+    quantization stage runs and no random bits are streamed — a pure
+    int8 x int8 -> int32 GEMM plus one f32 exponent-add rescale.  Kernel-
+    wise this is the ii pipeline, but planned under its own ``pp``
+    autotune keys (forward shapes, weight resident) by ``plan_contract``.
+    """
+    return contract_ii(aq, bq, dec, nbatch=nbatch)
 
 
 # ---------------------------------------------------------------------------

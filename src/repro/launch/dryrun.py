@@ -88,7 +88,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              policy_name: str = "int8", verbose: bool = True,
              microbatch: Optional[int] = None, rng: str = "threefry2x32",
              fused_proj: bool = False, qflow: bool = False,
-             dump_breakdown: bool = True) -> Dict:
+             qweights: bool = False, dump_breakdown: bool = True) -> Dict:
     import dataclasses as _dc
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -97,6 +97,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         policy = _dc.replace(policy, fused_proj=True)
     if qflow and policy.enabled:
         policy = _dc.replace(policy, qflow=True)
+    if qweights and policy.enabled:
+        policy = _dc.replace(policy, qweights=True)
     if rng == "hash":
         # hash selects the cheap per-element SR stream inside the
         # representation mapping; the key plumbing stays threefry.
@@ -105,7 +107,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     ok, why = cell_runnable(cfg, shape)
     record = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
               "policy": policy_name, "rng": rng, "fused_proj": fused_proj,
-              "qflow": qflow}
+              "qflow": qflow, "qweights": qweights}
     if not ok:
         record["status"] = why
         return record
@@ -208,6 +210,7 @@ def main():
                     choices=["threefry2x32", "unsafe_rbg", "hash"])
     ap.add_argument("--fused-proj", action="store_true")
     ap.add_argument("--qflow", action="store_true")
+    ap.add_argument("--qweights", action="store_true")
     ap.add_argument("--tag", default=None, help="suffix for the record file")
     ap.add_argument("--out", default=None, help="directory for JSON records")
     args = ap.parse_args()
@@ -218,7 +221,7 @@ def main():
         rec = run_cell(arch, shape, multi_pod=args.multi_pod,
                        policy_name=args.policy, microbatch=args.microbatch,
                        rng=args.rng, fused_proj=args.fused_proj,
-                       qflow=args.qflow)
+                       qflow=args.qflow, qweights=args.qweights)
         if args.out:
             os.makedirs(args.out, exist_ok=True)
             pod = "pod2" if args.multi_pod else "pod1"

@@ -2,7 +2,12 @@
 
 Exercises the integer inference pipeline (int8 matmuls everywhere,
 KV/state caches per family) and reports prefill + per-token decode
-latency and tokens/s.
+latency and tokens/s.  With ``qweights`` (the default for the int8
+policy) the model's GEMM weights are quantized exactly ONCE at load —
+the Jacob-et-al. deployment contract — so prefill and decode run fully
+pre-quantized contractions (dispatch kinds ``pp``/``qi``) and never
+touch a float32 weight; ``--per-call-weights`` restores the legacy
+quantize-per-GEMM path for comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
         --batch 4 --prompt-len 32 --gen 16
@@ -11,6 +16,7 @@ latency and tokens/s.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -19,20 +25,68 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..core.policy import FLOAT32, PAPER_INT8
+from ..kernels import dispatch
 from ..models import get_model
-from .steps import make_decode_step, make_prefill_step
+from .steps import make_decode_step, make_prefill_step, quantize_serving_params
 
 POLICIES = {"int8": PAPER_INT8, "float32": FLOAT32}
 
 
+def _dense_gemm_shapes(cfg, m: int):
+    """(M, K, N) of every per-layer weight GEMM + the lm head, for the
+    analytic traffic model.  Only valid for the dense-FFN transformer
+    families ("dense", and "vlm" whose patch frontend is an external
+    stub); MoE expert GEMMs have a different shape set."""
+    d, hq, hkv, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                          cfg.d_ff)
+    per_layer = [(m, d, hq * hd), (m, d, hkv * hd), (m, d, hkv * hd),
+                 (m, hq * hd, d), (m, d, ff), (m, d, ff), (m, ff, d)]
+    return per_layer * cfg.n_layers + [(m, d, cfg.vocab)]
+
+
+def weight_traffic_report(cfg, batch: int, prompt_len: int) -> dict:
+    """Analytic HBM traffic of the model's weight GEMMs, per prefill call
+    and per decode step: weights quantized per call (kind "qq") vs
+    quantized once at load (kind "qi"), using the fused-path bytes-moved
+    model of ``kernels.dispatch`` (whole-GEMM totals: activation reads
+    and the output write are included and identical on both sides).
+    ``weight_side`` isolates the weight-operand component alone — the
+    bytes the persistent currency actually removes: f32 scan + quantizer
+    f32/rand reads + int8 residual write vs one int8 mantissa read
+    (M-independent, so one row covers both phases)."""
+    out = {}
+    for phase, m in (("prefill", batch * prompt_len), ("decode", batch)):
+        per_call = sum(dispatch.bytes_moved(dispatch.FUSED, m, k, n, kind="qq")
+                       for _, k, n in _dense_gemm_shapes(cfg, m))
+        pre_q = sum(dispatch.bytes_moved(dispatch.FUSED, m, k, n, kind="qi")
+                    for _, k, n in _dense_gemm_shapes(cfg, m))
+        out[phase] = {"per_call_weight_quant_bytes": per_call,
+                      "load_time_quantized_bytes": pre_q,
+                      "reduction_pct": round(100.0 * (1 - pre_q / per_call), 2)}
+    f32, r8, i8 = 4, 4, 1
+    wk = sum(n * k for _, k, n in _dense_gemm_shapes(cfg, 1))
+    out["weight_side"] = {
+        "per_call_weight_quant_bytes": (f32 + f32 + r8 + i8) * wk,
+        "load_time_quantized_bytes": i8 * wk,
+        "reduction_pct": round(100.0 * (1 - i8 / (f32 + f32 + r8 + i8)), 2)}
+    return out
+
+
 def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
           gen: int = 16, policy_name: str = "int8", seed: int = 0,
-          quiet: bool = False):
+          qweights: bool = True, quiet: bool = False):
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     policy = POLICIES[policy_name]
+    if qweights and policy.enabled:
+        policy = dataclasses.replace(policy, qweights=True)
     mod = get_model(cfg)
     key = jax.random.key(seed)
     params = mod.init_params(key, cfg)
+    if policy.qweights_on:
+        # quantize-once serving: after this line no float32 weight exists
+        # on the prefill/decode path (weight_mask-declared leaves).
+        params = quantize_serving_params(params, cfg, policy,
+                                         jax.random.fold_in(key, 0x9E))
     max_len = prompt_len + gen
 
     prompts = jax.random.randint(jax.random.fold_in(key, 1),
@@ -65,14 +119,31 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32
     t_decode = time.time() - t0
 
     toks_per_s = batch * (gen - 1) / max(t_decode, 1e-9)
+    stats = {"prefill_s": t_prefill, "decode_s": t_decode,
+             "tok_per_s": toks_per_s, "qweights": policy.qweights_on}
+    # the analytic comparison only describes integer-pipeline runs and the
+    # dense-FFN GEMM set (vlm's patch frontend is an external stub; MoE
+    # expert GEMMs have a different shape set)
+    if policy.enabled and cfg.family in ("dense", "vlm"):
+        stats["weight_traffic"] = weight_traffic_report(cfg, batch, prompt_len)
     if not quiet:
-        print(f"arch={cfg.name} policy={policy_name} batch={batch}")
+        print(f"arch={cfg.name} policy={policy_name} batch={batch} "
+              f"qweights={policy.qweights_on}")
         print(f"prefill: {prompt_len} toks x {batch} in {t_prefill:.3f}s")
         print(f"decode: {gen - 1} steps in {t_decode:.3f}s  "
               f"({toks_per_s:.1f} tok/s, {t_decode / max(gen - 1, 1) * 1e3:.1f} ms/step)")
-    return np.stack(out_tokens, axis=1), {"prefill_s": t_prefill,
-                                          "decode_s": t_decode,
-                                          "tok_per_s": toks_per_s}
+        wt = stats.get("weight_traffic")
+        if wt:
+            for phase, r in wt.items():
+                what = ("weight-operand traffic per model pass"
+                        if phase == "weight_side"
+                        else f"{phase} GEMM traffic (whole)")
+                print(f"{what}: per-call weight quant "
+                      f"{r['per_call_weight_quant_bytes'] / 1e6:.2f} MB -> "
+                      f"load-time quantized "
+                      f"{r['load_time_quantized_bytes'] / 1e6:.2f} MB "
+                      f"(-{r['reduction_pct']}%)")
+    return np.stack(out_tokens, axis=1), stats
 
 
 def main():
@@ -84,9 +155,14 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--policy", default="int8", choices=list(POLICIES))
+    ap.add_argument("--per-call-weights", dest="qweights",
+                    action="store_false", default=True,
+                    help="legacy path: re-quantize f32 weights inside every "
+                         "GEMM instead of once at model load")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, batch=args.batch,
-          prompt_len=args.prompt_len, gen=args.gen, policy_name=args.policy)
+          prompt_len=args.prompt_len, gen=args.gen, policy_name=args.policy,
+          qweights=args.qweights)
 
 
 if __name__ == "__main__":

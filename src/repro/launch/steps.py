@@ -21,9 +21,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import (BFP, NumericPolicy, integer_sgd_init, integer_sgd_step,
-                    master_params_f32)
-from ..models import get_model
+from ..core import (BFP, NumericPolicy, derive_qweights, integer_sgd_init,
+                    integer_sgd_step, master_params_f32,
+                    quantize_weights_once, qweight_grads)
+from ..models import get_model, get_weight_mask
 from ..models.common import ArchConfig
 from ..optim import sgd_init, sgd_step
 from ..runtime.sharding import ShardingRules, spec_tree
@@ -31,7 +32,8 @@ from ..runtime.sharding import ShardingRules, spec_tree
 __all__ = ["make_train_step", "make_float_train_step", "make_prefill_step",
            "make_decode_step", "train_state_template", "state_shardings",
            "params_shardings", "batch_shardings", "cache_template",
-           "cache_shardings", "TrainHyper"]
+           "cache_shardings", "quantized_params_template",
+           "quantize_serving_params", "TrainHyper"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,7 +70,20 @@ def _wrap_key(raw, rng_impl: str):
 def _grad_fn(mod, cfg, policy):
     def loss_for(p, b, k):
         return mod.loss_fn(p, b, k, policy, cfg)
-    return jax.value_and_grad(loss_for)
+    if not policy.enabled or not policy.qweights_on:
+        return jax.value_and_grad(loss_for)
+
+    # qweights: the parameter tree holds BFP leaves — integer mantissas get
+    # float0 cotangents (hence allow_int) and the real dW arrives on each
+    # leaf's float32 carrier; extract it here so downstream accumulation
+    # and the integer SGD update see the plain float32 gradient tree.
+    vg_raw = jax.value_and_grad(loss_for, allow_int=True)
+
+    def vg(p, b, k):
+        loss, g = vg_raw(p, b, k)
+        return loss, qweight_grads(g)
+
+    return vg
 
 
 def _accum_grads(vg, params, batch, key, n_micro: int):
@@ -84,7 +99,10 @@ def _accum_grads(vg, params, batch, key, n_micro: int):
         g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
         return (loss_acc + loss, g_acc), None
 
-    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    zeros = jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, jnp.float32) if isinstance(l, BFP)
+        else jnp.zeros_like(l),
+        params, is_leaf=lambda x: isinstance(x, BFP))
     (loss, grads), _ = jax.lax.scan(
         body, (jnp.float32(0), zeros), jnp.arange(n_micro))
     scale = 1.0 / n_micro
@@ -93,13 +111,27 @@ def _accum_grads(vg, params, batch, key, n_micro: int):
 
 def make_train_step(cfg: ArchConfig, policy: NumericPolicy,
                     hyper: TrainHyper = TrainHyper()):
-    """Integer pipeline train step: (IntSGDState, batch, raw_key) -> (state, loss)."""
+    """Integer pipeline train step: (IntSGDState, batch, raw_key) -> (state, loss).
+
+    With ``policy.qweights`` on, the forward weights are derived from the
+    int16 masters by a pure integer narrow ONCE per optimizer step (no f32
+    round-trip, no per-GEMM weight quantize) and reused across every
+    microbatch; dW rides each BFP leaf's gradient carrier back into the
+    integer SGD update.  Off, the step is the classic dequantize-masters
+    pipeline, bit-identical to the pre-qweights implementation.
+    """
     mod = get_model(cfg)
     vg = _grad_fn(mod, cfg, policy)
+    qw = policy.qweights_on
+    wmask = get_weight_mask(cfg) if qw else None
 
     def train_step(state, batch, key):
         key = _wrap_key(key, hyper.rng_impl)
-        params = master_params_f32(state)
+        if qw:
+            params = derive_qweights(state, policy,
+                                     jax.random.fold_in(key, 3), wmask)
+        else:
+            params = master_params_f32(state)
         kf = jax.random.fold_in(key, 1)
         if hyper.microbatch > 1:
             loss, grads = _accum_grads(vg, params, batch, kf, hyper.microbatch)
@@ -205,16 +237,54 @@ def _sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
 
 def _sanitized_shardings(spec_names_tree, template_tree, mesh: Mesh,
                          rules: ShardingRules):
+    """Template leaves may be arrays or BFP (quantized-weight currency):
+    BFP mantissas — and the carrier, when present — shard exactly like the
+    float32 leaf they replace; shared exponents are (per-)scalars and
+    replicate."""
     specs = spec_tree(rules, spec_names_tree)
-    return jax.tree_util.tree_map(
-        lambda s, t: NamedSharding(mesh, _sanitize_spec(s, t.shape, mesh)),
-        specs, template_tree, is_leaf=lambda x: isinstance(x, P))
+    repl = NamedSharding(mesh, P())
+
+    def mk(s, t):
+        if isinstance(t, BFP):
+            m_sh = NamedSharding(mesh, _sanitize_spec(s, t.m.shape, mesh))
+            return BFP(m_sh, repl, t.cfg, None if t.g is None else m_sh)
+        return NamedSharding(mesh, _sanitize_spec(s, t.shape, mesh))
+
+    return jax.tree_util.tree_map(mk, specs, template_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
 
 
-def params_shardings(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules):
+def params_shardings(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules,
+                     template=None):
+    """Pass a ``quantized_params_template`` as ``template`` to shard a
+    load-time-quantized serving tree (BFP mantissas shard like the f32
+    leaves they replace)."""
     mod = get_model(cfg)
-    return _sanitized_shardings(mod.param_specs(cfg), params_template(cfg),
-                                mesh, rules)
+    return _sanitized_shardings(
+        mod.param_specs(cfg),
+        params_template(cfg) if template is None else template, mesh, rules)
+
+
+def quantized_params_template(cfg: ArchConfig, policy: NumericPolicy,
+                              carrier: bool = False):
+    """eval_shape template of the load-time-quantized parameter tree."""
+    mod = get_model(cfg)
+    mask = get_weight_mask(cfg)
+
+    def build(key):
+        return quantize_weights_once(mod.init_params(key, cfg), policy, key,
+                                     mask, carrier=carrier)
+
+    return jax.eval_shape(build, jax.random.key(0))
+
+
+def quantize_serving_params(params, cfg: ArchConfig, policy: NumericPolicy,
+                            key, carrier: bool = False):
+    """Quantize a float32 parameter tree exactly once at model load: every
+    GEMM weight the arch declares (``weight_mask``) becomes a persistent
+    BFP leaf, so prefill/decode never touch a float32 weight again."""
+    return quantize_weights_once(params, policy, key, get_weight_mask(cfg),
+                                 carrier=carrier)
 
 
 def state_shardings(cfg: ArchConfig, policy: NumericPolicy, mesh: Mesh,

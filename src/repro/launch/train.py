@@ -35,6 +35,8 @@ from .steps import TrainHyper, make_float_train_step, make_train_step
 POLICIES = {"int8": PAPER_INT8, "float32": FLOAT32,
             "int8_block": NumericPolicy(block=128),
             "int8_qflow": NumericPolicy(qflow=True),
+            "int8_qweights": NumericPolicy(qweights=True),
+            "int8_qfull": NumericPolicy(qflow=True, qweights=True),
             "int4": NumericPolicy(fwd_bits=4, bwd_bits=4)}
 
 
@@ -43,11 +45,14 @@ def train(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
           microbatch: int = 1, ckpt_dir: Optional[str] = None,
           ckpt_every: int = 25, log_every: int = 10, seed: int = 0,
           momentum: float = 0.9, weight_decay: float = 0.0,
-          use_wsd: bool = False, quiet: bool = False, qflow: bool = False):
+          use_wsd: bool = False, quiet: bool = False, qflow: bool = False,
+          qweights: bool = False):
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     policy = POLICIES[policy_name]
     if qflow and policy.enabled:
         policy = dataclasses.replace(policy, qflow=True)
+    if qweights and policy.enabled:
+        policy = dataclasses.replace(policy, qweights=True)
     mod = get_model(cfg)
     key = jax.random.key(seed)
 
@@ -122,12 +127,17 @@ def main():
     ap.add_argument("--qflow", action="store_true",
                     help="quantized activations as the inter-layer currency "
                          "(docs/DATAFLOW.md); no-op for --policy float32")
+    ap.add_argument("--qweights", action="store_true",
+                    help="quantized weights as the persistent currency: "
+                         "int8 forward weights derived from the int16 "
+                         "masters once per step (docs/DATAFLOW.md); no-op "
+                         "for --policy float32")
     args = ap.parse_args()
     losses, _ = train(args.arch, smoke=args.smoke, steps=args.steps,
                       batch=args.batch, seq=args.seq, policy_name=args.policy,
                       lr=args.lr, microbatch=args.microbatch,
                       ckpt_dir=args.ckpt_dir, use_wsd=args.wsd, seed=args.seed,
-                      qflow=args.qflow)
+                      qflow=args.qflow, qweights=args.qweights)
     print(f"final loss: {losses[-1]:.4f} (start {losses[0]:.4f})")
 
 

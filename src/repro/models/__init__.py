@@ -1,6 +1,6 @@
 """Architecture zoo: 10 assigned archs built from the integer core ops."""
 
 from .common import ArchConfig, softmax_xent
-from .registry import get_model
+from .registry import get_model, get_weight_mask
 
-__all__ = ["ArchConfig", "get_model", "softmax_xent"]
+__all__ = ["ArchConfig", "get_model", "get_weight_mask", "softmax_xent"]

@@ -16,11 +16,22 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import NumericPolicy
+from ..core import BFP, NumericPolicy
 from ..runtime.sharding import logical_constraint
 
 __all__ = ["ArchConfig", "KVCache", "dense_init", "rope", "apply_rope",
-           "softmax_xent", "glu_act", "LAYER_AXIS"]
+           "softmax_xent", "glu_act", "weight_t", "LAYER_AXIS"]
+
+
+def weight_t(w):
+    """Transpose the last two axes of a weight that may be float32 or a
+    per-tensor ``BFP`` (persistent weight currency) — the tied-embedding
+    lm heads.  For a BFP this is pure int8 data movement; the gradient
+    carrier transposes alongside so dW flows back to the table."""
+    if isinstance(w, BFP):
+        return BFP(jnp.swapaxes(w.m, -1, -2), w.e, w.cfg,
+                   None if w.g is None else jnp.swapaxes(w.g, -1, -2))
+    return jnp.swapaxes(w, -1, -2)
 
 LAYER_AXIS = "layers"  # stacked-parameter leading axis name
 

@@ -15,11 +15,13 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import NumericPolicy, bfp_value, qconv, qmatmul, qrelu
+from ..core import (QW_NONE, QW_TENSOR, NumericPolicy, bfp_value, qconv,
+                    qmatmul, qrelu)
 from ..core.qnorm import qbatchnorm
 from .common import dense_init
 
-__all__ = ["CNNConfig", "init_params", "loss_fn", "apply", "accuracy"]
+__all__ = ["CNNConfig", "init_params", "weight_mask", "loss_fn", "apply",
+           "accuracy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +59,24 @@ def init_params(key: jax.Array, cfg: CNNConfig) -> Dict[str, Any]:
         c = cout
     params["head"] = dense_init(next(ks), (c, cfg.n_classes))
     return params
+
+
+def weight_mask(cfg: CNNConfig) -> Dict[str, Any]:
+    """Persistent-weight-currency mask: conv filters and the linear head
+    become per-tensor BFP leaves (blocks are a python list, not a scan, so
+    no stacking); batch-norm gains/biases keep the float32 master view."""
+    bn = {"g": QW_NONE, "b": QW_NONE}
+    mask: Dict[str, Any] = {"stem": QW_TENSOR, "stem_bn": dict(bn),
+                            "blocks": [], "head": QW_TENSOR}
+    c = cfg.width
+    for s, cout, stride in block_plan(cfg):
+        blk = {"conv1": QW_TENSOR, "bn1": dict(bn),
+               "conv2": QW_TENSOR, "bn2": dict(bn)}
+        if c != cout or stride != 1:
+            blk["proj"] = QW_TENSOR
+        mask["blocks"].append(blk)
+        c = cout
+    return mask
 
 
 def block_plan(cfg: CNNConfig):

@@ -15,14 +15,16 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import NumericPolicy, qembed, qmatmul
+from ..core import (BFP, QW_NONE, QW_STACKED, QW_TENSOR, NumericPolicy,
+                    qembed, qmatmul)
 from ..core.qnorm import qlayernorm
 from ..runtime.sharding import logical_constraint
 from .attention import chunked_attention, decode_attention
-from .common import ArchConfig, apply_rope, dense_init, rope, softmax_xent
+from .common import (ArchConfig, apply_rope, dense_init, rope, softmax_xent,
+                     weight_t)
 
-__all__ = ["init_params", "param_specs", "loss_fn", "prefill", "decode_step",
-           "init_cache", "encode"]
+__all__ = ["init_params", "param_specs", "weight_mask", "loss_fn", "prefill",
+           "decode_step", "init_cache", "encode"]
 
 
 def _attn_params(key, cfg: ArchConfig, kv_d=None):
@@ -103,6 +105,24 @@ def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
             "dec_fn_g": ("norm",), "dec_fn_b": ("norm",)}
 
 
+def weight_mask(cfg: ArchConfig) -> Dict[str, Any]:
+    """Persistent-weight-currency mask (see models.registry): every
+    attention/FFN projection and the tied embedding table become BFP
+    leaves; layernorm gains/biases keep the float32 master view."""
+    attn = {"wq": QW_STACKED, "wk": QW_STACKED, "wv": QW_STACKED,
+            "wo": QW_STACKED}
+    ffn = {"w_up": QW_STACKED, "w_down": QW_STACKED}
+    norm = QW_NONE
+    enc = {"ln1_g": norm, "ln1_b": norm, "ln2_g": norm, "ln2_b": norm,
+           "attn": dict(attn), **ffn}
+    dec = {"ln1_g": norm, "ln1_b": norm, "ln2_g": norm, "ln2_b": norm,
+           "ln3_g": norm, "ln3_b": norm,
+           "self": dict(attn), "cross": dict(attn), **ffn}
+    return {"enc": enc, "dec": dec, "embed": QW_TENSOR,
+            "enc_fn_g": norm, "enc_fn_b": norm,
+            "dec_fn_g": norm, "dec_fn_b": norm}
+
+
 # ---------------------------------------------------------------------------
 # blocks
 # ---------------------------------------------------------------------------
@@ -123,7 +143,10 @@ def _qout(policy):
 
 def _proj_qkv(x_q, x_kv, ap, key, policy, cfg, positions_q=None, positions_k=None):
     ks = jax.random.split(key, 3)
-    if policy.enabled and policy.fused_proj and x_q is x_kv:
+    if policy.enabled and policy.fused_proj and x_q is x_kv \
+            and not isinstance(ap["wq"], BFP):
+        # (BFP weights cannot merge — each carries its own scale — so the
+        # persistent weight currency keeps the split projections.)
         # self-attention: one integer GEMM, one input quantization, one
         # merged weight scale (fused_proj; cross-attention keeps separate
         # projections — its Q and KV inputs are different tensors)
@@ -263,7 +286,7 @@ def loss_fn(params, batch, key, policy: NumericPolicy, cfg: ArchConfig):
     ke, kd = jax.random.split(key)
     enc_out = encode(params, batch["src_embeds"], ke, policy, cfg)
     h = _decode_stack(params, batch["tokens"], enc_out, kd, policy, cfg)
-    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(kd, 0xF2), policy)
+    logits = qmatmul(h, weight_t(params["embed"]), jax.random.fold_in(kd, 0xF2), policy)
     logits = logical_constraint(logits, "batch", "seq", "vocab")
     return softmax_xent(logits, batch["labels"], batch.get("mask"))
 
@@ -310,7 +333,7 @@ def prefill(params, batch, key, policy: NumericPolicy, cfg: ArchConfig,
         "v": jnp.pad(v.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
         "xk": xk.astype(cache_dtype), "xv": xv.astype(cache_dtype),
     }
-    logits = qmatmul(h[:, -1:], params["embed"].T,
+    logits = qmatmul(h[:, -1:], weight_t(params["embed"]),
                      jax.random.fold_in(kd, 0xF2), policy)
     return cache, logits[:, 0]
 
@@ -335,5 +358,5 @@ def decode_step(params, cache, token, pos, key, policy: NumericPolicy,
                   cache["xv"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     h = qlayernorm(h, params["dec_fn_g"], params["dec_fn_b"],
                    jax.random.fold_in(key, 0xF1), policy)
-    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    logits = qmatmul(h, weight_t(params["embed"]), jax.random.fold_in(key, 0xF2), policy)
     return logits[:, 0], {"k": ks_, "v": vs_, "xk": cache["xk"], "xv": cache["xv"]}

@@ -20,10 +20,12 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import BFP, PER_TENSOR, NumericPolicy, bfp_value, qbmm, qmatmul
+from ..core import (BFP, PER_TENSOR, QW_NONE, QW_STACKED, NumericPolicy,
+                    bfp_value, qbmm, qmatmul)
 from .common import ArchConfig, dense_init
 
-__all__ = ["moe_params_init", "moe_param_specs", "moe_block"]
+__all__ = ["moe_params_init", "moe_param_specs", "moe_weight_mask",
+           "moe_block"]
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3,))
@@ -83,6 +85,21 @@ def moe_param_specs(cfg: ArchConfig) -> Dict[str, Tuple]:
         p["ws_gate"] = L + ("embed_fsdp", "mlp")
         p["ws_up"] = L + ("embed_fsdp", "mlp")
         p["ws_down"] = L + ("mlp", "embed_fsdp")
+    return p
+
+
+def moe_weight_mask(cfg: ArchConfig) -> Dict[str, int]:
+    """Weight-currency mask for the MoE leaves: expert and shared-expert
+    GEMM weights join the persistent BFP currency (one scale per layer
+    slice — the expert ``qbmm`` needs a per-tensor scale on its weight
+    operand); the router stays float32 (its matmul feeds a softmax, which
+    the paper keeps in float)."""
+    p = {"router": QW_NONE, "we_gate": QW_STACKED, "we_up": QW_STACKED,
+         "we_down": QW_STACKED}
+    if cfg.moe_shared:
+        p["ws_gate"] = QW_STACKED
+        p["ws_up"] = QW_STACKED
+        p["ws_down"] = QW_STACKED
     return p
 
 

@@ -4,10 +4,13 @@ from __future__ import annotations
 
 from types import ModuleType
 
+import jax
+
+from ..core import QW_NONE
 from . import encdec, rglru, rwkv6, transformer
 from .common import ArchConfig
 
-__all__ = ["get_model"]
+__all__ = ["get_model", "get_weight_mask"]
 
 _FAMILY_TO_MODULE = {
     "dense": transformer,
@@ -26,3 +29,19 @@ def get_model(cfg: ArchConfig) -> ModuleType:
         return _FAMILY_TO_MODULE[cfg.family]
     except KeyError:
         raise ValueError(f"unknown architecture family: {cfg.family!r}")
+
+
+def get_weight_mask(cfg: ArchConfig):
+    """Weight-currency mask for this arch: a pytree congruent with
+    ``init_params`` whose leaves say how each parameter participates in the
+    persistent quantized-weight currency (``QW_NONE`` / ``QW_TENSOR`` /
+    ``QW_STACKED`` — see ``core.policy``).  Families that haven't declared
+    one get an all-``QW_NONE`` mask: ``policy.qweights`` is then a no-op
+    for them (every GEMM keeps the fresh-quantize path)."""
+    mod = get_model(cfg)
+    fn = getattr(mod, "weight_mask", None)
+    if fn is not None:
+        return fn(cfg)
+    params = jax.eval_shape(lambda k: mod.init_params(k, cfg),
+                            jax.random.key(0))
+    return jax.tree_util.tree_map(lambda _: QW_NONE, params)

@@ -16,14 +16,16 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import NumericPolicy, qembed, qmatmul
+from ..core import (QW_NONE, QW_STACKED, QW_STACKED2, QW_TENSOR,
+                    NumericPolicy, qembed, qmatmul)
 from ..core.qnorm import qrmsnorm
 from ..runtime.sharding import logical_constraint
 from .attention import decode_attention, local_attention
-from .common import ArchConfig, apply_rope, dense_init, rope, softmax_xent
+from .common import (ArchConfig, apply_rope, dense_init, rope, softmax_xent,
+                     weight_t)
 
-__all__ = ["init_params", "param_specs", "loss_fn", "prefill", "decode_step",
-           "init_cache"]
+__all__ = ["init_params", "param_specs", "weight_mask", "loss_fn", "prefill",
+           "decode_step", "init_cache"]
 
 _C = 8.0  # RG-LRU gate sharpness constant
 
@@ -126,6 +128,34 @@ def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
     if tail:
         specs["rec_tail"] = _rec_specs(("layers",))
     return specs
+
+
+def _rec_mask(stack: int) -> Dict[str, int]:
+    # wa/wx feed float sigmoids (the RG-LRU gates stay float, like the
+    # paper's softmax); conv/decay/norm vectors keep the f32 master view.
+    return {
+        "ln_g": QW_NONE, "mlp_ln_g": QW_NONE,
+        "w_in": stack, "w_gate_in": stack,
+        "conv_w": QW_NONE, "conv_b": QW_NONE,
+        "wa": QW_NONE, "wx": QW_NONE, "lam": QW_NONE,
+        "w_out": stack, "w_up": stack, "w_gate": stack, "w_down": stack,
+    }
+
+
+def weight_mask(cfg: ArchConfig) -> Dict[str, Any]:
+    """Persistent-weight-currency mask: recurrent-block and attention-block
+    projections join the BFP currency (rec blocks carry two stack axes:
+    scales per (period, rec) slice); gates/conv/norm vectors stay f32."""
+    _, _, tail = _layout(cfg)
+    attn = {"ln_g": QW_NONE, "mlp_ln_g": QW_NONE,
+            "wq": QW_STACKED, "wk": QW_STACKED, "wv": QW_STACKED,
+            "wo": QW_STACKED, "w_up": QW_STACKED, "w_gate": QW_STACKED,
+            "w_down": QW_STACKED}
+    mask = {"rec": _rec_mask(QW_STACKED2), "attn": attn,
+            "embed": QW_TENSOR, "fn_g": QW_NONE}
+    if tail:
+        mask["rec_tail"] = _rec_mask(QW_STACKED)
+    return mask
 
 
 # ---------------------------------------------------------------------------
@@ -304,7 +334,7 @@ def _forward(params, tokens, key, policy, cfg, cache=None, pos=None):
 
 def loss_fn(params, batch, key, policy: NumericPolicy, cfg: ArchConfig):
     h, _ = _forward(params, batch["tokens"], key, policy, cfg)
-    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    logits = qmatmul(h, weight_t(params["embed"]), jax.random.fold_in(key, 0xF2), policy)
     logits = logical_constraint(logits, "batch", "seq", "vocab")
     return softmax_xent(logits, batch["labels"], batch.get("mask"))
 
@@ -319,7 +349,7 @@ def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
                          ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
     cache["v"] = jnp.pad(st["v"].astype(cache_dtype),
                          ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
-    logits = qmatmul(h[:, -1:], params["embed"].T,
+    logits = qmatmul(h[:, -1:], weight_t(params["embed"]),
                      jax.random.fold_in(key, 0xF2), policy)
     return cache, logits[:, 0]
 
@@ -328,5 +358,5 @@ def decode_step(params, cache, token, pos, key, policy: NumericPolicy,
                 cfg: ArchConfig):
     h, cache = _forward(params, token[:, None], key, policy, cfg,
                         cache=cache, pos=pos)
-    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    logits = qmatmul(h, weight_t(params["embed"]), jax.random.fold_in(key, 0xF2), policy)
     return logits[:, 0], cache

@@ -16,13 +16,14 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import NumericPolicy, qembed, qmatmul
+from ..core import (QW_NONE, QW_STACKED, QW_TENSOR, NumericPolicy, qembed,
+                    qmatmul)
 from ..core.qnorm import qlayernorm
 from ..runtime.sharding import logical_constraint
-from .common import ArchConfig, dense_init, softmax_xent
+from .common import ArchConfig, dense_init, softmax_xent, weight_t
 
-__all__ = ["init_params", "param_specs", "loss_fn", "prefill", "decode_step",
-           "init_state", "HEAD_DIM"]
+__all__ = ["init_params", "param_specs", "weight_mask", "loss_fn", "prefill",
+           "decode_step", "init_state", "HEAD_DIM"]
 
 HEAD_DIM = 64
 _TCHUNK = 64   # remat chunk for the time scan
@@ -82,6 +83,24 @@ def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
     }
     return {"layers": layers, "embed": ("vocab", "embed_fsdp"),
             "fn_g": ("norm",), "fn_b": ("norm",)}
+
+
+def weight_mask(cfg: ArchConfig) -> Dict[str, Any]:
+    """Persistent-weight-currency mask: every qmatmul projection (incl. the
+    decay LoRA pair) joins the BFP currency; time-mix lerp coefficients,
+    decay/bonus vectors and norm gains keep the float32 master view."""
+    vec = QW_NONE
+    layers = {
+        "ln1_g": vec, "ln1_b": vec, "ln2_g": vec, "ln2_b": vec,
+        "mu_r": vec, "mu_k": vec, "mu_v": vec, "mu_g": vec, "mu_w": vec,
+        "w0": vec, "gn_g": vec, "gn_b": vec, "mu_k2": vec, "mu_r2": vec,
+        "u": vec,
+        "wA": QW_STACKED, "wB": QW_STACKED,
+        "Wr": QW_STACKED, "Wk": QW_STACKED, "Wv": QW_STACKED,
+        "Wg": QW_STACKED, "Wo": QW_STACKED,
+        "Wk2": QW_STACKED, "Wv2": QW_STACKED, "Wr2": QW_STACKED,
+    }
+    return {"layers": layers, "embed": QW_TENSOR, "fn_g": vec, "fn_b": vec}
 
 
 def _lerp(x, x_prev, mu):
@@ -198,7 +217,7 @@ def _forward(params, tokens, state, key, policy, cfg):
 def loss_fn(params, batch, key, policy: NumericPolicy, cfg: ArchConfig):
     b = batch["tokens"].shape[0]
     h, _ = _forward(params, batch["tokens"], init_state(cfg, b), key, policy, cfg)
-    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    logits = qmatmul(h, weight_t(params["embed"]), jax.random.fold_in(key, 0xF2), policy)
     logits = logical_constraint(logits, "batch", "seq", "vocab")
     return softmax_xent(logits, batch["labels"], batch.get("mask"))
 
@@ -208,7 +227,7 @@ def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
     """State-based prefill; cache = recurrent state (O(1) in length)."""
     b = tokens.shape[0]
     h, state = _forward(params, tokens, init_state(cfg, b), key, policy, cfg)
-    logits = qmatmul(h[:, -1:], params["embed"].T,
+    logits = qmatmul(h[:, -1:], weight_t(params["embed"]),
                      jax.random.fold_in(key, 0xF2), policy)
     return state, logits[:, 0]
 
@@ -216,5 +235,5 @@ def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
 def decode_step(params, state, token, pos, key, policy: NumericPolicy,
                 cfg: ArchConfig):
     h, state = _forward(params, token[:, None], state, key, policy, cfg)
-    logits = qmatmul(h, params["embed"].T, jax.random.fold_in(key, 0xF2), policy)
+    logits = qmatmul(h, weight_t(params["embed"]), jax.random.fold_in(key, 0xF2), policy)
     return logits[:, 0], state

@@ -18,15 +18,17 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import BFP, NumericPolicy, qembed, qmatmul
+from ..core import (BFP, QW_NONE, QW_STACKED, QW_TENSOR, NumericPolicy,
+                    qembed, qmatmul)
 from ..core.qnorm import qlayernorm, qrmsnorm
 from ..runtime.sharding import logical_constraint
 from .attention import chunked_attention, decode_attention, local_attention
-from .common import ArchConfig, apply_rope, dense_init, rope, softmax_xent
-from .moe import moe_block, moe_param_specs, moe_params_init
+from .common import (ArchConfig, apply_rope, dense_init, rope, softmax_xent,
+                     weight_t)
+from .moe import moe_block, moe_param_specs, moe_params_init, moe_weight_mask
 
-__all__ = ["init_params", "param_specs", "forward_hidden", "loss_fn",
-           "prefill", "decode_step", "init_cache"]
+__all__ = ["init_params", "param_specs", "weight_mask", "forward_hidden",
+           "loss_fn", "prefill", "decode_step", "init_cache"]
 
 
 # ---------------------------------------------------------------------------
@@ -106,6 +108,37 @@ def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
     return specs
 
 
+def weight_mask(cfg: ArchConfig) -> Dict[str, Any]:
+    """Persistent-weight-currency mask, same tree structure as init_params:
+    GEMM weight operands become BFP leaves (stacked layer weights get one
+    scale per layer so ``lax.scan`` can slice them); norm gains, biases and
+    the float router keep the master's float32 view."""
+    layers = {
+        "ln1_g": QW_NONE, "ln2_g": QW_NONE,
+        "wq": QW_STACKED, "wk": QW_STACKED, "wv": QW_STACKED,
+        "wo": QW_STACKED,
+    }
+    if cfg.norm == "layernorm":
+        layers["ln1_b"] = QW_NONE
+        layers["ln2_b"] = QW_NONE
+    if cfg.qkv_bias:
+        layers["bq"] = QW_NONE
+        layers["bk"] = QW_NONE
+        layers["bv"] = QW_NONE
+    if cfg.moe_experts:
+        layers.update(moe_weight_mask(cfg))
+    else:
+        layers["w_gate"] = QW_STACKED
+        layers["w_up"] = QW_STACKED
+        layers["w_down"] = QW_STACKED
+    mask = {"layers": layers, "embed": QW_TENSOR, "fn_g": QW_NONE}
+    if cfg.norm == "layernorm":
+        mask["fn_b"] = QW_NONE
+    if not cfg.tie_embeddings:
+        mask["lm_head"] = QW_TENSOR
+    return mask
+
+
 # ---------------------------------------------------------------------------
 # blocks
 # ---------------------------------------------------------------------------
@@ -142,8 +175,10 @@ def _attn_block(h, lp, key, policy, cfg, *, positions, kv=None, pos=None):
     kq, ka, ko = jax.random.split(key, 3)
     nq = lp["wq"].shape[-1]
     nk = lp["wk"].shape[-1]
-    if policy.enabled and policy.fused_proj:
-        # one integer GEMM, one input quantization, one merged weight scale
+    if policy.enabled and policy.fused_proj and not isinstance(lp["wq"], BFP):
+        # one integer GEMM, one input quantization, one merged weight scale.
+        # (BFP weights cannot merge — each carries its own scale — so the
+        # persistent weight currency keeps the split projections.)
         wqkv = jnp.concatenate([lp["wq"], lp["wk"], lp["wv"]], axis=-1)
         qkv = qmatmul(h, wqkv, kq, policy)
         q, k, v = jnp.split(qkv, (nq, nq + nk), axis=-1)
@@ -183,7 +218,7 @@ def _mlp_block(h, lp, key, policy, cfg):
     if cfg.moe_experts:
         return moe_block(h, lp, key, policy, cfg)
     k1, k2, k3 = jax.random.split(key, 3)
-    if policy.enabled and policy.fused_proj:
+    if policy.enabled and policy.fused_proj and not isinstance(lp["w_gate"], BFP):
         gu = qmatmul(h, jnp.concatenate([lp["w_gate"], lp["w_up"]], axis=-1),
                      k1, policy)
         gate, up = jnp.split(gu, 2, axis=-1)
@@ -227,7 +262,7 @@ def _embed_in(params, tokens, key, policy, cfg, patch_embeds=None):
 
 
 def _lm_logits(params, h, key, policy, cfg):
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    head = weight_t(params["embed"]) if cfg.tie_embeddings else params["lm_head"]
     logits = qmatmul(h, head, key, policy)
     return logical_constraint(logits, "batch", "seq", "vocab")
 

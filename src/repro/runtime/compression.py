@@ -31,6 +31,12 @@ from ..core.fixed_point import fx_quantize, fx_to_f32, Fx
 __all__ = ["quantized_psum", "psum16"]
 
 
+def _axis_size(axis_name: str) -> int:
+    """Static size of a named mapped axis (jax 0.4.x has no lax.axis_size;
+    psum of a literal 1 constant-folds to the axis size at trace time)."""
+    return int(lax.psum(1, axis_name))
+
+
 def _to_shared_scale(x: jnp.ndarray, bits: int, key, axis_name: str,
                      guard: int):
     """Quantize x to mantissas on a scale shared across the reduce axis,
@@ -52,7 +58,7 @@ def quantized_psum(x: jnp.ndarray, axis_name: str, key: jax.Array,
     int8); int8 all_gather back. Requires leading dim divisible by the
     axis size (the train step pads).
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     guard = max((n - 1).bit_length(), 0)           # sum of n values: +log2(n) bits
     m, e = _to_shared_scale(x, bits, key, axis_name, guard)
     m8 = m.astype(jnp.int8)                        # |m| <= 127 >> guard
@@ -77,6 +83,6 @@ def psum16(x: jnp.ndarray, axis_name: str, key: jax.Array) -> jnp.ndarray:
     collective itself runs on 2-byte words.
     """
     m, e = _to_shared_scale(x, 16, key, axis_name,
-                            max((lax.axis_size(axis_name) - 1).bit_length(), 0))
+                            max((_axis_size(axis_name) - 1).bit_length(), 0))
     total = lax.psum(m.astype(jnp.int16), axis_name)
     return total.astype(jnp.float32) * pow2(e)

@@ -127,6 +127,80 @@ def test_model_loss_under_pjit_dp_tp():
     assert "OK" in out
 
 
+def test_intsgd_state_checkpoint_reshard(tmp_path):
+    """IntSGDState (BFP int16 mantissas + scalar-exponent leaves) through
+    save -> async wait() -> restore onto a *different* mesh's sharding
+    template: dtype, structure, cfg and values must survive exactly."""
+    out = _run(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.checkpoint import CheckpointManager
+        from repro.configs import get_smoke_config
+        from repro.core import PAPER_INT8, BFP, integer_sgd_init
+        from repro.launch.steps import state_shardings, train_state_template
+        from repro.models import get_model
+        from repro.runtime.sharding import DEFAULT_RULES
+
+        cfg = get_smoke_config("qwen2_0_5b")
+        mod = get_model(cfg)
+        state = integer_sgd_init(mod.init_params(jax.random.key(0), cfg),
+                                 PAPER_INT8, key=jax.random.key(0))
+        m1 = jax.make_mesh((4, 2), ("data", "model"))
+        sh1 = state_shardings(cfg, PAPER_INT8, m1, DEFAULT_RULES)
+        state = jax.tree_util.tree_map(jax.device_put, state, sh1)
+
+        mgr = CheckpointManager({str(tmp_path)!r}, async_write=True)
+        mgr.save(7, state)
+        mgr.wait()                                 # ready-fence
+
+        m2 = jax.make_mesh((2, 4), ("data", "model"))
+        sh2 = state_shardings(cfg, PAPER_INT8, m2, DEFAULT_RULES)
+        tmpl = train_state_template(cfg, PAPER_INT8)
+        step, restored = mgr.restore_latest(tmpl, shardings=sh2)
+        assert step == 7
+        for l1, l2 in zip(jax.tree_util.tree_leaves(state),
+                          jax.tree_util.tree_leaves(restored)):
+            assert l1.dtype == l2.dtype, (l1.dtype, l2.dtype)
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        mast = jax.tree_util.tree_leaves(
+            restored.masters, is_leaf=lambda x: isinstance(x, BFP))
+        assert all(isinstance(b, BFP) and b.cfg.bits == 16 and
+                   b.m.dtype == jnp.int16 for b in mast)
+        assert mast[0].m.sharding.mesh.shape["model"] == 4   # on the NEW mesh
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_intsgd_checkpoint_rejects_wrong_master_width(tmp_path):
+    """The dtype guard: an int8-masters checkpoint must not silently restore
+    into an int16 template (same shapes, different width)."""
+    out = _run(f"""
+        import jax, numpy as np
+        from repro.checkpoint import CheckpointManager
+        from repro.configs import get_smoke_config
+        from repro.core import NumericPolicy, integer_sgd_init
+        from repro.launch.steps import train_state_template
+        from repro.models import get_model
+
+        cfg = get_smoke_config("qwen2_0_5b")
+        mod = get_model(cfg)
+        pol8 = NumericPolicy(master_bits=8)
+        state = integer_sgd_init(mod.init_params(jax.random.key(0), cfg),
+                                 pol8, key=jax.random.key(0))
+        mgr = CheckpointManager({str(tmp_path)!r}, async_write=False)
+        mgr.save(1, state)
+        tmpl = train_state_template(cfg, NumericPolicy())   # int16 masters
+        try:
+            mgr.restore(1, tmpl)
+        except ValueError as e:
+            assert "dtype" in str(e), e
+            print("OK")
+        else:
+            print("FAIL: restored across master widths")
+    """)
+    assert "OK" in out
+
+
 def test_checkpoint_reshard_across_meshes(tmp_path):
     """Save on a (4,2) mesh, restore onto (2,4): elastic re-mesh path."""
     out = _run(f"""

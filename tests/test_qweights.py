@@ -1,0 +1,456 @@
+"""Tests for the persistent quantized-weight currency (policy.qweights).
+
+Covers the ISSUE-3 acceptance surface:
+  * integer-only master -> forward-weight derivation: zero quantize ops in
+    its jaxpr, values on the int8 grid, per-slice scales for stacked
+    leaves, unbiasedness of the stochastic narrow;
+  * qmatmul/qbmm/qembed/qconv with BFP weight operands: exact oracles,
+    dW routed onto the weight gradient carrier, and bit-identity with the
+    fresh-quantize path for on-grid weights under nearest rounding;
+  * the "pp" dispatch kind: bit-identity of the fused/unfused interpret
+    kernels vs the jnp oracle under jit and grad, and autotune shape-key
+    separation from qi/ii;
+  * spec pin: policy.qweights=False keeps the documented pre-qweights
+    train-step semantics bit-for-bit;
+  * model level: weight-quantize executions per train step drop to zero
+    with qweights on.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BFP, PAPER_INT8, QW_NONE, QW_STACKED, QW_STACKED2,
+                        QW_TENSOR, QuantConfig, dequantize, derive_qweights,
+                        integer_sgd_init, integer_sgd_step, master_params_f32,
+                        qbmm, qconv, qembed, qmatmul, quantize,
+                        quantize_weights_once)
+from repro.core.qops import _cfg_for_dim, _contract_q, _t
+from repro.introspect import (count_quantize_ops, count_weight_quantize_ops)
+from repro.kernels import autotune, dispatch
+
+KEY = jax.random.key(11)
+P8 = PAPER_INT8
+QW = dataclasses.replace(PAPER_INT8, qweights=True)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+def _as_flow(q: BFP) -> BFP:
+    return BFP(q.m, q.e, q.cfg, dequantize(q))
+
+
+def _toy_state(seed=0):
+    params = {"w": _rand((24, 16), seed), "g": jnp.ones((16,)),
+              "stk": _rand((3, 16, 8), seed + 1),
+              "stk2": _rand((2, 2, 8, 8), seed + 2)}
+    mask = {"w": QW_TENSOR, "g": QW_NONE, "stk": QW_STACKED,
+            "stk2": QW_STACKED2}
+    state = integer_sgd_init(params, QW, key=jax.random.key(seed))
+    return state, mask
+
+
+# ---------------------------------------------------------------------------
+# derivation: integer-only, on-grid, per-slice scales, unbiased
+# ---------------------------------------------------------------------------
+
+def test_derivation_runs_zero_quantize_ops():
+    """The master->forward-weight narrow is pure integer arithmetic: its
+    jaxpr contains NO quantize (and no weight-quantize) executions."""
+    state, mask = _toy_state()
+    fn = lambda s: derive_qweights(s, QW, KEY, mask)
+    assert count_quantize_ops(fn, state) == 0
+    assert count_weight_quantize_ops(fn, state) == 0
+
+
+def test_derived_weights_structure_and_accuracy():
+    state, mask = _toy_state()
+    qp = derive_qweights(state, QW, KEY, mask)
+    assert isinstance(qp["w"], BFP) and qp["w"].m.dtype == jnp.int8
+    assert not isinstance(qp["g"], BFP)              # QW_NONE: f32 view
+    assert qp["w"].e.shape == ()
+    assert qp["stk"].e.shape == (3,)                 # one scale per slice
+    assert qp["stk2"].e.shape == (2, 2)
+    for name in ("w", "stk", "stk2"):
+        ref = dequantize(state.masters[name])
+        got = qp[name].g
+        tol = float(jnp.max(jnp.abs(ref))) * 1.5 * 2.0 ** -6
+        assert float(jnp.max(jnp.abs(got - ref))) <= tol, name
+    # QW_NONE leaves are exactly the master f32 view
+    np.testing.assert_array_equal(np.asarray(qp["g"]),
+                                  np.asarray(dequantize(state.masters["g"])))
+
+
+def test_stacked_slices_match_scan_contract():
+    """A QW_STACKED leaf sliced along axis 0 must be a valid per-tensor
+    BFP whose dequantize matches the full carrier slice."""
+    state, mask = _toy_state()
+    qp = derive_qweights(state, QW, KEY, mask)
+    stk = qp["stk"]
+    for layer in range(stk.m.shape[0]):
+        sl = BFP(stk.m[layer], stk.e[layer], stk.cfg)
+        np.testing.assert_array_equal(np.asarray(dequantize(sl)),
+                                      np.asarray(stk.g[layer]))
+
+
+def test_derivation_unbiased():
+    """E[narrowed] == master value: the stochastic shift is an unbiased
+    estimator (Appendix A.1 applied to the weight currency)."""
+    params = {"w": _rand((8, 8), 3)}
+    state = integer_sgd_init(params, QW, key=jax.random.key(3))
+    ref = np.asarray(dequantize(state.masters["w"]), np.float64)
+
+    @jax.jit
+    def one(i):
+        return derive_qweights(state, QW, jax.random.fold_in(KEY, i),
+                               {"w": QW_TENSOR})["w"].g
+
+    n = 300
+    total = np.zeros_like(ref)
+    for i in range(n):
+        total += np.asarray(one(i), np.float64)
+    mean = total / n
+    ulp = np.abs(ref).max() * 2.0 ** -7
+    assert np.abs(mean - ref).max() < 4 * ulp / np.sqrt(n) + 1e-7
+
+
+def test_per_block_policy_keeps_f32_view():
+    state, mask = _toy_state()
+    pol = dataclasses.replace(QW, block=8)
+    assert not pol.qweights_on
+    qp = derive_qweights(state, pol, KEY, mask)
+    for leaf in jax.tree_util.tree_leaves(
+            qp, is_leaf=lambda x: isinstance(x, BFP)):
+        assert not isinstance(leaf, BFP)
+
+
+# ---------------------------------------------------------------------------
+# qmatmul / qbmm / qembed / qconv with BFP weight operands
+# ---------------------------------------------------------------------------
+
+def _wq_pair(k, n, seed=20):
+    """(w_bfp with carrier, contraction-last residual view)."""
+    w = _rand((k, n), seed)
+    wq_cl = quantize(_t(w), QuantConfig(8), jax.random.fold_in(KEY, 99))
+    w_bfp = BFP(_t(wq_cl.m), wq_cl.e, wq_cl.cfg, _t(dequantize(wq_cl)))
+    return w_bfp, wq_cl
+
+
+def test_qmatmul_bfp_weight_matches_prequant_oracle():
+    """f32 activation x BFP weight: only the activation is quantized (the
+    documented kx draw) and the contraction runs on the stored mantissas."""
+    x = _rand((6, 16), 21)
+    w_bfp, wq_cl = _wq_pair(16, 12)
+    y = qmatmul(x, w_bfp, KEY, P8)
+    cfg = _cfg_for_dim(P8.fwd_cfg(), 16)
+    kx, _, _ = jax.random.split(KEY, 3)
+    oracle = _contract_q(quantize(x, cfg, kx), wq_cl, 0, P8.accum_chunk)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(oracle))
+
+
+def test_qmatmul_pp_matches_oracle():
+    """BFP activation x BFP weight: the fully-pre-quantized forward — no
+    quantize at all, pure mantissa contraction."""
+    xq = quantize(_rand((6, 16), 22), QuantConfig(8), jax.random.fold_in(KEY, 1))
+    w_bfp, wq_cl = _wq_pair(16, 12, seed=23)
+    y = qmatmul(_as_flow(xq), w_bfp, KEY, P8)
+    oracle = _contract_q(xq, wq_cl, 0, P8.accum_chunk)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(oracle))
+    # and it really plans the pp kind
+    with dispatch.record_decisions() as log:
+        jax.make_jaxpr(lambda a, b: qmatmul(a, b, KEY, P8))(_as_flow(xq), w_bfp)
+    assert [d.kind for d in log if d.op == "qmatmul_fwd"] == ["pp"]
+
+
+def test_bfp_weight_on_grid_bit_identical_to_fresh_quantize():
+    """For a weight already on the int8 grid, nearest-rounding fresh
+    quantization is exact — so the BFP-weight path must be bit-identical
+    to the legacy f32-weight path in BOTH forward and all gradients.
+    This is the strongest equivalence between the two currencies."""
+    pol = dataclasses.replace(P8, stochastic=False)
+    x = _rand((5, 16), 24)
+    w_bfp, _ = _wq_pair(16, 8, seed=25)
+    w_f32 = w_bfp.g                                  # on-grid float view
+
+    def f_legacy(x, w):
+        return jnp.sum(qmatmul(x, w, KEY, pol) ** 2)
+
+    def f_pw(x, wb):
+        return jnp.sum(qmatmul(x, wb, KEY, pol) ** 2)
+
+    y1, (dx1, dw1) = jax.value_and_grad(f_legacy, argnums=(0, 1))(x, w_f32)
+    y2, (dx2, dwq) = jax.value_and_grad(f_pw, argnums=(0, 1),
+                                        allow_int=True)(x, w_bfp)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(dx1), np.asarray(dx2))
+    np.testing.assert_array_equal(np.asarray(dw1), np.asarray(dwq.g))
+
+
+def test_qbmm_bfp_weight_pp_kind():
+    a = quantize(_rand((2, 4, 16), 26), QuantConfig(8), jax.random.fold_in(KEY, 2))
+    b = _rand((2, 16, 8), 27)
+    bq_cl = quantize(_t(b), QuantConfig(8), jax.random.fold_in(KEY, 3))
+    b_bfp = BFP(_t(bq_cl.m), bq_cl.e, bq_cl.cfg, _t(dequantize(bq_cl)))
+    y = qbmm(_as_flow(a), b_bfp, KEY, P8)
+    oracle = _contract_q(a, bq_cl, 1, P8.accum_chunk)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(oracle))
+    with dispatch.record_decisions() as log:
+        jax.make_jaxpr(lambda aa, bb: qbmm(aa, bb, KEY, P8))(_as_flow(a), b_bfp)
+    assert [d.kind for d in log if d.op == "qbmm_fwd"] == ["pp"]
+
+
+def test_qembed_bfp_table_forward_and_grads():
+    table = _rand((50, 16), 28)
+    tq = quantize(table, QuantConfig(8), jax.random.fold_in(KEY, 4))
+    t_bfp = _as_flow(tq)
+    toks = jnp.asarray([[1, 4, 49], [0, 2, 2]], jnp.int32)
+    y = qembed(toks, t_bfp, KEY, P8)
+    oracle = jnp.take(dequantize(tq), toks, axis=0)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(oracle))
+    # zero quantizes: the gather IS the representation change
+    assert count_quantize_ops(lambda t: qembed(toks, t, KEY, P8), t_bfp) == 0
+    # q-out shares the table scale
+    yq = qembed(toks, t_bfp, KEY, P8, out_q=True)
+    assert isinstance(yq, BFP)
+    np.testing.assert_array_equal(np.asarray(yq.m),
+                                  np.asarray(jnp.take(tq.m, toks, axis=0)))
+    # dTable rides the carrier and scatter-adds per token
+    g = jax.grad(lambda t: jnp.sum(qembed(toks, t, KEY, P8)),
+                 allow_int=True)(t_bfp)
+    gt = np.asarray(g.g)
+    assert gt.shape == table.shape
+    assert np.abs(gt[2]).max() > 0 and np.abs(gt[3]).max() == 0  # token 3 unused
+
+
+def test_qconv_bfp_filter_matches_f32_on_grid():
+    pol = dataclasses.replace(P8, stochastic=False)
+    x = _rand((2, 8, 8, 4), 29)
+    w = _rand((3, 3, 4, 6), 30)
+    wq = quantize(w, QuantConfig(8), jax.random.fold_in(KEY, 5))
+    w_bfp = _as_flow(wq)
+    y1 = qconv(x, w_bfp.g, KEY, pol)
+    y2 = qconv(x, w_bfp, KEY, pol)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    g = jax.grad(lambda wb: jnp.sum(qconv(x, wb, KEY, pol) ** 2),
+                 allow_int=True)(w_bfp)
+    assert np.asarray(g.g).shape == w.shape and np.isfinite(np.asarray(g.g)).all()
+
+
+def test_per_block_weight_or_policy_demotes_to_f32():
+    """A per-block BFP weight — or any BFP weight under a per-block policy —
+    falls back to the float view (gradient-preserving, no crash)."""
+    x = _rand((4, 16), 31)
+    w_bfp, _ = _wq_pair(16, 8, seed=32)
+    pol_blk = dataclasses.replace(P8, block=8)
+    y = qmatmul(x, w_bfp, KEY, pol_blk)
+    assert y.shape == (4, 8) and np.isfinite(np.asarray(y)).all()
+    wq_blk = quantize(_rand((16, 8), 33), QuantConfig(8, block=8), KEY)
+    y2 = qmatmul(x, _as_flow(wq_blk), KEY, P8)
+    assert np.isfinite(np.asarray(y2)).all()
+
+
+# ---------------------------------------------------------------------------
+# pp dispatch kind: kernels bit-identical, autotune key separation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["fused", "unfused"])
+def test_pp_kernel_paths_bit_identical(mode):
+    xq = quantize(_rand((16, 128), 34), QuantConfig(8), jax.random.fold_in(KEY, 6))
+    w_bfp, _ = _wq_pair(128, 128, seed=35)
+    pol_k = dataclasses.replace(P8, kernel_mode=mode)
+
+    def f(pol):
+        def run(xm, xe, xg):
+            return qmatmul(BFP(xm, xe, xq.cfg, xg), w_bfp, KEY, pol)
+        return jax.jit(run)(xq.m, xq.e, dequantize(xq))
+
+    y_jnp = f(dataclasses.replace(P8, kernel_mode="jnp"))
+    y_k = f(pol_k)
+    np.testing.assert_array_equal(np.asarray(y_jnp), np.asarray(y_k))
+
+
+def test_pp_kernel_grad_bit_identical():
+    xq = quantize(_rand((16, 128), 36), QuantConfig(8), jax.random.fold_in(KEY, 7))
+    w_bfp, _ = _wq_pair(128, 128, seed=37)
+
+    def loss(pol):
+        def run(xg, wb):
+            xb = BFP(xq.m, xq.e, xq.cfg, xg)
+            return jnp.sum(qmatmul(xb, wb, KEY, pol) ** 2)
+        return jax.jit(jax.grad(run, argnums=(0, 1), allow_int=True))(
+            dequantize(xq), w_bfp)
+
+    dx_j, dw_j = loss(dataclasses.replace(P8, kernel_mode="jnp"))
+    dx_f, dw_f = loss(dataclasses.replace(P8, kernel_mode="fused"))
+    np.testing.assert_array_equal(np.asarray(dx_j), np.asarray(dx_f))
+    np.testing.assert_array_equal(np.asarray(dw_j.g), np.asarray(dw_f.g))
+
+
+def test_pp_plans_fused_on_tpu_with_own_kind():
+    d = dispatch.plan_contract("t", 64, 128, 64, QuantConfig(8), kind="pp",
+                               cfg2=QuantConfig(8), backend="tpu")
+    assert d.path == dispatch.FUSED and d.bm > 0 and d.kind == "pp"
+
+
+def test_pp_autotune_shape_keys_separate():
+    """pp keys must never collide with qi/ii (different residency layouts
+    deserve independently tuned row strips)."""
+    keys = {k: autotune.shape_key(k, 64, 128, 64, 8, 0, "tpu")
+            for k in ("pp", "ii", "qi", "qq", "iq")}
+    assert len(set(keys.values())) == 5
+    assert keys["pp"].startswith("pp:")
+
+
+def test_pp_requires_per_tensor_scales():
+    d = dispatch.plan_contract("t", 64, 128, 64, QuantConfig(8, block=32),
+                               kind="pp", cfg2=QuantConfig(8), backend="tpu")
+    assert d.path == dispatch.JNP
+
+
+def test_pp_vmem_and_traffic_rows():
+    """pp residency = both operands int8 resident; pp traffic = one int8
+    read per operand (strictly below every fresh-quantize kind)."""
+    v_pp = dispatch._vmem_bytes("pp", 128, 512, 512, 0)
+    v_qi = dispatch._vmem_bytes("qi", 128, 512, 512, 0)
+    v_qq = dispatch._vmem_bytes("qq", 128, 512, 512, 0)
+    assert v_pp < v_qi < v_qq
+    b_pp = dispatch.bytes_moved(dispatch.FUSED, 256, 512, 512, kind="pp")
+    b_qi = dispatch.bytes_moved(dispatch.FUSED, 256, 512, 512, kind="qi")
+    b_qq = dispatch.bytes_moved(dispatch.FUSED, 256, 512, 512, kind="qq")
+    assert b_pp < b_qi < b_qq
+    assert b_pp == dispatch.bytes_moved(dispatch.FUSED, 256, 512, 512,
+                                        kind="ii")
+
+
+# ---------------------------------------------------------------------------
+# spec pin + train step
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    import repro.configs as configs
+    return dataclasses.replace(configs.get_smoke_config("qwen2_0_5b"),
+                               n_layers=1, d_model=32, d_ff=64, n_heads=2,
+                               n_kv_heads=2, vocab=97)
+
+
+def test_qweights_off_reproduces_documented_train_step():
+    """Spec pin: with policy.qweights=False the train step must stay
+    bit-identical to the documented pre-qweights pipeline (dequantize the
+    int16 masters -> value_and_grad -> integer SGD)."""
+    from repro.launch.steps import TrainHyper, make_train_step
+    from repro.models import get_model
+    cfg = _tiny_cfg()
+    mod = get_model(cfg)
+    state = integer_sgd_init(mod.init_params(jax.random.key(0), cfg), P8,
+                             key=jax.random.key(0))
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    raw = jax.random.key_data(jax.random.key(5))
+    step = make_train_step(cfg, P8, TrainHyper(lr=0.05))
+    s1, loss1 = step(state, batch, raw)
+
+    key = jax.random.wrap_key_data(raw, impl="threefry2x32")
+    params = master_params_f32(state)
+    loss2, grads = jax.value_and_grad(
+        lambda p: mod.loss_fn(p, batch, jax.random.fold_in(key, 1), P8, cfg)
+    )(params)
+    s2 = integer_sgd_step(state, grads, 0.05, jax.random.fold_in(key, 2), P8,
+                          momentum=0.9, weight_decay=0.0)
+    np.testing.assert_array_equal(np.asarray(loss1), np.asarray(loss2))
+    for l1, l2 in zip(jax.tree_util.tree_leaves(s1),
+                      jax.tree_util.tree_leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_train_step_weight_quantizes_drop_to_zero():
+    """The acceptance counter: 0 per-GEMM weight-quantize executions in the
+    steady-state train step with qweights on; > 0 with it off.  The total
+    quantize count drops by exactly the weight-side count."""
+    from repro.launch.steps import TrainHyper, make_train_step
+    from repro.models import get_model
+    cfg = _tiny_cfg()
+    mod = get_model(cfg)
+    state = integer_sgd_init(mod.init_params(jax.random.key(0), cfg), QW,
+                             key=jax.random.key(0))
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    raw = jax.random.key_data(jax.random.key(5))
+    off = make_train_step(cfg, P8, TrainHyper())
+    on = make_train_step(cfg, QW, TrainHyper())
+    wq_off = count_weight_quantize_ops(off, state, batch, raw)
+    wq_on = count_weight_quantize_ops(on, state, batch, raw)
+    assert wq_off > 0 and wq_on == 0
+    q_off = count_quantize_ops(off, state, batch, raw)
+    q_on = count_quantize_ops(on, state, batch, raw)
+    assert q_off - q_on >= wq_off  # checkpoint replays count too
+
+
+def test_train_step_qweights_trains():
+    from repro.launch.steps import TrainHyper, make_train_step
+    from repro.models import get_model
+    cfg = _tiny_cfg()
+    mod = get_model(cfg)
+    state = integer_sgd_init(mod.init_params(jax.random.key(0), cfg), QW,
+                             key=jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (4, 8), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    step = jax.jit(make_train_step(cfg, QW, TrainHyper(lr=0.05)))
+    losses = []
+    s = state
+    for i in range(4):
+        s, loss = step(s, batch, jax.random.key_data(jax.random.key(10 + i)))
+        losses.append(float(loss))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+
+
+def test_quantized_params_shardings_bfp_aware():
+    """params_shardings over a quantized template: BFP mantissas (and
+    carrier) shard like the f32 leaf they replace, exponents replicate —
+    and the tree actually device_puts."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import (params_shardings,
+                                    quantize_serving_params,
+                                    quantized_params_template)
+    from repro.models import get_model
+    from repro.runtime.sharding import DEFAULT_RULES
+    cfg = _tiny_cfg()
+    tmpl = quantized_params_template(cfg, QW)
+    mesh = make_local_mesh()
+    sh = params_shardings(cfg, mesh, DEFAULT_RULES, template=tmpl)
+    assert len(jax.tree_util.tree_leaves(sh)) == \
+        len(jax.tree_util.tree_leaves(tmpl))
+    mod = get_model(cfg)
+    qp = quantize_serving_params(mod.init_params(jax.random.key(0), cfg),
+                                 cfg, QW, jax.random.key(1))
+    placed = jax.tree_util.tree_map(jax.device_put, qp, sh)
+    wq = placed["layers"]["wq"]
+    assert isinstance(wq, BFP) and wq.m.dtype == jnp.int8
+    assert wq.e.shape == (cfg.n_layers,)
+
+
+def test_quantize_weights_once_serving_tree():
+    params = {"w": _rand((16, 8), 40), "g": jnp.ones((8,)),
+              "stk": _rand((3, 8, 8), 41)}
+    mask = {"w": QW_TENSOR, "g": QW_NONE, "stk": QW_STACKED}
+    qp = quantize_weights_once(params, QW, KEY, mask)
+    assert isinstance(qp["w"], BFP) and qp["w"].g is None   # no carrier
+    assert qp["stk"].e.shape == (3,)
+    assert not isinstance(qp["g"], BFP)
+    # per-slice mantissas equal a direct per-slice quantize (same keys)
+    ki = jax.random.fold_in(KEY, 1)      # flatten order: g, stk, w
+    keys = jax.random.split(ki, 3)
+    for layer in range(3):
+        ref = quantize(params["stk"][layer], QuantConfig(8), keys[layer])
+        np.testing.assert_array_equal(np.asarray(qp["stk"].m[layer]),
+                                      np.asarray(ref.m))
+        assert int(qp["stk"].e[layer]) == int(ref.e)
+    # off switch: identity
+    qp2 = quantize_weights_once(params, P8, KEY, mask)
+    assert qp2 is params
