@@ -35,7 +35,8 @@ from repro.core import (BFP, PAPER_INT8, NumericPolicy, QuantConfig,
                         dequantize, integer_sgd_init, qmatmul, quantize)
 from repro.core.bfp import rounding_bits
 from repro.core.qnorm import qlayernorm
-from repro.introspect import (WEIGHT_QUANTIZE_NAMES, count_named_calls)
+from repro.introspect import (WEIGHT_QUANTIZE_NAMES, count_cache_quantize_ops,
+                              count_named_calls)
 from repro.kernels import dispatch, ref
 from repro.kernels.fused_linear import fused_qq_pt_pallas
 from repro.kernels.ops import int8_matmul_op, quantize_op
@@ -189,6 +190,48 @@ def dataflow_records():
     return records
 
 
+DECODE_BATCH, DECODE_PROMPT, DECODE_MAXLEN = 4, 32, 48
+
+
+def decode_cache_records():
+    """The qcache perf trail (docs/SERVING.md): analytic per-decode-step
+    CACHE-operand bytes of the float-cache pipeline (whole-cache
+    re-quantization inside attention every step) vs the quantized cache
+    currency (one int8 mantissa read + per-row exponent), plus the counted
+    cache-row quantize executions per decode step (2·n_layers appends with
+    qcache on, zero with it off — quantize-once at the cache boundary).
+    Gated in CI via BENCH_dataflow.json.
+    """
+    from repro.launch.serve import cache_traffic_report
+    from repro.launch.steps import make_decode_step
+    cfg = get_smoke_config(DATAFLOW_ARCH)
+    pol = dataclasses.replace(PAPER_INT8, qcache=True)
+    rep = cache_traffic_report(cfg, pol, DECODE_BATCH, DECODE_PROMPT,
+                               DECODE_MAXLEN)
+    mod = get_model(cfg)
+    params = mod.init_params(jax.random.key(0), cfg)
+    tok = jnp.zeros((DECODE_BATCH,), jnp.int32)
+    raw = jax.random.key_data(jax.random.key(0))
+    counts = {}
+    for name, p in (("qcache", pol), ("float_cache", PAPER_INT8)):
+        cache = mod.init_cache(cfg, DECODE_BATCH, DECODE_MAXLEN, policy=p)
+        counts[name] = count_cache_quantize_ops(
+            make_decode_step(cfg, p), params, cache, tok,
+            jnp.int32(DECODE_PROMPT), raw)
+    rec = dict(setting="decode_qcache", arch=cfg.name, batch=DECODE_BATCH,
+               max_len=DECODE_MAXLEN, n_layers=cfg.n_layers,
+               cache_bytes_float=rep["cache_side"]["float_cache_bytes"],
+               cache_bytes_qcache=rep["cache_side"]["qcache_bytes"],
+               cache_reduction_pct=rep["cache_side"]["reduction_pct"],
+               cache_quantize_ops_per_step=counts["qcache"],
+               cache_quantize_ops_float=counts["float_cache"])
+    if "gemm" in rep:
+        rec["attn_gemm_bytes_float"] = rep["gemm"]["float_cache_bytes"]
+        rec["attn_gemm_bytes_qcache"] = rep["gemm"]["qcache_bytes"]
+        rec["attn_gemm_reduction_pct"] = rep["gemm"]["reduction_pct"]
+    return rec
+
+
 def run():
     x = jnp.asarray(np.random.RandomState(0).randn(512, 512).astype(np.float32))
     w = jnp.asarray(np.random.RandomState(1).randn(512, 512).astype(np.float32))
@@ -235,6 +278,14 @@ def run():
         row(f"dataflow_{r['setting']}", 0.0,
             f"quantize_ops={r['quantize_ops']};"
             f"reduction={r['reduction_vs_off_pct']}%")
+    # decode-time cache currency: per-step cache-operand bytes, float vs
+    # qcache (analytic) + counted cache-row quantizations per step
+    dq = decode_cache_records()
+    drecords.append(dq)
+    row("dataflow_decode_qcache", 0.0,
+        f"cache_bytes={dq['cache_bytes_float']}->{dq['cache_bytes_qcache']};"
+        f"reduction={dq['cache_reduction_pct']}%;"
+        f"cache_quantizes/step={dq['cache_quantize_ops_per_step']}")
     with open(DATAFLOW_JSON, "w") as f:
         json.dump(drecords, f, indent=1)
     row("bench_dataflow_json", 0.0,

@@ -12,7 +12,14 @@ the analytic prefill/decode HBM bytes-moved of load-time-quantized vs
 per-call weight quantization.  ``--per-call-weights`` restores the
 legacy quantize-inside-every-GEMM path for an A/B wall-clock comparison.
 
+``--qcache`` makes the decode cache itself the third quantized currency:
+int8 KV rows (and int state for the recurrent families) written exactly
+once at append time and consumed directly by decode attention; the
+report adds the per-decode-step cache-operand bytes cut
+(docs/SERVING.md).
+
     PYTHONPATH=src python examples/serve_decode.py --arch qwen2_0_5b --gen 16
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6_3b --qcache
 """
 
 import argparse
@@ -34,10 +41,14 @@ def main():
                     action="store_false", default=True,
                     help="legacy path: re-quantize f32 weights inside every "
                          "GEMM instead of once at model load")
+    ap.add_argument("--qcache", action="store_true", default=False,
+                    help="quantized decode caches (int8 KV/state rows, "
+                         "quantize-once at append — docs/SERVING.md)")
     args = ap.parse_args()
     tokens, stats = serve(args.arch, smoke=True, batch=args.batch,
                           prompt_len=args.prompt_len, gen=args.gen,
-                          policy_name=args.policy, qweights=args.qweights)
+                          policy_name=args.policy, qweights=args.qweights,
+                          qcache=args.qcache)
     # serve() already prints the timing and the analytic load-time-vs-
     # per-call weight-traffic comparison (stats["weight_traffic"]).
     print("generated token ids (first sequence):", tokens[0].tolist())

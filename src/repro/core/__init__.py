@@ -2,11 +2,13 @@
 
 from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_from_fx, bfp_value,
                   biased_exponent, bit_length, dequantize, pow2, quantize,
-                  quantize_weight, requantize_i32, scale_exponent,
-                  sr_shift_signed)
-from .policy import (FLOAT32, PAPER_INT8, QW_NONE, QW_STACKED, QW_STACKED2,
-                     QW_TENSOR, NumericPolicy, int_policy)
-from .qops import qbmm, qcontract, qconv, qembed, qmatmul, qrelu
+                  quantize_cache, quantize_weight, requantize_i32,
+                  scale_exponent, sr_shift_signed)
+from .policy import (FLOAT32, PAPER_INT8, QC_ROWS, QC_STATE, QW_NONE,
+                     QW_STACKED, QW_STACKED2, QW_TENSOR, NumericPolicy,
+                     int_policy)
+from .qops import (qbmm, qcache_append, qcache_prefill, qcache_pv, qcache_qk,
+                   qcache_quantize, qcontract, qconv, qembed, qmatmul, qrelu)
 from .qnorm import qbatchnorm, qlayernorm, qrmsnorm
 from .integer_sgd import (IntSGDState, derive_qweights, integer_sgd_init,
                           integer_sgd_step, master_params_f32,
@@ -16,11 +18,14 @@ from .baseline_quant import uniform_qmatmul, uniform_quantize
 __all__ = [
     "BFP", "PER_TENSOR", "QuantConfig", "bfp_from_fx", "bfp_value",
     "biased_exponent", "bit_length", "dequantize", "pow2",
-    "quantize", "quantize_weight", "requantize_i32", "scale_exponent",
-    "sr_shift_signed",
+    "quantize", "quantize_weight", "quantize_cache", "requantize_i32",
+    "scale_exponent", "sr_shift_signed",
     "FLOAT32", "PAPER_INT8", "NumericPolicy", "int_policy",
     "QW_NONE", "QW_TENSOR", "QW_STACKED", "QW_STACKED2",
+    "QC_ROWS", "QC_STATE",
     "qbmm", "qcontract", "qconv", "qembed", "qmatmul", "qrelu",
+    "qcache_quantize", "qcache_prefill", "qcache_append", "qcache_qk",
+    "qcache_pv",
     "qbatchnorm", "qlayernorm", "qrmsnorm",
     "IntSGDState", "integer_sgd_init", "integer_sgd_step", "master_params_f32",
     "derive_qweights", "quantize_weights_once", "qweight_grads",

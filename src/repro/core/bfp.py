@@ -41,6 +41,7 @@ __all__ = [
     "QuantConfig",
     "quantize",
     "quantize_weight",
+    "quantize_cache",
     "dequantize",
     "pow2",
     "rounding_bits",
@@ -387,6 +388,24 @@ def quantize_weight(w: jnp.ndarray, cfg: QuantConfig = QuantConfig(),
     zero.  Bit-identical to ``quantize(w, cfg, key)``.
     """
     return quantize(w, cfg, key)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def quantize_cache(x: jnp.ndarray, cfg: QuantConfig = QuantConfig(),
+                   key: Optional[jax.Array] = None) -> BFP:
+    """The same mapping as :func:`quantize`, under a separate jaxpr name.
+
+    Every *cache-row* quantization (the append-time mapping of the decode
+    cache currency, ``policy.qcache`` — docs/SERVING.md) routes through
+    this wrapper so ``repro.introspect`` can count cache quantizations
+    separately from activation/gradient/weight quantizations.  Cache
+    configs use per-row blocking and nearest rounding, which makes the
+    mapping deterministic and independent of how many rows are mapped in
+    one call: quantizing a whole prefill tensor and quantizing its rows
+    one append at a time produce bit-identical mantissas and exponents.
+    Bit-identical to ``quantize(x, cfg, key)``.
+    """
+    return quantize(x, cfg, key)
 
 
 # ---------------------------------------------------------------------------

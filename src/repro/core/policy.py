@@ -14,7 +14,8 @@ from typing import Optional
 from .bfp import PER_TENSOR, QuantConfig
 
 __all__ = ["NumericPolicy", "FLOAT32", "PAPER_INT8", "int_policy",
-           "QW_NONE", "QW_TENSOR", "QW_STACKED", "QW_STACKED2"]
+           "QW_NONE", "QW_TENSOR", "QW_STACKED", "QW_STACKED2",
+           "QC_ROWS", "QC_STATE"]
 
 # Weight-mask leaf markers (models/<family>.weight_mask): how a parameter
 # leaf participates in the persistent quantized-weight currency
@@ -34,6 +35,20 @@ QW_NONE = 0
 QW_TENSOR = 1
 QW_STACKED = 2
 QW_STACKED2 = 3
+
+# Cache-layout leaf markers (models/<family>.cache_layout): how a decode
+# cache leaf participates in the quantized cache currency
+# (docs/SERVING.md).
+#   QC_ROWS   append-only rows, quantized exactly once when written and
+#             then only moved (KV rows, conv/token-shift registers):
+#             int8 mantissas (policy.fwd_bits) + one exponent per row.
+#   QC_STATE  accumulator state rewritten every decode step (RG-LRU h,
+#             RWKV6 S): master-width mantissas (policy.master_bits, the
+#             int16-SGD argument applied to serving state) + one exponent
+#             per row; nearest-requantized after each step — exact when
+#             the step leaves a row unchanged (on-grid idempotence).
+QC_ROWS = "rows"
+QC_STATE = "state"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +106,22 @@ class NumericPolicy:
     # consumes the pre-quantized mantissas (dispatch kind "pp"/"qi");
     # serving quantizes weights exactly once at model load.
     qweights: bool = False
+    # qcache: quantized KV/state caches as the *decode-time* currency (the
+    # serving twin of qflow/qweights — docs/SERVING.md).  Off (default):
+    # decode caches hold float rows (bfloat16 KV, float32 recurrent state)
+    # and every decode step re-quantizes the whole cache inside attention —
+    # bit-identical to the pre-qcache pipeline.  On: prefill quantizes K/V
+    # exactly once at append time (int8 mantissas + one shared exponent per
+    # cache row — the per-chunk layout that makes append==batch exact),
+    # decode appends one quantized row per step, and decode attention
+    # consumes the int8 mantissas directly (dispatch kinds "pp"/"qi" — no
+    # per-token dequantize->requantize round-trip).  Recurrent families
+    # store their state caches as integer mantissas too (int8 rows for
+    # append-only registers, master_bits for accumulators).  Cache
+    # quantization uses NEAREST rounding: deterministic, key-free, and
+    # exact on already-on-grid rows, which is what makes the hot/cold and
+    # append-order bit-identity invariants hold (docs/NUMERICS.md).
+    qcache: bool = False
     # rng: "threefry" (jax default) or "hash" — a per-element avalanche
     # hash for the stochastic-rounding draws, the software analogue of the
     # paper's Fig.-4 on-the-fly hardware RNG (~8x less arithmetic).
@@ -124,6 +155,31 @@ class NumericPolicy:
         and a per-K-block weight cannot be derived by a pure integer
         narrow."""
         return self.enabled and self.qweights and self.block == PER_TENSOR
+
+    @property
+    def qcache_on(self) -> bool:
+        """Whether decode caches hold quantized rows.  Per-block policies
+        keep float caches: the cache currency's own scales are per-row
+        (one per head_dim chunk) and mixing them with per-K-block operand
+        blocking has no kernel path."""
+        return self.enabled and self.qcache and self.block == PER_TENSOR
+
+    def cache_cfg(self, row: int, bits: Optional[int] = None) -> QuantConfig:
+        """Quantization config of a cache tensor whose trailing axis is one
+        cache row (head_dim for KV, d_model for recurrent registers): one
+        shared exponent per row, NEAREST rounding (deterministic — the
+        append-vs-batch and hot-vs-cold bit-identity contract)."""
+        return QuantConfig(bits or self.fwd_bits, row, False, self.rng)
+
+    def cache_cfg_for(self, kind: str, row: int) -> QuantConfig:
+        """:meth:`cache_cfg` for a ``cache_layout`` leaf kind: ``QC_STATE``
+        accumulators widen to ``master_bits`` (quantization noise injected
+        into a recurrence deserves the master width — the int16-SGD
+        argument), ``QC_ROWS`` stay at ``fwd_bits``.  The single source of
+        truth shared by the model families and the analytic traffic
+        report."""
+        return self.cache_cfg(row,
+                              self.master_bits if kind == QC_STATE else None)
 
     @property
     def qflow_seams(self) -> bool:

@@ -33,11 +33,14 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..kernels import dispatch as kdispatch
-from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_value, dequantize, pow2,
-                  quantize, quantize_weight, scale_exponent)
+from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_value, biased_exponent,
+                  dequantize, pow2, quantize, quantize_cache, quantize_weight,
+                  scale_exponent)
 from .policy import NumericPolicy
 
-__all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract", "qrelu"]
+__all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract", "qrelu",
+           "qcache_quantize", "qcache_prefill", "qcache_append",
+           "qcache_qk", "qcache_pv"]
 
 
 # ---------------------------------------------------------------------------
@@ -864,6 +867,135 @@ def qconv(x, w: jnp.ndarray, key: Optional[jax.Array] = None,
     else:
         w2 = jnp.moveaxis(w, 2, 0).reshape(cin * kh * kw_, cout)
     return qmatmul(patches, w2, key, policy, out_q=out_q)
+
+
+# ---------------------------------------------------------------------------
+# qcache: quantized KV/state caches as the decode-time currency
+# (docs/SERVING.md).  The cache layout is int8 (or master-width) mantissas
+# plus ONE shared exponent per cache row (the trailing hd / d_model chunk):
+# per-row scales are what make the append contract exact — quantizing a
+# whole prefill tensor and quantizing its rows one decode-append at a time
+# produce bit-identical mantissas, because each row's mapping depends only
+# on that row (nearest rounding, no cross-row shared state).  These are
+# serving ops: gradient-free by construction (stop_gradient on the float
+# input; decode is never differentiated).
+# ---------------------------------------------------------------------------
+
+
+def qcache_quantize(x: jnp.ndarray, policy: NumericPolicy,
+                    cfg: Optional[QuantConfig] = None) -> BFP:
+    """Append-time cache quantization: one shared exponent per trailing-axis
+    row, nearest rounding (deterministic, key-free).  ``cfg`` overrides the
+    policy-derived cache config (used to widen accumulator states to
+    ``policy.master_bits``)."""
+    cfg = cfg or policy.cache_cfg(x.shape[-1])
+    return quantize_cache(lax.stop_gradient(x), cfg)
+
+
+def qcache_prefill(x: jnp.ndarray, pad: int, policy: NumericPolicy) -> BFP:
+    """Quantize prefill cache rows once and zero-pad the time (row) axis
+    out to the cache length: zero mantissas + exponent 1 are exactly
+    representable, invisible under the decode mask, and bit-identical to
+    what a later :func:`qcache_append` writes over them."""
+    q = qcache_quantize(x, policy)
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)]
+        return BFP(jnp.pad(q.m, widths),
+                   jnp.pad(q.e, widths, constant_values=1), q.cfg)
+    return q
+
+
+def qcache_append(cache: BFP, x: jnp.ndarray, pos, axis: int) -> BFP:
+    """Quantize one fresh float row-block ``x`` and write it into the cache
+    at ``pos`` along ``axis`` (the decode-time append).  Mantissas and the
+    row exponents update together; nothing already stored is touched, so
+    the append is bit-identical to having quantized the row during
+    prefill."""
+    row = quantize_cache(lax.stop_gradient(x), cache.cfg)
+    m = lax.dynamic_update_slice_in_dim(cache.m, row.m, pos, axis)
+    e = lax.dynamic_update_slice_in_dim(cache.e, row.e, pos, axis)
+    return BFP(m, e, cache.cfg)
+
+
+def _unit_view(m: jnp.ndarray, bits: int, rng: str) -> BFP:
+    """Per-tensor BFP view of raw mantissas under a UNIT reference scale
+    (biased exponent chosen so scale_exponent == 0): lets the pre-quantized
+    cache mantissas enter the existing per-tensor integer contractions
+    (dispatch kinds "qi"/"pp") while the true per-row cache exponents are
+    applied as a float epilogue outside the GEMM."""
+    ucfg = QuantConfig(bits, PER_TENSOR, False, rng)
+    e = biased_exponent(jnp.zeros((), jnp.int32), ucfg).astype(jnp.int32)
+    return BFP(m, e, ucfg)
+
+
+def _row_scales(q: BFP) -> jnp.ndarray:
+    """(*B, 1, T) float scale of each cache row (exact powers of two)."""
+    return jnp.swapaxes(pow2(scale_exponent(q.e, q.cfg)), -1, -2)
+
+
+def qcache_qk(a, kq: BFP, key: Optional[jax.Array],
+              policy: NumericPolicy) -> jnp.ndarray:
+    """Decode scores against an int8 cache: a (*B, M, D) f32 | BFP versus
+    cache mantissas kq.m (*B, T, D) with one exponent per row -> (*B, M, T).
+
+    The integer GEMM contracts the raw mantissas under a unit reference
+    scale — the cache operand pays one int8 read (dispatch kind "qi" for a
+    fresh ``a``, "pp" for a pre-quantized one); the per-row cache exponents
+    ride along the *output-column* axis, so they are applied afterwards as
+    one exact f32 multiply per column: y[..., t] *= 2^{e_t}.
+    """
+    nbatch = kq.m.ndim - 2
+    t, d = kq.m.shape[-2], kq.m.shape[-1]
+    bq = _unit_view(kq.m, kq.cfg.bits, kq.cfg.rng)
+    col_scale = _row_scales(kq)
+    if isinstance(a, BFP) and a.cfg.block != PER_TENSOR:
+        a = bfp_value(a)
+    if isinstance(a, BFP):
+        plan = _plan("qdecode_qk", a.m.shape[-2], d, t, a.cfg, policy,
+                     kind="pp", cfg2=bq.cfg)
+        aq = BFP(a.m, a.e, a.cfg)
+        if plan.path == kdispatch.JNP:
+            y = _contract_q(aq, bq, nbatch, policy.accum_chunk)
+        else:
+            y = kdispatch.contract_pp(aq, bq, plan, nbatch=nbatch)
+    else:
+        cfg = policy.fwd_cfg()
+        plan = _plan("qdecode_qk", a.shape[-2], d, t, cfg, policy,
+                     kind="qi", cfg2=bq.cfg)
+        if plan.path == kdispatch.JNP:
+            y = _contract_q(quantize(a, cfg, key), bq, nbatch,
+                            policy.accum_chunk)
+        else:
+            y, _ = kdispatch.contract_qi(a, bq, cfg, key, plan, nbatch=nbatch)
+    return y * col_scale
+
+
+def qcache_pv(p: jnp.ndarray, vq: BFP, key: Optional[jax.Array],
+              policy: NumericPolicy) -> jnp.ndarray:
+    """Decode mix against an int8 cache: p (*B, M, T) float softmax weights
+    versus cache mantissas vq.m (*B, T, D) with one exponent per row ->
+    (*B, M, D).
+
+    Here the per-row cache exponents ride along the CONTRACTION axis, so
+    they cannot be factored out of the integer sum; instead they are folded
+    into the float probabilities before p's own (single, fresh)
+    quantization — p'_t = p_t * 2^{e_t}, an exact power-of-two product —
+    and the GEMM contracts p̂' against the raw mantissas under a unit
+    reference scale (dispatch kind "qi": the cache operand pays one int8
+    read, no dequantize→requantize round-trip).
+    """
+    nbatch = vq.m.ndim - 2
+    t, d = vq.m.shape[-2], vq.m.shape[-1]
+    p2 = p * _row_scales(vq)
+    bq = _unit_view(jnp.swapaxes(vq.m, -1, -2), vq.cfg.bits, vq.cfg.rng)
+    cfg = policy.fwd_cfg()
+    plan = _plan("qdecode_pv", p.shape[-2], t, d, cfg, policy,
+                 kind="qi", cfg2=bq.cfg)
+    if plan.path == kdispatch.JNP:
+        return _contract_q(quantize(p2, cfg, key), bq, nbatch,
+                           policy.accum_chunk)
+    y, _ = kdispatch.contract_qi(p2, bq, cfg, key, plan, nbatch=nbatch)
+    return y
 
 
 def qrelu(x):

@@ -26,7 +26,8 @@ from typing import Callable, Dict, Iterable
 import jax
 
 __all__ = ["count_quantize_ops", "count_weight_quantize_ops",
-           "count_named_calls", "QUANTIZE_NAMES", "WEIGHT_QUANTIZE_NAMES"]
+           "count_cache_quantize_ops", "count_named_calls",
+           "QUANTIZE_NAMES", "WEIGHT_QUANTIZE_NAMES", "CACHE_QUANTIZE_NAMES"]
 
 # pjit names of the quantization entry points (jitted functions keep their
 # Python function name as the jaxpr call name).  Weight-operand
@@ -39,6 +40,11 @@ __all__ = ["count_quantize_ops", "count_weight_quantize_ops",
 # un-counted outer call).
 QUANTIZE_NAMES = ("quantize",)
 WEIGHT_QUANTIZE_NAMES = ("quantize_weight",)
+# Cache-row quantizations (the append-time mapping of the decode cache
+# currency, ``policy.qcache``) route through ``quantize_cache`` — same
+# mapping, distinct jaxpr name — so "the cache is quantized exactly once
+# per appended row" is countable per decode step.
+CACHE_QUANTIZE_NAMES = ("quantize_cache",)
 
 
 def _jaxprs_of(eqn) -> Iterable[tuple]:
@@ -88,4 +94,13 @@ def count_weight_quantize_ops(fn: Callable, *args, **kwargs) -> int:
     quantizations the persistent weight currency (``policy.qweights``)
     eliminates.  Scan-trip-weighted like :func:`count_quantize_ops`."""
     return count_named_calls(fn, *args, names=WEIGHT_QUANTIZE_NAMES,
+                             **kwargs)["total"]
+
+
+def count_cache_quantize_ops(fn: Callable, *args, **kwargs) -> int:
+    """Cache-row quantize executions per call of ``fn`` (the append-time
+    mapping of ``policy.qcache`` — docs/SERVING.md): one per appended
+    KV/state row per decode step, and exactly one per cache tensor at
+    prefill.  Scan-trip-weighted like :func:`count_quantize_ops`."""
+    return count_named_calls(fn, *args, names=CACHE_QUANTIZE_NAMES,
                              **kwargs)["total"]

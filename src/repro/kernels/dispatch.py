@@ -9,7 +9,12 @@ qflow dataflow, or a persistent BFP weight against a fresh activation),
 ``ii`` (both pre-quantized residuals, the backward dW) and ``pp`` (the
 fully-pre-quantized *forward*: a q-in activation against a derived /
 load-time-quantized weight — the persistent weight currency of
-docs/DATAFLOW.md §Weight currency, with its own autotune keys).
+docs/DATAFLOW.md §Weight currency, with its own autotune keys).  The
+decode cache currency (``policy.qcache`` — docs/SERVING.md) reuses the
+``qi``/``pp`` kinds for its cache-operand contractions, planned under the
+ops ``qdecode_qk`` / ``qdecode_pv`` (decode-shaped contractions get their
+own shape keys in the autotune cache; :func:`cache_operand_bytes` is the
+matching traffic model behind the BENCH_dataflow decode rows).
 Pre-quantized entry points skip the quantize stage for that operand:
 
   ``fused``    one ``pallas_call`` from ``kernels.fused_linear``: in-VMEM
@@ -52,9 +57,11 @@ from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
-from ..core.bfp import BFP, PER_TENSOR, QuantConfig, pow2, rounding_bits
+from ..core.bfp import (BFP, PER_TENSOR, QuantConfig, pow2, rounding_bits,
+                        storage_dtype)
 from . import autotune, ref
 from .bfp_quant import bfp_quantize_pallas
 from .fused_linear import (fused_ii_pt_pallas, fused_qi_pt_pallas,
@@ -64,7 +71,8 @@ from .int8_matmul import int8_matmul_pallas
 __all__ = [
     "FUSED", "UNFUSED", "JNP", "Decision", "plan_contract",
     "record_decisions", "contract_qq", "contract_qi", "contract_iq",
-    "contract_ii", "contract_pp", "bytes_moved", "DEFAULT_VMEM_BUDGET",
+    "contract_ii", "contract_pp", "bytes_moved", "cache_operand_bytes",
+    "DEFAULT_VMEM_BUDGET",
 ]
 
 FUSED = "fused"
@@ -213,6 +221,34 @@ def bytes_moved(path: str, m: int, k: int, n: int, *, stochastic: bool = True,
     if path == UNFUSED:
         return unfused
     return unfused + 2 * f32 * fresh             # JNP emulation overhead
+
+
+def cache_operand_bytes(n_rows: int, row: int, *, quantized: bool,
+                        bits: int = 8, stochastic: bool = True,
+                        rewritten: bool = False) -> int:
+    """Analytic HBM bytes one decode step pays for ONE cache operand of
+    ``n_rows`` rows x ``row`` elements (the decode-time twin of the
+    weight-side column in :func:`bytes_moved` — see docs/SERVING.md).
+
+    ``quantized=False`` is the float-cache pipeline: decode re-quantizes
+    the whole cache operand inside attention every step — the f32 scan,
+    the quantizer's f32 + random-bit reads and the int8 residual write
+    (the same per-operand accounting as ``bytes_moved(kind="qq")``).
+    ``quantized=True`` is the qcache currency: one ``bits``-wide mantissa
+    read plus one int32 exponent read per cache row — no quantizer runs.
+    ``rewritten=True`` models accumulator *state* leaves (RG-LRU h, RWKV6
+    S) that are also written back every step: float pays a read+write
+    round-trip, quantized pays the narrow mantissa/exponent write.
+    """
+    f32, r8 = 4, (4 if stochastic else 0)
+    n = n_rows * row
+    if quantized:
+        # container bytes, not bits//8: sub-byte widths still store int8
+        read = np.dtype(storage_dtype(bits)).itemsize * n + 4 * n_rows
+        return 2 * read if rewritten else read
+    if rewritten:
+        return 2 * f32 * n                       # f32 read + f32 write
+    return (f32 + f32 + r8 + 1) * n              # scan + quantize + residual
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,12 @@ policy) the model's GEMM weights are quantized exactly ONCE at load —
 the Jacob-et-al. deployment contract — so prefill and decode run fully
 pre-quantized contractions (dispatch kinds ``pp``/``qi``) and never
 touch a float32 weight; ``--per-call-weights`` restores the legacy
-quantize-per-GEMM path for comparison.
+quantize-per-GEMM path for comparison.  ``--qcache`` completes the
+currency trilogy at decode time: prefill writes int8 cache rows exactly
+once, decode appends one quantized row per step, and attention consumes
+the mantissas directly (docs/SERVING.md) — the analytic report then
+shows the per-decode-step cache-operand traffic cut next to the weight
+one.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
         --batch 4 --prompt-len 32 --gen 16
@@ -26,10 +31,16 @@ import numpy as np
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..core.policy import FLOAT32, PAPER_INT8
 from ..kernels import dispatch
-from ..models import get_model
-from .steps import make_decode_step, make_prefill_step, quantize_serving_params
+from ..models import get_cache_layout, get_model
+from .steps import (cache_template, make_decode_step, make_prefill_step,
+                    quantize_serving_params)
 
 POLICIES = {"int8": PAPER_INT8, "float32": FLOAT32}
+
+# Attention KV leaves are *consumed by integer GEMMs* each decode step (the
+# float pipeline re-quantizes them in-op; qcache reads mantissas); every
+# other cache leaf is a register/state read+written elementwise.
+_KV_LEAVES = ("k", "v", "xk", "xv")
 
 
 def _dense_gemm_shapes(cfg, m: int):
@@ -72,13 +83,66 @@ def weight_traffic_report(cfg, batch: int, prompt_len: int) -> dict:
     return out
 
 
+def cache_traffic_report(cfg, policy, batch: int, prompt_len: int,
+                         max_len: int) -> dict:
+    """Analytic per-decode-step HBM traffic of the CACHE operands
+    (docs/SERVING.md): float caches (decode re-quantizes the whole K/V
+    operand inside attention each step, and reads/writes f32 recurrent
+    state) vs the qcache currency (one int8/int16 mantissa read + one
+    int32 exponent read per row).  Windowed archs only touch the attention
+    band, and is modeled so.  ``gemm`` rows additionally give the
+    whole-contraction comparison of the two decode attention GEMMs through
+    the ``bytes_moved`` kinds they actually plan (``qq`` fresh vs ``qi``
+    pre-quantized cache operand)."""
+    layout = get_cache_layout(cfg)
+    tmpl = cache_template(cfg, batch, max_len, src_len=prompt_len)
+    f_total = q_total = 0
+    for name, kind in layout.items():
+        shape = tuple(tmpl[name].shape)
+        if name in ("k", "v") and cfg.local_window:
+            shape = shape[:-2] + (min(cfg.local_window, max_len), shape[-1])
+        rows = 1
+        for dim in shape[:-1]:
+            rows *= dim
+        rewritten = name not in _KV_LEAVES
+        bits = policy.cache_cfg_for(kind, shape[-1]).bits
+        f_total += dispatch.cache_operand_bytes(rows, shape[-1],
+                                                quantized=False,
+                                                rewritten=rewritten)
+        q_total += dispatch.cache_operand_bytes(rows, shape[-1],
+                                                quantized=True, bits=bits,
+                                                rewritten=rewritten)
+    out = {"cache_side": {
+        "float_cache_bytes": f_total, "qcache_bytes": q_total,
+        "reduction_pct": round(100.0 * (1 - q_total / f_total), 2)}}
+    if cfg.family in ("dense", "vlm", "moe"):
+        g = cfg.n_heads // cfg.n_kv_heads
+        n_bh = batch * cfg.n_kv_heads * cfg.n_layers
+        whole = {}
+        for label, quant_kind in (("float_cache_bytes", "qq"),
+                                  ("qcache_bytes", "qi")):
+            qk = dispatch.bytes_moved(dispatch.FUSED, g, cfg.hd, max_len,
+                                      kind=quant_kind)
+            pv = dispatch.bytes_moved(dispatch.FUSED, g, max_len, cfg.hd,
+                                      kind=quant_kind)
+            whole[label] = n_bh * (qk + pv)
+        whole["reduction_pct"] = round(
+            100.0 * (1 - whole["qcache_bytes"] / whole["float_cache_bytes"]), 2)
+        out["gemm"] = whole
+    return out
+
+
 def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
           gen: int = 16, policy_name: str = "int8", seed: int = 0,
-          qweights: bool = True, quiet: bool = False):
+          qweights: bool = True, qcache: bool = False, quiet: bool = False):
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     policy = POLICIES[policy_name]
     if qweights and policy.enabled:
         policy = dataclasses.replace(policy, qweights=True)
+    if qcache and policy.enabled:
+        # quantized caches: prefill writes int8 rows once, decode appends
+        # one quantized row per step and attention consumes the mantissas.
+        policy = dataclasses.replace(policy, qcache=True)
     mod = get_model(cfg)
     key = jax.random.key(seed)
     params = mod.init_params(key, cfg)
@@ -120,15 +184,19 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32
 
     toks_per_s = batch * (gen - 1) / max(t_decode, 1e-9)
     stats = {"prefill_s": t_prefill, "decode_s": t_decode,
-             "tok_per_s": toks_per_s, "qweights": policy.qweights_on}
+             "tok_per_s": toks_per_s, "qweights": policy.qweights_on,
+             "qcache": policy.qcache_on}
     # the analytic comparison only describes integer-pipeline runs and the
     # dense-FFN GEMM set (vlm's patch frontend is an external stub; MoE
     # expert GEMMs have a different shape set)
     if policy.enabled and cfg.family in ("dense", "vlm"):
         stats["weight_traffic"] = weight_traffic_report(cfg, batch, prompt_len)
+    if policy.enabled:
+        stats["cache_traffic"] = cache_traffic_report(cfg, policy, batch,
+                                                      prompt_len, max_len)
     if not quiet:
         print(f"arch={cfg.name} policy={policy_name} batch={batch} "
-              f"qweights={policy.qweights_on}")
+              f"qweights={policy.qweights_on} qcache={policy.qcache_on}")
         print(f"prefill: {prompt_len} toks x {batch} in {t_prefill:.3f}s")
         print(f"decode: {gen - 1} steps in {t_decode:.3f}s  "
               f"({toks_per_s:.1f} tok/s, {t_decode / max(gen - 1, 1) * 1e3:.1f} ms/step)")
@@ -142,6 +210,16 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32
                       f"{r['per_call_weight_quant_bytes'] / 1e6:.2f} MB -> "
                       f"load-time quantized "
                       f"{r['load_time_quantized_bytes'] / 1e6:.2f} MB "
+                      f"(-{r['reduction_pct']}%)")
+        ct = stats.get("cache_traffic")
+        if ct:
+            for phase, r in ct.items():
+                what = ("cache-operand traffic per decode step"
+                        if phase == "cache_side"
+                        else "decode attention GEMM traffic (whole)")
+                print(f"{what}: float cache "
+                      f"{r['float_cache_bytes'] / 1e6:.2f} MB -> qcache "
+                      f"{r['qcache_bytes'] / 1e6:.2f} MB "
                       f"(-{r['reduction_pct']}%)")
     return np.stack(out_tokens, axis=1), stats
 
@@ -159,10 +237,14 @@ def main():
                     action="store_false", default=True,
                     help="legacy path: re-quantize f32 weights inside every "
                          "GEMM instead of once at model load")
+    ap.add_argument("--qcache", action="store_true", default=False,
+                    help="quantized decode caches: int8 KV/state rows "
+                         "written once at append time, consumed directly "
+                         "by decode attention (docs/SERVING.md)")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen, policy_name=args.policy,
-          qweights=args.qweights)
+          qweights=args.qweights, qcache=args.qcache)
 
 
 if __name__ == "__main__":

@@ -317,14 +317,21 @@ def batch_shardings(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules,
 
 
 def cache_template(cfg: ArchConfig, batch: int, max_len: int,
-                   src_len: Optional[int] = None):
+                   src_len: Optional[int] = None,
+                   policy: Optional[NumericPolicy] = None):
+    """eval_shape template of the decode cache.  With a ``policy`` whose
+    ``qcache`` is on, cache leaves are BFP objects (int8/int16 mantissas +
+    per-row int32 exponents) instead of float arrays — the same tree the
+    family's prefill returns."""
     mod = get_model(cfg)
     if cfg.family == "ssm":
-        return jax.eval_shape(lambda: mod.init_state(cfg, batch))
+        return jax.eval_shape(lambda: mod.init_state(cfg, batch, policy))
     if cfg.family == "audio":
         return jax.eval_shape(
-            lambda: mod.init_cache(cfg, batch, max_len, src_len or max_len))
-    return jax.eval_shape(lambda: mod.init_cache(cfg, batch, max_len))
+            lambda: mod.init_cache(cfg, batch, max_len, src_len or max_len,
+                                   policy=policy))
+    return jax.eval_shape(lambda: mod.init_cache(cfg, batch, max_len,
+                                                 policy=policy))
 
 
 def _kv_axis_names(cfg: ArchConfig, mesh: Mesh) -> Tuple[Optional[str], Optional[str]]:
@@ -338,6 +345,11 @@ def _kv_axis_names(cfg: ArchConfig, mesh: Mesh) -> Tuple[Optional[str], Optional
 
 def cache_shardings(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules,
                     template) -> Any:
+    """Decode-cache sharding tree.  Works for float caches and for the
+    quantized (``policy.qcache``) caches alike: a BFP cache leaf's
+    mantissas shard exactly like the float leaf they replace and the
+    per-row exponents replicate (they are 1/row_len the mantissa bytes —
+    see ``_sanitized_shardings``)."""
     h_name, s_name = _kv_axis_names(cfg, mesh)
     kv = (None, "batch", h_name, s_name, None)
     if cfg.family == "ssm":

@@ -1,6 +1,7 @@
 """Architecture zoo: 10 assigned archs built from the integer core ops."""
 
 from .common import ArchConfig, softmax_xent
-from .registry import get_model, get_weight_mask
+from .registry import get_cache_layout, get_model, get_weight_mask
 
-__all__ = ["ArchConfig", "get_model", "get_weight_mask", "softmax_xent"]
+__all__ = ["ArchConfig", "get_cache_layout", "get_model", "get_weight_mask",
+           "softmax_xent"]

@@ -27,10 +27,12 @@ import jax.numpy as jnp
 
 import dataclasses
 
-from ..core import BFP, PER_TENSOR, NumericPolicy, qbmm, quantize
+from ..core import (BFP, PER_TENSOR, NumericPolicy, qbmm, qcache_pv,
+                    qcache_qk, quantize)
 from ..core.qops import _cfg_for_dim, qdq_st
 
-__all__ = ["chunked_attention", "local_attention", "decode_attention"]
+__all__ = ["chunked_attention", "local_attention", "decode_attention",
+           "cache_decode_attention"]
 
 _NEG = -1e30
 
@@ -192,18 +194,81 @@ def local_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             .reshape(b, hq, s, d))
 
 
-def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+def cache_decode_attention(q: jnp.ndarray, kq: BFP, vq: BFP, pos,
+                           key: Optional[jax.Array], policy: NumericPolicy, *,
+                           causal: bool = True, window: int = 0,
+                           scale: float = 0.0) -> jnp.ndarray:
+    """Decode attention straight off a quantized cache (policy.qcache).
+
+    q (B, Hq, S, D) float; kq/vq are BFP caches with mantissas
+    (B, Hkv, T, D) and one shared exponent per cache row (B, Hkv, T, 1).
+    The int8 mantissas are consumed directly — QKᵀ contracts them under a
+    unit reference scale with the per-row exponents applied per output
+    column, and PV folds the V-row exponents into the float probabilities
+    before their single fresh quantization (see core.qops.qcache_qk /
+    qcache_pv; dispatch kinds "qi"/"pp").  No per-token dequantize →
+    requantize round-trip, and no float32 cache read.
+
+    Windowed archs slice the band out of the cache first: mantissas and
+    row exponents are dynamic-sliced together — pure int data movement,
+    exact by construction.  ``causal=False`` serves cross-attention over a
+    full (prefill-quantized) source cache.
+    """
+    b, hq, s, d = q.shape
+    n_kv, t = kq.m.shape[1], kq.m.shape[2]
+    g = hq // n_kv
+    sc = scale or 1.0 / math.sqrt(d)
+    if window:
+        w = min(window, t)
+        start = jnp.clip(pos - (w - 1), 0, t - w)
+        kq = BFP(jax.lax.dynamic_slice_in_dim(kq.m, start, w, axis=2),
+                 jax.lax.dynamic_slice_in_dim(kq.e, start, w, axis=2), kq.cfg)
+        vq = BFP(jax.lax.dynamic_slice_in_dim(vq.m, start, w, axis=2),
+                 jax.lax.dynamic_slice_in_dim(vq.e, start, w, axis=2), vq.cfg)
+        q_offset = pos - start
+        t = w
+    else:
+        q_offset = pos
+
+    qg = _group_q(q, n_kv) * sc                          # (B, Hkv, g*S, D)
+    qpos = _qpos(s, g, q_offset)
+    if policy.qflow and key is not None:
+        # quantize Q once up front (per-tensor): QKᵀ then runs fully
+        # pre-quantized (kind "pp"), mirroring the qflow chunk path.
+        qg = quantize(qg, _cfg_for_dim(policy.fwd_cfg(), d),
+                      jax.random.fold_in(key, 0x71))
+    kqk = None if key is None else jax.random.fold_in(key, 0)
+    sck = qcache_qk(qg, kq, kqk, policy)                 # (B, Hkv, gS, T)
+    kpos = jnp.arange(t, dtype=jnp.int32)
+    mask = jnp.ones((qpos.shape[0], t), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    sck = jnp.where(mask, sck, _NEG)
+    p = jnp.where(mask, jax.nn.softmax(sck, axis=-1), 0.0)
+    o = qcache_pv(p, vq, None if key is None else jax.random.fold_in(key, 1),
+                  policy)                                # (B, Hkv, gS, D)
+    return _ungroup(o, hq)
+
+
+def decode_attention(q: jnp.ndarray, k_cache, v_cache,
                      pos, key: Optional[jax.Array], policy: NumericPolicy, *,
                      window: int = 0, chunk: int = 0,
                      scale: float = 0.0) -> jnp.ndarray:
     """One-token decode: q (B, Hq, 1, D) vs cache (B, Hkv, T, D), pos traced.
 
-    Windowed archs slice the band out of the cache (no dead-chunk scan).
-    Full attention runs single-shot over the whole cache (chunk = T):
-    scores are only B*H*T floats, and with a sequence-sharded cache GSPMD
-    turns the softmax/PV reductions into flash-decoding-style partial
-    reductions + small all-reduces instead of a serializing chunk scan.
+    A quantized (BFP) cache routes to :func:`cache_decode_attention` — the
+    int8 mantissas are the operands.  Float caches: windowed archs slice
+    the band out of the cache (no dead-chunk scan); full attention runs
+    single-shot over the whole cache (chunk = T): scores are only B*H*T
+    floats, and with a sequence-sharded cache GSPMD turns the softmax/PV
+    reductions into flash-decoding-style partial reductions + small
+    all-reduces instead of a serializing chunk scan.
     """
+    if isinstance(k_cache, BFP):
+        return cache_decode_attention(q, k_cache, v_cache, pos, key, policy,
+                                      window=window, scale=scale)
     if window:
         t = k_cache.shape[2]
         w = min(window, t)

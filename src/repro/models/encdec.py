@@ -15,16 +15,20 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import (BFP, QW_NONE, QW_STACKED, QW_TENSOR, NumericPolicy,
-                    qembed, qmatmul)
+from typing import Optional
+
+from ..core import (BFP, QC_ROWS, QW_NONE, QW_STACKED, QW_TENSOR,
+                    NumericPolicy, qcache_append, qcache_prefill, qembed,
+                    qmatmul)
 from ..core.qnorm import qlayernorm
 from ..runtime.sharding import logical_constraint
-from .attention import chunked_attention, decode_attention
+from .attention import (cache_decode_attention, chunked_attention,
+                        decode_attention)
 from .common import (ArchConfig, apply_rope, dense_init, rope, softmax_xent,
                      weight_t)
 
-__all__ = ["init_params", "param_specs", "weight_mask", "loss_fn", "prefill",
-           "decode_step", "init_cache", "encode"]
+__all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
+           "loss_fn", "prefill", "decode_step", "init_cache", "encode"]
 
 
 def _attn_params(key, cfg: ArchConfig, kv_d=None):
@@ -226,10 +230,17 @@ def _dec_layer(h, lp, lkey, policy, cfg, positions, enc_kv=None, enc_out=None,
         new_self = (k, v)
     else:
         kc, vc = self_kv
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=2)
-        o = decode_attention(q, kc.astype(jnp.float32), vc.astype(jnp.float32),
-                             pos, jax.random.fold_in(lkey, 2), policy)
+        if isinstance(kc, BFP):
+            # qcache: append the quantized row once; attention reads int8.
+            kc = qcache_append(kc, k, pos, axis=2)
+            vc = qcache_append(vc, v, pos, axis=2)
+            o = decode_attention(q, kc, vc, pos,
+                                 jax.random.fold_in(lkey, 2), policy)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=2)
+            o = decode_attention(q, kc.astype(jnp.float32), vc.astype(jnp.float32),
+                                 pos, jax.random.fold_in(lkey, 2), policy)
         new_self = (kc, vc)
     h = h + qmatmul(_unheads(o), lp["self"]["wo"], jax.random.fold_in(lkey, 3),
                     policy)
@@ -245,9 +256,17 @@ def _dec_layer(h, lp, lkey, policy, cfg, positions, enc_kv=None, enc_out=None,
         vx = _heads(qmatmul(enc_out, lp["cross"]["wv"], jax.random.fold_in(kk, 1),
                             policy), cfg.n_kv_heads, cfg.hd)
         enc_kv = (kx, vx)
-    ox = chunked_attention(qx, enc_kv[0].astype(jnp.float32),
-                           enc_kv[1].astype(jnp.float32),
-                           jax.random.fold_in(lkey, 7), policy, causal=False)
+    if isinstance(enc_kv[0], BFP):
+        # qcache: cross K/V were quantized ONCE at prefill; every decode
+        # step reads their int8 mantissas (the hottest cache operand —
+        # touched by all n_layers cross-attentions per token).
+        ox = cache_decode_attention(qx, enc_kv[0], enc_kv[1], jnp.int32(0),
+                                    jax.random.fold_in(lkey, 7), policy,
+                                    causal=False)
+    else:
+        ox = chunked_attention(qx, enc_kv[0].astype(jnp.float32),
+                               enc_kv[1].astype(jnp.float32),
+                               jax.random.fold_in(lkey, 7), policy, causal=False)
     h = h + qmatmul(_unheads(ox), lp["cross"]["wo"], jax.random.fold_in(lkey, 8),
                     policy)
     hn = qlayernorm(h, lp["ln3_g"], lp["ln3_b"], jax.random.fold_in(lkey, 9),
@@ -295,9 +314,25 @@ def loss_fn(params, batch, key, policy: NumericPolicy, cfg: ArchConfig):
 # serving
 # ---------------------------------------------------------------------------
 
+def cache_layout(cfg: ArchConfig):
+    """Quantized-cache layout (docs/SERVING.md): decoder self K/V rows
+    append per step; cross K/V (``xk``/``xv``) are written once at prefill
+    and re-read by every decode step — the biggest single win of the int8
+    cache currency for this family."""
+    return {"k": QC_ROWS, "v": QC_ROWS, "xk": QC_ROWS, "xv": QC_ROWS}
+
+
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, src_len: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, policy: Optional[NumericPolicy] = None):
     L, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    if policy is not None and policy.qcache_on:
+        from ..core.bfp import storage_dtype
+        ccfg = policy.cache_cfg(hd)
+        mk = lambda t: BFP(jnp.zeros((L, batch, hkv, t, hd),
+                                     storage_dtype(ccfg.bits)),
+                           jnp.ones((L, batch, hkv, t, 1), jnp.int32), ccfg)
+        return {"k": mk(max_len), "v": mk(max_len),
+                "xk": mk(src_len), "xv": mk(src_len)}
     return {
         "k": jnp.zeros((L, batch, hkv, max_len, hd), dtype),
         "v": jnp.zeros((L, batch, hkv, max_len, hd), dtype),
@@ -328,11 +363,17 @@ def prefill(params, batch, key, policy: NumericPolicy, cfg: ArchConfig,
     h = qlayernorm(h, params["dec_fn_g"], params["dec_fn_b"],
                    jax.random.fold_in(kd, 0xF1), policy)
     pad = max_len - s
-    cache = {
-        "k": jnp.pad(k.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
-        "v": jnp.pad(v.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
-        "xk": xk.astype(cache_dtype), "xv": xv.astype(cache_dtype),
-    }
+    if policy.qcache_on:
+        cache = {"k": qcache_prefill(k, pad, policy),
+                 "v": qcache_prefill(v, pad, policy),
+                 "xk": qcache_prefill(xk, 0, policy),
+                 "xv": qcache_prefill(xv, 0, policy)}
+    else:
+        cache = {
+            "k": jnp.pad(k.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+            "v": jnp.pad(v.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+            "xk": xk.astype(cache_dtype), "xv": xv.astype(cache_dtype),
+        }
     logits = qmatmul(h[:, -1:], weight_t(params["embed"]),
                      jax.random.fold_in(kd, 0xF2), policy)
     return cache, logits[:, 0]
@@ -347,10 +388,11 @@ def decode_step(params, cache, token, pos, key, policy: NumericPolicy,
     def body(h, xs):
         lp, kc, vc, xk, xv, idx = xs
         lkey = jax.random.fold_in(key, idx)
+        enc_kv = ((xk, xv) if isinstance(xk, BFP) else
+                  (xk.astype(jnp.float32), xv.astype(jnp.float32)))
         h, self_kv, _ = _dec_layer(
             h, lp, lkey, policy, cfg, positions,
-            enc_kv=(xk.astype(jnp.float32), xv.astype(jnp.float32)),
-            self_kv=(kc, vc), pos=pos)
+            enc_kv=enc_kv, self_kv=(kc, vc), pos=pos)
         return h, (self_kv[0], self_kv[1])
 
     h, (ks_, vs_) = jax.lax.scan(

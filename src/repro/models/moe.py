@@ -10,6 +10,11 @@ index is computed from a capacity-bounded running count, then tokens are
 scattered into an (E, C, d) buffer (``mode=drop`` handles capacity
 overflow) and gathered back after the expert FFN. O(N*d) data movement —
 no N x (E*C) one-hot matmul.
+
+Serving: MoE families decode through ``models.transformer`` and share its
+KV cache layout, so ``policy.qcache`` (int8 cache rows — docs/SERVING.md)
+applies unchanged; the expert FFN itself is stateless across decode steps
+and holds no cache.
 """
 
 from __future__ import annotations

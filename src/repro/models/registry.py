@@ -10,7 +10,7 @@ from ..core import QW_NONE
 from . import encdec, rglru, rwkv6, transformer
 from .common import ArchConfig
 
-__all__ = ["get_model", "get_weight_mask"]
+__all__ = ["get_model", "get_weight_mask", "get_cache_layout"]
 
 _FAMILY_TO_MODULE = {
     "dense": transformer,
@@ -45,3 +45,12 @@ def get_weight_mask(cfg: ArchConfig):
     params = jax.eval_shape(lambda k: mod.init_params(k, cfg),
                             jax.random.key(0))
     return jax.tree_util.tree_map(lambda _: QW_NONE, params)
+
+
+def get_cache_layout(cfg: ArchConfig):
+    """Quantized-cache layout for this arch's decode cache: a dict mapping
+    each cache leaf name to ``QC_ROWS`` (append-only int8 rows) or
+    ``QC_STATE`` (master-width accumulator state) — see ``core.policy``
+    and docs/SERVING.md.  Leaves absent from the dict stay float under
+    ``policy.qcache`` (none currently)."""
+    return get_model(cfg).cache_layout(cfg)

@@ -11,21 +11,22 @@ eligible for the long_500k cell.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core import (QW_NONE, QW_STACKED, QW_STACKED2, QW_TENSOR,
-                    NumericPolicy, qembed, qmatmul)
+from ..core import (BFP, QC_ROWS, QC_STATE, QW_NONE, QW_STACKED, QW_STACKED2,
+                    QW_TENSOR, NumericPolicy, dequantize, qcache_append,
+                    qcache_prefill, qcache_quantize, qembed, qmatmul)
 from ..core.qnorm import qrmsnorm
 from ..runtime.sharding import logical_constraint
 from .attention import decode_attention, local_attention
 from .common import (ArchConfig, apply_rope, dense_init, rope, softmax_xent,
                      weight_t)
 
-__all__ = ["init_params", "param_specs", "weight_mask", "loss_fn", "prefill",
-           "decode_step", "init_cache"]
+__all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
+           "loss_fn", "prefill", "decode_step", "init_cache"]
 
 _C = 8.0  # RG-LRU gate sharpness constant
 
@@ -230,10 +231,18 @@ def _attn_block(h, lp, kv, key, policy, cfg, positions, pos=None):
         new_kv = (k, v)
     else:
         kc, vc = kv
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=2)
-        o = decode_attention(q, kc.astype(jnp.float32), vc.astype(jnp.float32),
-                             pos, ks[4], policy, window=cfg.local_window)
+        if isinstance(kc, BFP):
+            # qcache: quantize the fresh row once; the windowed decode
+            # slices the band out of the int8 mantissas + row exponents.
+            kc = qcache_append(kc, k, pos, axis=2)
+            vc = qcache_append(vc, v, pos, axis=2)
+            o = decode_attention(q, kc, vc, pos, ks[4], policy,
+                                 window=cfg.local_window)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=2)
+            o = decode_attention(q, kc.astype(jnp.float32), vc.astype(jnp.float32),
+                                 pos, ks[4], policy, window=cfg.local_window)
         new_kv = (kc, vc)
     h = h + qmatmul(_unheads(o), lp["wo"], ks[5], policy)
     hn = qrmsnorm(h, lp["mlp_ln_g"], ks[6], policy)
@@ -248,10 +257,41 @@ def _attn_block(h, lp, kv, key, policy, cfg, positions, pos=None):
 # full passes
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def cache_layout(cfg: ArchConfig):
+    """Quantized-cache layout (docs/SERVING.md): KV and the temporal-conv
+    registers are append-only int8 rows; the RG-LRU hidden state ``h`` is
+    an accumulator rewritten every step, so it keeps master-width
+    (int16) mantissas — the int16-SGD argument applied to serving state."""
+    _, _, tail = _layout(cfg)
+    layout = {"k": QC_ROWS, "v": QC_ROWS, "conv": QC_ROWS, "h": QC_STATE}
+    if tail:
+        layout["conv_t"] = QC_ROWS
+        layout["h_t"] = QC_STATE
+    return layout
+
+
+def _q_state(x, policy: NumericPolicy, kind: str) -> BFP:
+    return qcache_quantize(x, policy,
+                           cfg=policy.cache_cfg_for(kind, x.shape[-1]))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               policy: Optional[NumericPolicy] = None):
     np_, nr, tail = _layout(cfg)
     d = cfg.d_model
     z = lambda *s, dt=jnp.float32: jnp.zeros(s, dt)
+    if policy is not None and policy.qcache_on:
+        layout = cache_layout(cfg)
+        cache = {
+            "conv": z(np_, nr, batch, cfg.conv_width - 1, d),
+            "h": z(np_, nr, batch, d),
+            "k": z(np_, batch, cfg.n_kv_heads, max_len, cfg.hd),
+            "v": z(np_, batch, cfg.n_kv_heads, max_len, cfg.hd),
+        }
+        if tail:
+            cache["conv_t"] = z(tail, batch, cfg.conv_width - 1, d)
+            cache["h_t"] = z(tail, batch, d)
+        return {n: _q_state(x, policy, layout[n]) for n, x in cache.items()}
     cache = {
         "conv": z(np_, nr, batch, cfg.conv_width - 1, d),
         "h": z(np_, nr, batch, d),
@@ -345,10 +385,18 @@ def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
     h, st = _forward(params, tokens, key, policy, cfg)
     pad = max_len - s
     cache = dict(st)
-    cache["k"] = jnp.pad(st["k"].astype(cache_dtype),
-                         ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
-    cache["v"] = jnp.pad(st["v"].astype(cache_dtype),
-                         ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    if policy.qcache_on:
+        layout = cache_layout(cfg)
+        for n in ("conv", "h", "conv_t", "h_t"):
+            if n in cache:
+                cache[n] = _q_state(cache[n], policy, layout[n])
+        for n in ("k", "v"):
+            cache[n] = qcache_prefill(st[n], pad, policy)
+    else:
+        cache["k"] = jnp.pad(st["k"].astype(cache_dtype),
+                             ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        cache["v"] = jnp.pad(st["v"].astype(cache_dtype),
+                             ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
     logits = qmatmul(h[:, -1:], weight_t(params["embed"]),
                      jax.random.fold_in(key, 0xF2), policy)
     return cache, logits[:, 0]
@@ -356,7 +404,22 @@ def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
 
 def decode_step(params, cache, token, pos, key, policy: NumericPolicy,
                 cfg: ArchConfig):
-    h, cache = _forward(params, token[:, None], key, policy, cfg,
-                        cache=cache, pos=pos)
+    qc = isinstance(cache.get("k"), BFP)
+    if qc:
+        # The elementwise recurrences (conv window, RG-LRU gates) stay
+        # float — like the paper keeping softmax float — so the integer
+        # state is dequantized into registers at step entry; KV caches
+        # stay BFP all the way into the integer attention contraction.
+        cache = {n: (dequantize(x) if isinstance(x, BFP) and n not in ("k", "v")
+                     else x) for n, x in cache.items()}
+    h, st = _forward(params, token[:, None], key, policy, cfg,
+                     cache=cache, pos=pos)
+    if qc:
+        layout = cache_layout(cfg)
+        # conv registers: shifted rows requantize exactly (on-grid per-row
+        # nearest is the identity), the new row is quantized once; ``h``
+        # is the accumulator — one int16 narrow per step.
+        st = {n: (_q_state(x, policy, layout[n]) if n not in ("k", "v")
+                  else x) for n, x in st.items()}
     logits = qmatmul(h, weight_t(params["embed"]), jax.random.fold_in(key, 0xF2), policy)
-    return logits[:, 0], cache
+    return logits[:, 0], st

@@ -11,19 +11,20 @@ are the only saved activations).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core import (QW_NONE, QW_STACKED, QW_TENSOR, NumericPolicy, qembed,
+from ..core import (BFP, QC_ROWS, QC_STATE, QW_NONE, QW_STACKED, QW_TENSOR,
+                    NumericPolicy, dequantize, qcache_quantize, qembed,
                     qmatmul)
 from ..core.qnorm import qlayernorm
 from ..runtime.sharding import logical_constraint
 from .common import ArchConfig, dense_init, softmax_xent, weight_t
 
-__all__ = ["init_params", "param_specs", "weight_mask", "loss_fn", "prefill",
-           "decode_step", "init_state", "HEAD_DIM"]
+__all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
+           "loss_fn", "prefill", "decode_step", "init_state", "HEAD_DIM"]
 
 HEAD_DIM = 64
 _TCHUNK = 64   # remat chunk for the time scan
@@ -187,12 +188,32 @@ def _layer(h, lp, st, key, policy, cfg):
     return h, {"tm": st_tm["tm"], "S": st_tm["S"], "cm": cm}
 
 
-def init_state(cfg: ArchConfig, batch: int):
+def cache_layout(cfg: ArchConfig):
+    """Quantized-cache layout (docs/SERVING.md): the token-shift registers
+    (``tm``/``cm``) are append-only rows — the previous token's activation,
+    replaced (never accumulated) each step — while the WKV matrix state
+    ``S`` is the accumulator, so it keeps master-width (int16) mantissas
+    with one exponent per S-row."""
+    return {"tm": QC_ROWS, "cm": QC_ROWS, "S": QC_STATE}
+
+
+def _q_state_tree(state, policy: NumericPolicy):
+    layout = cache_layout(None)
+    return {n: qcache_quantize(x, policy,
+                               cfg=policy.cache_cfg_for(layout[n], x.shape[-1]))
+            for n, x in state.items()}
+
+
+def init_state(cfg: ArchConfig, batch: int,
+               policy: Optional[NumericPolicy] = None):
     d = cfg.d_model
     h = d // HEAD_DIM
     z = lambda *s: jnp.zeros(s, jnp.float32)
-    return {"tm": z(cfg.n_layers, batch, d), "cm": z(cfg.n_layers, batch, d),
-            "S": z(cfg.n_layers, batch, h, HEAD_DIM, HEAD_DIM)}
+    state = {"tm": z(cfg.n_layers, batch, d), "cm": z(cfg.n_layers, batch, d),
+             "S": z(cfg.n_layers, batch, h, HEAD_DIM, HEAD_DIM)}
+    if policy is not None and policy.qcache_on:
+        return _q_state_tree(state, policy)
+    return state
 
 
 def _forward(params, tokens, state, key, policy, cfg):
@@ -224,9 +245,14 @@ def loss_fn(params, batch, key, policy: NumericPolicy, cfg: ArchConfig):
 
 def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
             max_len: int = 0):
-    """State-based prefill; cache = recurrent state (O(1) in length)."""
+    """State-based prefill; cache = recurrent state (O(1) in length).
+
+    With ``policy.qcache`` the returned state is quantized exactly once:
+    int8 token-shift rows, int16 WKV accumulator (see cache_layout)."""
     b = tokens.shape[0]
     h, state = _forward(params, tokens, init_state(cfg, b), key, policy, cfg)
+    if policy.qcache_on:
+        state = _q_state_tree(state, policy)
     logits = qmatmul(h[:, -1:], weight_t(params["embed"]),
                      jax.random.fold_in(key, 0xF2), policy)
     return state, logits[:, 0]
@@ -234,6 +260,17 @@ def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
 
 def decode_step(params, state, token, pos, key, policy: NumericPolicy,
                 cfg: ArchConfig):
+    qc = isinstance(state.get("S"), BFP)
+    if qc:
+        # The WKV recurrence is elementwise float by design (like the
+        # paper's float softmax): the integer state is dequantized into
+        # registers at step entry; the stored/read currency is mantissas.
+        state = {n: dequantize(x) for n, x in state.items()}
     h, state = _forward(params, token[:, None], state, key, policy, cfg)
+    if qc:
+        # tm/cm are replaced rows (quantized once per step); S is the
+        # accumulator — one int16 narrow per step, exact for rows the
+        # step left unchanged (on-grid nearest is the identity).
+        state = _q_state_tree(state, policy)
     logits = qmatmul(h, weight_t(params["embed"]), jax.random.fold_in(key, 0xF2), policy)
     return logits[:, 0], state

@@ -18,8 +18,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import (BFP, QW_NONE, QW_STACKED, QW_TENSOR, NumericPolicy,
-                    qembed, qmatmul)
+from ..core import (BFP, QC_ROWS, QW_NONE, QW_STACKED, QW_TENSOR,
+                    NumericPolicy, qcache_append, qcache_prefill, qembed,
+                    qmatmul)
 from ..core.qnorm import qlayernorm, qrmsnorm
 from ..runtime.sharding import logical_constraint
 from .attention import chunked_attention, decode_attention, local_attention
@@ -27,8 +28,9 @@ from .common import (ArchConfig, apply_rope, dense_init, rope, softmax_xent,
                      weight_t)
 from .moe import moe_block, moe_param_specs, moe_params_init, moe_weight_mask
 
-__all__ = ["init_params", "param_specs", "weight_mask", "forward_hidden",
-           "loss_fn", "prefill", "decode_step", "init_cache"]
+__all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
+           "forward_hidden", "loss_fn", "prefill", "decode_step",
+           "init_cache"]
 
 
 # ---------------------------------------------------------------------------
@@ -205,10 +207,18 @@ def _attn_block(h, lp, key, policy, cfg, *, positions, kv=None, pos=None):
         new_kv = (k, v)
     else:
         kc, vc = kv
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=2)
-        o = decode_attention(q, kc.astype(jnp.float32), vc.astype(jnp.float32),
-                             pos, ka, policy, window=cfg.local_window)
+        if isinstance(kc, BFP):
+            # qcache: the fresh row is quantized exactly once at append
+            # time; attention consumes the int8 cache directly.
+            kc = qcache_append(kc, k, pos, axis=2)
+            vc = qcache_append(vc, v, pos, axis=2)
+            o = decode_attention(q, kc, vc, pos, ka, policy,
+                                 window=cfg.local_window)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=2)
+            o = decode_attention(q, kc.astype(jnp.float32), vc.astype(jnp.float32),
+                                 pos, ka, policy, window=cfg.local_window)
         new_kv = (kc, vc)
     y = qmatmul(_unheads(o), lp["wo"], ko, policy)
     return y, new_kv
@@ -308,14 +318,33 @@ def loss_fn(params, batch: Dict[str, jnp.ndarray], key, policy: NumericPolicy,
 # serving: prefill + decode with a preallocated cache
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def cache_layout(cfg: ArchConfig):
+    """Quantized-cache layout (docs/SERVING.md): KV rows are append-only —
+    quantized exactly once when written, int8 mantissas + one exponent per
+    (layer, batch, head, position) row."""
+    return {"k": QC_ROWS, "v": QC_ROWS}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               policy: Optional[NumericPolicy] = None):
     shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    if policy is not None and policy.qcache_on:
+        from ..core.bfp import storage_dtype
+        ccfg = policy.cache_cfg(cfg.hd)
+        mk = lambda: BFP(jnp.zeros(shape, storage_dtype(ccfg.bits)),
+                         jnp.ones(shape[:-1] + (1,), jnp.int32), ccfg)
+        return {"k": mk(), "v": mk()}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
             max_len: int, patch_embeds=None, cache_dtype=jnp.bfloat16):
-    """Populate the cache from a prompt; returns (cache, last-token logits)."""
+    """Populate the cache from a prompt; returns (cache, last-token logits).
+
+    With ``policy.qcache`` the cache is a first-class BFP object: the K/V
+    rows are quantized exactly ONCE here (int8 mantissas + per-row
+    exponents) and every decode step reads the mantissas directly.
+    """
     b, s = tokens.shape
     h, kvs, _ = forward_hidden(params, tokens, key, policy, cfg,
                                patch_embeds, collect_kv=True)
@@ -326,10 +355,14 @@ def prefill(params, tokens, key, policy: NumericPolicy, cfg: ArchConfig,
         h = h[:, -1:]
     k, v = kvs
     pad = max_len - s
-    cache = {
-        "k": jnp.pad(k.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
-        "v": jnp.pad(v.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
-    }
+    if policy.qcache_on:
+        cache = {"k": qcache_prefill(k, pad, policy),
+                 "v": qcache_prefill(v, pad, policy)}
+    else:
+        cache = {
+            "k": jnp.pad(k.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+            "v": jnp.pad(v.astype(cache_dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+        }
     logits = _lm_logits(params, h, jax.random.fold_in(key, 0xF3),
                         policy, cfg)
     return cache, logits[:, 0]

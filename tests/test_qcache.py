@@ -1,0 +1,416 @@
+"""Tests for the quantized decode-cache currency (policy.qcache).
+
+Covers the ISSUE-4 acceptance surface:
+  * the cache mapping itself: per-row scales, nearest rounding, the
+    append-vs-batch bit-identity (quantizing a prefill tensor equals
+    quantizing its rows one decode-append at a time), and on-grid
+    requantize idempotence (the recurrent-state exactness contract);
+  * the cache-operand contractions ``qcache_qk`` / ``qcache_pv``: exact
+    integer oracles, and the "qi"/"pp" dispatch kinds they plan under
+    their own ``qdecode_*`` ops;
+  * model level: prefill→append→decode under jit, decode bit-identity
+    with the cache read hot or cold (in-memory vs checkpoint
+    save/restore round-trip), recurrent-state (rglru/rwkv6) int cache
+    exactness, and the ``qcache=False`` spec pin (float cache layout and
+    decode results unchanged);
+  * serving plumbing: BFP cache templates/shardings and the analytic
+    cache-operand traffic model.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core import (BFP, PAPER_INT8, NumericPolicy, dequantize, pow2,
+                        qcache_append, qcache_pv, qcache_qk, qcache_quantize,
+                        quantize, scale_exponent)
+from repro.core.qops import _contract_q
+from repro.introspect import count_cache_quantize_ops
+from repro.kernels import dispatch
+from repro.launch.steps import (cache_shardings, cache_template,
+                                make_decode_step, make_prefill_step)
+from repro.models import get_cache_layout, get_model
+
+KEY = jax.random.key(7)
+P8 = PAPER_INT8
+QC = dataclasses.replace(PAPER_INT8, qcache=True)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# the cache mapping: per-row scales, append == batch, on-grid idempotence
+# ---------------------------------------------------------------------------
+
+def test_qcache_gate():
+    assert not P8.qcache_on                      # off by default
+    assert QC.qcache_on
+    assert not dataclasses.replace(QC, block=32).qcache_on   # per-block: off
+    assert not dataclasses.replace(QC, enabled=False).qcache_on
+    cfg = QC.cache_cfg(64)
+    assert cfg.block == 64 and not cfg.stochastic
+    assert QC.cache_cfg(64, QC.master_bits).bits == 16
+
+
+def test_append_matches_batch_quantize():
+    """Quantizing the whole prefill K and appending its rows one decode
+    step at a time must produce bit-identical mantissas AND exponents —
+    the invariant that lets prefill and decode share one cache layout."""
+    k = _rand((2, 3, 16, 8), 1)
+    kq = qcache_quantize(k, QC)
+    assert kq.m.dtype == jnp.int8 and kq.e.shape == (2, 3, 16, 1)
+    cache = BFP(jnp.zeros_like(kq.m), jnp.ones_like(kq.e), kq.cfg)
+    for t in range(16):
+        cache = qcache_append(cache, k[:, :, t:t + 1], t, axis=2)
+    np.testing.assert_array_equal(np.asarray(cache.m), np.asarray(kq.m))
+    np.testing.assert_array_equal(np.asarray(cache.e), np.asarray(kq.e))
+
+
+def test_append_matches_batch_under_jit_scan():
+    k = _rand((1, 2, 8, 4), 2)
+    kq = qcache_quantize(k, QC)
+    cache0 = BFP(jnp.zeros_like(kq.m), jnp.ones_like(kq.e), kq.cfg)
+
+    @jax.jit
+    def fill(cache, k):
+        def step(c, xs):
+            t, row = xs
+            return qcache_append(c, row, t, axis=2), None
+        rows = jnp.moveaxis(k, 2, 0)[:, :, :, None]      # (T, B, H, 1, D)
+        c, _ = jax.lax.scan(step, cache, (jnp.arange(k.shape[2]), rows))
+        return c
+
+    c = fill(cache0, k)
+    np.testing.assert_array_equal(np.asarray(c.m), np.asarray(kq.m))
+    np.testing.assert_array_equal(np.asarray(c.e), np.asarray(kq.e))
+
+
+def test_requantize_idempotent_on_grid():
+    """Nearest per-row requantization of an already-on-grid cache is the
+    bitwise identity — rows a decode step leaves unchanged (shifted conv
+    registers, untouched KV rows) survive any number of requantize passes.
+    This is the recurrent-state exactness contract."""
+    for bits in (8, 16):
+        x = _rand((3, 5, 32), 3, scale=7.0)
+        q = qcache_quantize(x, QC, cfg=QC.cache_cfg(32, bits))
+        q2 = qcache_quantize(dequantize(q), QC, cfg=QC.cache_cfg(32, bits))
+        np.testing.assert_array_equal(np.asarray(q2.m), np.asarray(q.m))
+        np.testing.assert_array_equal(np.asarray(q2.e), np.asarray(q.e))
+
+
+def test_zero_rows_dequantize_to_zero():
+    """Freshly-initialized (and padded) cache rows are zero mantissas with
+    exponent 1: dequantize must give exact zeros (masked out anyway)."""
+    cache = BFP(jnp.zeros((2, 4, 8), jnp.int8),
+                jnp.ones((2, 4, 1), jnp.int32), QC.cache_cfg(8))
+    np.testing.assert_array_equal(np.asarray(dequantize(cache)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# cache-operand contractions: exact oracles + dispatch kinds
+# ---------------------------------------------------------------------------
+
+def test_qcache_qk_matches_integer_oracle():
+    """Scores = (q̂ᵐ · kᵐ) · 2^{e_q} · 2^{e_row}: int32 mantissa contraction
+    with the per-row cache exponents applied per output column."""
+    q = _rand((2, 3, 1, 8), 4)
+    kq = qcache_quantize(_rand((2, 3, 16, 8), 5), QC)
+    y = qcache_qk(q, kq, KEY, QC)
+    aq = quantize(q, QC.fwd_cfg(), KEY)
+    acc = jax.lax.dot_general(
+        aq.m.astype(jnp.int32), kq.m.astype(jnp.int32),
+        (((3,), (3,)), ((0, 1), (0, 1)))).astype(jnp.float32)
+    ref = acc * pow2(scale_exponent(aq.e, aq.cfg)) \
+        * jnp.swapaxes(pow2(scale_exponent(kq.e, kq.cfg)), -1, -2)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+
+
+def test_qcache_qk_prequantized_a_plans_pp():
+    """A pre-quantized (qflow) Q consumes zero fresh quantizations and the
+    contraction plans as the fully-pre-quantized "pp" kind; a fresh Q
+    plans "qi" — both under the decode-shaped qdecode_qk op."""
+    q = _rand((1, 2, 1, 8), 6)
+    kq = qcache_quantize(_rand((1, 2, 8, 8), 7), QC)
+    aq = quantize(q, QC.fwd_cfg(), KEY)
+    with dispatch.record_decisions() as log:
+        jax.make_jaxpr(lambda a, k: qcache_qk(a, k, None, QC))(
+            BFP(aq.m, aq.e, aq.cfg), kq)
+    assert [d.kind for d in log if d.op == "qdecode_qk"] == ["pp"]
+    with dispatch.record_decisions() as log:
+        jax.make_jaxpr(lambda a, k: qcache_qk(a, k, KEY, QC))(q, kq)
+    assert [d.kind for d in log if d.op == "qdecode_qk"] == ["qi"]
+    y_pp = qcache_qk(BFP(aq.m, aq.e, aq.cfg), kq, None, QC)
+    y_qi = qcache_qk(q, kq, KEY, QC)
+    np.testing.assert_array_equal(np.asarray(y_pp), np.asarray(y_qi))
+
+
+def test_qcache_pv_matches_integer_oracle():
+    """PV folds the per-row V exponents into the float probabilities
+    (exact powers of two) before their single fresh quantization, then
+    contracts the raw mantissas — bit-identical to the explicit oracle."""
+    p = jax.nn.softmax(_rand((2, 3, 1, 16), 8), axis=-1)
+    vq = qcache_quantize(_rand((2, 3, 16, 8), 9), QC)
+    kpv = jax.random.fold_in(KEY, 1)
+    y = qcache_pv(p, vq, kpv, QC)
+    p2 = p * jnp.swapaxes(pow2(scale_exponent(vq.e, vq.cfg)), -1, -2)
+    pq = quantize(p2, QC.fwd_cfg(), kpv)
+    acc = jax.lax.dot_general(
+        pq.m.astype(jnp.int32), vq.m.astype(jnp.int32),
+        (((3,), (2,)), ((0, 1), (0, 1)))).astype(jnp.float32)
+    ref = acc * pow2(scale_exponent(pq.e, pq.cfg))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+    with dispatch.record_decisions() as log:
+        jax.make_jaxpr(lambda p, v: qcache_pv(p, v, kpv, QC))(p, vq)
+    assert [d.kind for d in log if d.op == "qdecode_pv"] == ["qi"]
+
+
+def test_qcache_attention_accuracy():
+    """End-to-end decode attention off the int8 cache stays close to the
+    float attention oracle (int8-grade agreement, not bit equality — the
+    whole point is a different, cheaper representation)."""
+    from repro.models.attention import cache_decode_attention
+    q = _rand((2, 4, 1, 16), 10)
+    k = _rand((2, 2, 12, 16), 11)
+    v = _rand((2, 2, 12, 16), 12)
+    kq, vq = qcache_quantize(k, QC), qcache_quantize(v, QC)
+    o = cache_decode_attention(q, kq, vq, jnp.int32(11), KEY, QC)
+    import math
+    qg = q.reshape(2, 2, 2, 16) / math.sqrt(16)
+    sc = jnp.einsum("bhgd,bhtd->bhgt", qg, k)
+    pr = jax.nn.softmax(sc, axis=-1)
+    ref = jnp.einsum("bhgt,bhtd->bhgd", pr, v).reshape(2, 4, 1, 16)
+    err = float(jnp.abs(o - ref).max() / jnp.abs(ref).max())
+    assert err < 0.12, err
+
+
+def test_cache_operand_bytes_model():
+    """The decode-traffic model: a quantized cache operand must cost less
+    than an eighth of the float-pipeline cost (13 B/elem quantizer chain
+    vs 1 B/elem mantissa read + per-row exponent)."""
+    f = dispatch.cache_operand_bytes(1024, 64, quantized=False)
+    q = dispatch.cache_operand_bytes(1024, 64, quantized=True)
+    assert q < f / 8
+    assert 1 - q / f > 0.8
+    f16 = dispatch.cache_operand_bytes(64, 64, quantized=False, rewritten=True)
+    q16 = dispatch.cache_operand_bytes(64, 64, quantized=True, bits=16,
+                                       rewritten=True)
+    assert q16 < f16                      # int16 state still halves traffic
+
+
+# ---------------------------------------------------------------------------
+# model level: transformer family
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                               n_layers=2, d_model=32, d_ff=64, n_heads=2,
+                               n_kv_heads=2, vocab=97)
+
+
+def _decode_n(cfg, policy, params, cache, tok, plen, key, n=2):
+    dec = jax.jit(make_decode_step(cfg, policy))
+    outs = []
+    for i in range(n):
+        logits, cache = dec(params, cache, tok, jnp.int32(plen + i),
+                            jax.random.fold_in(key, 10 + i))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs.append(np.asarray(logits))
+    return np.stack(outs), cache
+
+
+def _prefill(cfg, policy, params, plen, max_len, key):
+    pre = jax.jit(make_prefill_step(cfg, policy, max_len))
+    prompts = jax.random.randint(jax.random.fold_in(key, 1), (2, plen),
+                                 0, cfg.vocab)
+    return pre(params, {"tokens": prompts}, jax.random.fold_in(key, 3))
+
+
+def test_transformer_qcache_prefill_append_decode():
+    """Prefill writes the quantized rows ONCE; decode appends without
+    touching them; padding the time axis never changes stored rows."""
+    cfg = _tiny_cfg()
+    mod = get_model(cfg)
+    key = jax.random.key(0)
+    params = mod.init_params(key, cfg)
+    plen = 6
+    cache, logits = _prefill(cfg, QC, params, plen, plen + 3, key)
+    assert isinstance(cache["k"], BFP) and cache["k"].m.dtype == jnp.int8
+    # padding invariance: a longer cache holds bit-identical prefill rows
+    cache2, logits2 = _prefill(cfg, QC, params, plen, plen + 7, key)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+    np.testing.assert_array_equal(np.asarray(cache["k"].m[:, :, :, :plen]),
+                                  np.asarray(cache2["k"].m[:, :, :, :plen]))
+    np.testing.assert_array_equal(np.asarray(cache["k"].e[:, :, :, :plen]),
+                                  np.asarray(cache2["k"].e[:, :, :, :plen]))
+    # append leaves prefill rows untouched
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    _, cache_dec = _decode_n(cfg, QC, params, cache, tok, plen, key, n=2)
+    np.testing.assert_array_equal(np.asarray(cache["k"].m[:, :, :, :plen]),
+                                  np.asarray(cache_dec["k"].m[:, :, :, :plen]))
+
+
+def test_transformer_qcache_decode_hot_vs_cold():
+    """Decode must be bit-identical whether the cache is consumed straight
+    from prefill (hot) or round-tripped through host memory and a
+    checkpoint save/restore (cold) — int arrays round-trip exactly."""
+    cfg = _tiny_cfg()
+    mod = get_model(cfg)
+    key = jax.random.key(0)
+    params = mod.init_params(key, cfg)
+    plen, max_len = 6, 10
+    cache, logits = _prefill(cfg, QC, params, plen, max_len, key)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    hot, _ = _decode_n(cfg, QC, params, cache, tok, plen, key, n=3)
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        mgr = CheckpointManager(tmp, async_write=False)
+        mgr.save(1, cache)
+        tmpl = cache_template(cfg, 2, max_len, policy=QC)
+        cold_cache = mgr.restore(1, tmpl)
+    assert isinstance(cold_cache["k"], BFP)
+    assert cold_cache["k"].m.dtype == jnp.int8
+    cold, _ = _decode_n(cfg, QC, params, cold_cache, tok, plen, key, n=3)
+    np.testing.assert_array_equal(hot, cold)
+
+
+def test_qcache_off_spec_pin():
+    """Spec pin: with policy.qcache=False the cache keeps the documented
+    PR-3 float layout (bfloat16 K/V) and the step builders reproduce the
+    direct model calls bit-for-bit."""
+    assert NumericPolicy().qcache is False
+    cfg = _tiny_cfg()
+    mod = get_model(cfg)
+    key = jax.random.key(0)
+    params = mod.init_params(key, cfg)
+    plen, max_len = 6, 9
+    cache, logits = _prefill(cfg, P8, params, plen, max_len, key)
+    assert not isinstance(cache["k"], BFP)
+    assert cache["k"].dtype == jnp.bfloat16
+    # step builders == direct model calls (the documented decode pipeline)
+    prompts = jax.random.randint(jax.random.fold_in(key, 1), (2, plen),
+                                 0, cfg.vocab)
+    cache2, logits2 = jax.jit(
+        lambda p, t, k: mod.prefill(p, t, k, P8, cfg, max_len))(
+            params, prompts, jax.random.fold_in(key, 3))
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out_a, _ = _decode_n(cfg, P8, params, cache, tok, plen, key, n=2)
+    out_b, _ = _decode_n(cfg, P8, params, cache2, tok, plen, key, n=2)
+    np.testing.assert_array_equal(out_a, out_b)
+
+
+def test_decode_step_cache_quantize_count():
+    """The quantize-once claim as a counted number: one cache-row quantize
+    per appended K and V row per layer per decode step (2·n_layers), and
+    exactly one per cache tensor at prefill."""
+    cfg = _tiny_cfg()
+    mod = get_model(cfg)
+    key = jax.random.key(0)
+    params = mod.init_params(key, cfg)
+    cache = mod.init_cache(cfg, 2, 8, policy=QC)
+    tok = jnp.zeros((2,), jnp.int32)
+    step = make_decode_step(cfg, QC)
+    n = count_cache_quantize_ops(
+        step, params, cache, tok, jnp.int32(4), jax.random.key_data(KEY))
+    assert n == 2 * cfg.n_layers, n
+    pre = make_prefill_step(cfg, QC, 8)
+    npre = count_cache_quantize_ops(
+        pre, params, {"tokens": jnp.zeros((2, 4), jnp.int32)},
+        jax.random.key_data(KEY))
+    assert npre == 2, npre                       # k once, v once
+    # and the float-cache pipeline runs zero cache quantizes
+    cache_f = mod.init_cache(cfg, 2, 8)
+    step_f = make_decode_step(cfg, P8)
+    assert count_cache_quantize_ops(
+        step_f, params, cache_f, tok, jnp.int32(4),
+        jax.random.key_data(KEY)) == 0
+
+
+# ---------------------------------------------------------------------------
+# recurrent families: int state caches
+# ---------------------------------------------------------------------------
+
+def test_rwkv6_qcache_state_layout_and_exactness():
+    cfg = dataclasses.replace(get_smoke_config("rwkv6_3b"),
+                              n_layers=1, d_model=64, d_ff=128, vocab=97)
+    mod = get_model(cfg)
+    key = jax.random.key(0)
+    params = mod.init_params(key, cfg)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (2, 6), 0, cfg.vocab)
+    state, logits = jax.jit(
+        lambda p, t, k: mod.prefill(p, t, k, QC, cfg))(
+            params, toks, jax.random.fold_in(key, 3))
+    # layout: int8 token-shift rows, int16 accumulator
+    assert state["tm"].m.dtype == jnp.int8
+    assert state["cm"].m.dtype == jnp.int8
+    assert state["S"].m.dtype == jnp.int16
+    assert state["S"].e.shape == (1, 2, 1, 64, 1)    # one exponent per S row
+    # prefill logits are computed before any cache consumption: identical
+    # to the float-cache pipeline
+    _, logits_f = jax.jit(
+        lambda p, t, k: mod.prefill(p, t, k, P8, cfg))(
+            params, toks, jax.random.fold_in(key, 3))
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits_f))
+    # hot vs cold: a host round-trip of the int state changes nothing
+    dec = jax.jit(make_decode_step(cfg, QC))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l_hot, st_hot = dec(params, state, tok, jnp.int32(6),
+                        jax.random.fold_in(key, 10))
+    cold = jax.tree_util.tree_map(lambda a: jnp.asarray(np.asarray(a)), state)
+    l_cold, st_cold = dec(params, cold, tok, jnp.int32(6),
+                          jax.random.fold_in(key, 10))
+    np.testing.assert_array_equal(np.asarray(l_hot), np.asarray(l_cold))
+    for a, b in zip(jax.tree_util.tree_leaves(st_hot),
+                    jax.tree_util.tree_leaves(st_cold)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rglru_qcache_windowed_decode_and_state():
+    cfg = get_smoke_config("recurrentgemma_2b")
+    mod = get_model(cfg)
+    key = jax.random.key(0)
+    params = mod.init_params(key, cfg)
+    plen, max_len = 6, 9
+    cache, logits = _prefill(cfg, QC, params, plen, max_len, key)
+    layout = get_cache_layout(cfg)
+    assert layout["h"] == "state" and layout["conv"] == "rows"
+    assert cache["k"].m.dtype == jnp.int8
+    assert cache["conv"].m.dtype == jnp.int8
+    assert cache["h"].m.dtype == jnp.int16
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    outs, cache2 = _decode_n(cfg, QC, params, cache, tok, plen, key, n=2)
+    assert np.isfinite(outs).all()
+    assert isinstance(cache2["h"], BFP) and cache2["h"].m.dtype == jnp.int16
+    # prefill logits identical to the float-cache pipeline
+    _, logits_f = _prefill(cfg, P8, params, plen, max_len, key)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits_f))
+
+
+# ---------------------------------------------------------------------------
+# serving plumbing: templates + shardings
+# ---------------------------------------------------------------------------
+
+def test_cache_template_and_shardings_bfp():
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.sharding import DEFAULT_RULES
+    cfg = _tiny_cfg()
+    tmpl = cache_template(cfg, 2, 8, policy=QC)
+    assert isinstance(tmpl["k"], BFP)
+    assert tmpl["k"].m.dtype == jnp.int8 and tmpl["k"].e.dtype == jnp.int32
+    mesh = make_local_mesh()
+    sh = cache_shardings(cfg, mesh, DEFAULT_RULES, tmpl)
+    mod = get_model(cfg)
+    cache = mod.init_cache(cfg, 2, 8, policy=QC)
+    placed = jax.tree_util.tree_map(jax.device_put, cache, sh)
+    assert isinstance(placed["k"], BFP)
+    # float template unchanged by the policy=None default
+    tmpl_f = cache_template(cfg, 2, 8)
+    assert not isinstance(tmpl_f["k"], BFP)

@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative markdown link must resolve.
+
+Scans the repo's markdown surfaces (README.md, docs/*.md, CHANGES.md,
+ROADMAP.md) for inline links/images ``[text](target)`` and verifies that
+every relative target exists on disk; ``#anchor`` fragments must match a
+heading in the target file (GitHub slug rules, simplified).  External
+(``http(s)://``) and mailto links are skipped — this guards the
+cross-link lattice between README, DATAFLOW.md, KERNELS.md, SERVING.md
+and NUMERICS.md against rot, not the internet.
+
+    python tools/check_doc_links.py        # exit 1 + report on any rot
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SOURCES = (["README.md", "CHANGES.md", "ROADMAP.md", "PAPER.md"]
+           + sorted(glob.glob(os.path.join(ROOT, "docs", "*.md"))))
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+# inline code spans and fenced blocks may contain “[x](y)”-shaped text
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_CODE = re.compile(r"`[^`]*`")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug (simplified: enough for our headings)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\s§·—-]", "", s, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", s.strip())
+
+
+def _anchors(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    return {_slug(h) for h in _HEADING.findall(text)}
+
+
+def check() -> int:
+    errors = []
+    for src in SOURCES:
+        path = src if os.path.isabs(src) else os.path.join(ROOT, src)
+        if not os.path.exists(path):
+            continue
+        with open(path, encoding="utf-8") as f:
+            text = _CODE.sub("", _FENCE.sub("", f.read()))
+        rel_src = os.path.relpath(path, ROOT)
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, frag = target.partition("#")
+            if not base:                       # same-file #anchor
+                dest = path
+            else:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), base))
+            if not os.path.exists(dest):
+                errors.append(f"{rel_src}: broken link -> {target}")
+                continue
+            if frag and dest.endswith(".md") and _slug(frag) not in _anchors(dest):
+                errors.append(f"{rel_src}: missing anchor -> {target}")
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} broken doc link(s)")
+        return 1
+    print(f"doc links OK ({len(SOURCES)} sources scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check())
