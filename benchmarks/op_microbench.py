@@ -100,36 +100,102 @@ def _gemm_pipeline_records():
                                 dispatch.FUSED, m, k, n)))
 
         # q-in (pre-quantized activation, qflow dataflow): the quantize
-        # stage runs for the weight only — measure + model the cut.
-        def qin(xb, w, key):
-            return qmatmul(xb, w, key, NumericPolicy(kernel_mode="jnp"))
+        # stage runs for the weight only — measure + model the cut.  The
+        # fused row is TIMED through the real dispatch path
+        # (kernel_mode="fused" plans the iq kernel; interpret mode on
+        # CPU — wall µs are emulation cost, the bytes column is the model).
+        def qin(pol):
+            return jax.jit(lambda xb, w, key: qmatmul(xb, w, key, pol))
         xq = quantize(x, QuantConfig(8), kx)
         xb = BFP(xq.m, xq.e, xq.cfg, dequantize(xq))
-        us = time_op(jax.jit(qin), xb, w, KEY)
+        us = time_op(qin(NumericPolicy(kernel_mode="jnp")), xb, w, KEY)
         records.append(dict(op="qmatmul_qin", path="jnp", shape=shape, us=us,
                             bytes_moved=dispatch.bytes_moved(
                                 dispatch.JNP, m, k, n, kind="iq")))
+        us = time_op(qin(NumericPolicy(kernel_mode="fused")), xb, w, KEY)
         records.append(dict(op="qmatmul_qin", path="fused", shape=shape,
-                            us=None, modeled_only=True,
+                            us=us,
                             bytes_moved=dispatch.bytes_moved(
                                 dispatch.FUSED, m, k, n, kind="iq")))
 
         # fully pre-quantized (persistent weight currency, dispatch kind
         # "pp"): q-in activation x load-time-quantized weight — NO
         # quantize stage runs; the weight side pays one int8 read instead
-        # of f32 scan + quantizer + residual write.
+        # of f32 scan + quantizer + residual write.  Fused row timed the
+        # same way (the pp-planned ii kernel in interpret mode).
         wq_cl = quantize(wT, QuantConfig(8), kw)
         wb = weight_t(BFP(wq_cl.m, wq_cl.e, wq_cl.cfg, dequantize(wq_cl)))
-        def pp(xb, wb, key):
-            return qmatmul(xb, wb, key, NumericPolicy(kernel_mode="jnp"))
-        us = time_op(jax.jit(pp), xb, wb, KEY)
+        def pp(pol):
+            return jax.jit(lambda xb, wb, key: qmatmul(xb, wb, key, pol))
+        us = time_op(pp(NumericPolicy(kernel_mode="jnp")), xb, wb, KEY)
         records.append(dict(op="qmatmul_pp", path="jnp", shape=shape, us=us,
                             bytes_moved=dispatch.bytes_moved(
                                 dispatch.JNP, m, k, n, kind="pp")))
+        us = time_op(pp(NumericPolicy(kernel_mode="fused")), xb, wb, KEY)
         records.append(dict(op="qmatmul_pp", path="fused", shape=shape,
-                            us=None, modeled_only=True,
+                            us=us,
                             bytes_moved=dispatch.bytes_moved(
                                 dispatch.FUSED, m, k, n, kind="pp")))
+    return records
+
+
+# ---------------------------------------------------------------------------
+# fused flash attention: scan-of-GEMMs vs one-kernel pass (BENCH_kernels)
+# ---------------------------------------------------------------------------
+
+# (gs, t, d) per (batch · KV-head) slice; chunk is the scan path's KV chunk.
+ATTN_SHAPES = [(64, 256, 64), (128, 512, 64)]
+ATTN_CHUNK = 128
+DECODE_ATTN_SHAPE = (4, 256, 64)     # (g, T, hd): one decode step, GQA 4
+
+
+def _attention_records():
+    """Wall-clock + bytes rows for the attention op family: the lax.scan
+    pipeline (two dispatched GEMMs per KV chunk, jnp oracle on CPU) vs the
+    fused flash kernel (interpret mode), plus one qcache decode row pair.
+    The CI gate asserts fused bytes < scan bytes for every shape."""
+    import dataclasses as _dc
+
+    from repro.core.qops import qcache_quantize
+    from repro.models.attention import cache_decode_attention, chunked_attention
+
+    qf = _dc.replace(PAPER_INT8, qflow=True)
+    qff = _dc.replace(qf, kernel_mode="fused")
+    records = []
+    for gs, t, d in ATTN_SHAPES:
+        rng = np.random.RandomState(gs)
+        q = jnp.asarray(rng.randn(1, 1, gs, d).astype(np.float32))
+        k = jnp.asarray(rng.randn(1, 1, t, d).astype(np.float32))
+        v = jnp.asarray(rng.randn(1, 1, t, d).astype(np.float32))
+        shape = f"{gs}x{t}x{d}"
+        for path, pol in (("scan", qf), ("fused", qff)):
+            fn = jax.jit(lambda q, k, v, key, pol=pol: chunked_attention(
+                q, k, v, key, pol, chunk=ATTN_CHUNK))
+            us = time_op(fn, q, k, v, KEY, warmup=1, iters=3)
+            records.append(dict(
+                op="attn_prefill", path=path, shape=shape, us=us,
+                bytes_moved=dispatch.attention_bytes_moved(
+                    dispatch.FUSED if path == "fused" else "scan",
+                    gs, t, d, chunk=ATTN_CHUNK)))
+    g, t, d = DECODE_ATTN_SHAPE
+    rng = np.random.RandomState(7)
+    # one decode step: g grouped query heads (Hq=g, S=1) over one KV head
+    q1 = jnp.asarray(rng.randn(1, g, 1, d).astype(np.float32))
+    kc = jnp.asarray(rng.randn(1, 1, t, d).astype(np.float32))
+    vc = jnp.asarray(rng.randn(1, 1, t, d).astype(np.float32))
+    qc = _dc.replace(PAPER_INT8, qcache=True)
+    kq, vq = qcache_quantize(kc, qc), qcache_quantize(vc, qc)
+    shape = f"{g}x{t}x{d}"
+    for path, pol in (("scan", qc),
+                      ("fused", _dc.replace(qc, kernel_mode="fused"))):
+        fn = jax.jit(lambda q, pos, key, pol=pol: cache_decode_attention(
+            q, kq, vq, pos, key, pol))
+        us = time_op(fn, q1, jnp.int32(t - 1), KEY, warmup=1, iters=3)
+        records.append(dict(
+            op="attn_decode", path=path, shape=shape, us=us,
+            bytes_moved=dispatch.attention_bytes_moved(
+                dispatch.FUSED if path == "fused" else "scan",
+                g, t, d, op="attn_decode")))
     return records
 
 
@@ -264,6 +330,8 @@ def run():
 
     # kernel pipeline: fused vs unfused vs float, + BENCH_kernels.json
     records = _gemm_pipeline_records()
+    # attention family: scan-of-GEMMs vs the fused flash kernel
+    records += _attention_records()
     for r in records:
         row(f"{r['op']}_{r['path']}_{r['shape']}",
             "" if r["us"] is None else r["us"],

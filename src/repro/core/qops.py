@@ -33,12 +33,14 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..kernels import dispatch as kdispatch
+from ..kernels import fused_attention as kfattn
 from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_value, biased_exponent,
                   dequantize, pow2, quantize, quantize_cache, quantize_weight,
-                  scale_exponent)
+                  rounding_bits, scale_exponent)
 from .policy import NumericPolicy
 
 __all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract", "qrelu",
+           "qattention", "qcache_attention",
            "qcache_quantize", "qcache_prefill", "qcache_append",
            "qcache_qk", "qcache_pv"]
 
@@ -867,6 +869,153 @@ def qconv(x, w: jnp.ndarray, key: Optional[jax.Array] = None,
     else:
         w2 = jnp.moveaxis(w, 2, 0).reshape(cin * kh * kw_, cout)
     return qmatmul(patches, w2, key, policy, out_q=out_q)
+
+
+# ---------------------------------------------------------------------------
+# fused flash attention: QKᵀ→softmax→PV as ONE kernel launch per direction
+# (kernels.fused_attention, planned by kernels.dispatch.plan_attention).
+# Operands arrive as pre-quantized per-tensor BFPs (the qflow quantize-once
+# rule); gradients ride the float32 carriers exactly like the q-in GEMM
+# ops.  The custom_vjp saves only the operand mantissas and the two
+# per-row softmax stats — NOT the O(GS·T) probability mantissas the scan
+# path's per-chunk qbmm residuals store; the backward recomputes the
+# probabilities from the stats inside its own kernel (A.2-style, every
+# multiply an int8 GEMM).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(12, 13, 14, 15, 16))
+def _qattn(qm, qe, qg, km, ke, kg, vm, ve, vg, q_off, kv_len, key,
+           policy: NumericPolicy, s: int, causal: bool, window: int,
+           plan: "kdispatch.Decision"):
+    y, _ = _qattn_fwd(qm, qe, qg, km, ke, kg, vm, ve, vg, q_off, kv_len,
+                      key, policy, s, causal, window, plan)
+    return y
+
+
+def _qattn_fwd(qm, qe, qg, km, ke, kg, vm, ve, vg, q_off, kv_len, key,
+               policy: NumericPolicy, s: int, causal: bool, window: int,
+               plan: "kdispatch.Decision"):
+    lead = qm.shape[:-2]
+    gs, d = qm.shape[-2], qm.shape[-1]
+    t = km.shape[-2]
+    cfg = policy.fwd_cfg()
+    sr = cfg.stochastic
+    q3 = qm.reshape(-1, gs, d)
+    k3 = km.reshape(-1, t, d)
+    v3 = vm.reshape(-1, t, d)
+    rp = (rounding_bits(jax.random.fold_in(key, 0), (q3.shape[0], gs, t),
+                        cfg.rng) if sr else None)
+    y3, m3, l3 = kfattn.attn_fwd(
+        q3, k3, v3, rp, qe, ke, ve, q_off, kv_len,
+        p=cfg.p, s=s, bq=plan.bm, bt=plan.bt, causal=causal, window=window,
+        stochastic=sr, interpret=plan.interpret,
+        pallas=(plan.path == kdispatch.FUSED))
+    y = y3.reshape(*lead, gs, d)
+    res = (qm, qe, km, ke, vm, ve, m3, l3, y, q_off, kv_len,
+           jax.random.fold_in(key, 1))
+    return y, res
+
+
+def _qattn_bwd(policy: NumericPolicy, s: int, causal: bool, window: int,
+               plan: "kdispatch.Decision", res, gy):
+    qm, qe, km, ke, vm, ve, m3, l3, y, q_off, kv_len, kb = res
+    lead = qm.shape[:-2]
+    gs, d = qm.shape[-2], qm.shape[-1]
+    t = km.shape[-2]
+    # fused attention is a per-tensor op end to end: a per-block policy can
+    # still reach it when _cfg_for_dim fell back to per-tensor on the
+    # forward (block ∤ head_dim), so the backward's fresh quantizations
+    # (dO, pn, dS) follow the op's blocking, not the policy's.
+    cb = policy.bwd_cfg()
+    cfg_b = QuantConfig(cb.bits, PER_TENSOR, cb.stochastic, cb.rng)
+    kg, krs, krp = jax.random.split(kb, 3)
+    g3 = gy.reshape(-1, gs, d)
+    nbh = g3.shape[0]
+    # ONE fresh quantization of the upstream gradient (per-tensor, like the
+    # qbmm backward); probabilities are recomputed from (m, l) in-kernel.
+    gq = quantize(g3, cfg_b, kg)
+    delta = (gy * y).sum(-1, keepdims=True).reshape(-1, gs, 1)
+    plan_b = kdispatch.plan_attention(
+        "attn_bwd", gs, t, d, cfg_b, s=s, kind="ii",
+        kernel_mode=policy.kernel_mode,
+        autotune_measure=policy.kernel_autotune)
+    sr = cfg_b.stochastic
+    rs = rounding_bits(krs, (nbh, gs, t), cfg_b.rng) if sr else None
+    rp2 = rounding_bits(krp, (nbh, gs, t), cfg_b.rng) if sr else None
+    dq3, dk3, dv3 = kfattn.attn_bwd(
+        qm.reshape(-1, gs, d), gq.m, km.reshape(-1, t, d),
+        vm.reshape(-1, t, d), m3, l3, delta, rs, rp2,
+        qe, ke, ve, gq.e, q_off, kv_len,
+        p=cfg_b.p, s=s, bt=plan_b.bt or kdispatch.attn_block_t(t),
+        causal=causal, window=window, stochastic=sr,
+        interpret=plan_b.interpret,
+        pallas=(plan_b.path == kdispatch.FUSED))
+    dq = dq3.reshape(*lead, gs, d)
+    dk = dk3.reshape(*lead, t, d)
+    dv = dv3.reshape(*lead, t, d)
+    # gradients ride the float32 carriers (qg, kg, vg): the straight-
+    # through contract of every q-in op (docs/DATAFLOW.md).
+    return (None, None, dq, None, None, dk, None, None, dv, None, None,
+            None)
+
+
+_qattn.defvjp(_qattn_fwd, _qattn_bwd)
+
+
+def qattention(qb: BFP, kb: BFP, vb: BFP, q_off, kv_len,
+               key: jax.Array, policy: NumericPolicy, *, s: int,
+               causal: bool, window: int,
+               plan: "kdispatch.Decision") -> jnp.ndarray:
+    """Fused integer flash attention over pre-quantized per-tensor BFPs.
+
+    qb (*B, GS, D) is the grouped, pre-scaled query (quantized once —
+    g-major GQA layout with per-group length ``s``); kb/vb (*B, T, D) the
+    quantized K/V.  ``plan`` comes from ``kernels.dispatch.plan_attention``
+    (the caller only routes here when it chose the fused path).  Returns
+    f32 (*B, GS, D); dQ/dK/dV flow to the operands' float32 carriers.
+    """
+    assert qb.cfg.block == PER_TENSOR
+    return _qattn(qb.m, qb.e, qb.g, kb.m, kb.e, kb.g, vb.m, vb.e, vb.g,
+                  jnp.asarray(q_off, jnp.int32), jnp.asarray(kv_len, jnp.int32),
+                  key, policy, s, causal, window, plan)
+
+
+def qcache_attention(q, kq: BFP, vq: BFP, q_off, kv_len,
+                     key: Optional[jax.Array], policy: NumericPolicy, *,
+                     s: int, causal: bool, window: int,
+                     plan: "kdispatch.Decision") -> jnp.ndarray:
+    """Fused decode attention straight off int8 qcache rows (serving,
+    gradient-free): QKᵀ, softmax, the V-row exponent fold, p's single
+    quantization and PV run in ONE kernel — ``qcache_qk``/``qcache_pv``
+    without the two separate GEMM dispatches or the score/probability HBM
+    round-trip.  ``q`` is f32 (quantized per-tensor here, once) or an
+    already-quantized per-tensor BFP (qflow); kq/vq carry one exponent
+    per cache row.
+    """
+    lead = kq.m.shape[:-2]
+    t, d = kq.m.shape[-2], kq.m.shape[-1]
+    if isinstance(q, BFP):
+        qq = q
+    else:
+        cfg_q = QuantConfig(policy.fwd_bits, PER_TENSOR, policy.stochastic,
+                            policy.rng)
+        qq = quantize(lax.stop_gradient(q),
+                      cfg_q, None if key is None else
+                      jax.random.fold_in(key, 0))
+    gs = qq.m.shape[-2]
+    q3 = qq.m.reshape(-1, gs, d)
+    sr = policy.stochastic and key is not None
+    rp = (rounding_bits(jax.random.fold_in(key, 1), (q3.shape[0], gs, t),
+                        policy.rng) if sr else None)
+    y3 = kfattn.attn_decode(
+        q3, kq.m.reshape(-1, t, d), vq.m.reshape(-1, t, d),
+        kq.e.reshape(-1, t, 1), vq.e.reshape(-1, t, 1), rp, qq.e,
+        jnp.asarray(q_off, jnp.int32), jnp.asarray(kv_len, jnp.int32),
+        p=policy.fwd_bits - 1, s=s, causal=causal, window=window,
+        stochastic=sr, interpret=plan.interpret,
+        pallas=(plan.path == kdispatch.FUSED))
+    return y3.reshape(*lead, gs, d)
 
 
 # ---------------------------------------------------------------------------

@@ -1,24 +1,31 @@
 """Pallas TPU kernel layer for the integer training pipeline.
 
 Modules:
-  ``bfp_quant``     standalone shared-exponent int8 quantizer kernel.
-  ``int8_matmul``   standalone tiled int8 GEMM kernel (scale via SMEM).
-  ``fused_linear``  fused quantize -> int8 GEMM -> rescale pipeline
-                    (forward + both backward contraction variants).
-  ``dispatch``      shape-keyed routing between fused / unfused / jnp,
-                    used by ``core.qops``; decision introspection; the
-                    bytes-moved traffic model.
-  ``autotune``      shape-keyed block-size cache (JSON-persisted).
-  ``ops``           jit'd wrappers for the unfused building blocks.
-  ``ref``           pure-jnp oracles all kernels are tested against.
+  ``bfp_quant``       standalone shared-exponent int8 quantizer kernel.
+  ``int8_matmul``     standalone tiled int8 GEMM kernel (scale via SMEM).
+  ``fused_linear``    fused quantize -> int8 GEMM -> rescale pipeline
+                      (forward + both backward contraction variants).
+  ``fused_attention`` flash-style fused integer attention: QKᵀ → float
+                      online softmax → in-kernel p quantize → PV in one
+                      VMEM-resident pass (fwd, A.2 bwd, qcache decode).
+  ``dispatch``        shape-keyed routing between fused / unfused / jnp,
+                      used by ``core.qops``; decision introspection; the
+                      bytes-moved traffic models.
+  ``autotune``        shape-keyed block-size cache (JSON-persisted).
+  ``ops``             jit'd wrappers for the unfused building blocks.
+  ``ref``             pure-jnp oracles all kernels are tested against.
 
 See docs/KERNELS.md for the kernel contract.
 """
 
-from . import autotune, dispatch, fused_linear, ref  # noqa: F401
+from . import autotune, dispatch, fused_attention, fused_linear, ref  # noqa: F401
 from .bfp_quant import bfp_quantize_pallas  # noqa: F401
-from .dispatch import (FUSED, JNP, UNFUSED, Decision, bytes_moved,  # noqa: F401
+from .dispatch import (FUSED, JNP, UNFUSED, Decision,  # noqa: F401
+                       attention_bytes_moved, bytes_moved, plan_attention,
                        plan_contract, record_decisions)
+from .fused_attention import (fused_attn_bwd_pallas,  # noqa: F401
+                              fused_attn_decode_pallas,
+                              fused_attn_fwd_pallas)
 from .fused_linear import (fused_ii_pt_pallas, fused_qi_pt_pallas,  # noqa: F401
                            fused_qq_blk_pallas, fused_qq_pt_pallas)
 from .int8_matmul import int8_matmul_pallas  # noqa: F401

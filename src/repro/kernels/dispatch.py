@@ -70,8 +70,9 @@ from .int8_matmul import int8_matmul_pallas
 
 __all__ = [
     "FUSED", "UNFUSED", "JNP", "Decision", "plan_contract",
-    "record_decisions", "contract_qq", "contract_qi", "contract_iq",
-    "contract_ii", "contract_pp", "bytes_moved", "cache_operand_bytes",
+    "plan_attention", "record_decisions", "contract_qq", "contract_qi",
+    "contract_iq", "contract_ii", "contract_pp", "bytes_moved",
+    "attention_bytes_moved", "attn_block_t", "cache_operand_bytes",
     "DEFAULT_VMEM_BUDGET",
 ]
 
@@ -91,7 +92,7 @@ _INT8_SUBLANE = 32
 class Decision:
     """One routing decision, recorded per traced contraction."""
 
-    op: str            # e.g. "qmatmul_fwd", "qmatmul_dx", "qbmm_dw"
+    op: str            # e.g. "qmatmul_fwd", "qmatmul_dx", "attn_fwd"
     path: str          # FUSED | UNFUSED | JNP
     reason: str
     m: int
@@ -100,6 +101,7 @@ class Decision:
     bm: int = 0        # fused row-strip height (0 when not fused)
     interpret: bool = False
     kind: str = "qq"   # operand kind: qq | qi | iq | ii | pp
+    bt: int = 0        # fused-attention KV block size (attention ops only)
 
 
 _decision_log: Optional[List[Decision]] = None
@@ -249,6 +251,185 @@ def cache_operand_bytes(n_rows: int, row: int, *, quantized: bool,
     if rewritten:
         return 2 * f32 * n                       # f32 read + f32 write
     return (f32 + f32 + r8 + 1) * n              # scan + quantize + residual
+
+
+# ---------------------------------------------------------------------------
+# fused attention: geometry, residency, traffic model, planning
+# ---------------------------------------------------------------------------
+
+def attn_block_t(t: int) -> int:
+    """KV block size ``bt`` of the fused attention kernels for band length
+    ``t``: a lane multiple, small enough to keep several online-softmax
+    steps per band (the in-register tile is (bq, bt)).  ``bt`` is part of
+    the fused path's numerics (the per-row shared exponent of ``p`` spans
+    one block), so it is a pure function of the static shape — forward,
+    backward and the jnp mirrors all derive the same value."""
+    if t <= 1024:
+        return 128
+    if t <= 4096:
+        return 256
+    return 512
+
+
+def _attn_vmem_bytes(op: str, bq: int, gs: int, t: int, d: int, bt: int,
+                     stochastic: bool) -> int:
+    """Residency estimate for one fused-attention kernel instance.
+
+    ``attn_fwd``: one (bq, D) query strip + its (bq, T) p-rounding bits
+    double-buffered, K/V mantissas resident, ~6 f32 (bq, bt) score-chain
+    tiles in registers/VMEM.  ``attn_bwd``: Q-side (qm, gm, stats, dq)
+    resident, (bt, D) K/V strips + (GS, bt) rand strips double-buffered,
+    (GS, bt) score-chain tiles.  ``attn_decode``: everything resident,
+    one program, (GS, T) score tiles.
+    """
+    r8 = 4 if stochastic else 0
+    if op == "attn_bwd":
+        resident = 2 * gs * d + 3 * 4 * gs + 4 * gs * d
+        strip = 2 * bt * d + 2 * r8 * gs * bt + 2 * 4 * bt * d
+        tiles = 6 * 4 * gs * bt
+        return resident + 2 * strip + tiles
+    if op == "attn_decode":
+        return (gs * d + 2 * t * d + 2 * 4 * t + r8 * gs * t
+                + 4 * gs * d + 6 * 4 * gs * t)
+    strip = bq * d + r8 * bq * t + 4 * bq * d + 2 * 4 * bq
+    return 2 * strip + 2 * t * d + 6 * 4 * bq * bt
+
+
+def attention_bytes_moved(path: str, gs: int, t: int, d: int, *,
+                          chunk: int = 1024, stochastic: bool = True,
+                          op: str = "attn_fwd") -> int:
+    """Analytic HBM traffic of one attention forward, per (batch·KV-head)
+    slice: grouped queries (GS, D) against a band of T KV rows.
+
+    ``path="scan"`` (any non-fused spelling) is the ``lax.scan`` pipeline
+    of ``models.attention``: per KV chunk, the two separately-dispatched
+    integer GEMMs (QKᵀ fully-pre-quantized, PV quantize-p-fused — each at
+    the fused *GEMM* path's own best cost), PLUS the inter-GEMM round
+    trips the flash fusion deletes: the masked scores re-read by the
+    softmax, the float probabilities written for the PV quantizer, and
+    the online-softmax carry (m, l, acc) re-read + re-written every chunk.
+    ``path="fused"`` is one kernel: the query strip and K/V mantissas are
+    each fetched exactly once, the p rounding bits stream once, and only
+    the output + two row-stat vectors are written — scores and
+    probabilities never touch HBM.
+
+    ``op="attn_decode"`` swaps operand costs for the qcache decode shapes:
+    the cache mantissas pay one int8 read + one int32 exponent read per
+    row on both paths (the qcache contract), so the fused win there is
+    exactly the deleted score/probability round-trips and the second
+    kernel launch's operand re-reads.
+    """
+    f32, r8, i8 = 4, (4 if stochastic else 0), 1
+    fused_like = path == FUSED
+    if op == "attn_decode":
+        exp_rows = 2 * 4 * t
+        if fused_like:
+            return (i8 * gs * d + 2 * i8 * t * d + exp_rows + r8 * gs * t
+                    + f32 * gs * d)
+        qk = bytes_moved(FUSED, gs, d, t, stochastic=stochastic, kind="pp")
+        pv = bytes_moved(FUSED, gs, t, d, stochastic=stochastic, kind="qi")
+        return qk + pv + exp_rows + 2 * f32 * gs * t
+    if fused_like:
+        return (i8 * gs * d + 2 * i8 * t * d + r8 * gs * t
+                + f32 * gs * d + 2 * f32 * gs)
+    c = min(chunk, t)
+    nc = math.ceil(t / c)
+    per_chunk = (bytes_moved(FUSED, gs, d, c, stochastic=stochastic,
+                             kind="pp")
+                 + bytes_moved(FUSED, gs, c, d, stochastic=stochastic,
+                               kind="qi")
+                 + 2 * f32 * gs * c                  # sck re-read, p write
+                 + 2 * f32 * (gs * d + 2 * gs))      # m/l/acc carry
+    return nc * per_chunk
+
+
+def _make_attn_bench(gs: int, t: int, d: int, cfg: QuantConfig, s: int,
+                     bt: int, interpret: bool):
+    """bench(bq) -> µs over synthetic int8 operands (attention autotune)."""
+    from .fused_attention import fused_attn_fwd_pallas
+
+    def bench(bq: int) -> float:
+        rng = np.random.RandomState(0)
+        gsp = _round_up(max(gs, 1), bq)
+        tp = _round_up(t, bt)
+        dp = _round_up(d, _LANE)
+        qm = jnp.asarray(rng.randint(-127, 128, (gsp, dp), np.int8))
+        km = jnp.asarray(rng.randint(-127, 128, (tp, dp), np.int8))
+        vm = jnp.asarray(rng.randint(-127, 128, (tp, dp), np.int8))
+        rp = (jnp.asarray(rng.randint(0, 2 ** 32, (gsp, tp), np.uint32))
+              if cfg.stochastic else None)
+        e = jnp.int32(130)
+
+        def fn():
+            return jax.block_until_ready(fused_attn_fwd_pallas(
+                qm, km, vm, rp, e, e, e, jnp.int32(0), jnp.int32(t),
+                p=cfg.p, s=s, bq=bq, bt=bt, causal=True, window=0,
+                stochastic=cfg.stochastic, interpret=interpret))
+
+        return autotune.time_call_us(fn)
+
+    return bench
+
+
+def plan_attention(op: str, gs: int, t: int, d: int, cfg: QuantConfig, *,
+                   s: int, kind: str = "pp", kernel_mode: str = "auto",
+                   backend: Optional[str] = None,
+                   vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                   autotune_measure: bool = False) -> Decision:
+    """Choose the execution path for one fused-attention op.
+
+    ``gs`` = grouped query rows (g·S per KV head), ``t`` = KV band length,
+    ``d`` = head dim, ``s`` = per-group query length (GQA row layout).
+    ``op`` ∈ {"attn_fwd", "attn_bwd", "attn_decode"}; ``kind`` states the
+    query operand ("pp": pre-quantized q-in mantissas, "qi": fresh float
+    quantized before the kernel).  FUSED means the flash-style Pallas
+    kernel of ``kernels.fused_attention``; JNP means the caller keeps the
+    established ``lax.scan``-of-GEMMs path (there is no unfused middle
+    pipeline for attention).  Decision.bm carries the autotuned query
+    row-strip ``bq``, Decision.bt the KV block size.
+    """
+    backend = backend or jax.default_backend()
+    interpret = backend != "tpu"
+
+    def decide(path, reason, bm=0, bt=0):
+        return _record(Decision(op, path, reason, gs, d, t, bm, interpret,
+                                kind, bt))
+
+    if kernel_mode not in ("auto", "fused", "unfused", "jnp"):
+        raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
+    if kernel_mode == "jnp":
+        return decide(JNP, "kernel_mode=jnp")
+    if kernel_mode == "unfused":
+        return decide(JNP, "attention has no unfused pipeline")
+    if cfg.bits != 8:
+        return decide(JNP, f"bits={cfg.bits} (kernels are int8-only)")
+    if cfg.block != PER_TENSOR:
+        return decide(JNP, "fused attention is per-tensor only")
+    if kernel_mode == "auto" and interpret:
+        return decide(JNP, f"auto keeps the scan path on backend={backend}")
+    bt = attn_block_t(t)
+    tp = _round_up(t, bt)
+    dp = _round_up(d, _LANE)
+    if op in ("attn_bwd", "attn_decode"):
+        gsp = _round_up(gs, _INT8_SUBLANE)
+        if _attn_vmem_bytes(op, 0, gsp, tp, dp, bt,
+                            cfg.stochastic) <= vmem_budget:
+            return decide(FUSED, "fused attention fits VMEM budget", bt=bt)
+        return decide(JNP, f"no residency fits vmem_budget={vmem_budget}")
+
+    def fits(bq):
+        return _attn_vmem_bytes(op, bq, _round_up(gs, bq), tp, dp, bt,
+                                cfg.stochastic) <= vmem_budget
+
+    key = autotune.shape_key(f"attn_{kind}", gs, d, t, cfg.bits, 0, backend)
+    measure = ((autotune_measure or autotune.autotune_enabled_by_env())
+               and backend == jax.default_backend())
+    bench = (_make_attn_bench(gs, t, d, cfg, s, bt, interpret)
+             if measure else None)
+    bq = autotune.select_bm(key, gs, fits, measure=measure, bench=bench)
+    if bq:
+        return decide(FUSED, "fused attention fits VMEM budget", bq, bt)
+    return decide(JNP, f"no bq candidate fits vmem_budget={vmem_budget}")
 
 
 # ---------------------------------------------------------------------------

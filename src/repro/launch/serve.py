@@ -132,6 +132,57 @@ def cache_traffic_report(cfg, policy, batch: int, prompt_len: int,
     return out
 
 
+def attention_traffic_report(cfg, policy, batch: int, prompt_len: int,
+                             max_len: int) -> dict:
+    """Analytic HBM traffic of the attention contractions themselves — the
+    op family the fused flash kernel owns (docs/KERNELS.md §Fused
+    attention).  Per phase: the ``lax.scan`` pipeline (two dispatched
+    GEMMs per KV chunk plus the score/probability round-trips) vs the
+    fused one-kernel pass, summed over batch · KV-heads · layers, plus the
+    Decision ``plan_attention`` would record for the deployment target
+    (backend="tpu") — op, kind, path and the (bq, bt) tile geometry."""
+    from ..core.bfp import PER_TENSOR, QuantConfig
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    n_bh = batch * cfg.n_kv_heads * cfg.n_layers
+    cfg8 = QuantConfig(policy.fwd_bits, PER_TENSOR, policy.stochastic,
+                       policy.rng)
+    out = {}
+    # the fused *prefill* needs the qflow quantize-once operands (the
+    # models' _fused_attn_eligible gate); fused decode takes a fresh
+    # float query too (kind "qi"), so only prefill is qflow-conditioned.
+    phases = (
+        ("prefill", "attn_fwd", "pp", g * prompt_len, prompt_len,
+         prompt_len, policy.qflow),
+        ("decode", "attn_decode", "pp" if policy.qflow else "qi", g,
+         min(cfg.local_window, max_len) if cfg.local_window else max_len,
+         1, True),
+    )
+    chunk = cfg.attn_chunk or 1024
+    for phase, op, kind, gs, t, s, eligible in phases:
+        scan_b = n_bh * dispatch.attention_bytes_moved(
+            "scan", gs, t, cfg.hd, chunk=chunk, op=op)
+        fused_b = n_bh * dispatch.attention_bytes_moved(
+            dispatch.FUSED, gs, t, cfg.hd, chunk=chunk, op=op)
+        if eligible:
+            plan = dispatch.plan_attention(op, gs, t, cfg.hd, cfg8, s=s,
+                                           kind=kind, backend="tpu",
+                                           kernel_mode=policy.kernel_mode)
+            decision = {"op": plan.op, "kind": plan.kind,
+                        "path": plan.path, "bq": plan.bm, "bt": plan.bt,
+                        "reason": plan.reason}
+        else:
+            decision = {"op": op, "kind": kind, "path": "scan",
+                        "bq": 0, "bt": 0,
+                        "reason": "fused prefill needs policy.qflow "
+                                  "(quantize-once Q/K/V operands)"}
+        out[phase] = {
+            "scan_bytes": scan_b, "fused_bytes": fused_b,
+            "reduction_pct": round(100.0 * (1 - fused_b / scan_b), 2),
+            "decision": decision}
+    return out
+
+
 def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
           gen: int = 16, policy_name: str = "int8", seed: int = 0,
           qweights: bool = True, qcache: bool = False, quiet: bool = False):
@@ -194,6 +245,9 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32
     if policy.enabled:
         stats["cache_traffic"] = cache_traffic_report(cfg, policy, batch,
                                                       prompt_len, max_len)
+    if policy.enabled and cfg.family in ("dense", "vlm", "moe"):
+        stats["attn_traffic"] = attention_traffic_report(
+            cfg, policy, batch, prompt_len, max_len)
     if not quiet:
         print(f"arch={cfg.name} policy={policy_name} batch={batch} "
               f"qweights={policy.qweights_on} qcache={policy.qcache_on}")
@@ -221,6 +275,16 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32
                       f"{r['float_cache_bytes'] / 1e6:.2f} MB -> qcache "
                       f"{r['qcache_bytes'] / 1e6:.2f} MB "
                       f"(-{r['reduction_pct']}%)")
+        at = stats.get("attn_traffic")
+        if at:
+            for phase, r in at.items():
+                d = r["decision"]
+                print(f"attention {phase} traffic: scan "
+                      f"{r['scan_bytes'] / 1e6:.2f} MB -> fused "
+                      f"{r['fused_bytes'] / 1e6:.2f} MB "
+                      f"(-{r['reduction_pct']}%)  "
+                      f"[{d['op']}/{d['kind']} -> {d['path']} "
+                      f"bq={d['bq']} bt={d['bt']}]")
     return np.stack(out_tokens, axis=1), stats
 
 

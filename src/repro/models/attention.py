@@ -29,7 +29,9 @@ import dataclasses
 
 from ..core import (BFP, PER_TENSOR, NumericPolicy, qbmm, qcache_pv,
                     qcache_qk, quantize)
-from ..core.qops import _cfg_for_dim, qdq_st
+from ..core.bfp import QuantConfig
+from ..core.qops import _cfg_for_dim, qattention, qcache_attention, qdq_st
+from ..kernels import dispatch as kdispatch
 
 __all__ = ["chunked_attention", "local_attention", "decode_attention",
            "cache_decode_attention"]
@@ -52,6 +54,18 @@ def _ungroup(o: jnp.ndarray, hq: int) -> jnp.ndarray:
 def _qpos(s: int, g: int, offset) -> jnp.ndarray:
     """Positions of grouped queries (g-major flattening)."""
     return jnp.tile(jnp.arange(s, dtype=jnp.int32), g) + offset
+
+
+def _fused_attn_eligible(policy: NumericPolicy, key) -> bool:
+    """Whether this call may even ask for the fused flash-attention path:
+    the qflow quantize-once rule must hold (Q/K/V arrive as per-tensor
+    int8 BFPs) and both directions must be int8 (the kernels contract one
+    mantissa width).  The actual routing is ``dispatch.plan_attention``
+    under ``policy.kernel_mode`` — off-TPU ``auto`` always keeps the scan
+    path, so the default pipeline is bit-identical to the pre-fused repo.
+    """
+    return (policy.enabled and policy.qflow and key is not None
+            and policy.fwd_bits == 8 and policy.bwd_bits == 8)
 
 
 def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -98,6 +112,25 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             # along the chunk axis (V): per-tensor only.
             kq = quantize(k, cfg_d, jax.random.fold_in(key, 0x72))
             vq = quantize(v, cfg_d, jax.random.fold_in(key, 0x73))
+            # fused flash path: the same quantize-once operands through ONE
+            # Pallas kernel per direction instead of the chunk scan of
+            # dispatched GEMMs (kernels.fused_attention; routed by
+            # plan_attention under policy.kernel_mode — off-TPU "auto"
+            # never takes it, keeping this path bit-identical to the
+            # pre-fused pipeline).
+            if _fused_attn_eligible(policy, key):
+                plan = kdispatch.plan_attention(
+                    "attn_fwd", g * s, t, d, cfg_d, s=s, kind="pp",
+                    kernel_mode=policy.kernel_mode,
+                    autotune_measure=policy.kernel_autotune)
+                if plan.path == kdispatch.FUSED:
+                    o = qattention(
+                        qg_b, BFP(kq.m, kq.e, cfg_d, k),
+                        BFP(vq.m, vq.e, cfg_d, v), q_offset,
+                        t if kv_len is None else kv_len,
+                        jax.random.fold_in(key, 0x74), policy, s=s,
+                        causal=causal, window=window, plan=plan)
+                    return _ungroup(o, hq)
     elif policy.enabled and policy.stochastic and n_chunks > 1 and key is not None:
         cfgf = policy.fwd_cfg()
         qg = qdq_st(qg, jax.random.fold_in(key, 0x71), cfgf)
@@ -162,6 +195,20 @@ def local_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     if s != t or s % window:
         return chunked_attention(q, k, v, key, policy, causal=True,
                                  window=window, scale=scale)
+    if _fused_attn_eligible(policy, key):
+        cfg_d = _cfg_for_dim(policy.fwd_cfg(), d)
+        if cfg_d.block == PER_TENSOR:
+            plan = kdispatch.plan_attention(
+                "attn_fwd", (hq // n_kv) * s, t, d, cfg_d, s=s, kind="pp",
+                kernel_mode=policy.kernel_mode,
+                autotune_measure=policy.kernel_autotune)
+            if plan.path == kdispatch.FUSED:
+                # the band mask (causal ∧ qpos − kpos < w) IS the chunked
+                # mask; the fused kernel skips fully-masked KV blocks per
+                # row strip, so this stays O(S·window) work.  Delegating
+                # re-plans the identical decision inside chunked_attention.
+                return chunked_attention(q, k, v, key, policy, causal=True,
+                                         window=window, scale=scale)
     w = window
     nb = s // w
     g = hq // n_kv
@@ -237,6 +284,28 @@ def cache_decode_attention(q: jnp.ndarray, kq: BFP, vq: BFP, pos,
         # pre-quantized (kind "pp"), mirroring the qflow chunk path.
         qg = quantize(qg, _cfg_for_dim(policy.fwd_cfg(), d),
                       jax.random.fold_in(key, 0x71))
+    if policy.enabled and policy.fwd_bits == 8 \
+            and policy.block == PER_TENSOR and (
+            not isinstance(qg, BFP) or qg.cfg.block == PER_TENSOR):
+        # per-block policies stay on the scan path: its qcache_qk
+        # quantizes a fresh Q on the policy's per-block grid, which the
+        # fused kernel (per-tensor only) cannot reproduce.
+        # fused decode: QKᵀ + softmax + exponent folds + PV in ONE kernel
+        # consuming the cache row mantissas and per-row exponents directly
+        # (kernels.fused_attention.attn_decode) — no separate qcache_qk /
+        # qcache_pv GEMM dispatches, no score/probability HBM round-trip.
+        cfg_q = QuantConfig(policy.fwd_bits, PER_TENSOR, policy.stochastic,
+                            policy.rng)
+        plan = kdispatch.plan_attention(
+            "attn_decode", g * s, t, d, cfg_q, s=s,
+            kind="pp" if isinstance(qg, BFP) else "qi",
+            kernel_mode=policy.kernel_mode,
+            autotune_measure=policy.kernel_autotune)
+        if plan.path == kdispatch.FUSED:
+            o = qcache_attention(qg, kq, vq, q_offset, t, key, policy,
+                                 s=s, causal=causal, window=window,
+                                 plan=plan)
+            return _ungroup(o, hq)
     kqk = None if key is None else jax.random.fold_in(key, 0)
     sck = qcache_qk(qg, kq, kqk, policy)                 # (B, Hkv, gS, T)
     kpos = jnp.arange(t, dtype=jnp.int32)

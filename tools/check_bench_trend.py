@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Gate the BENCH_kernels.json perf trail against the committed baseline.
+
+Compares a freshly-emitted ``BENCH_kernels.json`` (written by
+``benchmarks/op_microbench.py``) against the baseline committed in git and
+fails when the fused-path story regresses:
+
+  * every baseline ``path == "fused"`` row must still exist in the fresh
+    file (op + shape matched) — fused coverage can only grow;
+  * a fused row's analytic ``bytes_moved`` may not exceed its baseline by
+    more than ``--max-regression`` percent (default 20) — the traffic
+    model is the tracked perf claim, so a model change that silently
+    inflates fused traffic fails the build;
+  * a fused row that was *timed* in the baseline may not fall back to
+    ``modeled_only`` (``us: null``) — once measured, always measured;
+  * within the fresh file, every fused attention row must move strictly
+    fewer bytes than its scan-path twin (the ISSUE-5 acceptance gate),
+    and every fused GEMM row strictly fewer than its unfused/jnp twin.
+
+Usage (CI runs the first form after snapshotting the committed file)::
+
+    python tools/check_bench_trend.py --baseline /tmp/base.json \
+        --fresh BENCH_kernels.json
+    python tools/check_bench_trend.py        # baseline from git show HEAD
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FRESH_DEFAULT = os.path.join(ROOT, "BENCH_kernels.json")
+
+# per (op) the non-fused twin path a fused row must strictly beat
+_TWIN = {"attn_prefill": "scan", "attn_decode": "scan",
+         "qmatmul": "unfused", "qmatmul_qin": "jnp", "qmatmul_pp": "jnp"}
+
+
+def _load_baseline(path):
+    if path:
+        with open(path) as f:
+            return json.load(f)
+    out = subprocess.run(["git", "show", "HEAD:BENCH_kernels.json"],
+                         cwd=ROOT, capture_output=True, text=True)
+    if out.returncode != 0:
+        raise SystemExit(f"cannot read committed baseline: {out.stderr}")
+    return json.loads(out.stdout)
+
+
+def _index(rows):
+    return {(r["op"], r["path"], r["shape"]): r for r in rows}
+
+
+def check(baseline, fresh, max_regression_pct):
+    errors = []
+    base_ix, fresh_ix = _index(baseline), _index(fresh)
+    for (op, path, shape), b in base_ix.items():
+        if path != "fused":
+            continue
+        f = fresh_ix.get((op, path, shape))
+        if f is None:
+            errors.append(f"fused row dropped: {op} {shape}")
+            continue
+        limit = b["bytes_moved"] * (1 + max_regression_pct / 100.0)
+        if f["bytes_moved"] > limit:
+            errors.append(
+                f"bytes regression: {op} {shape} "
+                f"{b['bytes_moved']} -> {f['bytes_moved']} "
+                f"(> +{max_regression_pct}%)")
+        if b.get("us") is not None and f.get("us") is None:
+            errors.append(f"timed fused row became modeled_only: {op} {shape}")
+    for (op, path, shape), f in fresh_ix.items():
+        if path != "fused" or op not in _TWIN:
+            continue
+        twin = fresh_ix.get((op, _TWIN[op], shape))
+        if twin is None:
+            # a missing comparison row would silently disable this gate
+            errors.append(f"{_TWIN[op]} twin row missing: {op} {shape}")
+        elif f["bytes_moved"] >= twin["bytes_moved"]:
+            errors.append(
+                f"fused not below {_TWIN[op]}: {op} {shape} "
+                f"{f['bytes_moved']} >= {twin['bytes_moved']}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON path (default: git show "
+                         "HEAD:BENCH_kernels.json)")
+    ap.add_argument("--fresh", default=FRESH_DEFAULT)
+    ap.add_argument("--max-regression", type=float, default=20.0,
+                    help="max allowed fused bytes_moved growth, percent")
+    args = ap.parse_args()
+    baseline = _load_baseline(args.baseline)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    errors = check(baseline, fresh, args.max_regression)
+    n_fused = sum(1 for r in fresh if r["path"] == "fused")
+    if errors:
+        for e in errors:
+            print(f"BENCH TREND FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"bench trend OK: {n_fused} fused rows checked against "
+          f"{len(baseline)} baseline records "
+          f"(limit +{args.max_regression}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
