@@ -39,6 +39,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         self._pending: List[threading.Thread] = []
+        self._write_lock = threading.Lock()
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -57,6 +58,13 @@ class CheckpointManager:
 
     def _write(self, step: int, leaves: List[np.ndarray], treedef: str,
                extra: Optional[Dict]) -> None:
+        # serialized: two async saves of the same step share a tmp dir, and
+        # an unserialized pair would rmtree each other mid-write
+        with self._write_lock:
+            self._write_locked(step, leaves, treedef, extra)
+
+    def _write_locked(self, step: int, leaves: List[np.ndarray], treedef: str,
+                      extra: Optional[Dict]) -> None:
         tmp = os.path.join(self.dir, f"step_{step}.tmp")
         final = os.path.join(self.dir, f"step_{step}")
         shutil.rmtree(tmp, ignore_errors=True)
@@ -64,14 +72,41 @@ class CheckpointManager:
         meta = {"step": step, "treedef": treedef, "n_leaves": len(leaves),
                 "leaves": [], "extra": extra or {}}
         for i, a in enumerate(leaves):
-            np.save(os.path.join(tmp, f"leaf_{i}.npy"), a)
+            self._fsync_write(os.path.join(tmp, f"leaf_{i}.npy"),
+                              lambda f, a=a: np.save(f, a))
             meta["leaves"].append({"shape": list(a.shape), "dtype": str(a.dtype),
                                    "crc32": _crc(a)})
-        with open(os.path.join(tmp, "META.json"), "w") as f:
-            json.dump(meta, f)
+        self._fsync_write(os.path.join(tmp, "META.json"),
+                          lambda f: f.write(json.dumps(meta).encode()))
+        # Durable atomic commit: every byte of the tmp dir is on disk
+        # (fsync'd above) before the rename publishes it, and the parent
+        # directory entry is fsync'd after — a crash leaves either the old
+        # state or the complete new step, never a torn checkpoint.
+        self._fsync_dir(tmp)
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)                       # atomic commit
+        self._fsync_dir(self.dir)
         self._gc()
+
+    @staticmethod
+    def _fsync_write(path: str, write) -> None:
+        with open(path, "wb") as f:
+            write(f)
+            f.flush()
+            os.fsync(f.fileno())
+
+    @staticmethod
+    def _fsync_dir(path: str) -> None:
+        try:
+            fd = os.open(path, os.O_RDONLY)
+        except OSError:
+            return                  # e.g. platforms without dir fds
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
 
     def wait(self) -> None:
         """Ready-fence: block until every async write has committed."""
@@ -133,8 +168,39 @@ class CheckpointManager:
                        else jax.numpy.asarray(a))
         return jax.tree_util.tree_unflatten(treedef, out)
 
+    def verify(self, step: int) -> bool:
+        """Integrity check without materializing arrays on device: META
+        parses, every leaf file exists, every stored CRC32 matches."""
+        path = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(path, "META.json")) as f:
+                meta = json.load(f)
+            for i, info in enumerate(meta["leaves"]):
+                a = np.load(os.path.join(path, f"leaf_{i}.npy"))
+                if _crc(a) != info["crc32"]:
+                    return False
+            return len(meta["leaves"]) == meta["n_leaves"]
+        except (OSError, ValueError, KeyError):
+            return False
+
     def restore_latest(self, template: Any, shardings=None):
-        step = self.latest_step()
-        if step is None:
+        """Restore the newest *intact* checkpoint.
+
+        A corrupt or incomplete latest step (bit-rotted leaf, missing
+        file, torn META) is skipped — with a warning — in favor of the
+        newest older step that restores cleanly; direct :meth:`restore`
+        keeps raising so corruption is never silently read.  Raises
+        ``IOError`` only when every stored step is damaged.
+        """
+        steps = self.all_steps()
+        if not steps:
             return None, None
-        return step, self.restore(step, template, shardings)
+        failures = []
+        for step in reversed(steps):
+            try:
+                return step, self.restore(step, template, shardings)
+            except (OSError, ValueError, KeyError) as err:
+                failures.append(f"step {step}: {err}")
+                print(f"checkpoint step {step} is damaged, trying older: "
+                      f"{err}")
+        raise IOError("no intact checkpoint found: " + "; ".join(failures))

@@ -14,6 +14,7 @@ from .integer_sgd import (IntSGDState, derive_qweights, integer_sgd_init,
                           integer_sgd_step, master_params_f32,
                           quantize_weights_once, qweight_grads)
 from .baseline_quant import uniform_qmatmul, uniform_quantize
+from .health import bfp_leaf_stats, bfp_tree_stats, health_report
 
 __all__ = [
     "BFP", "PER_TENSOR", "QuantConfig", "bfp_from_fx", "bfp_value",
@@ -30,4 +31,5 @@ __all__ = [
     "IntSGDState", "integer_sgd_init", "integer_sgd_step", "master_params_f32",
     "derive_qweights", "quantize_weights_once", "qweight_grads",
     "uniform_qmatmul", "uniform_quantize",
+    "health_report", "bfp_leaf_stats", "bfp_tree_stats",
 ]

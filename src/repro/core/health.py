@@ -1,0 +1,180 @@
+"""Numeric-health sentinel: in-step observation of the integer pipeline.
+
+The paper's central claim is that the integer pipeline holds the float
+loss trajectory *without* gradient clipping or distribution adjustment —
+which means its production failure modes are silent: int8 mantissa
+saturation biases every GEMM, an exponent blow-up turns the int16 masters
+into Inf at dequantize, and a NaN on the float32 gradient carrier corrupts
+the masters with no guard to catch it (NITI and WAGE both report that
+overflow/saturation handling is the make-or-break detail of integer
+training).  This module computes a :func:`health_report` — a plain-dict
+pytree of scalars, cheap enough to ride inside the jitted train step under
+the ``NumericPolicy.health`` gate — that the training supervisor
+(``launch.supervisor``) checks against guard thresholds every step.
+
+Metrics (all read-only observations; computing them never perturbs the
+state update — docs/ROBUSTNESS.md has the full definitions):
+
+  * ``sat8``        fraction of master elements that saturate the int8
+                    forward narrow: ``|m| >= (2^7 - 1) << shift`` with
+                    ``shift = max(bitlen(max|m|) - 7, 0)`` — the integer
+                    twin of ``derive_qweights``'s CLZ narrow, so the metric
+                    is meaningful with or without ``policy.qweights``.
+  * ``headroom_bits`` bits between the master's largest representable
+                    magnitude (``2^(E + p)`` for scale exponent E) and the
+                    float32 overflow ceiling (2^127).  Healthy O(1)
+                    weights sit near 127; a corrupted or diverging
+                    exponent drives it toward 0 (Inf at dequantize).
+  * ``exp_top``     ``E + p`` itself, per group — the supervisor holds the
+                    first report as a running reference and trips on
+                    drift (weights silently growing/shrinking by 2^k).
+  * ``nonfinite``   count of NaN/Inf values on the float32 gradient
+                    carriers feeding the master update, plus a loss flag.
+
+Aggregation is per layer group (the first key of each master's tree path:
+``layers``, ``embed``, ...), with tree-wide worst-case scalars at the top
+level so the supervisor's guard check is O(1) host transfers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .bfp import BFP, bit_length, scale_exponent
+
+__all__ = ["health_report", "bfp_leaf_stats", "bfp_tree_stats",
+           "INT8_SAT_P"]
+
+# Magnitude bits of the int8 forward narrow the saturation metric models.
+INT8_SAT_P = 7
+
+_F32_MAX_EXP = 127
+
+
+def _is_bfp(x) -> bool:
+    return isinstance(x, BFP)
+
+
+def _group_of(path) -> str:
+    """Layer group of a tree path: its first dict key (else 'params')."""
+    for entry in path:
+        name = getattr(entry, "key", None)
+        if name is None:
+            name = getattr(entry, "name", None)
+        if name is not None:
+            return str(name)
+    return "params"
+
+
+def _sat8_of_master(m: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of elements saturating a p=7 integer narrow of ``m``.
+
+    Integer-only: the narrow shift is ``max(bitlen(max|m|) - 7, 0)`` (the
+    ``derive_qweights`` CLZ rule); an element saturates when its magnitude
+    reaches the top narrow bucket ``(2^7 - 1) << shift``.
+    """
+    mag = jnp.abs(m.astype(jnp.int32))
+    shift = jnp.maximum(bit_length(jnp.max(mag)) - INT8_SAT_P, 0)
+    lim = jnp.left_shift(jnp.int32((1 << INT8_SAT_P) - 1), shift)
+    return jnp.mean((mag >= lim).astype(jnp.float32))
+
+
+def _exp_top(master: BFP) -> jnp.ndarray:
+    """Exponent of the master's largest representable magnitude:
+    ``E + p`` with E the (max, for stacked leaves) scale exponent."""
+    e = scale_exponent(master.e, master.cfg)
+    return jnp.max(e).astype(jnp.int32) + (master.cfg.bits - 1)
+
+
+def _nonfinite_count(g) -> jnp.ndarray:
+    x = jnp.asarray(g)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.int32(0)
+    return jnp.sum(~jnp.isfinite(x)).astype(jnp.int32)
+
+
+def health_report(masters, grads=None, loss=None) -> Dict[str, Any]:
+    """Compute the per-step numeric-health report.
+
+    ``masters`` is a pytree of BFP leaves (``IntSGDState.masters``);
+    ``grads`` the float32 gradient(-carrier) tree of the same step (may be
+    ``None`` for serving-side reports); ``loss`` the scalar step loss.
+
+    Returns a plain-dict pytree (jit-transparent, checkpoint-friendly)::
+
+        {"groups": {g: {"sat8", "headroom_bits", "exp_top", "nonfinite"}},
+         "max_sat8", "min_headroom_bits", "nonfinite_grads", "loss_finite"}
+
+    Group metrics are worst-case over the group's leaves; top-level
+    scalars are worst-case over groups (one host transfer decides whether
+    any guard tripped).
+    """
+    leaves = jax.tree_util.tree_leaves_with_path(masters, is_leaf=_is_bfp)
+    groups: Dict[str, Dict[str, jnp.ndarray]] = {}
+    for path, leaf in leaves:
+        if not _is_bfp(leaf):
+            continue
+        g = _group_of(path)
+        sat = _sat8_of_master(leaf.m)
+        top = _exp_top(leaf)
+        head = (jnp.int32(_F32_MAX_EXP) - top).astype(jnp.int32)
+        cur = groups.get(g)
+        if cur is None:
+            groups[g] = {"sat8": sat, "headroom_bits": head, "exp_top": top,
+                         "nonfinite": jnp.int32(0)}
+        else:
+            cur["sat8"] = jnp.maximum(cur["sat8"], sat)
+            cur["headroom_bits"] = jnp.minimum(cur["headroom_bits"], head)
+            cur["exp_top"] = jnp.maximum(cur["exp_top"], top)
+    if grads is not None:
+        for path, g_leaf in jax.tree_util.tree_leaves_with_path(grads):
+            g = _group_of(path)
+            if g in groups:
+                groups[g]["nonfinite"] = (groups[g]["nonfinite"]
+                                          + _nonfinite_count(g_leaf))
+    report: Dict[str, Any] = {"groups": groups}
+    if groups:
+        report["max_sat8"] = jnp.stack(
+            [v["sat8"] for v in groups.values()]).max()
+        report["min_headroom_bits"] = jnp.stack(
+            [v["headroom_bits"] for v in groups.values()]).min()
+        report["nonfinite_grads"] = jnp.stack(
+            [v["nonfinite"] for v in groups.values()]).sum()
+    else:
+        report["max_sat8"] = jnp.float32(0)
+        report["min_headroom_bits"] = jnp.int32(_F32_MAX_EXP)
+        report["nonfinite_grads"] = jnp.int32(0)
+    report["loss_finite"] = (jnp.isfinite(jnp.asarray(loss))
+                             if loss is not None else jnp.bool_(True))
+    return report
+
+
+# ---------------------------------------------------------------------------
+# serving-side saturation stats (launch/serve.py --health)
+# ---------------------------------------------------------------------------
+
+def bfp_leaf_stats(q: BFP) -> Dict[str, float]:
+    """Host-side saturation/exponent stats of one quantized leaf."""
+    m = jnp.abs(q.m.astype(jnp.int32))
+    lim = (1 << (q.cfg.bits - 1)) - 1
+    e = scale_exponent(q.e, q.cfg)
+    return {"bits": q.cfg.bits,
+            "sat_rate": float(jnp.mean((m >= lim).astype(jnp.float32))),
+            "zero_rate": float(jnp.mean((m == 0).astype(jnp.float32))),
+            "exp_min": int(jnp.min(e)), "exp_max": int(jnp.max(e))}
+
+
+def bfp_tree_stats(tree, loss: Optional[Any] = None) -> Dict[str, Dict]:
+    """Per-leaf :func:`bfp_leaf_stats` over every BFP leaf of ``tree``
+    (quantized serving weights, a qcache tree), keyed by joined path."""
+    out: Dict[str, Dict] = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree,
+                                                          is_leaf=_is_bfp):
+        if _is_bfp(leaf):
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            out[name] = bfp_leaf_stats(leaf)
+    return out

@@ -147,6 +147,17 @@ class NumericPolicy:
     # and persist to the JSON cache (kernels.autotune); False uses the
     # cache when present, else a deterministic heuristic.
     kernel_autotune: bool = False
+    # health: compute a per-step numeric-health report (core.health) inside
+    # the train step — int8 saturation rate of the masters' forward narrow,
+    # float32-overflow headroom of the master scale exponents, and NaN/Inf
+    # flags on the gradient carriers — consumed by the training supervisor
+    # (launch.supervisor) to trigger rollback before silent corruption
+    # spreads (docs/ROBUSTNESS.md).  Off (default): the step computes and
+    # returns exactly what it always did — bit-identical to the pre-health
+    # pipeline (spec-pinned against committed goldens).  The report is a
+    # read-only observation; turning it on never changes the arithmetic of
+    # the state update, only the step's return signature.
+    health: bool = False
 
     @property
     def qweights_on(self) -> bool:

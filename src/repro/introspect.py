@@ -27,6 +27,7 @@ import jax
 
 __all__ = ["count_quantize_ops", "count_weight_quantize_ops",
            "count_cache_quantize_ops", "count_named_calls",
+           "health_summary",
            "QUANTIZE_NAMES", "WEIGHT_QUANTIZE_NAMES", "CACHE_QUANTIZE_NAMES"]
 
 # pjit names of the quantization entry points (jitted functions keep their
@@ -104,3 +105,22 @@ def count_cache_quantize_ops(fn: Callable, *args, **kwargs) -> int:
     prefill.  Scan-trip-weighted like :func:`count_quantize_ops`."""
     return count_named_calls(fn, *args, names=CACHE_QUANTIZE_NAMES,
                              **kwargs)["total"]
+
+
+def health_summary(report) -> Dict[str, float]:
+    """Flatten a ``core.health`` :func:`~repro.core.health.health_report`
+    into a plain ``{metric: python scalar}`` dict for telemetry lines and
+    the supervisor's guard check (docs/ROBUSTNESS.md).  Group metrics are
+    keyed ``<group>/<metric>``; tree-wide aggregates keep their names."""
+    out: Dict[str, float] = {
+        "max_sat8": float(report["max_sat8"]),
+        "min_headroom_bits": int(report["min_headroom_bits"]),
+        "nonfinite_grads": int(report["nonfinite_grads"]),
+        "loss_finite": bool(report["loss_finite"]),
+    }
+    for g, metrics in sorted(report.get("groups", {}).items()):
+        out[f"{g}/sat8"] = float(metrics["sat8"])
+        out[f"{g}/headroom_bits"] = int(metrics["headroom_bits"])
+        out[f"{g}/exp_top"] = int(metrics["exp_top"])
+        out[f"{g}/nonfinite"] = int(metrics["nonfinite"])
+    return out

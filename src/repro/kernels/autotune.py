@@ -12,12 +12,21 @@ for a ``bm``.  Resolution order:
 
 Cache file format (JSON object)::
 
-    { "<key>": {"bm": 256, "us": {"32": 410.2, ..., "256": 181.0}} }
+    { "<key>": {"bm": 256, "us": {"32": 410.2, ..., "256": 181.0},
+                "bad": [512]} }
 
 with ``<key>`` = ``"<kind>:<M>x<K>x<N>:b<bits>:blk<block>:<backend>"`` from
 :func:`shape_key`.  Path: ``$REPRO_KERNEL_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro_kernels/autotune.json``.  Writes are atomic
 (tmp + ``os.replace``) so concurrent processes at worst re-measure.
+
+Poisoned entries: a cached ``bm`` that stops compiling (toolchain update,
+different VMEM limit, hand-edited file) is *quarantined* rather than left
+to crash every call — the dispatch degradation ladder calls
+:func:`quarantine` on kernel failure, which appends the bm to the entry's
+``"bad"`` list and drops the stale ``"bm"`` pick; subsequent
+:func:`select_bm` calls skip quarantined candidates and re-tune from the
+surviving ones (docs/ROBUSTNESS.md §Degradation ladder).
 """
 
 from __future__ import annotations
@@ -31,8 +40,10 @@ __all__ = [
     "AutotuneCache",
     "BM_CANDIDATES",
     "autotune_enabled_by_env",
+    "bad_bms",
     "cache_path",
     "heuristic_bm",
+    "quarantine",
     "select_bm",
     "shape_key",
     "time_call_us",
@@ -173,15 +184,59 @@ def select_bm(key: str, m: int, fits: Callable[[int], bool], *,
     fits — the caller then falls back to the unfused / jnp path.
     """
     cache = cache or AutotuneCache()
+    bad = bad_bms(key, cache)
+
+    def ok(bm: int) -> bool:
+        return fits(bm) and bm not in bad
+
     entry = cache.get(key)
-    if entry is not None and fits(int(entry["bm"])):
+    if entry is not None and ok(int(entry["bm"])):
         return int(entry["bm"])
-    feasible = [bm for bm in BM_CANDIDATES if fits(bm)]
+    feasible = [bm for bm in BM_CANDIDATES if ok(bm)]
     if not feasible:
         return 0
     if not (measure and bench is not None):
-        return heuristic_bm(m, fits)
+        return heuristic_bm(m, ok)
     timings = {str(bm): bench(bm) for bm in feasible}
     best = min(feasible, key=lambda bm: timings[str(bm)])
-    cache.put(key, {"bm": best, "us": timings})
+    new_entry = {"bm": best, "us": timings}
+    if bad:
+        new_entry["bad"] = sorted(bad)
+    cache.put(key, new_entry)
     return best
+
+
+def bad_bms(key: str, cache: Optional[AutotuneCache] = None) -> set:
+    """Quarantined block heights for ``key`` (empty set when none)."""
+    cache = cache or AutotuneCache()
+    raw = cache.load().get(key)
+    if not isinstance(raw, dict):
+        return set()
+    out = set()
+    for bm in raw.get("bad", []):
+        try:
+            out.add(int(bm))
+        except (TypeError, ValueError):
+            pass
+    return out
+
+
+def quarantine(key: str, bm: int,
+               cache: Optional[AutotuneCache] = None) -> None:
+    """Mark ``bm`` as poisoned for ``key``: a kernel launch with it failed
+    to compile or run.  The entry's ``"bad"`` list gains ``bm`` and a
+    stale ``"bm"`` pick equal to it is dropped, so the next
+    :func:`select_bm` re-tunes from the surviving candidates instead of
+    raising on every call."""
+    cache = cache or AutotuneCache()
+    raw = cache.load().get(key)
+    entry = dict(raw) if isinstance(raw, dict) else {}
+    bad = bad_bms(key, cache) | {int(bm)}
+    entry["bad"] = sorted(bad)
+    try:
+        stale = int(entry.get("bm", -1)) in bad
+    except (TypeError, ValueError):
+        stale = True
+    if stale:
+        entry.pop("bm", None)
+    cache.put(key, entry)

@@ -46,6 +46,16 @@ autotune cache (``kernels.autotune``).  Decisions can be observed with
 :func:`record_decisions` (used by the dispatch-introspection tests), and
 :func:`bytes_moved` is the analytic HBM-traffic model behind the
 ``BENCH_kernels.json`` perf trail.
+
+Planning picks the *intended* path; execution defends it.  A kernel launch
+that fails — a compile/runtime error, a poisoned autotune entry, or an
+armed ``runtime.fault_injection`` trip wire — degrades one rung down the
+same ladder (fused -> unfused -> jnp) instead of aborting the job: the
+failed fused block height is quarantined in the autotune cache, the
+degraded Decision is recorded with the failure as its reason, and
+:func:`fallback_counts` exposes the transition counters to the training
+supervisor's telemetry (docs/ROBUSTNESS.md §Degradation ladder).  Because
+all rungs are bit-identical, degradation changes cost, never results.
 """
 
 from __future__ import annotations
@@ -62,6 +72,8 @@ from jax import lax
 
 from ..core.bfp import (BFP, PER_TENSOR, QuantConfig, pow2, rounding_bits,
                         storage_dtype)
+from ..core.bfp import quantize as bfp_quantize
+from ..runtime import fault_injection as _fi
 from . import autotune, ref
 from .bfp_quant import bfp_quantize_pallas
 from .fused_linear import (fused_ii_pt_pallas, fused_qi_pt_pallas,
@@ -73,6 +85,7 @@ __all__ = [
     "plan_attention", "record_decisions", "contract_qq", "contract_qi",
     "contract_iq", "contract_ii", "contract_pp", "bytes_moved",
     "attention_bytes_moved", "attn_block_t", "cache_operand_bytes",
+    "fallback_counts", "reset_fallback_counts",
     "DEFAULT_VMEM_BUDGET",
 ]
 
@@ -102,9 +115,25 @@ class Decision:
     interpret: bool = False
     kind: str = "qq"   # operand kind: qq | qi | iq | ii | pp
     bt: int = 0        # fused-attention KV block size (attention ops only)
+    atkey: str = ""    # autotune shape key (fused plans): quarantine target
 
 
 _decision_log: Optional[List[Decision]] = None
+
+# Degradation-ladder counters: {"fused->unfused": n, ...} — every kernel
+# launch that failed (compile/runtime error or an armed fault injector) and
+# was re-executed one rung down.  Observed by the supervisor's telemetry
+# and the chaos harness (docs/ROBUSTNESS.md §Degradation ladder).
+_fallback_counts: dict = {}
+
+
+def fallback_counts() -> dict:
+    """Snapshot of the degradation-ladder counters since the last reset."""
+    return dict(_fallback_counts)
+
+
+def reset_fallback_counts() -> None:
+    _fallback_counts.clear()
 
 
 @contextlib.contextmanager
@@ -127,6 +156,94 @@ def _record(d: Decision) -> Decision:
     if _decision_log is not None:
         _decision_log.append(d)
     return d
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: fused -> unfused -> jnp on kernel failure
+# ---------------------------------------------------------------------------
+
+def _degrade(dec: Decision, err: BaseException,
+             cfg: Optional[QuantConfig]) -> Decision:
+    """One rung down the ladder after a failed kernel launch.
+
+    A failed *fused* launch quarantines its autotuned block height (the
+    poisoned-cache-entry case: subsequent plans re-tune instead of raising
+    on every call) and retries on the unfused pipeline when that pipeline
+    can serve the operands — per-tensor scale AND (pre-quantized operands
+    or a stochastic config; the standalone quantizer kernel is SR-only) —
+    else drops straight to the jnp oracle.  A failed *unfused* launch drops
+    to jnp.  All rungs are bit-identical (module docstring), so degrading
+    changes cost, never results.  The degraded Decision is recorded like a
+    planned one, with the failure in ``reason``.
+    """
+    if dec.path == FUSED:
+        if dec.atkey and dec.bm:
+            try:
+                autotune.quarantine(dec.atkey, dec.bm)
+            except OSError:
+                pass                       # cache write failure is non-fatal
+        per_tensor = cfg is None or cfg.block == PER_TENSOR
+        unfused_ok = per_tensor and (dec.kind in ("ii", "pp")
+                                     or (cfg is not None and cfg.stochastic))
+        to = UNFUSED if unfused_ok else JNP
+    else:
+        to = JNP
+    edge = f"{dec.path}->{to}"
+    _fallback_counts[edge] = _fallback_counts.get(edge, 0) + 1
+    reason = f"fallback from {dec.path}: {type(err).__name__}: {err}"
+    return _record(dataclasses.replace(dec, path=to, reason=reason, bm=0))
+
+
+def _with_ladder(dec: Decision, run_kernel, run_jnp,
+                 cfg: Optional[QuantConfig] = None):
+    """Execute ``run_kernel(dec)`` with fused->unfused->jnp degradation.
+
+    ``run_kernel`` handles the FUSED and UNFUSED paths of one contraction;
+    ``run_jnp(dec)`` is its bit-identical jnp mirror (the terminal rung —
+    plain jnp ops cannot fail to compile).  The fault-injection trip wire
+    (``runtime.fault_injection.maybe_fail_kernel``) fires here, exactly
+    where a real Pallas failure would surface.
+    """
+    while dec.path != JNP:
+        try:
+            _fi.maybe_fail_kernel(dec.path)
+            return run_kernel(dec)
+        except Exception as err:           # compile/runtime/injected failure
+            dec = _degrade(dec, err, cfg)
+    return run_jnp(dec)
+
+
+def _jnp_matmul(am: jnp.ndarray, bmant: jnp.ndarray, ea, eb,
+                pa: int, pb: int) -> jnp.ndarray:
+    """jnp mirror of :func:`_matmul_unfused`: int8 contraction-last
+    mantissas, scalar per-tensor scales, exact int32 accumulation (the
+    plan guarantees K fits one accumulator) and one f32 rescale — bit-
+    identical to both kernel GEMMs."""
+    sea = ea - 127 - 23 + (24 - pa)
+    seb = eb - 127 - 23 + (24 - pb)
+    acc = jnp.einsum("...mk,...nk->...mn", am.astype(jnp.int32),
+                     bmant.astype(jnp.int32))
+    return acc.astype(jnp.float32) * pow2(sea + seb)
+
+
+def _jnp_block_matmul(am: jnp.ndarray, bmant: jnp.ndarray, ea, eb,
+                      pa: int, pb: int, blk: int) -> jnp.ndarray:
+    """jnp mirror of the fused per-block kernel (the batched twin of
+    ``ref.bfp_block_matmul_ref``): per-K-block int32 partials rescaled and
+    summed sequentially in block order — the kernel's exact combine order,
+    so the fallback stays bit-strict."""
+    sea = ea - 127 - 23 + (24 - pa)      # (..., M, K/blk)
+    seb = eb - 127 - 23 + (24 - pb)      # (..., N, K/blk)
+    nb = am.shape[-1] // blk
+    acc = jnp.zeros(am.shape[:-2] + (am.shape[-2], bmant.shape[-2]),
+                    jnp.float32)
+    for i in range(nb):
+        part = jnp.einsum("...mk,...nk->...mn",
+                          am[..., i * blk:(i + 1) * blk].astype(jnp.int32),
+                          bmant[..., i * blk:(i + 1) * blk].astype(jnp.int32))
+        scale = pow2(sea[..., :, i:i + 1] + seb[..., i][..., None, :])
+        acc = acc + part.astype(jnp.float32) * scale
+    return acc
 
 
 # ---------------------------------------------------------------------------
@@ -391,9 +508,9 @@ def plan_attention(op: str, gs: int, t: int, d: int, cfg: QuantConfig, *,
     backend = backend or jax.default_backend()
     interpret = backend != "tpu"
 
-    def decide(path, reason, bm=0, bt=0):
+    def decide(path, reason, bm=0, bt=0, atkey=""):
         return _record(Decision(op, path, reason, gs, d, t, bm, interpret,
-                                kind, bt))
+                                kind, bt, atkey=atkey))
 
     if kernel_mode not in ("auto", "fused", "unfused", "jnp"):
         raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
@@ -428,7 +545,8 @@ def plan_attention(op: str, gs: int, t: int, d: int, cfg: QuantConfig, *,
              if measure else None)
     bq = autotune.select_bm(key, gs, fits, measure=measure, bench=bench)
     if bq:
-        return decide(FUSED, "fused attention fits VMEM budget", bq, bt)
+        return decide(FUSED, "fused attention fits VMEM budget", bq, bt,
+                      atkey=key)
     return decide(JNP, f"no bq candidate fits vmem_budget={vmem_budget}")
 
 
@@ -454,9 +572,9 @@ def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
     backend = backend or jax.default_backend()
     interpret = backend != "tpu"
 
-    def decide(path, reason, bm=0):
+    def decide(path, reason, bm=0, atkey=""):
         return _record(Decision(op, path, reason, m, k, n, bm, interpret,
-                                kind))
+                                kind, atkey=atkey))
 
     if kernel_mode not in ("auto", "fused", "unfused", "jnp"):
         raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
@@ -519,7 +637,8 @@ def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
             bm = autotune.select_bm(key, strip_rows, fits, measure=measure,
                                     bench=bench)
             if bm:
-                return decide(FUSED, "fused pipeline fits VMEM budget", bm)
+                return decide(FUSED, "fused pipeline fits VMEM budget", bm,
+                              atkey=key)
             fused_block = (0, f"no bm candidate fits vmem_budget={vmem_budget}")
 
     # -- unfused fallback ----------------------------------------------------
@@ -628,37 +747,49 @@ def contract_qq(a: jnp.ndarray, b: jnp.ndarray, cfg: QuantConfig,
     if cfg.block == PER_TENSOR:
         ea = ref.max_biased_exp_ref(a)    # global max: padding-independent
         eb = ref.max_biased_exp_ref(b)
-        if dec.path == UNFUSED:
-            # plan_contract only routes stochastic configs here (the
-            # standalone quantizer kernel is SR-only).
-            am, bmant = (_quantize_rows(a, ra, ea, dec.interpret),
-                         _quantize_rows(b, rb, eb, dec.interpret))
-            y = _matmul_unfused(am, bmant, ea, eb, cfg.p, cfg.p,
-                                dec.interpret, nbatch)
+
+        def run_kernel(d):
+            if d.path == UNFUSED:
+                # plan_contract only routes stochastic configs here (the
+                # standalone quantizer kernel is SR-only).
+                am, bmant = (_quantize_rows(a, ra, ea, d.interpret),
+                             _quantize_rows(b, rb, eb, d.interpret))
+                y = _matmul_unfused(am, bmant, ea, eb, cfg.p, cfg.p,
+                                    d.interpret, nbatch)
+                return y, BFP(am, ea.astype(jnp.int32), cfg), \
+                    BFP(bmant, eb.astype(jnp.int32), cfg)
+            arrays = [_pad2(a, d.bm, _LANE)] + \
+                ([_pad2(ra, d.bm, _LANE)] if sr else []) + \
+                [_pad2(b, _LANE, _LANE)] + \
+                ([_pad2(rb, _LANE, _LANE)] if sr else [])
+
+            def one(args):
+                if sr:
+                    a2, ra2, b2, rb2 = args
+                else:
+                    (a2, b2), ra2, rb2 = args, None, None
+                return fused_qq_pt_pallas(a2, ra2, b2, rb2, ea, eb, p=cfg.p,
+                                          bm=d.bm, stochastic=sr,
+                                          interpret=d.interpret,
+                                          emit_residuals=want_residuals)
+
+            if not want_residuals:
+                y, = _batched_call(one, arrays, nbatch, [(m, n)])
+                return y, None, None
+            y, am, bmant = _batched_call(one, arrays, nbatch,
+                                         [(m, n), (m, k), (n, k)])
             return y, BFP(am, ea.astype(jnp.int32), cfg), \
                 BFP(bmant, eb.astype(jnp.int32), cfg)
-        arrays = [_pad2(a, dec.bm, _LANE)] + \
-            ([_pad2(ra, dec.bm, _LANE)] if sr else []) + \
-            [_pad2(b, _LANE, _LANE)] + \
-            ([_pad2(rb, _LANE, _LANE)] if sr else [])
 
-        def one(args):
-            if sr:
-                a2, ra2, b2, rb2 = args
-            else:
-                (a2, b2), ra2, rb2 = args, None, None
-            return fused_qq_pt_pallas(a2, ra2, b2, rb2, ea, eb, p=cfg.p,
-                                      bm=dec.bm, stochastic=sr,
-                                      interpret=dec.interpret,
-                                      emit_residuals=want_residuals)
+        def run_jnp(d):
+            aq = bfp_quantize(a, cfg, ka)
+            bq = bfp_quantize(b, cfg, kb)
+            y = _jnp_matmul(aq.m, bq.m, aq.e, bq.e, cfg.p, cfg.p)
+            if not want_residuals:
+                return y, None, None
+            return y, aq, bq
 
-        if not want_residuals:
-            y, = _batched_call(one, arrays, nbatch, [(m, n)])
-            return y, None, None
-        y, am, bmant = _batched_call(one, arrays, nbatch,
-                                     [(m, n), (m, k), (n, k)])
-        return y, BFP(am, ea.astype(jnp.int32), cfg), \
-            BFP(bmant, eb.astype(jnp.int32), cfg)
+        return _with_ladder(dec, run_kernel, run_jnp, cfg)
 
     # ---- per-block (along K) fused path ------------------------------------
     blk = cfg.block
@@ -674,29 +805,42 @@ def contract_qq(a: jnp.ndarray, b: jnp.ndarray, cfg: QuantConfig,
         return jnp.pad(e, [(0, 0)] * (e.ndim - 1) + [(0, nbp - e.shape[-1])],
                        constant_values=1)
 
-    arrays = [_pad2(a, dec.bm, kmult)] + \
-        ([_pad2(ra, dec.bm, kmult)] if sr else []) + \
-        [pad_e(ea, dec.bm), _pad2(b, _LANE, kmult)] + \
-        ([_pad2(rb, _LANE, kmult)] if sr else []) + \
-        [pad_e(eb, _LANE)]
+    def run_kernel(d):
+        arrays = [_pad2(a, d.bm, kmult)] + \
+            ([_pad2(ra, d.bm, kmult)] if sr else []) + \
+            [pad_e(ea, d.bm), _pad2(b, _LANE, kmult)] + \
+            ([_pad2(rb, _LANE, kmult)] if sr else []) + \
+            [pad_e(eb, _LANE)]
 
-    def one(args):
-        if sr:
-            a2, ra2, ea2, b2, rb2, eb2 = args
-        else:
-            (a2, ea2, b2, eb2), ra2, rb2 = args, None, None
-        return fused_qq_blk_pallas(a2, ra2, ea2, b2, rb2, eb2, p=cfg.p,
-                                   blk=blk, bm=dec.bm, stochastic=sr,
-                                   interpret=dec.interpret,
-                                   emit_residuals=want_residuals)
+        def one(args):
+            if sr:
+                a2, ra2, ea2, b2, rb2, eb2 = args
+            else:
+                (a2, ea2, b2, eb2), ra2, rb2 = args, None, None
+            return fused_qq_blk_pallas(a2, ra2, ea2, b2, rb2, eb2, p=cfg.p,
+                                       blk=blk, bm=d.bm, stochastic=sr,
+                                       interpret=d.interpret,
+                                       emit_residuals=want_residuals)
 
-    if not want_residuals:
-        y, = _batched_call(one, arrays, nbatch, [(m, n)])
-        return y, None, None
-    y, am, bmant = _batched_call(one, arrays, nbatch,
-                                 [(m, n), (m, k), (n, k)])
-    return y, BFP(am, ea.astype(jnp.int32), cfg), \
-        BFP(bmant, eb.astype(jnp.int32), cfg)
+        if not want_residuals:
+            y, = _batched_call(one, arrays, nbatch, [(m, n)])
+            return y, None, None
+        y, am, bmant = _batched_call(one, arrays, nbatch,
+                                     [(m, n), (m, k), (n, k)])
+        return y, BFP(am, ea.astype(jnp.int32), cfg), \
+            BFP(bmant, eb.astype(jnp.int32), cfg)
+
+    def run_jnp(d):
+        # per-block has no unfused rung: _degrade routes straight here
+        # (cfg.block != PER_TENSOR fails its per-tensor predicate).
+        aq = bfp_quantize(a, cfg, ka)
+        bq = bfp_quantize(b, cfg, kb)
+        y = _jnp_block_matmul(aq.m, bq.m, aq.e, bq.e, cfg.p, cfg.p, blk)
+        if not want_residuals:
+            return y, None, None
+        return y, aq, bq
+
+    return _with_ladder(dec, run_kernel, run_jnp, cfg)
 
 
 def contract_qi(a: jnp.ndarray, bq: BFP, cfg: QuantConfig, ka: jax.Array,
@@ -712,26 +856,35 @@ def contract_qi(a: jnp.ndarray, bq: BFP, cfg: QuantConfig, ka: jax.Array,
     sr = cfg.stochastic
     ea = ref.max_biased_exp_ref(a)
     ra = rounding_bits(ka, a.shape, cfg.rng) if sr else None
-    if dec.path == UNFUSED:
-        am = _quantize_rows(a, ra, ea, dec.interpret)
-        y = _matmul_unfused(am, bq.m, ea, bq.e, cfg.p, bq.cfg.p,
-                            dec.interpret, nbatch)
+
+    def run_kernel(d):
+        if d.path == UNFUSED:
+            am = _quantize_rows(a, ra, ea, d.interpret)
+            y = _matmul_unfused(am, bq.m, ea, bq.e, cfg.p, bq.cfg.p,
+                                d.interpret, nbatch)
+            return y, BFP(am, ea.astype(jnp.int32), cfg)
+        arrays = [_pad2(a, d.bm, _LANE)] + \
+            ([_pad2(ra, d.bm, _LANE)] if sr else []) + \
+            [_pad2(bq.m, _LANE, _LANE)]
+
+        def one(args):
+            if sr:
+                a2, ra2, b2 = args
+            else:
+                (a2, b2), ra2 = args, None
+            return fused_qi_pt_pallas(a2, ra2, b2, ea, bq.e, pa=cfg.p,
+                                      pb=bq.cfg.p, bm=d.bm, stochastic=sr,
+                                      interpret=d.interpret)
+
+        y, am = _batched_call(one, arrays, nbatch, [(m, n), (m, k)])
         return y, BFP(am, ea.astype(jnp.int32), cfg)
-    arrays = [_pad2(a, dec.bm, _LANE)] + \
-        ([_pad2(ra, dec.bm, _LANE)] if sr else []) + \
-        [_pad2(bq.m, _LANE, _LANE)]
 
-    def one(args):
-        if sr:
-            a2, ra2, b2 = args
-        else:
-            (a2, b2), ra2 = args, None
-        return fused_qi_pt_pallas(a2, ra2, b2, ea, bq.e, pa=cfg.p,
-                                  pb=bq.cfg.p, bm=dec.bm, stochastic=sr,
-                                  interpret=dec.interpret)
+    def run_jnp(d):
+        aq = bfp_quantize(a, cfg, ka)
+        y = _jnp_matmul(aq.m, bq.m, aq.e, bq.e, cfg.p, bq.cfg.p)
+        return y, aq
 
-    y, am = _batched_call(one, arrays, nbatch, [(m, n), (m, k)])
-    return y, BFP(am, ea.astype(jnp.int32), cfg)
+    return _with_ladder(dec, run_kernel, run_jnp, cfg)
 
 
 def contract_iq(aq: BFP, b: jnp.ndarray, cfg: QuantConfig, kb: jax.Array,
@@ -751,27 +904,36 @@ def contract_iq(aq: BFP, b: jnp.ndarray, cfg: QuantConfig, kb: jax.Array,
     sr = cfg.stochastic
     eb = ref.max_biased_exp_ref(b)
     rb = rounding_bits(kb, b.shape, cfg.rng) if sr else None
-    if dec.path == UNFUSED:
-        bmant = _quantize_rows(b, rb, eb, dec.interpret)
-        y = _matmul_unfused(aq.m, bmant, aq.e, eb, aq.cfg.p, cfg.p,
-                            dec.interpret, nbatch)
+
+    def run_kernel(d):
+        if d.path == UNFUSED:
+            bmant = _quantize_rows(b, rb, eb, d.interpret)
+            y = _matmul_unfused(aq.m, bmant, aq.e, eb, aq.cfg.p, cfg.p,
+                                d.interpret, nbatch)
+            return y, BFP(bmant, eb.astype(jnp.int32), cfg)
+        arrays = [_pad2(b, d.bm, _LANE)] + \
+            ([_pad2(rb, d.bm, _LANE)] if sr else []) + \
+            [_pad2(aq.m, _LANE, _LANE)]
+
+        def one(args):
+            if sr:
+                b2, rb2, a2 = args
+            else:
+                (b2, a2), rb2 = args, None
+            yt, bm8 = fused_qi_pt_pallas(b2, rb2, a2, eb, aq.e, pa=cfg.p,
+                                         pb=aq.cfg.p, bm=d.bm, stochastic=sr,
+                                         interpret=d.interpret)
+            return jnp.swapaxes(yt, -1, -2), bm8
+
+        y, bmant = _batched_call(one, arrays, nbatch, [(m, n), (n, k)])
         return y, BFP(bmant, eb.astype(jnp.int32), cfg)
-    arrays = [_pad2(b, dec.bm, _LANE)] + \
-        ([_pad2(rb, dec.bm, _LANE)] if sr else []) + \
-        [_pad2(aq.m, _LANE, _LANE)]
 
-    def one(args):
-        if sr:
-            b2, rb2, a2 = args
-        else:
-            (b2, a2), rb2 = args, None
-        yt, bm8 = fused_qi_pt_pallas(b2, rb2, a2, eb, aq.e, pa=cfg.p,
-                                     pb=aq.cfg.p, bm=dec.bm, stochastic=sr,
-                                     interpret=dec.interpret)
-        return jnp.swapaxes(yt, -1, -2), bm8
+    def run_jnp(d):
+        bq = bfp_quantize(b, cfg, kb)
+        y = _jnp_matmul(aq.m, bq.m, aq.e, bq.e, aq.cfg.p, cfg.p)
+        return y, bq
 
-    y, bmant = _batched_call(one, arrays, nbatch, [(m, n), (n, k)])
-    return y, BFP(bmant, eb.astype(jnp.int32), cfg)
+    return _with_ladder(dec, run_kernel, run_jnp, cfg)
 
 
 def contract_ii(aq: BFP, bq: BFP, dec: Decision,
@@ -784,19 +946,26 @@ def contract_ii(aq: BFP, bq: BFP, dec: Decision,
     assert aq.cfg.block == PER_TENSOR and bq.cfg.block == PER_TENSOR
     m, k = aq.m.shape[-2], aq.m.shape[-1]
     n = bq.m.shape[-2]
-    if dec.path == UNFUSED:
-        return _matmul_unfused(aq.m, bq.m, aq.e, bq.e, aq.cfg.p, bq.cfg.p,
-                               dec.interpret, nbatch)
-    arrays = [_pad2(aq.m, dec.bm, _LANE), _pad2(bq.m, _LANE, _LANE)]
 
-    def one(args):
-        a2, b2 = args
-        return fused_ii_pt_pallas(a2, b2, aq.e, bq.e, pa=aq.cfg.p,
-                                  pb=bq.cfg.p, bm=dec.bm,
-                                  interpret=dec.interpret)
+    def run_kernel(d):
+        if d.path == UNFUSED:
+            return _matmul_unfused(aq.m, bq.m, aq.e, bq.e, aq.cfg.p,
+                                   bq.cfg.p, d.interpret, nbatch)
+        arrays = [_pad2(aq.m, d.bm, _LANE), _pad2(bq.m, _LANE, _LANE)]
 
-    y, = _batched_call(one, arrays, nbatch, [(m, n)])
-    return y
+        def one(args):
+            a2, b2 = args
+            return fused_ii_pt_pallas(a2, b2, aq.e, bq.e, pa=aq.cfg.p,
+                                      pb=bq.cfg.p, bm=d.bm,
+                                      interpret=d.interpret)
+
+        y, = _batched_call(one, arrays, nbatch, [(m, n)])
+        return y
+
+    def run_jnp(d):
+        return _jnp_matmul(aq.m, bq.m, aq.e, bq.e, aq.cfg.p, bq.cfg.p)
+
+    return _with_ladder(dec, run_kernel, run_jnp)
 
 
 def contract_pp(aq: BFP, bq: BFP, dec: Decision,

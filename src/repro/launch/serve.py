@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..core.health import bfp_tree_stats
 from ..core.policy import FLOAT32, PAPER_INT8
 from ..kernels import dispatch
 from ..models import get_cache_layout, get_model
@@ -36,6 +37,11 @@ from .steps import (cache_template, make_decode_step, make_prefill_step,
                     quantize_serving_params)
 
 POLICIES = {"int8": PAPER_INT8, "float32": FLOAT32}
+
+
+class ServeConfigError(ValueError):
+    """A serving request that can never run (unknown arch, contradictory
+    flags).  ``main`` turns it into a clean non-zero exit — no traceback."""
 
 # Attention KV leaves are *consumed by integer GEMMs* each decode step (the
 # float pipeline re-quantizes them in-op; qcache reads mantissas); every
@@ -183,9 +189,39 @@ def attention_traffic_report(cfg, policy, batch: int, prompt_len: int,
     return out
 
 
+def validate_request(arch: str, policy_name: str, *, batch: int = 1,
+                     prompt_len: int = 1, gen: int = 1, qcache: bool = False,
+                     health: bool = False) -> None:
+    """Reject impossible serving requests up front with a message that
+    names the fix, instead of a traceback from deep inside model import
+    or jit trace (docs/ROBUSTNESS.md §Serving)."""
+    if arch not in ARCH_IDS:
+        raise ServeConfigError(
+            f"unknown arch {arch!r}; known archs: {', '.join(ARCH_IDS)}")
+    if policy_name not in POLICIES:
+        raise ServeConfigError(
+            f"unknown policy {policy_name!r}; known: {', '.join(POLICIES)}")
+    if batch < 1 or prompt_len < 1 or gen < 1:
+        raise ServeConfigError(
+            f"batch/prompt-len/gen must all be >= 1, got "
+            f"batch={batch} prompt_len={prompt_len} gen={gen}")
+    if not POLICIES[policy_name].enabled:
+        if qcache:
+            raise ServeConfigError(
+                "--qcache quantizes decode caches, which needs an integer "
+                "policy; drop --qcache or use --policy int8")
+        if health:
+            raise ServeConfigError(
+                "--health reports quantized-leaf saturation, which needs "
+                "an integer policy; drop --health or use --policy int8")
+
+
 def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
           gen: int = 16, policy_name: str = "int8", seed: int = 0,
-          qweights: bool = True, qcache: bool = False, quiet: bool = False):
+          qweights: bool = True, qcache: bool = False, health: bool = False,
+          quiet: bool = False):
+    validate_request(arch, policy_name, batch=batch, prompt_len=prompt_len,
+                     gen=gen, qcache=qcache, health=health)
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     policy = POLICIES[policy_name]
     if qweights and policy.enabled:
@@ -248,6 +284,14 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32
     if policy.enabled and cfg.family in ("dense", "vlm", "moe"):
         stats["attn_traffic"] = attention_traffic_report(
             cfg, policy, batch, prompt_len, max_len)
+    if health:
+        # per-leaf saturation/exponent stats of every quantized artifact
+        # actually serving: the load-time weights and the decode-time cache
+        stats["health"] = {}
+        if policy.qweights_on:
+            stats["health"]["weights"] = bfp_tree_stats(params)
+        if policy.qcache_on:
+            stats["health"]["qcache"] = bfp_tree_stats(cache)
     if not quiet:
         print(f"arch={cfg.name} policy={policy_name} batch={batch} "
               f"qweights={policy.qweights_on} qcache={policy.qcache_on}")
@@ -285,10 +329,21 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32
                       f"(-{r['reduction_pct']}%)  "
                       f"[{d['op']}/{d['kind']} -> {d['path']} "
                       f"bq={d['bq']} bt={d['bt']}]")
+        for section, leaves in stats.get("health", {}).items():
+            if not leaves:
+                print(f"health {section}: no quantized leaves")
+                continue
+            worst = max(leaves, key=lambda k: leaves[k]["sat_rate"])
+            mean_sat = sum(v["sat_rate"] for v in leaves.values()) / len(leaves)
+            exp_lo = min(v["exp_min"] for v in leaves.values())
+            exp_hi = max(v["exp_max"] for v in leaves.values())
+            print(f"health {section}: {len(leaves)} quantized leaves, "
+                  f"mean sat {mean_sat:.4f}, exp range [{exp_lo}, {exp_hi}], "
+                  f"worst {worst} sat {leaves[worst]['sat_rate']:.4f}")
     return np.stack(out_tokens, axis=1), stats
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2_0_5b")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -305,10 +360,18 @@ def main():
                     help="quantized decode caches: int8 KV/state rows "
                          "written once at append time, consumed directly "
                          "by decode attention (docs/SERVING.md)")
-    args = ap.parse_args()
-    serve(args.arch, smoke=args.smoke, batch=args.batch,
-          prompt_len=args.prompt_len, gen=args.gen, policy_name=args.policy,
-          qweights=args.qweights, qcache=args.qcache)
+    ap.add_argument("--health", action="store_true", default=False,
+                    help="print per-artifact saturation/exponent stats of "
+                         "the quantized serving weights and qcache "
+                         "(docs/ROBUSTNESS.md); needs --policy int8")
+    args = ap.parse_args(argv)
+    try:
+        serve(args.arch, smoke=args.smoke, batch=args.batch,
+              prompt_len=args.prompt_len, gen=args.gen,
+              policy_name=args.policy, qweights=args.qweights,
+              qcache=args.qcache, health=args.health)
+    except ServeConfigError as err:
+        ap.exit(2, f"error: {err}\n")
 
 
 if __name__ == "__main__":

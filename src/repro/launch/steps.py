@@ -21,8 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import (BFP, NumericPolicy, derive_qweights, integer_sgd_init,
-                    integer_sgd_step, master_params_f32,
+from ..core import (BFP, NumericPolicy, derive_qweights, health_report,
+                    integer_sgd_init, integer_sgd_step, master_params_f32,
                     quantize_weights_once, qweight_grads)
 from ..models import get_model, get_weight_mask
 from ..models.common import ArchConfig
@@ -119,6 +119,13 @@ def make_train_step(cfg: ArchConfig, policy: NumericPolicy,
     microbatch; dW rides each BFP leaf's gradient carrier back into the
     integer SGD update.  Off, the step is the classic dequantize-masters
     pipeline, bit-identical to the pre-qweights implementation.
+
+    With ``policy.health`` on, the step additionally returns a
+    ``core.health`` report — (state, loss, report) — computed from the
+    *updated* masters, this step's gradients and the loss; the report is a
+    read-only observation (the state/loss arithmetic is unchanged),
+    consumed by the training supervisor's guard check
+    (docs/ROBUSTNESS.md).
     """
     mod = get_model(cfg)
     vg = _grad_fn(mod, cfg, policy)
@@ -141,6 +148,8 @@ def make_train_step(cfg: ArchConfig, policy: NumericPolicy,
         state = integer_sgd_step(state, grads, lr, jax.random.fold_in(key, 2),
                                  policy, momentum=hyper.momentum,
                                  weight_decay=hyper.weight_decay)
+        if policy.health:
+            return state, loss, health_report(state.masters, grads, loss)
         return state, loss
 
     return train_step

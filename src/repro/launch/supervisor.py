@@ -1,0 +1,268 @@
+"""Training supervisor: health guards, rollback, elasticity, telemetry.
+
+The integer pipeline's failure modes are silent (docs/ROBUSTNESS.md): a
+NaN on a gradient carrier, an exponent blow-up in the int16 masters, or a
+saturation spike corrupts training with nothing to catch it — the loss
+keeps printing numbers (or stops being a number) long after the state is
+garbage.  This module is the *policy* layer the training loop
+(``launch.train``) consults every step:
+
+  * **Guard check** — each step's ``core.health`` report (flattened by
+    ``introspect.health_summary``) is tested against :class:`GuardConfig`
+    thresholds: non-finite loss/carriers, master float32-headroom below a
+    floor, saturation above a ceiling, exponent drift beyond a band around
+    the run's opening report.
+  * **Rollback** — a tripped guard discards the step and restores the last
+    committed state (the newest intact checkpoint when a
+    ``CheckpointManager`` is attached, else the supervisor's in-memory
+    snapshot of the last committed step).  Retries are bounded
+    (``max_retries`` per step); the first retry replays the *same* data
+    (the stateless-by-step pipeline makes the replay bit-identical, so a
+    transient fault leaves no trace in the trajectory), later retries
+    skip the data seed ahead exponentially (``seed_stride << (attempt-2)``)
+    to route around a poisonous batch.
+  * **Escalation** — retries exhausted ⇒ a diagnostic JSON dump (step,
+    tripped guards, last health summary, full event log) and a clean
+    :class:`SupervisorAbort`, never a silent continuation.
+  * **Elasticity** — the loop beats :class:`~repro.runtime.fault_tolerance.
+    Heartbeat` and feeds :class:`~repro.runtime.fault_tolerance.
+    StragglerMonitor` at every step boundary; a newly-dead host yields a
+    ``plan_elastic_mesh`` :class:`~repro.runtime.fault_tolerance.
+    ReshardPlan` (model axis intact, data axis shrunk) that the loop
+    applies as restore + re-mesh at the boundary — the synchronous-SPMD
+    consistency rule of ``runtime.fault_tolerance``.
+
+Every decision lands in :attr:`TrainSupervisor.events` — plain dicts, one
+per rollback / re-mesh / straggler flag / kernel fallback — which is the
+per-step telemetry the chaos harness (``tools/chaos_smoke.py``) asserts
+recovery through.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from ..checkpoint import CheckpointManager
+from ..kernels import dispatch as kdispatch
+from ..runtime.fault_tolerance import (Heartbeat, ReshardPlan,
+                                       StragglerMonitor, plan_elastic_mesh)
+
+__all__ = ["GuardConfig", "SupervisorAbort", "TrainSupervisor"]
+
+
+class SupervisorAbort(RuntimeError):
+    """Clean abort after exhausted rollback retries; the diagnostic dump
+    path is in ``.dump_path``."""
+
+    def __init__(self, msg: str, dump_path: Optional[str] = None):
+        super().__init__(msg)
+        self.dump_path = dump_path
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Thresholds for the per-step health guard (docs/ROBUSTNESS.md).
+
+    Defaults are deliberately loose: they catch corruption (NaN, exponent
+    blow-up, wholesale saturation), not ordinary integer-training noise —
+    healthy int8 runs saturate a fraction of a percent of elements and sit
+    ~125 bits from float32 overflow.
+    """
+
+    require_finite: bool = True   # NaN/Inf loss or gradient carriers trip
+    min_headroom_bits: int = 8    # master scale within 8 bits of f32 Inf
+    max_sat8: float = 0.5         # >50% of a leaf's mantissas saturating
+    max_exp_drift: int = 16       # group exp_top moved 2^16 off its start
+    max_retries: int = 3          # rollbacks per failing step before abort
+    seed_stride: int = 1          # exponential skip-ahead unit, retries >= 2
+
+
+class TrainSupervisor:
+    """Per-run robustness state machine consulted by the training loop."""
+
+    def __init__(self, mgr: Optional[CheckpointManager] = None,
+                 guard: GuardConfig = GuardConfig(), *,
+                 hosts: Sequence[int] = (0,),
+                 clock: Callable[[], float] = time.monotonic,
+                 heartbeat_timeout_s: float = 60.0,
+                 model_parallel: int = 1, devices_per_host: int = 1,
+                 dump_dir: Optional[str] = None, quiet: bool = True):
+        self.mgr = mgr
+        self.guard = guard
+        self.heartbeat = Heartbeat(list(hosts), heartbeat_timeout_s, clock)
+        self.monitor = StragglerMonitor(list(hosts))
+        self.model_parallel = model_parallel
+        self.devices_per_host = devices_per_host
+        self.dump_dir = dump_dir or (mgr.dir if mgr else None)
+        self.quiet = quiet
+        self.events: List[Dict[str, Any]] = []
+        self._hosts = list(hosts)
+        self._dropped: set = set()
+        self._retries: Dict[int, int] = {}
+        self._ref_exp: Optional[Dict[str, int]] = None
+        self._snapshot: Optional[Tuple[int, Any]] = None
+        self._fallback_base = dict(kdispatch.fallback_counts())
+
+    # -- telemetry ----------------------------------------------------------
+
+    def _event(self, step: int, event: str, **detail) -> Dict[str, Any]:
+        e = {"step": step, "event": event, **detail}
+        self.events.append(e)
+        if not self.quiet:
+            print(f"[supervisor] step {step}: {event} {detail}")
+        return e
+
+    def recovery_events(self) -> List[Dict[str, Any]]:
+        return [e for e in self.events
+                if e["event"] in ("rollback", "remesh")]
+
+    # -- guard check --------------------------------------------------------
+
+    def check(self, step: int, summary: Dict[str, Any]) -> List[str]:
+        """Tripped-guard descriptions for one step's health summary
+        (``introspect.health_summary`` output).  Empty list = healthy.
+        The first healthy summary seeds the exponent-drift reference."""
+        g = self.guard
+        trips: List[str] = []
+        if g.require_finite:
+            if not summary.get("loss_finite", True):
+                trips.append("non-finite loss")
+            if summary.get("nonfinite_grads", 0) > 0:
+                trips.append(f"{summary['nonfinite_grads']} non-finite "
+                             "gradient values")
+        if summary.get("min_headroom_bits", 127) < g.min_headroom_bits:
+            trips.append(f"master headroom {summary['min_headroom_bits']} "
+                         f"bits < {g.min_headroom_bits}")
+        if summary.get("max_sat8", 0.0) > g.max_sat8:
+            trips.append(f"saturation {summary['max_sat8']:.3f} "
+                         f"> {g.max_sat8}")
+        exps = {k[:-len("/exp_top")]: v for k, v in summary.items()
+                if k.endswith("/exp_top")}
+        if self._ref_exp:
+            for grp, e in exps.items():
+                ref = self._ref_exp.get(grp)
+                if ref is not None and abs(e - ref) > g.max_exp_drift:
+                    trips.append(f"{grp} exponent drift {e - ref:+d} bits")
+        if not trips and exps and self._ref_exp is None:
+            self._ref_exp = exps
+        return trips
+
+    # -- commit / rollback --------------------------------------------------
+
+    def commit(self, step: int, state) -> None:
+        """Record a healthy step: snapshot it as the in-memory rollback
+        target, clear its retry ledger, and fold any kernel-fallback
+        counter movement into the event log."""
+        self._snapshot = (step + 1, state)
+        self._retries.pop(step, None)
+        counts = kdispatch.fallback_counts()
+        delta = {k: v - self._fallback_base.get(k, 0)
+                 for k, v in counts.items()
+                 if v != self._fallback_base.get(k, 0)}
+        if delta:
+            self._fallback_base = dict(counts)
+            self._event(step, "kernel_fallback", transitions=delta)
+
+    def rollback(self, step: int, state_template,
+                 trips: List[str],
+                 summary: Optional[Dict[str, Any]] = None
+                 ) -> Tuple[int, Any, int]:
+        """Discard a tripped step.  Returns ``(restore_step, state,
+        seed_offset)``: the loop resumes at ``restore_step`` with a data
+        pipeline skipped ahead by ``seed_offset`` (0 on the first retry —
+        a bit-identical replay).  Raises :class:`SupervisorAbort` once
+        ``max_retries`` attempts at this step are exhausted."""
+        attempt = self._retries.get(step, 0) + 1
+        self._retries[step] = attempt
+        if attempt > self.guard.max_retries:
+            self.abort(step, trips, summary)
+        # never restore *past* the tripped step: an async checkpoint of a
+        # later step (e.g. committed during an earlier replay) must not
+        # fast-forward the loop over the step being retried
+        restore_step, state = self._restore(state_template, max_step=step)
+        offset = (0 if attempt == 1
+                  else self.guard.seed_stride << (attempt - 2))
+        self._event(step, "rollback", attempt=attempt, trips=trips,
+                    restore_step=restore_step, seed_offset=offset)
+        return restore_step, state, offset
+
+    def _restore(self, state_template,
+                 max_step: Optional[int] = None) -> Tuple[int, Any]:
+        if self.mgr is not None:
+            self.mgr.wait()          # settle in-flight async saves first
+            for s in reversed(self.mgr.all_steps()):
+                if max_step is not None and s > max_step:
+                    continue
+                try:
+                    return s, self.mgr.restore(s, state_template)
+                except (OSError, ValueError, KeyError) as err:
+                    self._event(s, "checkpoint_damaged", error=str(err))
+        if self._snapshot is not None and (max_step is None
+                                           or self._snapshot[0] <= max_step):
+            return self._snapshot
+        return 0, state_template     # nothing committed yet: restart
+
+    def abort(self, step: int, trips: List[str],
+              summary: Optional[Dict[str, Any]] = None) -> None:
+        """Diagnostic dump + clean abort (never a silent continuation)."""
+        dump_path = None
+        if self.dump_dir:
+            os.makedirs(self.dump_dir, exist_ok=True)
+            dump_path = os.path.join(self.dump_dir,
+                                     f"supervisor_abort_step{step}.json")
+            with open(dump_path, "w") as f:
+                json.dump({"step": step, "trips": trips,
+                           "health": summary, "events": self.events,
+                           "retries": {str(k): v
+                                       for k, v in self._retries.items()}},
+                          f, indent=1, default=str)
+        self._event(step, "abort", trips=trips, dump=dump_path)
+        raise SupervisorAbort(
+            f"step {step}: guards still tripped after "
+            f"{self.guard.max_retries} rollbacks: {'; '.join(trips)}",
+            dump_path)
+
+    # -- cluster boundary ---------------------------------------------------
+
+    def poll_cluster(self, step: int) -> Optional[ReshardPlan]:
+        """Step-boundary liveness check.  A newly-dead host yields the
+        ``plan_elastic_mesh`` re-mesh plan (model axis intact, data axis
+        shrunk to the survivors) with the last committed step as the
+        restore point; stragglers are flagged into telemetry."""
+        stragglers = self.monitor.stragglers() - self._dropped
+        for h in sorted(stragglers):
+            self._event(step, "straggler", host=h)
+        dead = self.heartbeat.dead() - self._dropped
+        if not dead:
+            return None
+        self._dropped |= dead
+        survivors = [h for h in self._hosts if h not in self._dropped]
+        restore_step = None
+        if self.mgr is not None:
+            self.mgr.wait()          # settle in-flight async saves first
+            restore_step = self.mgr.latest_step()
+        if restore_step is None and self._snapshot is not None:
+            restore_step = self._snapshot[0]
+        plan = plan_elastic_mesh(
+            len(survivors) * self.devices_per_host, self.model_parallel,
+            restore_step=restore_step, dropped_hosts=tuple(sorted(dead)))
+        self._event(step, "remesh", dead_hosts=sorted(dead),
+                    mesh_shape=plan.mesh_shape,
+                    restore_step=plan.restore_step)
+        return plan
+
+    def apply_remesh(self, plan: ReshardPlan,
+                     state_template) -> Tuple[int, Any]:
+        """Restore recipe of a re-mesh: (restore_step, state) from the last
+        committed checkpoint / snapshot.  The loop rebuilds its mesh from
+        ``plan.mesh_shape`` and resumes — the stateless-by-step data
+        pipeline replays nothing and skips nothing."""
+        restore_step, state = self._restore(state_template)
+        state = jax.block_until_ready(state)
+        return restore_step, state

@@ -1,0 +1,132 @@
+"""Direct unit tests for runtime.fault_tolerance (ISSUE-6 satellite):
+Heartbeat timeout edges, StragglerMonitor EWMA math, elastic-mesh shrink
+rules, ReshardPlan round-trip."""
+
+import dataclasses
+
+import pytest
+
+from repro.runtime.fault_injection import SimClock
+from repro.runtime.fault_tolerance import (Heartbeat, ReshardPlan,
+                                           StragglerMonitor,
+                                           plan_elastic_mesh)
+
+
+# -- Heartbeat ---------------------------------------------------------------
+
+def test_heartbeat_all_alive_at_start():
+    clock = SimClock()
+    hb = Heartbeat([0, 1, 2], timeout_s=5.0, clock=clock)
+    assert hb.dead() == set()
+    assert hb.alive() == {0, 1, 2}
+
+
+def test_heartbeat_timeout_edge_is_strict():
+    clock = SimClock()
+    hb = Heartbeat([0, 1], timeout_s=5.0, clock=clock)
+    clock.advance(5.0)               # exactly at the timeout: still alive
+    assert hb.dead() == set()
+    clock.advance(0.001)             # strictly past it: dead
+    assert hb.dead() == {0, 1}
+
+
+def test_heartbeat_beat_resets_only_that_host():
+    clock = SimClock()
+    hb = Heartbeat([0, 1], timeout_s=2.0, clock=clock)
+    clock.advance(1.5)
+    hb.beat(0)
+    clock.advance(1.0)               # host 1 at 2.5 > 2.0; host 0 at 1.0
+    assert hb.dead() == {1}
+    assert hb.alive() == {0}
+
+
+def test_heartbeat_revival_after_beat():
+    clock = SimClock()
+    hb = Heartbeat([0], timeout_s=1.0, clock=clock)
+    clock.advance(10.0)
+    assert hb.dead() == {0}
+    hb.beat(0)                       # liveness is a ledger, not a latch
+    assert hb.dead() == set()
+
+
+# -- StragglerMonitor --------------------------------------------------------
+
+def test_straggler_warmup_suppresses_flags():
+    # 3 hosts: the fleet median tracks the healthy majority
+    mon = StragglerMonitor([0, 1, 2], warmup_steps=5)
+    for _ in range(4):
+        mon.record(0, 1.0)
+        mon.record(1, 1.0)
+        mon.record(2, 100.0)         # clearly slow, but not warmed up
+    assert mon.stragglers() == set()
+    mon.record(0, 1.0)
+    mon.record(1, 1.0)
+    mon.record(2, 100.0)
+    assert mon.stragglers() == {2}
+
+
+def test_straggler_ewma_update_math():
+    mon = StragglerMonitor([0], alpha=0.2)
+    mon.record(0, 1.0)               # first sample seeds the EWMA
+    assert mon._ewma[0] == pytest.approx(1.0)
+    mon.record(0, 2.0)
+    assert mon._ewma[0] == pytest.approx(0.2 * 2.0 + 0.8 * 1.0)
+
+
+def test_straggler_threshold_is_relative_to_median():
+    mon = StragglerMonitor([0, 1, 2], warmup_steps=1, threshold=1.5)
+    for _ in range(2):
+        mon.record(0, 1.0)
+        mon.record(1, 1.4)           # 1.4 <= 1.5 x median(=1.4): no flag
+        mon.record(2, 10.0)
+    assert mon.stragglers() == {2}
+
+
+def test_straggler_mitigation_assigns_spares_then_drops():
+    # 5 hosts, 2 slow: the median stays on the healthy majority
+    mon = StragglerMonitor([0, 1, 2, 3, 4], warmup_steps=1)
+    for _ in range(2):
+        for h in (0, 1, 2):
+            mon.record(h, 1.0)
+        mon.record(3, 50.0)
+        mon.record(4, 60.0)
+    plan = mon.mitigation(spares={9})
+    assert plan == {3: 9, 4: None}   # one spare used, the rest re-meshed out
+
+
+# -- plan_elastic_mesh -------------------------------------------------------
+
+def test_elastic_mesh_keeps_model_axis_shrinks_data():
+    plan = plan_elastic_mesh(12, model_parallel=4)
+    assert plan.mesh_shape == (3, 4)
+    assert plan.mesh_axes == ("data", "model")
+
+
+def test_elastic_mesh_floors_partial_model_groups():
+    # 7 devices, TP=2: only 3 complete model groups survive
+    assert plan_elastic_mesh(7, 2).mesh_shape == (3, 2)
+
+
+def test_elastic_mesh_raises_below_one_model_group():
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(3, model_parallel=4)
+
+
+def test_elastic_mesh_passes_restore_metadata():
+    plan = plan_elastic_mesh(8, 2, restore_step=42, dropped_hosts=(3, 5))
+    assert plan.restore_step == 42
+    assert plan.dropped_hosts == (3, 5)
+
+
+# -- ReshardPlan -------------------------------------------------------------
+
+def test_reshard_plan_round_trip():
+    plan = plan_elastic_mesh(8, 2, restore_step=7, dropped_hosts=(1,))
+    rebuilt = ReshardPlan(**dataclasses.asdict(plan))
+    assert rebuilt == plan
+
+
+def test_reshard_plan_is_frozen():
+    plan = plan_elastic_mesh(4, 1)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        plan.mesh_shape = (1, 1)

@@ -1,0 +1,487 @@
+"""Robustness stack tests (ISSUE-6): health sentinel, supervisor guards and
+rollback, dispatch degradation ladder, autotune quarantine, checkpoint
+corruption fallback, and the PR-5 spec pin (health off + no faults ==
+bit-identical to the pre-robustness pipeline)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core import PAPER_INT8, integer_sgd_init
+from repro.core.bfp import PER_TENSOR, QuantConfig, quantize
+from repro.core.health import bfp_leaf_stats, bfp_tree_stats, health_report
+from repro.core.policy import NumericPolicy
+from repro.data import SyntheticLM
+from repro.introspect import health_summary
+from repro.kernels import autotune, dispatch
+from repro.launch.steps import (TrainHyper, make_decode_step,
+                                make_prefill_step, make_train_step,
+                                quantize_serving_params)
+from repro.launch.supervisor import (GuardConfig, SupervisorAbort,
+                                     TrainSupervisor)
+from repro.models import get_model
+from repro.runtime import fault_injection as finj
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "goldens",
+                      "train_decode_pr5.npz")
+
+CFG8 = QuantConfig(8, PER_TENSOR, True, "threefry")
+
+
+def _masters(seed=0):
+    """A small BFP pytree shaped like IntSGDState.masters."""
+    key = jax.random.key(seed)
+    mk = QuantConfig(16, PER_TENSOR, False, "threefry")
+    return {
+        "embed": {"w": quantize(
+            jax.random.normal(jax.random.fold_in(key, 0), (8, 4)), mk, key)},
+        "layers": {"ffn": quantize(
+            jax.random.normal(jax.random.fold_in(key, 1), (4, 4)), mk, key)},
+    }
+
+
+# -- core.health -------------------------------------------------------------
+
+class TestHealthReport:
+    def test_groups_and_aggregates(self):
+        rep = health_report(_masters(), loss=jnp.float32(1.0))
+        assert set(rep["groups"]) == {"embed", "layers"}
+        for g in rep["groups"].values():
+            assert 0.0 <= float(g["sat8"]) <= 1.0
+            assert int(g["headroom_bits"]) > 100   # O(1) weights: far from Inf
+        assert bool(rep["loss_finite"])
+        assert int(rep["nonfinite_grads"]) == 0
+
+    def test_nan_loss_and_grads_flagged(self):
+        grads = {"embed": {"w": jnp.array([jnp.nan, 1.0, jnp.inf])},
+                 "layers": {"ffn": jnp.ones(3)}}
+        rep = health_report(_masters(), grads=grads,
+                            loss=jnp.float32(jnp.nan))
+        assert not bool(rep["loss_finite"])
+        assert int(rep["nonfinite_grads"]) == 2
+        assert int(rep["groups"]["embed"]["nonfinite"]) == 2
+        assert int(rep["groups"]["layers"]["nonfinite"]) == 0
+
+    def test_exponent_corruption_kills_headroom(self):
+        clean = health_report(_masters())
+        bad = health_report(finj.corrupt_master_exponent(_masters(),
+                                                         bump=200))
+        assert (int(bad["min_headroom_bits"])
+                < int(clean["min_headroom_bits"]) - 100)
+
+    def test_sat8_counts_top_bucket(self):
+        # |m| >= 127 << (bitlen(2040)-7 = 4) = 2032: exactly one element
+        from repro.core.health import _sat8_of_master
+        m = jnp.array([2040, -100, 3, 0], jnp.int16)
+        assert float(_sat8_of_master(m)) == pytest.approx(0.25)
+
+    def test_summary_flattening(self):
+        s = health_summary(jax.device_get(health_report(
+            _masters(), loss=jnp.float32(0.5))))
+        assert {"max_sat8", "min_headroom_bits", "nonfinite_grads",
+                "loss_finite"} <= set(s)
+        assert "embed/sat8" in s and "layers/exp_top" in s
+
+    def test_bfp_tree_stats_serving_view(self):
+        from repro.core.bfp import BFP
+        sat = BFP(jnp.array([[127, -127], [3, 0]], jnp.int8),
+                  jnp.int32(120), CFG8)
+        tree = {"wq": sat, "other": jnp.zeros(3)}  # non-BFP leaves skipped
+        stats = bfp_tree_stats(tree)
+        assert list(stats) == ["wq"]
+        leaf = stats["wq"]
+        assert leaf["bits"] == 8
+        assert leaf["sat_rate"] == pytest.approx(0.5)
+        assert leaf["zero_rate"] == pytest.approx(0.25)
+        assert isinstance(bfp_leaf_stats(sat)["exp_min"], int)
+
+
+# -- launch.supervisor -------------------------------------------------------
+
+def _summary(**over):
+    base = {"max_sat8": 0.001, "min_headroom_bits": 120,
+            "nonfinite_grads": 0, "loss_finite": True,
+            "embed/exp_top": 3, "layers/exp_top": 1}
+    base.update(over)
+    return base
+
+
+class TestSupervisorGuards:
+    def test_healthy_summary_passes_and_seeds_reference(self):
+        sup = TrainSupervisor()
+        assert sup.check(0, _summary()) == []
+        assert sup._ref_exp == {"embed": 3, "layers": 1}
+
+    @pytest.mark.parametrize("over,needle", [
+        ({"loss_finite": False}, "non-finite loss"),
+        ({"nonfinite_grads": 3}, "non-finite"),
+        ({"min_headroom_bits": 2}, "headroom"),
+        ({"max_sat8": 0.9}, "saturation"),
+    ])
+    def test_guards_trip(self, over, needle):
+        sup = TrainSupervisor()
+        trips = sup.check(0, _summary(**over))
+        assert trips and needle in " ".join(trips)
+
+    def test_exp_drift_trips_against_first_report(self):
+        sup = TrainSupervisor(guard=GuardConfig(max_exp_drift=16))
+        assert sup.check(0, _summary()) == []
+        assert sup.check(1, _summary(**{"embed/exp_top": 10})) == []
+        trips = sup.check(2, _summary(**{"embed/exp_top": 25}))
+        assert trips and "drift" in trips[0]
+
+    def test_tripped_first_report_does_not_seed_reference(self):
+        sup = TrainSupervisor()
+        sup.check(0, _summary(loss_finite=False, **{"embed/exp_top": 999}))
+        assert sup._ref_exp is None
+
+
+class TestSupervisorRollback:
+    def test_first_retry_replays_same_data(self):
+        sup = TrainSupervisor()
+        step, state, offset = sup.rollback(5, "template", ["boom"])
+        assert (step, state, offset) == (0, "template", 0)
+        assert sup.events[-1]["event"] == "rollback"
+
+    def test_later_retries_skip_seed_exponentially(self):
+        sup = TrainSupervisor(guard=GuardConfig(max_retries=5, seed_stride=2))
+        offs = [sup.rollback(5, "t", ["boom"])[2] for _ in range(4)]
+        assert offs == [0, 2, 4, 8]
+
+    def test_commit_prefers_snapshot_and_clears_retries(self):
+        sup = TrainSupervisor()
+        sup.rollback(3, "t", ["boom"])
+        sup.commit(3, "state@4")
+        assert sup._retries == {}
+        step, state, _ = sup.rollback(4, "t", ["boom"])
+        assert (step, state) == (4, "state@4")
+
+    def test_rollback_never_restores_past_tripped_step(self):
+        sup = TrainSupervisor()
+        sup.commit(7, "state@8")      # snapshot step 8: in this step's future
+        step, state, _ = sup.rollback(3, "template", ["boom"])
+        assert (step, state) == (0, "template")
+
+    def test_exhausted_retries_abort_with_dump(self, tmp_path):
+        sup = TrainSupervisor(guard=GuardConfig(max_retries=2),
+                              dump_dir=str(tmp_path))
+        sup.rollback(5, "t", ["boom"])
+        sup.rollback(5, "t", ["boom"])
+        with pytest.raises(SupervisorAbort) as exc:
+            sup.rollback(5, "t", ["boom"], _summary())
+        dump = exc.value.dump_path
+        assert dump and os.path.exists(dump)
+        with open(dump) as f:
+            payload = json.load(f)
+        assert payload["step"] == 5 and payload["trips"] == ["boom"]
+        assert any(e["event"] == "abort" for e in sup.events)
+
+    def test_checkpoint_restore_is_bounded_by_tripped_step(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        mgr.save(2, {"w": np.arange(4.0)})
+        mgr.save(6, {"w": np.arange(4.0) + 1})
+        sup = TrainSupervisor(mgr)
+        step, state, _ = sup.rollback(4, {"w": np.zeros(4)}, ["boom"])
+        assert step == 2              # step-6 checkpoint is in the future
+        np.testing.assert_array_equal(np.asarray(state["w"]), np.arange(4.0))
+
+
+class TestSupervisorCluster:
+    def _sup(self, timeout=2.5):
+        clock = finj.SimClock()
+        sup = TrainSupervisor(hosts=[0, 1], clock=clock,
+                              heartbeat_timeout_s=timeout)
+        return sup, clock
+
+    def test_dead_host_yields_shrunk_mesh_plan(self):
+        sup, clock = self._sup()
+        sup.commit(4, "state@5")
+        clock.advance(3.0)
+        sup.heartbeat.beat(0)         # host 1 never beats
+        plan = sup.poll_cluster(5)
+        assert plan is not None
+        assert plan.mesh_shape == (1, 1)
+        assert plan.dropped_hosts == (1,)
+        assert plan.restore_step == 5  # snapshot step
+        assert sup.recovery_events()[-1]["event"] == "remesh"
+
+    def test_dead_host_reported_once(self):
+        sup, clock = self._sup()
+        clock.advance(3.0)
+        sup.heartbeat.beat(0)
+        assert sup.poll_cluster(1) is not None
+        clock.advance(3.0)
+        sup.heartbeat.beat(0)
+        assert sup.poll_cluster(2) is None   # already dropped
+
+    def test_all_hosts_alive_is_quiet(self):
+        sup, clock = self._sup()
+        clock.advance(1.0)
+        sup.heartbeat.beat(0)
+        sup.heartbeat.beat(1)
+        assert sup.poll_cluster(0) is None
+        assert sup.events == []
+
+
+# -- kernels: degradation ladder + quarantine --------------------------------
+
+@pytest.fixture()
+def tmp_autotune(tmp_path, monkeypatch):
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_KERNEL_AUTOTUNE_CACHE", path)
+    finj.clear_kernel_failure()
+    dispatch.reset_fallback_counts()
+    yield path
+    finj.clear_kernel_failure()
+
+
+class TestDegradationLadder:
+    M, K, N = 32, 64, 48
+
+    def _run(self, kernel_mode):
+        key = jax.random.key(0)
+        ka, kb = jax.random.split(key)
+        a = jax.random.normal(jax.random.fold_in(key, 1), (self.M, self.K))
+        b = jax.random.normal(jax.random.fold_in(key, 2), (self.N, self.K))
+        dec = dispatch.plan_contract("t", self.M, self.K, self.N, CFG8,
+                                     kernel_mode=kernel_mode)
+        return dispatch.contract_qq(a, b, CFG8, ka, kb, dec)
+
+    @staticmethod
+    def _assert_same(x, y):
+        np.testing.assert_array_equal(np.asarray(x[0]), np.asarray(y[0]))
+        np.testing.assert_array_equal(np.asarray(x[1].m), np.asarray(y[1].m))
+        np.testing.assert_array_equal(np.asarray(x[2].m), np.asarray(y[2].m))
+
+    def test_forced_fused_failure_degrades_bit_identically(self, tmp_autotune):
+        ref = self._run("jnp")
+        finj.arm_kernel_failure("fused", count=1)
+        out = self._run("fused")      # fused -> unfused
+        self._assert_same(out, ref)
+        assert dispatch.fallback_counts().get("fused->unfused") == 1
+
+    def test_total_kernel_failure_reaches_jnp_rung(self, tmp_autotune):
+        ref = self._run("jnp")
+        finj.arm_kernel_failure("any", count=-1)
+        out = self._run("fused")      # fused -> unfused -> jnp
+        finj.clear_kernel_failure()
+        self._assert_same(out, ref)
+        counts = dispatch.fallback_counts()
+        assert counts.get("fused->unfused") == 1
+        assert counts.get("unfused->jnp") == 1
+
+    def test_failed_fused_bm_is_quarantined(self, tmp_autotune):
+        finj.arm_kernel_failure("fused", count=1)
+        self._run("fused")
+        key = autotune.shape_key("qq", self.M, self.K, self.N, 8,
+                                 PER_TENSOR, jax.default_backend())
+        assert autotune.bad_bms(key)
+
+
+class TestAutotuneQuarantine:
+    def test_select_bm_skips_quarantined_candidates(self, tmp_path):
+        cache = autotune.AutotuneCache(str(tmp_path / "at.json"))
+        pick = autotune.select_bm("k", 64, lambda bm: True, cache=cache)
+        assert pick > 0
+        autotune.quarantine("k", pick, cache=cache)
+        again = autotune.select_bm("k", 64, lambda bm: True, cache=cache)
+        assert again > 0 and again != pick
+
+    def test_quarantine_drops_stale_pick(self, tmp_path):
+        cache = autotune.AutotuneCache(str(tmp_path / "at.json"))
+        cache.put("k", {"bm": 128, "us": {"128": 1.0}})
+        autotune.quarantine("k", 128, cache=cache)
+        entry = cache.load()["k"]
+        assert "bm" not in entry and entry["bad"] == [128]
+
+    def test_measured_entries_persist_quarantine(self, tmp_path):
+        cache = autotune.AutotuneCache(str(tmp_path / "at.json"))
+        autotune.quarantine("k", 32, cache=cache)
+        autotune.select_bm("k", 64, lambda bm: True, measure=True,
+                           bench=lambda bm: float(bm), cache=cache)
+        entry = cache.load()["k"]
+        assert entry["bad"] == [32]
+        assert entry["bm"] != 32
+
+
+# -- checkpoint corruption fallback ------------------------------------------
+
+class TestCheckpointIntegrity:
+    def _tree(self, shift=0):
+        return {"w": np.arange(8, dtype=np.float32) + shift,
+                "b": np.ones(3, dtype=np.int16)}
+
+    def test_restore_latest_skips_corrupt_newest(self, tmp_path, capsys):
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        mgr.save(2, self._tree(0))
+        mgr.save(4, self._tree(1))
+        leaf = tmp_path / "step_4" / "leaf_0.npy"
+        blob = bytearray(leaf.read_bytes())
+        blob[-1] ^= 0xFF              # bit-rot the newest step's payload
+        leaf.write_bytes(bytes(blob))
+
+        assert mgr.verify(2) and not mgr.verify(4)
+        with pytest.raises(IOError):
+            mgr.restore(4, self._tree())   # direct restore never lies
+        step, tree = mgr.restore_latest(self._tree())
+        assert step == 2
+        np.testing.assert_array_equal(tree["w"], self._tree(0)["w"])
+        assert "damaged" in capsys.readouterr().out
+
+    def test_restore_latest_raises_when_all_damaged(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        mgr.save(1, self._tree())
+        (tmp_path / "step_1" / "META.json").write_text("{broken")
+        with pytest.raises(IOError):
+            mgr.restore_latest(self._tree())
+
+    def test_missing_leaf_file_detected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        mgr.save(3, self._tree())
+        os.remove(tmp_path / "step_3" / "leaf_1.npy")
+        assert not mgr.verify(3)
+
+    def test_same_step_concurrent_saves_do_not_tear(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_write=True)
+        mgr.save(6, self._tree(0))
+        mgr.save(6, self._tree(1))    # same step: must serialize, not race
+        mgr.wait()
+        assert mgr.verify(6)
+
+
+# -- fault injectors ---------------------------------------------------------
+
+class TestFaultInjectors:
+    def test_exponent_bump_is_targeted(self):
+        m = _masters()
+        bad = finj.corrupt_master_exponent(m, leaf_index=0, bump=200)
+        leaves = jax.tree_util.tree_leaves(
+            m, is_leaf=lambda x: hasattr(x, "e"))
+        bad_leaves = jax.tree_util.tree_leaves(
+            bad, is_leaf=lambda x: hasattr(x, "e"))
+        assert int(jnp.max(bad_leaves[0].e - leaves[0].e)) == 200
+        np.testing.assert_array_equal(np.asarray(bad_leaves[1].e),
+                                      np.asarray(leaves[1].e))
+
+    def test_bit_flips_are_deterministic(self):
+        m = _masters()
+        f1 = finj.flip_mantissa_bits(m, seed=7)
+        f2 = finj.flip_mantissa_bits(m, seed=7)
+        l1 = jax.tree_util.tree_leaves(f1, is_leaf=lambda x: hasattr(x, "m"))
+        l2 = jax.tree_util.tree_leaves(f2, is_leaf=lambda x: hasattr(x, "m"))
+        np.testing.assert_array_equal(np.asarray(l1[0].m),
+                                      np.asarray(l2[0].m))
+        orig = jax.tree_util.tree_leaves(m, is_leaf=lambda x: hasattr(x, "m"))
+        assert not np.array_equal(np.asarray(l1[0].m),
+                                  np.asarray(orig[0].m))
+
+    def test_sim_clock_and_host_sim(self):
+        clock = finj.SimClock()
+        sim = finj.HostSim([0, 1], clock)
+        from repro.runtime.fault_tolerance import Heartbeat
+        hb = Heartbeat([0, 1], timeout_s=2.5, clock=clock)
+        sim.tick(hb)
+        assert hb.dead() == set()
+        sim.kill(1)
+        for _ in range(3):
+            sim.tick(hb)
+        assert hb.dead() == {1}
+        assert sim.alive() == [0]
+
+
+# -- spec pin: health off + no faults == PR-5 HEAD ---------------------------
+
+class TestSpecPin:
+    ARCH, STEPS, BATCH, SEQ = "qwen2_0_5b", 3, 2, 16
+    PROMPT, GEN = 8, 4
+
+    def _train(self, policy):
+        cfg = get_smoke_config(self.ARCH)
+        mod = get_model(cfg)
+        key = jax.random.key(0)
+        ds = SyntheticLM(vocab=cfg.vocab, seq_len=self.SEQ,
+                         global_batch=self.BATCH, seed=0)
+        hyper = TrainHyper(lr=0.05, momentum=0.9)
+        state = integer_sgd_init(mod.init_params(key, cfg), policy, key=key)
+        step_fn = jax.jit(make_train_step(cfg, policy, hyper))
+        losses = []
+        for step in range(self.STEPS):
+            batch = {k: jnp.asarray(v)
+                     for k, v in ds.batch_for_step(step).items()}
+            out = step_fn(state, batch, jax.random.fold_in(key, step))
+            state, loss = out[0], out[1]
+            losses.append(float(loss))
+        return np.asarray(losses, np.float64), state
+
+    @pytest.mark.parametrize("tag,policy", [
+        ("int8", PAPER_INT8),
+        ("qfull", NumericPolicy(qflow=True, qweights=True)),
+    ])
+    def test_train_bit_identical_to_pr5(self, tag, policy):
+        golden = np.load(GOLDEN)
+        losses, state = self._train(policy)
+        np.testing.assert_array_equal(losses, golden[f"train_{tag}_losses"])
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(state)):
+            np.testing.assert_array_equal(
+                np.asarray(leaf), golden[f"train_{tag}_leaf_{i}"],
+                err_msg=f"state leaf {i} diverged from PR-5 HEAD")
+
+    def test_health_report_rides_without_perturbing(self):
+        base_losses, base_state = self._train(PAPER_INT8)
+        policy = NumericPolicy(health=True)
+        cfg = get_smoke_config(self.ARCH)
+        mod = get_model(cfg)
+        key = jax.random.key(0)
+        ds = SyntheticLM(vocab=cfg.vocab, seq_len=self.SEQ,
+                         global_batch=self.BATCH, seed=0)
+        state = integer_sgd_init(mod.init_params(key, cfg), policy, key=key)
+        step_fn = jax.jit(make_train_step(
+            cfg, policy, TrainHyper(lr=0.05, momentum=0.9)))
+        losses = []
+        for step in range(self.STEPS):
+            batch = {k: jnp.asarray(v)
+                     for k, v in ds.batch_for_step(step).items()}
+            state, loss, report = step_fn(state, batch,
+                                          jax.random.fold_in(key, step))
+            losses.append(float(loss))
+        np.testing.assert_array_equal(np.asarray(losses, np.float64),
+                                      base_losses)
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(base_state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        summary = health_summary(jax.device_get(report))
+        assert summary["loss_finite"]
+        assert TrainSupervisor().check(0, summary) == []
+
+    def test_decode_bit_identical_to_pr5(self):
+        golden = np.load(GOLDEN)
+        cfg = get_smoke_config(self.ARCH)
+        mod = get_model(cfg)
+        policy = NumericPolicy(qweights=True, qcache=True)
+        key = jax.random.key(0)
+        params = mod.init_params(key, cfg)
+        params = quantize_serving_params(params, cfg, policy,
+                                         jax.random.fold_in(key, 0x9E))
+        max_len = self.PROMPT + self.GEN
+        prompts = jax.random.randint(jax.random.fold_in(key, 1),
+                                     (self.BATCH, self.PROMPT), 0, cfg.vocab)
+        prefill_fn = jax.jit(make_prefill_step(cfg, policy, max_len))
+        decode_fn = jax.jit(make_decode_step(cfg, policy))
+        cache, logits = prefill_fn(params, {"tokens": prompts},
+                                   jax.random.fold_in(key, 3))
+        np.testing.assert_array_equal(np.asarray(logits),
+                                      golden["decode_logits_0"])
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(self.GEN - 1):
+            logits, cache = decode_fn(params, cache, tok,
+                                      jnp.int32(self.PROMPT + i),
+                                      jax.random.fold_in(key, 10 + i))
+            np.testing.assert_array_equal(np.asarray(logits),
+                                          golden[f"decode_logits_{i + 1}"])
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)

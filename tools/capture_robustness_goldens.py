@@ -1,0 +1,103 @@
+"""Capture the PR-5-HEAD train/decode goldens for the robustness spec pin.
+
+Run from the repo root at the commit whose behaviour is the contract:
+
+    PYTHONPATH=src python tools/capture_robustness_goldens.py
+
+Writes ``tests/goldens/train_decode_pr5.npz`` holding, for the qwen2 smoke
+config:
+
+  * 3 integer train-step losses + the full final ``IntSGDState`` leaves for
+    the plain int8 policy and for the qflow+qweights policy;
+  * prefill logits and 4 greedy decode-step logits for the
+    qweights+qcache serving path.
+
+``tests/test_robustness.py::TestSpecPin`` asserts the same computation —
+with ``NumericPolicy.health`` off and no faults injected — reproduces every
+array bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import PAPER_INT8, integer_sgd_init
+from repro.core.policy import NumericPolicy
+from repro.data import SyntheticLM
+from repro.launch.steps import (TrainHyper, make_decode_step,
+                                make_prefill_step, make_train_step,
+                                quantize_serving_params)
+from repro.models import get_model
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "goldens",
+                   "train_decode_pr5.npz")
+
+ARCH = "qwen2_0_5b"
+STEPS, BATCH, SEQ = 3, 2, 16
+PROMPT, GEN = 8, 4
+
+
+def run_train(policy: NumericPolicy):
+    cfg = get_smoke_config(ARCH)
+    mod = get_model(cfg)
+    key = jax.random.key(0)
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=SEQ, global_batch=BATCH, seed=0)
+    hyper = TrainHyper(lr=0.05, momentum=0.9)
+    state = integer_sgd_init(mod.init_params(key, cfg), policy, key=key)
+    step_fn = jax.jit(make_train_step(cfg, policy, hyper))
+    losses = []
+    for step in range(STEPS):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_for_step(step).items()}
+        out = step_fn(state, batch, jax.random.fold_in(key, step))
+        state, loss = out[0], out[1]
+        losses.append(float(loss))
+    return np.asarray(losses, np.float64), state
+
+
+def run_decode():
+    cfg = get_smoke_config(ARCH)
+    mod = get_model(cfg)
+    policy = NumericPolicy(qweights=True, qcache=True)
+    key = jax.random.key(0)
+    params = mod.init_params(key, cfg)
+    params = quantize_serving_params(params, cfg, policy,
+                                     jax.random.fold_in(key, 0x9E))
+    max_len = PROMPT + GEN
+    prompts = jax.random.randint(jax.random.fold_in(key, 1), (BATCH, PROMPT),
+                                 0, cfg.vocab)
+    prefill_fn = jax.jit(make_prefill_step(cfg, policy, max_len))
+    decode_fn = jax.jit(make_decode_step(cfg, policy))
+    cache, logits = prefill_fn(params, {"tokens": prompts},
+                               jax.random.fold_in(key, 3))
+    outs = [np.asarray(logits)]
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for i in range(GEN - 1):
+        logits, cache = decode_fn(params, cache, tok, jnp.int32(PROMPT + i),
+                                  jax.random.fold_in(key, 10 + i))
+        outs.append(np.asarray(logits))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return outs
+
+
+def main():
+    payload = {}
+    for tag, policy in (("int8", PAPER_INT8),
+                        ("qfull", NumericPolicy(qflow=True, qweights=True))):
+        losses, state = run_train(policy)
+        payload[f"train_{tag}_losses"] = losses
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(state)):
+            payload[f"train_{tag}_leaf_{i}"] = np.asarray(leaf)
+    for i, logits in enumerate(run_decode()):
+        payload[f"decode_logits_{i}"] = logits
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    np.savez_compressed(OUT, **payload)
+    print(f"wrote {os.path.normpath(OUT)} ({len(payload)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

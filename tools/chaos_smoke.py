@@ -1,0 +1,174 @@
+#!/usr/bin/env python
+"""Chaos smoke: fault-injected training must recover bit-exactly.
+
+The robustness stack's end-to-end contract (docs/ROBUSTNESS.md) is not
+"survives faults" but "faults leave no numeric trace": the supervisor's
+rollback replays the tripped step from the last committed state with the
+same data, and the stateless-by-step pipeline makes that replay
+bit-identical — so a chaos run's loss trajectory must EQUAL the
+fault-free run's, float-for-float.  This script asserts exactly that,
+plus the degradation ladder's twin contract (a failed kernel launch
+falls one rung and reproduces the same bits).
+
+Sections (each prints PASS/FAIL; any FAIL exits non-zero):
+
+  1. baseline   fault-free smoke train -> reference losses
+  2. health     same run with the health sentinel on -> identical losses
+                (the report is observation-only; spec pin)
+  3. chaos      FaultPlan(nan corruption + simulated dead host) on a
+                2-host sim fleet -> the supervisor must log >=1 rollback
+                and >=1 remesh, and the final losses must equal baseline
+  4. ladder     armed kernel failures on a forced-fused contraction ->
+                fused->unfused and unfused->jnp fallbacks reproduce the
+                clean jnp oracle bit-for-bit, and the failing block
+                height lands in autotune quarantine
+
+    PYTHONPATH=src python tools/chaos_smoke.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+# the ladder section quarantines autotune entries; never touch the
+# user's real cache (must be set before repro.kernels imports resolve it)
+_AUTOTUNE_TMP = tempfile.mkdtemp(prefix="chaos_autotune_")
+os.environ["REPRO_KERNEL_AUTOTUNE_CACHE"] = os.path.join(
+    _AUTOTUNE_TMP, "autotune.json")
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+_FAILED = []
+
+
+def _check(name: str, ok: bool, detail: str = "") -> None:
+    print(f"[{'PASS' if ok else 'FAIL'}] {name}" + (f": {detail}" if detail
+                                                    else ""))
+    if not ok:
+        _FAILED.append(name)
+
+
+def run_train_sections(arch: str, steps: int, batch: int, seq: int,
+                       lr: float) -> None:
+    from repro.launch.train import train
+    from repro.runtime.fault_injection import FaultPlan
+
+    kw = dict(smoke=True, steps=steps, batch=batch, seq=seq,
+              policy_name="int8", lr=lr, ckpt_every=2, quiet=True)
+
+    base, _ = train(arch, **kw)
+    print(f"baseline losses: {base}")
+    _check("baseline finite", all(l == l and abs(l) != float("inf")
+                                  for l in base))
+
+    healthy, _ = train(arch, health=True, **kw)
+    _check("health sentinel is observation-only", healthy == base,
+           f"{healthy} != {base}" if healthy != base else
+           "losses bit-identical")
+
+    plan = FaultPlan(nan_step=max(steps - 4, 1),
+                     kill_host_step=max(steps - 3, 1), kill_host=1)
+    with tempfile.TemporaryDirectory(prefix="chaos_ckpt_") as ckpt:
+        chaos, _ = train(arch, fault_plan=plan, sim_hosts=2,
+                         ckpt_dir=ckpt, **kw)
+        sup = train.last_supervisor
+        events = [(e["step"], e["event"]) for e in sup.events]
+        print(f"chaos losses:    {chaos}")
+        print(f"chaos events:    {events}")
+        kinds = {e["event"] for e in sup.events}
+        _check("chaos trips the guard (rollback logged)",
+               "rollback" in kinds)
+        _check("dead host re-meshes (remesh logged)", "remesh" in kinds)
+        _check("recovery leaves no numeric trace", chaos == base,
+               f"{chaos} != {base}" if chaos != base else
+               "losses bit-identical to fault-free run")
+
+
+def run_ladder_section(seed: int = 0) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.bfp import PER_TENSOR, QuantConfig
+    from repro.kernels import autotune, dispatch
+    from repro.runtime.fault_injection import (arm_kernel_failure,
+                                               clear_kernel_failure)
+
+    m, k, n = 32, 64, 48
+    cfg = QuantConfig(8, PER_TENSOR, True, "threefry")
+    key = jax.random.key(seed)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (n, k), jnp.float32)
+
+    def run(kernel_mode):
+        dec = dispatch.plan_contract("chaos", m, k, n, cfg,
+                                     kernel_mode=kernel_mode)
+        return dec, dispatch.contract_qq(a, b, cfg, ka, kb, dec)
+
+    def same(x, y):
+        return (np.array_equal(np.asarray(x[0]), np.asarray(y[0]))
+                and np.array_equal(np.asarray(x[1].m), np.asarray(y[1].m))
+                and np.array_equal(np.asarray(x[2].m), np.asarray(y[2].m)))
+
+    dispatch.reset_fallback_counts()
+    clear_kernel_failure()
+    _, ref_out = run("jnp")
+
+    dec, fused_out = run("fused")
+    _check("forced-fused plan picks the fused path",
+           dec.path == dispatch.FUSED, dec.reason)
+    _check("fused rung matches the jnp oracle", same(fused_out, ref_out))
+
+    arm_kernel_failure("fused", count=1)
+    _, once = run("fused")
+    _check("fused failure degrades bit-identically", same(once, ref_out))
+
+    arm_kernel_failure("any", count=-1)          # every kernel rung fails
+    _, twice = run("fused")
+    clear_kernel_failure()
+    _check("double failure reaches the jnp rung bit-identically",
+           same(twice, ref_out))
+
+    counts = dispatch.fallback_counts()
+    print(f"fallback counts: {counts}")
+    _check("fallback transitions are counted",
+           counts.get("fused->unfused", 0) >= 2
+           and counts.get("unfused->jnp", 0) >= 1, str(counts))
+
+    backend = jax.default_backend()
+    atkey = autotune.shape_key("qq", m, k, n, cfg.bits, PER_TENSOR, backend)
+    bad = autotune.bad_bms(atkey)
+    _check("failing block height is quarantined", len(bad) > 0,
+           f"key={atkey} bad={sorted(bad)}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_0_5b")
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="only run the (fast) kernel-ladder section")
+    args = ap.parse_args()
+
+    run_ladder_section()
+    if not args.skip_train:
+        run_train_sections(args.arch, args.steps, args.batch, args.seq,
+                           args.lr)
+
+    if _FAILED:
+        print(f"\nchaos smoke FAILED: {', '.join(_FAILED)}")
+        return 1
+    print("\nchaos smoke passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
