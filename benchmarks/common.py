@@ -5,8 +5,14 @@ import time
 import jax
 
 
-def time_op(fn, *args, warmup=2, iters=10):
-    """Median wall time per call in microseconds (blocks on result)."""
+def time_op_stats(fn, *args, warmup=2, iters=10):
+    """(median, population std) wall time per call in microseconds.
+
+    ``iters`` is clamped to >= 5 so the std is a usable noise floor for
+    the bench-trend time gate (tools/check_bench_trend.py); warmup runs
+    absorb compilation and first-touch allocation.
+    """
+    iters = max(iters, 5)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -15,7 +21,15 @@ def time_op(fn, *args, warmup=2, iters=10):
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    med = times[len(times) // 2] * 1e6
+    mean = sum(times) / len(times)
+    var = sum((t - mean) ** 2 for t in times) / len(times)
+    return med, var ** 0.5 * 1e6
+
+
+def time_op(fn, *args, warmup=2, iters=10):
+    """Median wall time per call in microseconds (blocks on result)."""
+    return time_op_stats(fn, *args, warmup=warmup, iters=iters)[0]
 
 
 def row(name, us, derived=""):

@@ -15,6 +15,12 @@ trackable across PRs.  The fused path's bytes are strictly below the
 unfused path's: the intermediate mantissa round-trip between quantizer
 and GEMM never touches HBM.
 
+The cross-op-chain section emits TWIN rows per chain family
+(``norm_gemm``, ``gemm_epilogue``, ``decode_block``): the unfused
+multi-op composition vs the fused chain, median-of-k wall µs with a
+recorded ``us_std`` noise floor — ``tools/check_bench_trend.py`` gates
+both the bytes model and the wall-clock on these rows.
+
 The dataflow section traces one transformer train step with ``qflow``
 off/on, counts quantize executions via the jaxpr scanner in
 ``repro.introspect`` (scan-trip-weighted), and writes the reduction to
@@ -44,7 +50,7 @@ from repro.launch.steps import TrainHyper, make_train_step
 from repro.models import get_model
 from repro.models.common import weight_t
 
-from .common import row, time_op
+from .common import row, time_op, time_op_stats
 
 KEY = jax.random.key(0)
 
@@ -136,6 +142,181 @@ def _gemm_pipeline_records():
                             us=us,
                             bytes_moved=dispatch.bytes_moved(
                                 dispatch.FUSED, m, k, n, kind="pp")))
+    return records
+
+
+# ---------------------------------------------------------------------------
+# cross-op fused chains: fused chain vs unfused composition (BENCH_kernels)
+# ---------------------------------------------------------------------------
+
+# Each chain gets TWIN rows per shape: ``unfused`` times the established
+# multi-op seam composition (the exact op sequence the chain replaces, on
+# the default CPU dispatch path), ``fused`` times the chain through the
+# real dispatch runner.  On CPU the runner's kernel rung is interpret-mode
+# Pallas — an *emulator*, not a perf proxy — so the fused row is timed on
+# the runner's bit-exact jnp mirror (the degradation ladder's terminal
+# rung, reached by arming the fault injector for the trace): that is the
+# chain's single-pass dataflow as XLA executes it.  Both rows carry
+# ``us_std`` so tools/check_bench_trend.py can gate fused-vs-unfused wall
+# time above a 2-sigma noise floor; ``bytes_moved`` stays the analytic
+# HBM model (the TPU claim).
+
+CHAIN_GEMM_SHAPES = [(256, 256, 256), (512, 512, 512)]
+# (d_model, n_ff, hq, hkv, dh, cache_len) per decode-block shape
+DECODE_BLOCK_SHAPES = [(256, 512, 4, 2, 64, 128), (512, 1024, 8, 4, 64, 128)]
+
+
+def _time_fused_chain(fn, *args):
+    """(median, std) µs of a fused-chain call routed to its jnp mirror."""
+    from repro.runtime import fault_injection as fi
+    fi.arm_kernel_failure("fused", count=-1)
+    try:
+        med, std = time_op_stats(fn, *args, warmup=2, iters=11)
+    finally:
+        fi.clear_kernel_failure()
+    dispatch.reset_fallback_counts()
+    return med, std
+
+
+def _chain_records():
+    import dataclasses as _dc
+
+    from repro.core import qcache_append, qcache_quantize, qrmsnorm
+    from repro.core.qchain import qdecode_block, qmatmul_epi, qnorm_gemm
+    from repro.models.attention import cache_decode_attention
+    from repro.models.common import apply_rope, rope
+
+    qf = _dc.replace(PAPER_INT8, qflow=True)
+    qff = _dc.replace(qf, kernel_mode="fused")
+    records = []
+
+    # -- norm -> quantize -> GEMM ------------------------------------------
+    for m, k, n in CHAIN_GEMM_SHAPES:
+        rng = np.random.RandomState(m)
+        x = jnp.asarray(rng.randn(m, k).astype(np.float32))
+        g = jnp.asarray(1.0 + 0.1 * rng.randn(k).astype(np.float32))
+        w = jnp.asarray(rng.randn(k, n).astype(np.float32) / np.sqrt(k))
+        shape = f"{m}x{k}x{n}"
+
+        def unfused(x, g, w, key):
+            kn, kp_ = jax.random.split(key)
+            hn = qrmsnorm(x, g, kn, qf, out_q=qf.qflow_seams)
+            return qmatmul(hn, w, kp_, qf)
+        us, us_std = time_op_stats(jax.jit(unfused), x, g, w, KEY,
+                                   warmup=2, iters=11)
+        records.append(dict(op="norm_gemm", path="unfused", shape=shape,
+                            us=us, us_std=us_std,
+                            bytes_moved=dispatch.norm_gemm_bytes_moved(
+                                "unfused", m, k, n)))
+
+        def fused(x, g, w, key):
+            out = qnorm_gemm(x, g, None, w, key, qff)
+            assert out is not None, "dispatch did not plan the fused chain"
+            return out
+        us, us_std = _time_fused_chain(jax.jit(fused), x, g, w, KEY)
+        records.append(dict(op="norm_gemm", path="fused", shape=shape,
+                            us=us, us_std=us_std,
+                            bytes_moved=dispatch.norm_gemm_bytes_moved(
+                                dispatch.FUSED, m, k, n)))
+
+    # -- GEMM -> bias/act -> out-quantize ----------------------------------
+    for m, k, n in CHAIN_GEMM_SHAPES:
+        rng = np.random.RandomState(n)
+        x = jnp.asarray(rng.randn(m, k).astype(np.float32))
+        w = jnp.asarray(rng.randn(k, n).astype(np.float32) / np.sqrt(k))
+        b = jnp.asarray(0.1 * rng.randn(n).astype(np.float32))
+        shape = f"{m}x{k}x{n}"
+        qcfg = QuantConfig(8)
+
+        def unfused(x, w, b, key):
+            y = jax.nn.relu(qmatmul(x, w, key, qf) + b)
+            q = quantize(y, qcfg, jax.random.fold_in(key, 0xD0))
+            return q.m, q.e
+        us, us_std = time_op_stats(jax.jit(unfused), x, w, b, KEY,
+                                   warmup=2, iters=11)
+        records.append(dict(op="gemm_epilogue", path="unfused", shape=shape,
+                            us=us, us_std=us_std,
+                            bytes_moved=dispatch.epilogue_bytes_moved(
+                                "unfused", m, k, n, bias=True, act=True,
+                                out_q=True)))
+
+        def fused(x, w, b, key):
+            out = qmatmul_epi(x, w, key, qff, bias=b, act="relu", out_q=True)
+            assert out is not None, "dispatch did not plan the fused chain"
+            return out.m, out.e
+        us, us_std = _time_fused_chain(jax.jit(fused), x, w, b, KEY)
+        records.append(dict(op="gemm_epilogue", path="fused", shape=shape,
+                            us=us, us_std=us_std,
+                            bytes_moved=dispatch.epilogue_bytes_moved(
+                                dispatch.FUSED, m, k, n, bias=True, act=True,
+                                out_q=True)))
+
+    # -- whole-block decode megakernel -------------------------------------
+    qc = _dc.replace(PAPER_INT8, qflow=True, qcache=True, fused_proj=True)
+    qcf = _dc.replace(qc, kernel_mode="fused")
+    for d, n_ff, hq, hkv, dh, t in DECODE_BLOCK_SHAPES:
+        rng = np.random.RandomState(d)
+        bsz = 2
+        x = jnp.asarray(rng.randn(bsz, d).astype(np.float32))
+        g1 = jnp.asarray(1.0 + 0.1 * rng.randn(d).astype(np.float32))
+        g2 = jnp.asarray(1.0 + 0.1 * rng.randn(d).astype(np.float32))
+        mk = lambda ki, ko: jnp.asarray(
+            rng.randn(ki, ko).astype(np.float32) / np.sqrt(ki))
+        wq, wk, wv = mk(d, hq * dh), mk(d, hkv * dh), mk(d, hkv * dh)
+        wo = mk(hq * dh, d)
+        wg, wu, wd = mk(d, n_ff), mk(d, n_ff), mk(n_ff, d)
+        kc = qcache_quantize(
+            jnp.asarray(rng.randn(bsz, hkv, t, dh).astype(np.float32)), qc)
+        vc = qcache_quantize(
+            jnp.asarray(rng.randn(bsz, hkv, t, dh).astype(np.float32)), qc)
+        pos = jnp.int32(t - 1)
+        shape = f"d{d}xff{n_ff}xt{t}"
+        wqkv = jnp.concatenate([wq, wk, wv], axis=-1)
+        wgu = jnp.concatenate([wg, wu], axis=-1)
+
+        def unfused(x, pos, key):
+            h = x[:, None, :]
+            ks = [jax.random.fold_in(key, i) for i in range(7)]
+            hn = qrmsnorm(h, g1, ks[0], qc, out_q=qc.qflow_seams)
+            qkv = qmatmul(hn, wqkv, ks[1], qc)
+            nq, nk = hq * dh, hkv * dh
+            qv, kv_, vv = jnp.split(qkv, (nq, nq + nk), axis=-1)
+            qh = qv.reshape(bsz, 1, hq, dh).transpose(0, 2, 1, 3)
+            kh = kv_.reshape(bsz, 1, hkv, dh).transpose(0, 2, 1, 3)
+            vh = vv.reshape(bsz, 1, hkv, dh).transpose(0, 2, 1, 3)
+            cq, sq = rope(pos[None], dh, 10000.0)
+            qh = apply_rope(qh, cq[None, None], sq[None, None])
+            kh = apply_rope(kh, cq[None, None], sq[None, None])
+            kc2 = qcache_append(kc, kh, pos, axis=2)
+            vc2 = qcache_append(vc, vh, pos, axis=2)
+            o = cache_decode_attention(qh, kc2, vc2, pos, ks[2], qc)
+            h = h + qmatmul(o.transpose(0, 2, 1, 3).reshape(bsz, 1, hq * dh),
+                            wo, ks[3], qc)
+            hn = qrmsnorm(h, g2, ks[4], qc, out_q=qc.qflow_seams)
+            gu = qmatmul(hn, wgu, ks[5], qc)
+            gg, uu = jnp.split(gu, 2, axis=-1)
+            h = h + qmatmul(jax.nn.silu(gg) * uu, wd, ks[6], qc)
+            return h[:, 0]
+        us, us_std = time_op_stats(jax.jit(unfused), x, pos, KEY,
+                                   warmup=2, iters=11)
+        records.append(dict(op="decode_block", path="unfused", shape=shape,
+                            us=us, us_std=us_std,
+                            bytes_moved=dispatch.decode_block_bytes_moved(
+                                "unfused", bsz, d, n_ff, t, hq, hkv, dh)))
+
+        def fused(x, pos, key):
+            cq, sq = rope(pos[None], dh, 10000.0)
+            cossin = jnp.concatenate([cq, cq, sq, sq], axis=-1)
+            out = qdecode_block(x, g1, g2, wq, wk, wv, wo, wg, wu, wd,
+                                kc, vc, cossin, pos, key, qcf,
+                                hq=hq, hkv=hkv, dh=dh)
+            assert out is not None, "dispatch did not plan the decode block"
+            return out[0]
+        us, us_std = _time_fused_chain(jax.jit(fused), x, pos, KEY)
+        records.append(dict(op="decode_block", path="fused", shape=shape,
+                            us=us, us_std=us_std,
+                            bytes_moved=dispatch.decode_block_bytes_moved(
+                                dispatch.FUSED, bsz, d, n_ff, t, hq, hkv, dh)))
     return records
 
 
@@ -332,6 +513,8 @@ def run():
     records = _gemm_pipeline_records()
     # attention family: scan-of-GEMMs vs the fused flash kernel
     records += _attention_records()
+    # cross-op chains: fused chain vs the unfused multi-op composition
+    records += _chain_records()
     for r in records:
         row(f"{r['op']}_{r['path']}_{r['shape']}",
             "" if r["us"] is None else r["us"],

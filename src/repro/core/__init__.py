@@ -9,7 +9,8 @@ from .policy import (FLOAT32, PAPER_INT8, QC_ROWS, QC_STATE, QW_NONE,
                      int_policy)
 from .qops import (qbmm, qcache_append, qcache_prefill, qcache_pv, qcache_qk,
                    qcache_quantize, qcontract, qconv, qembed, qmatmul, qrelu)
-from .qnorm import qbatchnorm, qlayernorm, qrmsnorm
+from .qnorm import norm_gain_fx, qbatchnorm, qlayernorm, qrmsnorm
+from .qchain import qdecode_block, qmatmul_epi, qnorm_gemm
 from .integer_sgd import (IntSGDState, derive_qweights, integer_sgd_init,
                           integer_sgd_step, master_params_f32,
                           quantize_weights_once, qweight_grads)
@@ -27,7 +28,8 @@ __all__ = [
     "qbmm", "qcontract", "qconv", "qembed", "qmatmul", "qrelu",
     "qcache_quantize", "qcache_prefill", "qcache_append", "qcache_qk",
     "qcache_pv",
-    "qbatchnorm", "qlayernorm", "qrmsnorm",
+    "qbatchnorm", "qlayernorm", "qrmsnorm", "norm_gain_fx",
+    "qdecode_block", "qmatmul_epi", "qnorm_gemm",
     "IntSGDState", "integer_sgd_init", "integer_sgd_step", "master_params_f32",
     "derive_qweights", "quantize_weights_once", "qweight_grads",
     "uniform_qmatmul", "uniform_quantize",

@@ -1,0 +1,372 @@
+"""Cross-op fused chains: the qops-layer face of ``kernels.fused_chain``.
+
+Three chain families close the seams the per-op pipeline leaves open
+(docs/KERNELS.md §Cross-op fusion):
+
+``qnorm_gemm``
+    norm -> quantize -> GEMM in one kernel: the fx-lite per-row RMS/Layer
+    normalize runs in VMEM and feeds the MXU directly, replacing the
+    qnorm -> qmatmul seam (one f32 round-trip of the activations saved).
+    The chain defines its own per-row numerics (the PR-5 fused-attention
+    precedent), so it only ever engages when dispatch *plans* FUSED — the
+    helpers below return ``None`` otherwise and the caller keeps the
+    established unfused seam, bit-identical to the pre-fusion pipeline.
+
+``qmatmul_epi``
+    GEMM -> bias/activation -> out-quantize as an MXU epilogue.  Unlike
+    the norm chain this is bit-identical to the unfused composition
+    (same f32 ops, same q-out key-folding contract ``fold_in(key, 0xD0)``),
+    so routing it moves cost, never results.
+
+``qdecode_block``
+    One whole decoder layer per ``pallas_call`` at decode time —
+    norm -> QKV GEMM -> rope -> fused decode attention over the quantized
+    KV cache -> out-proj -> norm -> gated MLP — weights and cache rows
+    VMEM-resident.  Gradient-free (serving only); fresh K/V rows come back
+    already quantized under the ``qcache_append`` per-row rule.
+
+Backward passes stay integer: dX and dW are the Appendix-A.2 integer
+GEMMs on the int8 residual mantissas the kernels emit (per-row scales
+fold into the gradient rows as exact powers of two); only the norm's
+elementwise backward runs in f32, reconstructed from the int8 residuals.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import dispatch as kdispatch
+from ..kernels.fused_linear import epi_apply
+from .bfp import (BFP, PER_TENSOR, QuantConfig, dequantize, pow2, quantize,
+                  quantize_weight, rounding_bits, scale_exponent)
+from .policy import NumericPolicy
+from .qnorm import norm_gain_fx
+from .qops import _cfg_for_dim, _contract_q, _plan, _t, _tq, _unit_view
+
+__all__ = ["qmatmul_epi", "qnorm_gemm", "qdecode_block"]
+
+_LANE = 128
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# GEMM -> bias/act -> out-quantize epilogue
+# ---------------------------------------------------------------------------
+
+def qmatmul_epi(x: jnp.ndarray, w: jnp.ndarray, key, policy: NumericPolicy,
+                *, bias: Optional[jnp.ndarray] = None,
+                act: Optional[str] = None, out_q: bool = False):
+    """Maybe-fused ``qmatmul`` + bias/activation/out-quantize epilogue.
+
+    Returns the chain output — f32 ``(*B, n_out)`` or a :class:`BFP` with
+    carrier when ``out_q`` — or **None** when dispatch does not plan the
+    fused chain; the caller then keeps its existing unfused composition
+    (epilogue chains have no unfused pipeline of their own).  Fresh f32
+    ``x`` and ``w`` only (dispatch kind ``qq_epi``); the same
+    ``(kx, kw, kb)`` key split and ``fold_in(key, 0xD0)`` out-quantize key
+    as ``qmatmul``'s q-out path, so the op is bit-identical to
+    ``quantize -> GEMM -> +bias -> act -> quantize`` composed by hand.
+    """
+    if not policy.enabled or isinstance(x, BFP) or isinstance(w, BFP):
+        return None
+    k, n = x.shape[-1], w.shape[-1]
+    cfg = _cfg_for_dim(policy.fwd_cfg(), k)
+    if cfg.block != PER_TENSOR:
+        return None
+    m = 1
+    for s in x.shape[:-1]:
+        m *= s
+    dec = kdispatch.plan_epilogue(
+        "qmatmul_epi", m, k, n, cfg, kind="qq", act=act,
+        bias=bias is not None, out_q=out_q, kernel_mode=policy.kernel_mode,
+        accum_chunk=policy.accum_chunk,
+        autotune_measure=policy.kernel_autotune)
+    if dec.path != kdispatch.FUSED:
+        return None
+    return _qmatmul_epi(x, w, bias, key, policy, act, out_q, dec)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _qmatmul_epi(x, w, bias, key, policy: NumericPolicy,
+                 act: Optional[str], out_q: bool, dec):
+    out, _ = _qmatmul_epi_fwd(x, w, bias, key, policy, act, out_q, dec)
+    return out
+
+
+def _qmatmul_epi_fwd(x, w, bias, key, policy: NumericPolicy,
+                     act: Optional[str], out_q: bool, dec):
+    kx, kw, kb = jax.random.split(key, 3)
+    kq = jax.random.fold_in(key, 0xD0)
+    lead = x.shape[:-1]
+    k, n = x.shape[-1], w.shape[-1]
+    n_out = n // 2 if (act or "").endswith("_glu") else n
+    cfg = _cfg_for_dim(policy.fwd_cfg(), k)
+    qcfg = _cfg_for_dim(policy.fwd_cfg(), n_out) if out_q else None
+    x2 = x.reshape(-1, k)
+    bias2 = None if bias is None else bias.reshape(1, -1)
+    out, xq, wq, ylin = kdispatch.contract_epi(
+        x2, _t(w), dec, cfg=cfg, ka=kx, kb=kw, bias=bias2, act=act,
+        qcfg=qcfg, kq=kq)
+    if out_q:
+        out = BFP(out.m.reshape(*lead, n_out), out.e, qcfg,
+                  dequantize(out).reshape(*lead, n_out))
+    else:
+        out = out.reshape(*lead, n_out)
+    res = (xq, wq, ylin, bias is not None, kb, lead, n_out)
+    return out, res
+
+
+def _qmatmul_epi_bwd(policy: NumericPolicy, act: Optional[str], out_q: bool,
+                     dec, res, gy):
+    xq, wq, ylin, has_bias, kb, lead, n_out = res
+    # Gradients ride the BFP carrier when out_q (STE through the
+    # out-quantize, like _qmatmul_flex); the int mantissa/exponent leaves
+    # carry symbolic-zero cotangents.
+    g_out = gy.g if out_q else gy
+    g2 = g_out.reshape(-1, n_out).astype(jnp.float32)
+    if act is not None:
+        _, act_vjp = jax.vjp(lambda t: epi_apply(t, None, act, n_out), ylin)
+        (gl,) = act_vjp(g2)
+    else:
+        gl = g2
+    dbias = (jnp.sum(gl.reshape(*lead, gl.shape[-1]),
+                     axis=tuple(range(len(lead)))) if has_bias else None)
+    # Appendix A.2 integer backward on the epilogue residuals — identical
+    # to _qmatmul_bwd's per-tensor body with the activation pullback
+    # applied first.
+    cfg_b = policy.bwd_cfg()
+    kg = jax.random.split(kb, 4)[0]          # _qmatmul_bwd's split, key-compatible
+    m, n = gl.shape
+    k = xq.m.shape[-1]
+    plan_dx = _plan("qmatmul_epi_dx", m, n, k, cfg_b, policy, kind="qi",
+                    cfg2=wq.cfg)
+    if plan_dx.path == kdispatch.JNP:
+        gqN = quantize(gl, cfg_b, kg)
+        dx = _contract_q(gqN, _tq(wq), 0, policy.accum_chunk)
+    else:
+        dx, gqN = kdispatch.contract_qi(gl, _tq(wq), cfg_b, kg, plan_dx)
+    gqM = _tq(gqN)
+    plan_dw = _plan("qmatmul_epi_dw", k, m, n, gqM.cfg, policy, kind="ii",
+                    cfg2=xq.cfg)
+    if plan_dw.path == kdispatch.JNP:
+        dw = _contract_q(_tq(xq), gqM, 0, policy.accum_chunk)
+    else:
+        dw = kdispatch.contract_ii(_tq(xq), gqM, plan_dw)
+    return dx.reshape(*lead, k), dw, dbias, None
+
+
+_qmatmul_epi.defvjp(_qmatmul_epi_fwd, _qmatmul_epi_bwd)
+
+
+# ---------------------------------------------------------------------------
+# norm -> quantize -> GEMM
+# ---------------------------------------------------------------------------
+
+def qnorm_gemm(x: jnp.ndarray, gamma: jnp.ndarray,
+               beta: Optional[jnp.ndarray], w: jnp.ndarray, key,
+               policy: NumericPolicy, *, rms: bool = True):
+    """Maybe-fused norm -> quantize -> GEMM seam.
+
+    ``x (*B, k)`` f32 pre-norm rows, ``gamma``/``beta`` the norm affine,
+    ``w (k, n)`` a fresh f32 weight (the persistent BFP weight currency
+    keeps the split seam — each projection carries its own scale).
+    Returns ``(*B, n)`` f32, or **None** when dispatch keeps the
+    established unfused seam (qnorm -> qmatmul, bit-identical to the
+    pre-fusion pipeline).  The fused chain's per-row integer norm
+    datapath is its own numerics contract: fused-vs-mirror is bit-exact,
+    fused-vs-unfused is not, which is why engagement requires an explicit
+    FUSED plan (``kernel_mode='fused'``, or auto on a real TPU backend).
+    """
+    if (not policy.enabled or not policy.quantize_norms
+            or isinstance(x, BFP) or isinstance(w, BFP)
+            or isinstance(gamma, BFP)):
+        return None
+    k, n = x.shape[-1], w.shape[-1]
+    cfg = _cfg_for_dim(policy.fwd_cfg(), k)
+    if cfg.block != PER_TENSOR or cfg.bits != 8:
+        return None
+    m = 1
+    for s in x.shape[:-1]:
+        m *= s
+    dec = kdispatch.plan_norm_gemm(
+        "qnorm_gemm", m, k, n, cfg, kernel_mode=policy.kernel_mode,
+        autotune_measure=policy.kernel_autotune)
+    if dec.path != kdispatch.FUSED:
+        return None
+    return _qnorm_gemm(x, gamma, beta, w, key, policy, rms, dec)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _qnorm_gemm(x, gamma, beta, w, key, policy: NumericPolicy, rms: bool,
+                dec):
+    y, _ = _qnorm_gemm_fwd(x, gamma, beta, w, key, policy, rms, dec)
+    return y
+
+
+def _qnorm_gemm_fwd(x, gamma, beta, w, key, policy: NumericPolicy,
+                    rms: bool, dec):
+    lead = x.shape[:-1]
+    k, n = x.shape[-1], w.shape[-1]
+    cfg = _cfg_for_dim(policy.fwd_cfg(), k)
+    kw_, kr1, kr2, kb = jax.random.split(key, 4)
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    kp = _round_up(k, _LANE)
+    wq = quantize_weight(_t(w), cfg, kw_)                  # (n, k) per-tensor
+    se_w = jnp.broadcast_to(scale_exponent(wq.e, cfg), (1, n)).astype(jnp.int32)
+    gm, se_g = norm_gain_fx(gamma)
+    if beta is None:
+        bm_, se_b = None, jnp.int32(0)
+    else:
+        bm_, se_b = norm_gain_fx(beta)
+    rin = (rounding_bits(kr1, (m, kp), cfg.rng) if cfg.stochastic else None)
+    rout = (rounding_bits(kr2, (m, kp), cfg.rng) if cfg.stochastic else None)
+    y, xq_m, meta, c = kdispatch.run_norm_gemm(
+        x2, rin, rout, gm, se_g, bm_, se_b, wq.m, se_w, dec, n=k,
+        p=cfg.p, center=not rms, stochastic=cfg.stochastic)
+    res = (xq_m[:, :k], meta[:, :4], c[:, :k], wq, gamma, kb, lead,
+           beta is not None)
+    return y.reshape(*lead, n), res
+
+
+def _qnorm_gemm_bwd(policy: NumericPolicy, rms: bool, dec, res, gy):
+    xq_m, meta, c, wq, gamma, kb, lead, has_beta = res
+    cfg_b = policy.bwd_cfg()
+    kg, kg2 = jax.random.split(kb)
+    g2 = gy.reshape(-1, gy.shape[-1]).astype(jnp.float32)
+    m, n = g2.shape
+    k = xq_m.shape[-1]
+    # dA = Ĝ Ŵᵀ: grad w.r.t. the quantized norm output (STE through the
+    # per-row quantize), an integer qi GEMM like _qmatmul_bwd's dX.
+    plan_dx = _plan("qnorm_gemm_dx", m, n, k, cfg_b, policy, kind="qi",
+                    cfg2=wq.cfg)
+    if plan_dx.path == kdispatch.JNP:
+        gqN = quantize(g2, cfg_b, kg)
+        dA = _contract_q(gqN, _tq(wq), 0, policy.accum_chunk)
+    else:
+        dA, gqN = kdispatch.contract_qi(g2, _tq(wq), cfg_b, kg, plan_dx)
+    # dW = Âᵀ Ĝ: Â = xq * 2^se_row per row, so the per-row scales fold
+    # into the gradient rows as exact powers of two and the GEMM runs on
+    # the raw int8 residual mantissas under a unit reference scale.
+    se_row = meta[:, 0:1]
+    gy2 = g2 * pow2(se_row)
+    gq2 = quantize(gy2, cfg_b, kg2)
+    xq_u = _unit_view(xq_m, 8, cfg_b.rng)
+    plan_dw = _plan("qnorm_gemm_dw", k, m, n, gq2.cfg, policy, kind="ii",
+                    cfg2=xq_u.cfg)
+    if plan_dw.path == kdispatch.JNP:
+        dw = _contract_q(_tq(xq_u), _tq(gq2), 0, policy.accum_chunk)
+    else:
+        dw = kdispatch.contract_ii(_tq(xq_u), _tq(gq2), plan_dw)
+    # Elementwise norm backward in f32 from the int8 residuals
+    # (c ~ centered input, r ~ rsqrt, both with per-row pow2 scales).
+    xhat = (c.astype(jnp.float32) * pow2(meta[:, 1:2])
+            * meta[:, 2:3].astype(jnp.float32) * pow2(meta[:, 3:4]))
+    r_f = meta[:, 2:3].astype(jnp.float32) * pow2(meta[:, 3:4])
+    t = dA * gamma.reshape(1, -1).astype(jnp.float32)
+    m2 = jnp.mean(t * xhat, axis=-1, keepdims=True)
+    if rms:
+        dx = r_f * (t - xhat * m2)
+    else:
+        m1 = jnp.mean(t, axis=-1, keepdims=True)
+        dx = r_f * (t - m1 - xhat * m2)
+    dgamma = jnp.sum(dA * xhat, axis=0).reshape(gamma.shape)
+    dbeta = jnp.sum(dA, axis=0) if has_beta else None
+    return (dx.reshape(*lead, k), dgamma, dbeta, dw, None)
+
+
+_qnorm_gemm.defvjp(_qnorm_gemm_fwd, _qnorm_gemm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# whole-block decode megakernel
+# ---------------------------------------------------------------------------
+
+_GAIN_SE = -14   # static fx scale for decode-block norm gains (15-bit range)
+
+
+def _gain_static(g) -> jnp.ndarray:
+    """(1, K) int32 norm-gain mantissas at the static 2^_GAIN_SE scale."""
+    return jnp.round(g.reshape(1, -1).astype(jnp.float32)
+                     * float(2 ** -_GAIN_SE)).astype(jnp.int32)
+
+
+def _cat_cols(ws, cfg: QuantConfig, key):
+    """Stack projection weights into one contraction-last int8 block.
+
+    Each ``w (k, n_i)`` — f32 (quantized per-tensor, nearest) or per-tensor
+    BFP — contributes ``n_i`` mantissa rows and a per-column scale stripe,
+    so split projections fuse into one GEMM *without* merging scales.
+    """
+    det = QuantConfig(cfg.bits, PER_TENSOR, False, cfg.rng)
+    ms, ses = [], []
+    for i, w in enumerate(ws):
+        if isinstance(w, BFP):
+            q, qcfg = w, w.cfg
+            mt = _t(q.m)
+        else:
+            q = quantize_weight(_t(w), det, jax.random.fold_in(key, i))
+            qcfg, mt = det, q.m
+        se = scale_exponent(q.e, qcfg)
+        ms.append(mt)
+        ses.append(jnp.broadcast_to(se, (1, mt.shape[0])).astype(jnp.int32))
+    return jnp.concatenate(ms, axis=0), jnp.concatenate(ses, axis=1)
+
+
+def qdecode_block(x: jnp.ndarray, g1, g2, wq, wk, wv, wo, wg, wu, wd,
+                  kc: BFP, vc: BFP, cossin: jnp.ndarray, pos, key,
+                  policy: NumericPolicy, *, hq: int, hkv: int, dh: int,
+                  window: int = 0):
+    """Maybe-fused whole decoder layer for one token (serving only).
+
+    ``x (B, d)`` f32; ``g1``/``g2`` the two RMS gains; projections f32 or
+    per-tensor BFP; ``kc``/``vc`` the layer's quantized KV cache
+    ``(B, hkv, T, dh)`` rows; ``cossin (1, 2*dh)`` the rope row for this
+    position (``[cos|cos|sin|sin]`` halves, the rotate-half convention).
+    Returns ``(x_out (B, d), kc', vc')`` with the fresh rows appended at
+    ``pos`` — quantized in-kernel under the ``qcache_append`` per-row
+    rule — or **None** when dispatch keeps the unfused decode path.
+    Gradient-free by construction.
+    """
+    if not policy.enabled or isinstance(x, BFP):
+        return None
+    if not (isinstance(kc, BFP) and isinstance(vc, BFP)):
+        return None
+    b, d = x.shape
+    n_ff = (wg.m if isinstance(wg, BFP) else wg).shape[-1]
+    t = kc.m.shape[2]
+    cfg = _cfg_for_dim(policy.fwd_cfg(), d)
+    if cfg.bits != 8 or kc.cfg.bits != 8:
+        return None
+    dec = kdispatch.plan_decode_block(
+        "qdecode_block", b, d, n_ff, t, hq, hkv, dh, cfg,
+        kernel_mode=policy.kernel_mode)
+    if dec.path != kdispatch.FUSED:
+        return None
+    x = lax.stop_gradient(x)
+    wqkv_m, se_qkv = _cat_cols([wq, wk, wv], cfg, jax.random.fold_in(key, 0))
+    wo_m, se_o = _cat_cols([wo], cfg, jax.random.fold_in(key, 1))
+    wgu_m, se_gu = _cat_cols([wg, wu], cfg, jax.random.fold_in(key, 2))
+    wd_m, se_d = _cat_cols([wd], cfg, jax.random.fold_in(key, 3))
+    x_out, k_new, ek_new, v_new, ev_new = kdispatch.run_decode_block(
+        x, wqkv_m, se_qkv, wo_m, se_o, wgu_m, se_gu, wd_m, se_d,
+        _gain_static(g1), _gain_static(g2), kc.m, kc.e, vc.m, vc.e,
+        cossin, pos, dec, n_d=d, n_ff=n_ff, hq=hq, hkv=hkv, dh=dh,
+        p=cfg.p, window=window, se_g1=_GAIN_SE, se_g2=_GAIN_SE)
+    kc2 = BFP(lax.dynamic_update_slice_in_dim(
+        kc.m, k_new.reshape(b, hkv, 1, dh), pos, axis=2),
+        lax.dynamic_update_slice_in_dim(
+            kc.e, ek_new.reshape(b, hkv, 1, 1), pos, axis=2), kc.cfg)
+    vc2 = BFP(lax.dynamic_update_slice_in_dim(
+        vc.m, v_new.reshape(b, hkv, 1, dh), pos, axis=2),
+        lax.dynamic_update_slice_in_dim(
+            vc.e, ev_new.reshape(b, hkv, 1, 1), pos, axis=2), vc.cfg)
+    return x_out, kc2, vc2

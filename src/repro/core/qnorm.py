@@ -25,13 +25,30 @@ import jax
 import jax.numpy as jnp
 
 from .bfp import (BFP, PER_TENSOR, QuantConfig, bfp_from_fx, bfp_value,
-                  dequantize, scale_exponent)
+                  dequantize, pow2, scale_exponent)
 from .fixed_point import (Fx, KeyGen, fx_add, fx_const, fx_div_n, fx_mul,
                           fx_narrow, fx_quantize, fx_rsqrt, fx_sub, fx_sum,
                           fx_to_f32, fx_unify)
 from .policy import NumericPolicy
 
-__all__ = ["qlayernorm", "qrmsnorm", "qbatchnorm"]
+__all__ = ["qlayernorm", "qrmsnorm", "qbatchnorm", "norm_gain_fx"]
+
+
+def norm_gain_fx(g: jnp.ndarray, bits: int = 15) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Norm gain/shift vector as ``(1, K)`` int32 fx mantissas + scale exp.
+
+    The fused norm->GEMM chain (``core.qchain`` / ``kernels.fused_chain``)
+    consumes the affine parameters as fixed-point mantissas at one shared
+    power-of-two scale: ``g ~= m * 2^se`` with ``m`` nearest-rounded to
+    ``bits`` magnitude bits of the exact (bit-extracted, never log2'd)
+    exponent of ``max|g|``.  All-zero vectors map to zero mantissas.
+    """
+    g2 = g.reshape(1, -1).astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(g2)), jnp.float32(2.0 ** -30))
+    eb = (jax.lax.bitcast_convert_type(amax, jnp.int32) >> 23) & 0xFF
+    se = (eb - 127 - (bits - 1)).astype(jnp.int32)
+    m = jnp.round(g2 * pow2(-se)).astype(jnp.int32)
+    return m, se
 
 
 # ---------------------------------------------------------------------------

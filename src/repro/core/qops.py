@@ -42,7 +42,8 @@ from .policy import NumericPolicy
 __all__ = ["qmatmul", "qbmm", "qembed", "qconv", "qcontract", "qrelu",
            "qattention", "qcache_attention",
            "qcache_quantize", "qcache_prefill", "qcache_append",
-           "qcache_qk", "qcache_pv"]
+           "qcache_qk", "qcache_pv",
+           "qmatmul_epi", "qnorm_gemm", "qdecode_block"]
 
 
 # ---------------------------------------------------------------------------
@@ -1155,3 +1156,19 @@ def qrelu(x):
         g = None if x.g is None else jax.nn.relu(x.g)
         return BFP(jnp.maximum(x.m, 0), x.e, x.cfg, g)
     return jax.nn.relu(x)
+
+
+# ---------------------------------------------------------------------------
+# cross-op fused chains (core.qchain) — re-exported lazily so qops stays the
+# canonical ops namespace without a circular import (qchain builds its
+# backward passes out of this module's integer contraction helpers).
+# ---------------------------------------------------------------------------
+
+_CHAIN_OPS = ("qmatmul_epi", "qnorm_gemm", "qdecode_block")
+
+
+def __getattr__(name):
+    if name in _CHAIN_OPS:
+        from . import qchain
+        return getattr(qchain, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

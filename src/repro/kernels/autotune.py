@@ -13,7 +13,13 @@ for a ``bm``.  Resolution order:
 Cache file format (JSON object)::
 
     { "<key>": {"bm": 256, "us": {"32": 410.2, ..., "256": 181.0},
-                "bad": [512]} }
+                "bad": [512]},
+      "<key2>": {"bm": 0, "jnp": true, "us": {..., "jnp": 90.1}} }
+
+A ``"jnp": true`` entry records a *measured* routing decision: every fused
+candidate lost to the bit-identical jnp mirror at this shape, so
+:func:`select_bm` returns :data:`JNP_FALLBACK` and dispatch keeps the
+mirror (the ``qmatmul_pp`` small-shape case).
 
 with ``<key>`` = ``"<kind>:<M>x<K>x<N>:b<bits>:blk<block>:<backend>"`` from
 :func:`shape_key`.  Path: ``$REPRO_KERNEL_AUTOTUNE_CACHE`` if set, else
@@ -39,6 +45,7 @@ from typing import Callable, Dict, Optional
 __all__ = [
     "AutotuneCache",
     "BM_CANDIDATES",
+    "JNP_FALLBACK",
     "autotune_enabled_by_env",
     "bad_bms",
     "cache_path",
@@ -172,9 +179,13 @@ def heuristic_bm(m: int, fits: Callable[[int], bool]) -> int:
     return feasible[-1]
 
 
+JNP_FALLBACK = -1
+
+
 def select_bm(key: str, m: int, fits: Callable[[int], bool], *,
               measure: bool = False,
               bench: Optional[Callable[[int], float]] = None,
+              bench_jnp: Optional[Callable[[], float]] = None,
               cache: Optional[AutotuneCache] = None) -> int:
     """Pick the fused-kernel row-strip height for a contraction shape.
 
@@ -182,6 +193,14 @@ def select_bm(key: str, m: int, fits: Callable[[int], bool], *,
     returns a wall time in µs for candidate ``bm`` (only called when
     ``measure`` and the shape is not cached yet).  Returns 0 if no candidate
     fits — the caller then falls back to the unfused / jnp path.
+
+    ``bench_jnp`` (optional) times the bit-identical jnp mirror of the same
+    contraction.  When measurement finds the mirror beating every fused
+    candidate — the small fully-pre-quantized shapes where the kernel's
+    strip launches cost more than the XLA dot they replace — the decision
+    is *recorded* in the cache as ``{"bm": 0, "jnp": true, "us": {...}}``
+    and :data:`JNP_FALLBACK` (-1) is returned, so the slower fused path is
+    routed around persistently instead of silently kept.
     """
     cache = cache or AutotuneCache()
     bad = bad_bms(key, cache)
@@ -190,6 +209,8 @@ def select_bm(key: str, m: int, fits: Callable[[int], bool], *,
         return fits(bm) and bm not in bad
 
     entry = cache.get(key)
+    if entry is not None and entry.get("jnp") and int(entry["bm"]) == 0:
+        return JNP_FALLBACK
     if entry is not None and ok(int(entry["bm"])):
         return int(entry["bm"])
     feasible = [bm for bm in BM_CANDIDATES if ok(bm)]
@@ -199,6 +220,14 @@ def select_bm(key: str, m: int, fits: Callable[[int], bool], *,
         return heuristic_bm(m, ok)
     timings = {str(bm): bench(bm) for bm in feasible}
     best = min(feasible, key=lambda bm: timings[str(bm)])
+    if bench_jnp is not None:
+        timings["jnp"] = bench_jnp()
+        if timings["jnp"] < timings[str(best)]:
+            new_entry = {"bm": 0, "jnp": True, "us": timings}
+            if bad:
+                new_entry["bad"] = sorted(bad)
+            cache.put(key, new_entry)
+            return JNP_FALLBACK
     new_entry = {"bm": best, "us": timings}
     if bad:
         new_entry["bad"] = sorted(bad)

@@ -76,8 +76,9 @@ from ..core.bfp import quantize as bfp_quantize
 from ..runtime import fault_injection as _fi
 from . import autotune, ref
 from .bfp_quant import bfp_quantize_pallas
-from .fused_linear import (fused_ii_pt_pallas, fused_qi_pt_pallas,
-                           fused_qq_blk_pallas, fused_qq_pt_pallas)
+from .fused_linear import (fused_gemm_epi_pallas, fused_ii_pt_pallas,
+                           fused_qi_pt_pallas, fused_qq_blk_pallas,
+                           fused_qq_pt_pallas, gemm_epi_ref)
 from .int8_matmul import int8_matmul_pallas
 
 __all__ = [
@@ -87,6 +88,9 @@ __all__ = [
     "attention_bytes_moved", "attn_block_t", "cache_operand_bytes",
     "fallback_counts", "reset_fallback_counts",
     "DEFAULT_VMEM_BUDGET",
+    "plan_norm_gemm", "run_norm_gemm", "plan_epilogue", "contract_epi",
+    "plan_decode_block", "run_decode_block", "norm_gemm_bytes_moved",
+    "epilogue_bytes_moved", "decode_block_bytes_moved",
 ]
 
 FUSED = "fused"
@@ -183,8 +187,11 @@ def _degrade(dec: Decision, err: BaseException,
             except OSError:
                 pass                       # cache write failure is non-fatal
         per_tensor = cfg is None or cfg.block == PER_TENSOR
-        unfused_ok = per_tensor and (dec.kind in ("ii", "pp")
-                                     or (cfg is not None and cfg.stochastic))
+        # Cross-op chains (norm_gemm / *_epi / decode_block) have no unfused
+        # middle pipeline: their terminal rung is the bit-exact jnp mirror.
+        gemm_kind = dec.kind in ("qq", "qi", "iq", "ii", "pp")
+        unfused_ok = gemm_kind and per_tensor and (
+            dec.kind in ("ii", "pp") or (cfg is not None and cfg.stochastic))
         to = UNFUSED if unfused_ok else JNP
     else:
         to = JNP
@@ -634,8 +641,13 @@ def plan_contract(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
                 bench = _make_bench("ii", m, k, n, cfg, interpret)
             else:
                 bench = _make_bench(vkind, m, k, n, cfg, interpret)
+            bench_jnp = (_make_bench_jnp(vkind, m, k, n, cfg)
+                         if measure else None)
             bm = autotune.select_bm(key, strip_rows, fits, measure=measure,
-                                    bench=bench)
+                                    bench=bench, bench_jnp=bench_jnp)
+            if bm == autotune.JNP_FALLBACK:
+                return decide(JNP, "autotune: jnp mirror measured faster",
+                              atkey=key)
             if bm:
                 return decide(FUSED, "fused pipeline fits VMEM budget", bm,
                               atkey=key)
@@ -698,6 +710,52 @@ def _make_bench(vkind: str, m: int, k: int, n: int, cfg: QuantConfig,
         return autotune.time_call_us(fn)
 
     return bench
+
+
+def _make_bench_jnp(vkind: str, m: int, k: int, n: int, cfg: QuantConfig):
+    """Build a bench() -> µs callable over the bit-identical jnp mirror of
+    the same contraction, for :func:`autotune.select_bm`'s measured
+    jnp-fallback decision (the pre-quantized small shapes where XLA's dot
+    beats the kernel's strip launches)."""
+    import numpy as np
+
+    def bench_jnp() -> float:
+        rng = np.random.RandomState(0)
+        key = jax.random.key(0)
+        if vkind in ("ii", "pp"):
+            a8 = jnp.asarray(rng.randint(-127, 128, (m, k), np.int8))
+            b8 = jnp.asarray(rng.randint(-127, 128, (n, k), np.int8))
+            run = jax.jit(lambda a, b: _jnp_matmul(a, b, 130, 130,
+                                                   cfg.p, cfg.p))
+            fn = lambda: jax.block_until_ready(run(a8, b8))
+        else:
+            a = jnp.asarray(rng.randn(m, k).astype(np.float32))
+            b = jnp.asarray(rng.randn(n, k).astype(np.float32))
+            ka, kb = jax.random.split(key)
+            if vkind == "qq_blk":
+                def run(a, b):
+                    aq = bfp_quantize(a, cfg, ka)
+                    bq = bfp_quantize(b, cfg, kb)
+                    return _jnp_block_matmul(aq.m, bq.m, aq.e, bq.e,
+                                             cfg.p, cfg.p, cfg.block)
+            elif vkind == "qq":
+                def run(a, b):
+                    aq = bfp_quantize(a, cfg, ka)
+                    bq = bfp_quantize(b, cfg, kb)
+                    return _jnp_matmul(aq.m, bq.m, aq.e, bq.e, cfg.p, cfg.p)
+            else:                                   # qi / iq: one fresh side
+                b8 = jnp.asarray(rng.randint(-127, 128, (n, k), np.int8))
+
+                def run(a, b):
+                    aq = bfp_quantize(a, cfg, ka)
+                    return _jnp_matmul(aq.m, b, aq.e, 130, cfg.p, cfg.p)
+
+                b = b8
+            run = jax.jit(run)
+            fn = lambda: jax.block_until_ready(run(a, b))
+        return autotune.time_call_us(fn)
+
+    return bench_jnp
 
 
 # ---------------------------------------------------------------------------
@@ -1028,3 +1086,610 @@ def _matmul_unfused(am: jnp.ndarray, bmant: jnp.ndarray, ea, eb,
 
     y, = _batched_call(one, arrays, nbatch, [(m, n)])
     return y
+
+
+# ---------------------------------------------------------------------------
+# cross-op fusion: norm->quantize->GEMM, GEMM epilogues, decode megakernel
+# (docs/KERNELS.md §Cross-op fusion)
+# ---------------------------------------------------------------------------
+#
+# Three chain ops extend the per-contraction dispatch above.  They share its
+# machinery — shape-keyed autotune, VMEM residency predicates, the
+# degradation ladder, Decision records — but their ladder is two-runged:
+# there is no unfused middle pipeline, so a failed chain kernel degrades
+# straight to the bit-exact jnp mirror built from the same block-core
+# functions (``kernels.fused_chain`` / the ``gemm_epi_ref`` mirror).
+#
+# Numerics contract: the *epilogue* chain is bit-identical to the unfused
+# composition (same f32 ops, same out-quantize under the q-out key-folding
+# contract), so routing it is numerically invisible.  ``norm_gemm`` and
+# ``decode_block`` define their own fx-lite per-row datapath (the PR-5
+# fused-attention precedent): fused-vs-unfused may deviate, fused-vs-mirror
+# must not — which is why planning JNP at trace time means "caller keeps
+# the established unfused seam", while a *runtime* degrade inside the
+# runner lands on the mirror and changes cost, never results.
+
+
+def _norm_gemm_vmem_bytes(bm: int, kp: int, n: int, stochastic: bool,
+                          emit_residuals: bool) -> int:
+    """Residency estimate for one fused norm->quantize->GEMM instance: the
+    f32 x strip + its two rounding-bit strips (double-buffered), the
+    resident int8 weight mantissas + per-column exponents, the f32 output
+    strip and the int8/meta residual strips."""
+    r8 = 4 if stochastic else 0
+    strip = (4 + 2 * r8) * bm * kp + 4 * bm * n
+    if emit_residuals:
+        strip += 2 * bm * kp + 4 * bm * _LANE
+    resident = 1 * n * kp + 4 * n + 2 * 4 * kp
+    return 2 * strip + resident
+
+
+def _epi_vmem_bytes(kind: str, bm: int, kp: int, np_: int, n_out: int,
+                    stochastic: bool, bias: bool, act: bool,
+                    out_q: bool) -> int:
+    """Residency estimate for one GEMM+epilogue instance: the base GEMM
+    kind's footprint plus the bias row, the out-quantize rounding-bit
+    strip and the pre-activation residual strip."""
+    r8 = 4 if stochastic else 0
+    extra = (4 * np_ if bias else 0)
+    if out_q:
+        extra += 2 * r8 * bm * n_out
+    if act:
+        extra += 2 * 4 * bm * np_
+    return _vmem_bytes(kind, bm, kp, np_, 0) + extra
+
+
+def _decode_block_vmem_bytes(b: int, d: int, n_ff: int, t: int, hq: int,
+                             hkv: int, dh: int) -> int:
+    """Residency estimate for one whole-block decode instance (grid=(1,)):
+    every weight mantissa, the qcache band and a few f32 working tiles the
+    width of the widest intermediate."""
+    w_i8 = d * (hq + 2 * hkv) * dh + hq * dh * d + 2 * d * n_ff + n_ff * d
+    w_exp = 4 * ((hq + 2 * hkv) * dh + d + 2 * n_ff + d + 2 * d)
+    cache = b * hkv * t * (2 * 1 * dh + 2 * 4)
+    widest = max((hq + 2 * hkv) * dh, 2 * n_ff, d)
+    work = 6 * 4 * b * widest + 4 * b * hq * t
+    return w_i8 + w_exp + cache + work
+
+
+def plan_norm_gemm(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
+                   kernel_mode: str = "auto", backend: Optional[str] = None,
+                   vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                   emit_residuals: bool = True,
+                   autotune_measure: bool = False) -> Decision:
+    """Choose the execution path for one fused norm->quantize->GEMM.
+
+    ``m`` rows of width ``k`` (the normalized axis), projected to ``n``
+    outputs.  FUSED runs ``kernels.fused_chain.fused_norm_gemm_pallas``;
+    JNP means the caller keeps the established unfused seam (fx qnorm ->
+    quantize -> dispatched GEMM) — the chain defines its own numerics, so
+    only a *runtime* degrade lands on the bit-exact mirror.
+    """
+    backend = backend or jax.default_backend()
+    interpret = backend != "tpu"
+
+    def decide(path, reason, bm=0, atkey=""):
+        return _record(Decision(op, path, reason, m, k, n, bm, interpret,
+                                "norm_gemm", atkey=atkey))
+
+    if kernel_mode not in ("auto", "fused", "unfused", "jnp"):
+        raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
+    if kernel_mode == "jnp":
+        return decide(JNP, "kernel_mode=jnp")
+    if kernel_mode == "unfused":
+        return decide(JNP, "chain ops have no unfused pipeline")
+    if cfg.bits != 8:
+        return decide(JNP, f"bits={cfg.bits} (kernels are int8-only)")
+    if kernel_mode == "auto" and interpret:
+        return decide(JNP, f"auto keeps the unfused seam on backend={backend}")
+    kp = _round_up(k, _LANE)
+    np_ = _round_up(n, _LANE)
+
+    def fits(bm):
+        return _norm_gemm_vmem_bytes(bm, kp, np_, cfg.stochastic,
+                                     emit_residuals) <= vmem_budget
+
+    key = autotune.shape_key("norm_gemm", m, k, n, cfg.bits, 0, backend)
+    measure = ((autotune_measure or autotune.autotune_enabled_by_env())
+               and backend == jax.default_backend())
+    bench = (_make_norm_gemm_bench(m, k, n, cfg, interpret)
+             if measure else None)
+    bm = autotune.select_bm(key, m, fits, measure=measure, bench=bench)
+    if bm == autotune.JNP_FALLBACK:
+        return decide(JNP, "autotune: jnp mirror measured faster", atkey=key)
+    if bm:
+        return decide(FUSED, "fused chain fits VMEM budget", bm, atkey=key)
+    return decide(JNP, f"no bm candidate fits vmem_budget={vmem_budget}")
+
+
+def _make_norm_gemm_bench(m: int, k: int, n: int, cfg: QuantConfig,
+                          interpret: bool):
+    """bench(bm) -> µs over synthetic operands (norm_gemm autotune)."""
+    from .fused_chain import fused_norm_gemm_pallas
+
+    def bench(bm: int) -> float:
+        rng = np.random.RandomState(0)
+        mp = _round_up(max(m, 1), bm)
+        kp = _round_up(k, _LANE)
+        np_ = _round_up(n, _LANE)
+        x = jnp.asarray(rng.randn(mp, kp).astype(np.float32))
+        rin = jnp.asarray(rng.randint(0, 2 ** 32, (mp, kp), np.uint32))
+        rout = jnp.asarray(rng.randint(0, 2 ** 32, (mp, kp), np.uint32))
+        gm = jnp.asarray(rng.randint(1 << 14, 1 << 15, (1, kp), np.int32))
+        wm = jnp.asarray(rng.randint(-127, 128, (np_, kp), np.int8))
+        se_w = jnp.full((1, np_), -7, jnp.int32)
+        if not cfg.stochastic:
+            rin = rout = None
+
+        def fn():
+            return jax.block_until_ready(fused_norm_gemm_pallas(
+                x, rin, rout, gm, -15, None, 0, wm, se_w, n=k, p=cfg.p,
+                bm=bm, stochastic=cfg.stochastic, interpret=interpret,
+                emit_residuals=True))
+
+        return autotune.time_call_us(fn)
+
+    return bench
+
+
+def run_norm_gemm(x, rand_in, rand_out, gm, se_g, beta_m, se_b, w_m, se_w,
+                  dec: Decision, *, n: int, p: int = 7, eps_m: int = 1,
+                  eps_e: int = -32, center: bool = False,
+                  stochastic: bool = True, nbatch: int = 0,
+                  want_residuals: bool = True):
+    """Execute a FUSED-planned norm->quantize->GEMM with mirror degrade.
+
+    x (*B, M, K) f32 (K = true width ``n``), rand_in/rand_out (*B, M, Kp)
+    uint32 drawn at the lane-padded width (None when deterministic), gamma
+    and optional beta as (1, Kp) int32 fx mantissas, weight mantissas
+    (N, Kp) int8 with (1, N) int32 per-column exponents.  Returns
+    ``[y (*B, M, N)]`` or ``[y, xq, meta, c]`` with per-row residuals.
+    """
+    from . import fused_chain as fc
+
+    m, k = x.shape[-2], x.shape[-1]
+    kp = _round_up(k, _LANE)
+    nn = w_m.shape[0]
+    np_ = _round_up(nn, _LANE)
+    xp = _pad2(x, 1, kp)
+    gm_p = _pad2(gm, 1, kp)
+    beta_p = None if beta_m is None else _pad2(beta_m, 1, kp)
+    wm_p = _pad2(w_m, np_, kp)
+    sw_p = _pad2(se_w, 1, np_)
+    kw = dict(n=n, p=p, eps_m=eps_m, eps_e=eps_e, center=center)
+    crops = [(m, nn)] + ([(m, kp), (m, 128), (m, kp)] if want_residuals
+                         else [])
+
+    def run_kernel(d):
+        arrays = [_pad2(xp, d.bm, kp)] + \
+            ([_pad2(rand_in, d.bm, kp), _pad2(rand_out, d.bm, kp)]
+             if stochastic else [])
+
+        def one(args):
+            if stochastic:
+                x2, rin2, rout2 = args
+            else:
+                (x2,), rin2, rout2 = args, None, None
+            return fc.fused_norm_gemm_pallas(
+                x2, rin2, rout2, gm_p, se_g, beta_p, se_b, wm_p, sw_p,
+                bm=d.bm, stochastic=stochastic, interpret=d.interpret,
+                emit_residuals=want_residuals, **kw)
+
+        return _batched_call(one, arrays, nbatch, crops)
+
+    def run_jnp(d):
+        arrays = [xp] + ([rand_in, rand_out] if stochastic else [])
+
+        def one(args):
+            if stochastic:
+                x2, rin2, rout2 = args
+            else:
+                (x2,), rin2, rout2 = args, None, None
+            return fc.norm_gemm_ref(x2, rin2, rout2, gm_p, se_g, beta_p,
+                                    se_b, wm_p, sw_p,
+                                    emit_residuals=want_residuals, **kw)
+
+        return _batched_call(one, arrays, nbatch, crops)
+
+    return _with_ladder(dec, run_kernel, run_jnp)
+
+
+def plan_epilogue(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
+                  kind: str = "qq", cfg2: Optional[QuantConfig] = None,
+                  act: Optional[str] = None, bias: bool = False,
+                  out_q: bool = False, kernel_mode: str = "auto",
+                  accum_chunk: int = 65536,
+                  backend: Optional[str] = None,
+                  vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                  autotune_measure: bool = False) -> Decision:
+    """Choose the execution path for one GEMM + bias/act/out-quantize chain.
+
+    Same gates as :func:`plan_contract` (int8-only, per-tensor-only,
+    accumulator bounds) plus glu alignment; autotuned under its own
+    ``<kind>_epi`` shape keys.  JNP keeps the unfused composition — which
+    is bit-identical to the fused chain, so this plan only moves cost.
+    """
+    backend = backend or jax.default_backend()
+    interpret = backend != "tpu"
+    ekind = f"{kind}_epi"
+
+    def decide(path, reason, bm=0, atkey=""):
+        return _record(Decision(op, path, reason, m, k, n, bm, interpret,
+                                ekind, atkey=atkey))
+
+    if kernel_mode not in ("auto", "fused", "unfused", "jnp"):
+        raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
+    if kernel_mode == "jnp":
+        return decide(JNP, "kernel_mode=jnp")
+    if kernel_mode == "unfused":
+        return decide(JNP, "chain ops have no unfused pipeline")
+    bits = {cfg.bits} | ({cfg2.bits} if cfg2 is not None else set())
+    if bits != {8}:
+        return decide(JNP, f"bits={sorted(bits)} (kernels are int8-only)")
+    if cfg.block != PER_TENSOR or (cfg2 is not None
+                                   and cfg2.block != PER_TENSOR):
+        return decide(JNP, "epilogue chains are per-tensor only")
+    if kernel_mode == "auto" and interpret:
+        return decide(JNP, f"auto keeps the jnp oracle on backend={backend}")
+    if k > accum_chunk:
+        return decide(JNP, f"K={k} > accum_chunk={accum_chunk} "
+                           "(flush emulation stays on jnp)")
+    if k * 127 * 127 >= (1 << 31):
+        return decide(JNP, f"K={k} overflows the int32 accumulator")
+    glu = (act or "").endswith("_glu")
+    if glu and (n % (2 * _LANE) or n % 2):
+        return decide(JNP, "glu halves must be lane-aligned")
+    kp = _round_up(k, _LANE)
+    np_ = _round_up(n, _LANE)
+    n_out = n // 2 if glu else np_
+    base = "qq" if kind == "qq" else ("qi" if kind == "qi" else "ii")
+
+    def fits(bm):
+        return _epi_vmem_bytes(base, bm, kp, np_, n_out, cfg.stochastic,
+                               bias, act is not None, out_q) <= vmem_budget
+
+    key = autotune.shape_key(ekind, m, k, n, cfg.bits, 0, backend)
+    measure = ((autotune_measure or autotune.autotune_enabled_by_env())
+               and backend == jax.default_backend())
+    bench = (_make_epi_bench(kind, m, k, n, cfg, act, bias, out_q, interpret)
+             if measure else None)
+    bm = autotune.select_bm(key, m, fits, measure=measure, bench=bench)
+    if bm == autotune.JNP_FALLBACK:
+        return decide(JNP, "autotune: jnp mirror measured faster", atkey=key)
+    if bm:
+        return decide(FUSED, "fused chain fits VMEM budget", bm, atkey=key)
+    return decide(JNP, f"no bm candidate fits vmem_budget={vmem_budget}")
+
+
+def _make_epi_bench(kind: str, m: int, k: int, n: int, cfg: QuantConfig,
+                    act, bias: bool, out_q: bool, interpret: bool):
+    """bench(bm) -> µs over synthetic operands (epilogue autotune)."""
+    from .fused_linear import fused_gemm_epi_pallas
+
+    def bench(bm: int) -> float:
+        rng = np.random.RandomState(0)
+        mp = _round_up(max(m, 1), bm)
+        kp = _round_up(k, _LANE)
+        np_ = _round_up(n, _LANE)
+        n_out = n // 2 if (act or "").endswith("_glu") else np_
+        sr = cfg.stochastic
+        if kind == "ii":
+            a = jnp.asarray(rng.randint(-127, 128, (mp, kp), np.int8))
+            ra = None
+        else:
+            a = jnp.asarray(rng.randn(mp, kp).astype(np.float32))
+            ra = (jnp.asarray(rng.randint(0, 2 ** 32, (mp, kp), np.uint32))
+                  if sr else None)
+        if kind == "qq":
+            b = jnp.asarray(rng.randn(np_, kp).astype(np.float32))
+            rb = (jnp.asarray(rng.randint(0, 2 ** 32, (np_, kp), np.uint32))
+                  if sr else None)
+        else:
+            b = jnp.asarray(rng.randint(-127, 128, (np_, kp), np.int8))
+            rb = None
+        bias_row = (jnp.asarray(rng.randn(1, np_).astype(np.float32))
+                    if bias else None)
+        rq = (jnp.asarray(rng.randint(0, 2 ** 32, (mp, n_out), np.uint32))
+              if (out_q and sr) else None)
+        e = jnp.int32(130)
+
+        def fn():
+            return jax.block_until_ready(fused_gemm_epi_pallas(
+                a, ra, b, rb, bias_row, rq, e, e, kind=kind, p=cfg.p,
+                bm=bm, stochastic=sr, act=act, out_q=out_q,
+                interpret=interpret))
+
+        return autotune.time_call_us(fn)
+
+    return bench
+
+
+def contract_epi(a, b, dec: Decision, *, cfg: Optional[QuantConfig] = None,
+                 ka=None, kb=None, bias=None, act: Optional[str] = None,
+                 qcfg: Optional[QuantConfig] = None, kq=None,
+                 nbatch: int = 0, want_residuals: bool = True):
+    """GEMM with the fused bias/activation/out-quantize epilogue.
+
+    Operand roles follow ``dec.kind`` (``qq_epi`` / ``qi_epi`` / ``ii_epi``
+    / ``pp_epi``): ``qq`` takes a, b f32 quantized in-op under ``cfg`` with
+    keys ``ka``/``kb``; ``qi`` takes a f32 + b :class:`BFP`; ``ii``/``pp``
+    take both as :class:`BFP`.  ``qcfg``/``kq`` (per-tensor) switch on the
+    fused out-quantize — bit-identical to quantizing the unfused f32
+    output with the same key (the q-out key-folding contract).
+
+    Returns ``(out, aq, bq, ylin)``: ``out`` f32 or a :class:`BFP` when
+    ``qcfg`` is given; ``aq``/``bq`` the in-op quantize residuals (None
+    when that side was pre-quantized or residuals are off); ``ylin`` the
+    pre-activation f32 (None unless ``act`` and residuals).
+    """
+    kind = dec.kind.split("_")[0]
+    kind_k = "ii" if kind == "pp" else kind
+    out_q = qcfg is not None
+    if kind in ("ii", "pp"):
+        a_arr, ea, pa_ = a.m, a.e, a.cfg.p
+    else:
+        a_arr, pa_ = a, cfg.p
+        ea = ref.max_biased_exp_ref(a)
+    if kind == "qq":
+        b_arr, pb_ = b, cfg.p
+        eb = ref.max_biased_exp_ref(b)
+    else:
+        b_arr, eb, pb_ = b.m, b.e, b.cfg.p
+    # One stochastic flag drives both the in-op and the out-op quantize
+    # (the kernel streams one rand array per role); mixed SR/nearest
+    # configs have no fused path and must be planned JNP by the caller.
+    if cfg is not None and out_q:
+        assert qcfg.stochastic == cfg.stochastic, (cfg, qcfg)
+    sr = (cfg.stochastic if cfg is not None
+          else (out_q and qcfg.stochastic))
+    m, k = a_arr.shape[-2], a_arr.shape[-1]
+    n = b_arr.shape[-2]
+    glu = (act or "").endswith("_glu")
+    n_out = n // 2 if glu else n
+    assert nbatch == 0 or not out_q, \
+        "fused out-quantize is 2-D only (per-tensor e spans the whole call)"
+    ra = (rounding_bits(ka, a_arr.shape, cfg.rng)
+          if (kind != "ii" and kind != "pp" and sr) else None)
+    rb = (rounding_bits(kb, b_arr.shape, cfg.rng)
+          if (kind == "qq" and sr) else None)
+    rq = (rounding_bits(kq, a_arr.shape[:-2] + (m, n_out), qcfg.rng)
+          if (out_q and qcfg.stochastic) else None)
+    qp = qcfg.p if out_q else 7
+
+    def outs_spec():
+        crops = [(m, n_out)]
+        if out_q:
+            crops.append((1, 128))
+        if kind_k != "ii" and want_residuals:
+            crops.append((m, k))
+        if kind == "qq" and want_residuals:
+            crops.append((n, k))
+        if act is not None and want_residuals:
+            crops.append((m, n))
+        return crops
+
+    def package(outs, d):
+        it = iter(outs)
+        y = next(it)
+        if out_q:
+            emeta = next(it)
+            e_out = emeta[..., 0, 0].astype(jnp.int32)
+            out = BFP(y, e_out, qcfg)
+        else:
+            out = y
+        aq = bq = ylin = None
+        if kind_k != "ii" and want_residuals:
+            aq = BFP(next(it), jnp.asarray(ea, jnp.int32), cfg)
+        if kind == "qq" and want_residuals:
+            bq = BFP(next(it), jnp.asarray(eb, jnp.int32), cfg)
+        if act is not None and want_residuals:
+            ylin = next(it)
+        return out, aq, bq, ylin
+
+    def run_kernel(d):
+        pad_rows = d.bm
+        arrays = [_pad2(a_arr, pad_rows, _LANE)]
+        if ra is not None:
+            arrays.append(_pad2(ra, pad_rows, _LANE))
+        arrays.append(_pad2(b_arr, _LANE, _LANE))
+        if rb is not None:
+            arrays.append(_pad2(rb, _LANE, _LANE))
+        if bias is not None:
+            arrays.append(_pad2(bias, 1, _LANE))
+        if rq is not None:
+            arrays.append(_pad2(rq, pad_rows, _LANE))
+        emit = want_residuals
+
+        def one(args):
+            it = iter(args)
+            a2 = next(it)
+            ra2 = next(it) if ra is not None else None
+            b2 = next(it)
+            rb2 = next(it) if rb is not None else None
+            bias2 = next(it) if bias is not None else None
+            rq2 = next(it) if rq is not None else None
+            return fused_gemm_epi_pallas(
+                a2, ra2, b2, rb2, bias2, rq2, ea, eb, kind=kind_k,
+                pa=pa_, pb=pb_, bm=d.bm, stochastic=sr, act=act,
+                out_q=out_q, qp=qp, m_true=m, emit_residuals=emit,
+                interpret=d.interpret)
+
+        outs = _batched_call(one, arrays, nbatch, outs_spec())
+        return package(outs, d)
+
+    def run_jnp(d):
+        arrays = [a_arr]
+        if ra is not None:
+            arrays.append(ra)
+        arrays.append(b_arr)
+        if rb is not None:
+            arrays.append(rb)
+        if bias is not None:
+            arrays.append(bias)
+        if rq is not None:
+            arrays.append(rq)
+
+        def one(args):
+            it = iter(args)
+            a2 = next(it)
+            ra2 = next(it) if ra is not None else None
+            b2 = next(it)
+            rb2 = next(it) if rb is not None else None
+            bias2 = next(it) if bias is not None else None
+            rq2 = next(it) if rq is not None else None
+            return gemm_epi_ref(
+                a2, ra2, b2, rb2, bias2, rq2, ea, eb, kind=kind_k,
+                pa=pa_, pb=pb_, stochastic=sr, act=act, out_q=out_q,
+                qp=qp, m_true=None, emit_residuals=want_residuals)
+
+        outs = _batched_call(one, arrays, nbatch, outs_spec())
+        return package(outs, d)
+
+    return _with_ladder(dec, run_kernel, run_jnp, cfg)
+
+
+def plan_decode_block(op: str, b: int, d: int, n_ff: int, t: int, hq: int,
+                      hkv: int, dh: int, cfg: QuantConfig, *,
+                      kernel_mode: str = "auto",
+                      backend: Optional[str] = None,
+                      vmem_budget: int = DEFAULT_VMEM_BUDGET) -> Decision:
+    """Choose the execution path for one whole-block decode megakernel.
+
+    One ``pallas_call`` per layer, grid=(1,): everything must be resident,
+    so the only knob is the residency predicate (no autotuned strip).
+    JNP keeps the established per-op decode path.
+    """
+    backend = backend or jax.default_backend()
+    interpret = backend != "tpu"
+
+    def decide(path, reason):
+        return _record(Decision(op, path, reason, b, d, n_ff, 0, interpret,
+                                "decode_block", bt=t))
+
+    if kernel_mode not in ("auto", "fused", "unfused", "jnp"):
+        raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
+    if kernel_mode == "jnp":
+        return decide(JNP, "kernel_mode=jnp")
+    if kernel_mode == "unfused":
+        return decide(JNP, "chain ops have no unfused pipeline")
+    if cfg.bits != 8:
+        return decide(JNP, f"bits={cfg.bits} (kernels are int8-only)")
+    if kernel_mode == "auto" and interpret:
+        return decide(JNP, f"auto keeps the per-op path on backend={backend}")
+    if _decode_block_vmem_bytes(b, d, n_ff, t, hq, hkv, dh) > vmem_budget:
+        return decide(JNP, f"no residency fits vmem_budget={vmem_budget}")
+    return decide(FUSED, "decode block fits VMEM budget")
+
+
+def run_decode_block(x, wqkv_m, se_qkv, wo_m, se_o, wgu_m, se_gu, wd_m, se_d,
+                     g1m, g2m, km, ke, vm, ve, cossin, pos, dec: Decision, *,
+                     n_d: int, n_ff: int, hq: int, hkv: int, dh: int,
+                     p: int = 7, window: int = 0, eps_m: int = 1,
+                     eps_e: int = -32, se_g1: int = 0, se_g2: int = 0):
+    """Execute a FUSED-planned decode block with mirror degrade.
+
+    Deterministic and gradient-free; returns (x_out, k_new, ek_new, v_new,
+    ev_new) — the fresh cache rows are the caller's to append (they equal
+    ``quantize_cache`` rows bit-exactly)."""
+    from . import fused_chain as fc
+
+    kw = dict(n_d=n_d, n_ff=n_ff, hq=hq, hkv=hkv, dh=dh, p=p, window=window,
+              eps_m=eps_m, eps_e=eps_e, se_g1=se_g1, se_g2=se_g2)
+    args = (x, wqkv_m, se_qkv, wo_m, se_o, wgu_m, se_gu, wd_m, se_d,
+            g1m, g2m, km, ke, vm, ve, cossin, pos)
+
+    def run_kernel(d):
+        return fc.fused_decode_block_pallas(*args, interpret=d.interpret,
+                                            **kw)
+
+    def run_jnp(d):
+        return fc.decode_block_ref(*args, **kw)
+
+    return _with_ladder(dec, run_kernel, run_jnp)
+
+
+# ---------------------------------------------------------------------------
+# cross-op chains: analytic traffic models (BENCH_kernels fused-chain rows)
+# ---------------------------------------------------------------------------
+
+def norm_gemm_bytes_moved(path: str, m: int, k: int, n: int, *,
+                          stochastic: bool = True,
+                          center: bool = False) -> int:
+    """Analytic HBM traffic of one norm->quantize->GEMM chain, in bytes.
+
+    ``fused``: x read once in f32 with its two rounding-bit strips, weight
+    mantissas + per-column exponents read once, the f32 output written
+    once, plus the per-row backward residuals (xq, c mantissas and the
+    meta row).  Anything else is the unfused composition: the fx-norm
+    pipeline's f32 read + write of the activation (the HBM round-trip the
+    fusion deletes), then the dispatched GEMM at its own best (fused) cost
+    with a fresh a-side quantize (``kind="qi"``: the weight is the
+    pre-quantized operand)."""
+    f32, r8, i8 = 4, (4 if stochastic else 0), 1
+    resid = 2 * i8 * m * k + 4 * m * 1
+    if path == FUSED:
+        return (f32 * m * k + 2 * r8 * m * k + i8 * n * k + 4 * n
+                + f32 * m * n + resid)
+    norm_io = 2 * f32 * m * k + r8 * m * k
+    gemm = bytes_moved(FUSED, m, k, n, stochastic=stochastic, kind="qi")
+    return norm_io + gemm
+
+
+def epilogue_bytes_moved(path: str, m: int, k: int, n: int, *,
+                         stochastic: bool = True, kind: str = "qq",
+                         bias: bool = False, act: bool = False,
+                         out_q: bool = False) -> int:
+    """Analytic HBM traffic of one GEMM+bias/act/out-quantize chain.
+
+    ``fused``: the fused GEMM's own traffic, with the f32 output write
+    replaced by the int8 mantissa write (+ rounding bits in) when
+    ``out_q``, plus the bias row and the pre-activation residual strip.
+    Anything else adds the round-trips the fusion deletes: the f32 output
+    re-read by the bias/act stage, its f32 re-write, and the out-quantize
+    scan + quantizer reads + int8 write of ``core.qops._quantize_out``."""
+    f32, r8, i8 = 4, (4 if stochastic else 0), 1
+    base = bytes_moved(FUSED, m, k, n, stochastic=stochastic, kind=kind)
+    n_out = n // 2 if act == "glu" else n
+    extra = (f32 * n if bias else 0) + (f32 * m * n if act else 0)
+    if path == FUSED:
+        if out_q:
+            base = base - f32 * m * n + r8 * m * n_out + i8 * m * n_out + 512
+        return base + extra
+    seams = 0
+    if bias or act:
+        seams += 2 * f32 * m * n                  # y re-read + re-write
+    if out_q:
+        seams += 2 * f32 * m * n_out + r8 * m * n_out + i8 * m * n_out
+    return base + extra + seams
+
+
+def decode_block_bytes_moved(path: str, b: int, d: int, n_ff: int, t: int,
+                             hq: int, hkv: int, dh: int, *,
+                             stochastic: bool = False) -> int:
+    """Analytic HBM traffic of one decoder layer's decode step.
+
+    ``fused``: every weight mantissa and qcache row read exactly once, the
+    f32 activation in and out, the fresh quantized k/v rows written.
+    Anything else is the per-op composition: the same weight and cache
+    reads, plus the inter-op f32 round-trips (norm in/out twice, the QKV /
+    attention / out-proj / gate-up / activation / down seams) and each
+    GEMM's own quantize-stage traffic."""
+    f32, i8 = 4, 1
+    n_qkv = (hq + 2 * hkv) * dh
+    weights = (i8 * (d * n_qkv + hq * dh * d + 2 * d * n_ff + n_ff * d)
+               + 4 * (n_qkv + d + 2 * n_ff + d))
+    cache = 2 * (i8 * b * hkv * t * dh + 4 * b * hkv * t)
+    fresh_rows = 2 * (i8 * b * hkv * dh + 4 * b * hkv)
+    io = 2 * f32 * b * d
+    if path == FUSED:
+        return weights + cache + fresh_rows + io
+    # per-op composition: every seam round-trips f32 through HBM
+    seams = f32 * b * (2 * 2 * d          # two norms: in + out
+                       + 2 * n_qkv        # qkv out + attention in
+                       + 2 * hq * dh      # attention out + out-proj in
+                       + 2 * d            # out-proj out + residual
+                       + 2 * 2 * n_ff     # gate|up out + act in/out
+                       + 2 * n_ff         # down in
+                       + 2 * d)           # down out + residual
+    quant = 5 * (f32 + f32 + i8) * b * d  # five per-row activation quantizes
+    return weights + cache + fresh_rows + io + seams + quant

@@ -56,6 +56,8 @@ __all__ = [
     "fused_qi_pt_pallas",
     "fused_ii_pt_pallas",
     "fused_qq_blk_pallas",
+    "fused_gemm_epi_pallas",
+    "gemm_epi_ref",
 ]
 
 _F32_EXP_BIAS = 127
@@ -417,3 +419,283 @@ def fused_qq_blk_pallas(a, ra, ea, b, rb, eb, *, p=7, blk=32, bm=256,
         scratch_shapes=[pltpu.VMEM((n, k), jnp.int8)],
         interpret=interpret,
     )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# GEMM -> bias/activation/out-quantize epilogue kernels
+# (docs/KERNELS.md §Cross-op fusion)
+# ---------------------------------------------------------------------------
+
+_EPI_ACTS = (None, "relu", "gelu", "silu_glu", "gelu_glu")
+_EPI_META_LANES = 128
+
+
+def _eff_exp_f32(x):
+    """Effective biased exponent of f32 x (sub-normals clamp to 1)."""
+    b = lax.bitcast_convert_type(x, jnp.uint32)
+    return jnp.maximum(((b >> 23) & 0xFF).astype(jnp.int32), 1)
+
+
+def epi_apply(y, bias, act, n_out):
+    """The f32 epilogue on a GEMM output tile: bias add, then activation.
+    ``*_glu`` acts gate the left half against the right half (the merged
+    gate|up projection), halving the output width to ``n_out``.  These are
+    the *same* f32 ops the unfused model code applies, in the same order —
+    the epilogue is bit-identical to the unfused composition."""
+    assert act in _EPI_ACTS, act
+    if bias is not None:
+        y = y + bias
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act == "silu_glu":
+        y = jax.nn.silu(y[:, :n_out]) * y[:, n_out:]
+    elif act == "gelu_glu":
+        y = jax.nn.gelu(y[:, :n_out]) * y[:, n_out:]
+    return y
+
+
+def _gemm_epi_kernel(es_ref, *refs, kind, p, pa, pb, stochastic, act,
+                     has_bias, out_q, qp, n_out, m_true, emit_residuals):
+    """GEMM with a fused f32 epilogue and optional per-tensor out-quantize.
+
+    Without ``out_q`` the grid is (M/bm,) — one pass.  With ``out_q`` the
+    grid is (2, M/bm): phase 0 runs the GEMM+epilogue per strip only to
+    fold the strip max |y| into an SMEM amax scratch; phase 1 recomputes
+    the (deterministic) strip and quantizes it against the tensor-wide
+    shared exponent — the ``quantize-after-global-max`` contract of
+    ``core.qops._quantize_out``, bit-for-bit, with 2x MXU work instead of
+    an f32 HBM round-trip.
+    """
+    it = iter(refs)
+    a_ref = next(it)
+    ra_ref = next(it) if (kind != "ii" and stochastic) else None
+    b_ref = next(it)
+    rb_ref = next(it) if (kind == "qq" and stochastic) else None
+    bias_ref = next(it) if has_bias else None
+    rq_ref = next(it) if (out_q and stochastic) else None
+    yo_ref = next(it)
+    emeta_ref = next(it) if out_q else None
+    am_ref = next(it) if (kind != "ii" and emit_residuals) else None
+    bm_ref = next(it) if (kind == "qq" and emit_residuals) else None
+    ylin_ref = next(it) if (act is not None and emit_residuals) else None
+    scratch = tuple(it)
+    if kind == "qq" and bm_ref is None:
+        bm_ref = scratch[0]
+        scratch = scratch[1:]
+    amax_ref = scratch[0] if out_q else None
+
+    if out_q:
+        ph = pl.program_id(0)
+        i = pl.program_id(1)
+        first = (ph == 0) & (i == 0)
+    else:
+        ph = None
+        i = pl.program_id(0)
+        first = i == 0
+    ea = es_ref[0]
+    eb = es_ref[1]
+
+    if kind == "qq":
+        @pl.when(first)
+        def _():
+            bm_ref[...] = _quantize_tile(
+                b_ref[...], None if rb_ref is None else rb_ref[...], eb,
+                pb, stochastic)
+        bmant = bm_ref[...]
+    else:
+        bmant = b_ref[...]
+    if kind == "ii":
+        am = a_ref[...]
+    else:
+        am = _quantize_tile(a_ref[...],
+                            None if ra_ref is None else ra_ref[...], ea,
+                            pa, stochastic)
+        if am_ref is not None:
+            am_ref[...] = am
+    ylin = _int8_dot(am, bmant).astype(jnp.float32) * _pow2_f32(
+        _scale_exp(ea, pa) + _scale_exp(eb, pb))
+    if bias_ref is not None:
+        ylin = ylin + bias_ref[...]
+    if ylin_ref is not None:
+        ylin_ref[...] = ylin
+    y = epi_apply(ylin, None, act, n_out)
+
+    if not out_q:
+        yo_ref[...] = y
+        return
+
+    @pl.when(ph == 0)
+    def _():
+        @pl.when(i == 0)
+        def _():
+            amax_ref[0, 0] = 0.0
+        av = jnp.abs(y)
+        if m_true is not None:
+            # Zero-padded a-rows stop being zero after the bias add; mask
+            # them out of the tensor-wide amax so the shared exponent
+            # matches the unfused quantize of the *cropped* output.
+            rows = (lax.broadcasted_iota(jnp.int32, av.shape, 0)
+                    + i * av.shape[0])
+            av = jnp.where(rows < m_true, av, 0.0)
+        amax_ref[0, 0] = jnp.maximum(amax_ref[0, 0], av.max())
+
+    @pl.when(ph == 1)
+    def _():
+        e_out = _eff_exp_f32(amax_ref[0, 0])
+        yo_ref[...] = _quantize_tile(
+            y, None if rq_ref is None else rq_ref[...], e_out, qp,
+            stochastic)
+        emeta_ref[...] = jnp.full((1, _EPI_META_LANES), e_out, jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("kind", "p", "pa", "pb", "bm",
+                                   "stochastic", "act", "out_q", "qp",
+                                   "m_true", "emit_residuals", "interpret"))
+def fused_gemm_epi_pallas(a, ra, b, rb, bias, rq, ea, eb, *, kind="qq",
+                          p=7, pa=None, pb=None, bm=256, stochastic=True,
+                          act=None, out_q=False, qp=7, m_true=None,
+                          emit_residuals=True, interpret=False):
+    """Fused GEMM -> bias/activation -> (optional) per-tensor out-quantize.
+
+    Operand layout follows the per-tensor kernels above: a (M, K), b (N, K)
+    contraction-last, ea/eb scalar biased shared exponents.  ``kind``:
+
+      qq  a f32 + ra, b f32 + rb (both quantized in-kernel);
+      qi  a f32 + ra, b int8 mantissas (persistent weights);
+      ii  a int8, b int8 (fully pre-quantized — the serving ``pp`` path).
+
+    bias (1, N) f32 or None; ``act`` one of ``None | relu | gelu |
+    silu_glu | gelu_glu`` (the ``_glu`` forms halve the width);
+    ``out_q=True`` emits int8 mantissas under ONE tensor-wide shared
+    exponent plus a (1, 128) int32 meta row carrying it at [0, 0] —
+    bit-identical to quantizing the unfused f32 output with the same
+    random bits ``rq`` (M, N_out).
+
+    Returns a tuple: (y | (ym, emeta)) [+ am][+ bmq if qq]
+    [+ ylin if act and emit_residuals].
+    """
+    pa = p if pa is None else pa
+    pb = p if pb is None else pb
+    m, k = a.shape
+    n = b.shape[0]
+    n_out = n // 2 if (act or "").endswith("_glu") else n
+    assert m % bm == 0, (m, bm)
+    es = jnp.stack([jnp.asarray(ea), jnp.asarray(eb)]).astype(jnp.int32)
+    nsp = 3 if out_q else 2                       # index-map arity
+    strip_k = pl.BlockSpec((bm, k), lambda *a_: (a_[-2], 0))
+    full_b = pl.BlockSpec((n, k), lambda *a_: (0, 0))
+    strip_n = pl.BlockSpec((bm, n), lambda *a_: (a_[-2], 0))
+    strip_no = pl.BlockSpec((bm, n_out), lambda *a_: (a_[-2], 0))
+    row_n = pl.BlockSpec((1, n), lambda *a_: (0, 0))
+    del nsp
+
+    in_specs = [strip_k]
+    operands = [es, a]
+    if kind != "ii" and stochastic:
+        in_specs.append(strip_k)
+        operands.append(ra)
+    in_specs.append(full_b)
+    operands.append(b)
+    if kind == "qq" and stochastic:
+        in_specs.append(full_b)
+        operands.append(rb)
+    if bias is not None:
+        in_specs.append(row_n)
+        operands.append(bias)
+    if out_q and stochastic:
+        in_specs.append(strip_no)
+        operands.append(rq)
+
+    out_specs = [strip_no]
+    out_shape = [jax.ShapeDtypeStruct((m, n_out),
+                                      jnp.int8 if out_q else jnp.float32)]
+    if out_q:
+        out_specs.append(pl.BlockSpec((1, _EPI_META_LANES),
+                                      lambda *a_: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((1, _EPI_META_LANES),
+                                              jnp.int32))
+    if kind != "ii" and emit_residuals:
+        out_specs.append(strip_k)
+        out_shape.append(jax.ShapeDtypeStruct((m, k), jnp.int8))
+    scratch_shapes = []
+    if kind == "qq":
+        if emit_residuals:
+            out_specs.append(full_b)
+            out_shape.append(jax.ShapeDtypeStruct((n, k), jnp.int8))
+        else:
+            scratch_shapes.append(pltpu.VMEM((n, k), jnp.int8))
+    if act is not None and emit_residuals:
+        out_specs.append(strip_n)
+        out_shape.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
+    if out_q:
+        scratch_shapes.append(pltpu.SMEM((1, 1), jnp.float32))
+
+    grid = (2, m // bm) if out_q else (m // bm,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=tuple(scratch_shapes),
+    )
+    out = pl.pallas_call(
+        partial(_gemm_epi_kernel, kind=kind, p=p, pa=pa, pb=pb,
+                stochastic=stochastic, act=act, has_bias=bias is not None,
+                out_q=out_q, qp=qp, n_out=n_out, m_true=m_true,
+                emit_residuals=emit_residuals),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    return tuple(out)
+
+
+@partial(jax.jit, static_argnames=("kind", "p", "pa", "pb", "stochastic",
+                                   "act", "out_q", "qp", "m_true",
+                                   "emit_residuals"))
+def gemm_epi_ref(a, ra, b, rb, bias, rq, ea, eb, *, kind="qq", p=7, pa=None,
+                 pb=None, stochastic=True, act=None, out_q=False, qp=7,
+                 m_true=None, emit_residuals=True):
+    """Bit-exact jnp mirror of :func:`fused_gemm_epi_pallas`: identical
+    per-tensor quantize / dot / epilogue steps on the full arrays (the
+    tensor-wide amax equals the kernel's sequential strip-max fold)."""
+    pa = p if pa is None else pa
+    pb = p if pb is None else pb
+    n = b.shape[0]
+    n_out = n // 2 if (act or "").endswith("_glu") else n
+    ea = jnp.asarray(ea, jnp.int32)
+    eb = jnp.asarray(eb, jnp.int32)
+    if kind == "qq":
+        bmant = _quantize_tile(b, rb if stochastic else None, eb, pb,
+                               stochastic)
+    else:
+        bmant = b
+    if kind == "ii":
+        am = a
+    else:
+        am = _quantize_tile(a, ra if stochastic else None, ea, pa,
+                            stochastic)
+    ylin = _int8_dot(am, bmant).astype(jnp.float32) * _pow2_f32(
+        _scale_exp(ea, pa) + _scale_exp(eb, pb))
+    if bias is not None:
+        ylin = ylin + bias
+    y = epi_apply(ylin, None, act, n_out)
+    if out_q:
+        av = jnp.abs(y)
+        if m_true is not None:
+            av = jnp.where(jnp.arange(a.shape[0])[:, None] < m_true, av, 0.0)
+        e_out = _eff_exp_f32(av.max())
+        ym = _quantize_tile(y, rq if stochastic else None, e_out, qp,
+                            stochastic)
+        out = [ym, jnp.full((1, _EPI_META_LANES), e_out, jnp.int32)]
+    else:
+        out = [y]
+    if kind != "ii" and emit_residuals:
+        out.append(am)
+    if kind == "qq" and emit_residuals:
+        out.append(bmant)
+    if act is not None and emit_residuals:
+        out.append(ylin)
+    return tuple(out)

@@ -189,6 +189,46 @@ def attention_traffic_report(cfg, policy, batch: int, prompt_len: int,
     return out
 
 
+def chain_traffic_report(cfg, policy, batch: int, prompt_len: int,
+                         max_len: int) -> dict:
+    """Analytic HBM traffic of the cross-op fused chains (docs/KERNELS.md
+    §Cross-op fusion) vs the op-by-op compositions they replace, summed
+    over layers.  ``norm_gemm`` is the pre-norm -> merged-QKV projection
+    seam per prefill call; ``gemm_epilogue`` the up-projection ->
+    activation (-> out-quantize under qflow) seam; ``decode_block`` one
+    whole decoder layer's decode step — norm -> QKV -> decode attention
+    -> out-proj -> MLP as a single kernel over the qcache rows.  Only the
+    dense-FFN shape set is modeled (same caveat as the weight report)."""
+    d, hq, hkv, dh, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                          cfg.d_ff)
+    m = batch * prompt_len
+    n_qkv = (hq + 2 * hkv) * dh
+    t = min(cfg.local_window, max_len) if cfg.local_window else max_len
+    rows = (
+        ("norm_gemm",
+         dispatch.norm_gemm_bytes_moved(dispatch.FUSED, m, d, n_qkv),
+         dispatch.norm_gemm_bytes_moved(dispatch.UNFUSED, m, d, n_qkv)),
+        ("gemm_epilogue",
+         dispatch.epilogue_bytes_moved(dispatch.FUSED, m, d, ff, act=True,
+                                       out_q=policy.qflow),
+         dispatch.epilogue_bytes_moved(dispatch.UNFUSED, m, d, ff, act=True,
+                                       out_q=policy.qflow)),
+        ("decode_block",
+         dispatch.decode_block_bytes_moved(dispatch.FUSED, batch, d, ff, t,
+                                           hq, hkv, dh),
+         dispatch.decode_block_bytes_moved(dispatch.UNFUSED, batch, d, ff, t,
+                                           hq, hkv, dh)),
+    )
+    out = {}
+    for op, fused_b, unfused_b in rows:
+        fused_b *= cfg.n_layers
+        unfused_b *= cfg.n_layers
+        out[op] = {
+            "unfused_bytes": unfused_b, "fused_bytes": fused_b,
+            "reduction_pct": round(100.0 * (1 - fused_b / unfused_b), 2)}
+    return out
+
+
 def validate_request(arch: str, policy_name: str, *, batch: int = 1,
                      prompt_len: int = 1, gen: int = 1, qcache: bool = False,
                      health: bool = False) -> None:
@@ -284,6 +324,9 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32
     if policy.enabled and cfg.family in ("dense", "vlm", "moe"):
         stats["attn_traffic"] = attention_traffic_report(
             cfg, policy, batch, prompt_len, max_len)
+    if policy.enabled and cfg.family in ("dense", "vlm"):
+        stats["chain_traffic"] = chain_traffic_report(cfg, policy, batch,
+                                                      prompt_len, max_len)
     if health:
         # per-leaf saturation/exponent stats of every quantized artifact
         # actually serving: the load-time weights and the decode-time cache
@@ -329,6 +372,15 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32
                       f"(-{r['reduction_pct']}%)  "
                       f"[{d['op']}/{d['kind']} -> {d['path']} "
                       f"bq={d['bq']} bt={d['bt']}]")
+        cht = stats.get("chain_traffic")
+        if cht:
+            for op, r in cht.items():
+                per = ("per decode step" if op == "decode_block"
+                       else "per prefill call")
+                print(f"fused-chain {op} traffic {per}: unfused "
+                      f"{r['unfused_bytes'] / 1e6:.2f} MB -> fused "
+                      f"{r['fused_bytes'] / 1e6:.2f} MB "
+                      f"(-{r['reduction_pct']}%)")
         for section, leaves in stats.get("health", {}).items():
             if not leaves:
                 print(f"health {section}: no quantized leaves")

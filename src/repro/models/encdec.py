@@ -19,7 +19,7 @@ from typing import Optional
 
 from ..core import (BFP, QC_ROWS, QW_NONE, QW_STACKED, QW_TENSOR,
                     NumericPolicy, qcache_append, qcache_prefill, qembed,
-                    qmatmul)
+                    qmatmul, qmatmul_epi, qnorm_gemm)
 from ..core.qnorm import qlayernorm
 from ..runtime.sharding import logical_constraint
 from .attention import (cache_decode_attention, chunked_attention,
@@ -145,9 +145,18 @@ def _qout(policy):
     return policy.qflow_seams
 
 
-def _proj_qkv(x_q, x_kv, ap, key, policy, cfg, positions_q=None, positions_k=None):
+def _proj_qkv(x_q, x_kv, ap, key, policy, cfg, positions_q=None, positions_k=None,
+              qkv=None):
     ks = jax.random.split(key, 3)
-    if policy.enabled and policy.fused_proj and x_q is x_kv \
+    if qkv is not None:
+        # caller already ran the fused norm->QKV chain (qnorm_gemm); just
+        # split the merged projection and head-reshape (rope still below).
+        nq, nk = ap["wq"].shape[-1], ap["wk"].shape[-1]
+        qf, kf, vf = jnp.split(qkv, (nq, nq + nk), axis=-1)
+        q = _heads(qf, cfg.n_heads, cfg.hd)
+        k = _heads(kf, cfg.n_kv_heads, cfg.hd)
+        v = _heads(vf, cfg.n_kv_heads, cfg.hd)
+    elif policy.enabled and policy.fused_proj and x_q is x_kv \
             and not isinstance(ap["wq"], BFP):
         # (BFP weights cannot merge — each carries its own scale — so the
         # persistent weight currency keeps the split projections.)
@@ -176,8 +185,23 @@ def _proj_qkv(x_q, x_kv, ap, key, policy, cfg, positions_q=None, positions_k=Non
 
 def _ffn(x, lp, key, policy):
     k1, k2 = jax.random.split(key)
+    fused = qmatmul_epi(x, lp["w_up"], k1, policy, act="gelu",
+                        out_q=_qout(policy))
+    if fused is not None:
+        return qmatmul(fused, lp["w_down"], k2, policy)
     return qmatmul(jax.nn.gelu(qmatmul(x, lp["w_up"], k1, policy)),
                    lp["w_down"], k2, policy)
+
+
+def _try_norm_qkv(h, g, b, ap, nkey, policy):
+    """Fused layernorm->quantize->merged-QKV chain (``qnorm_gemm``); returns
+    the merged (..., nq+nk+nv) projection, or None to keep the established
+    qlayernorm + ``_proj_qkv`` seam (identical keys on the fall-through)."""
+    if not (policy.enabled and policy.fused_proj) or isinstance(h, BFP) \
+            or isinstance(ap["wq"], BFP):
+        return None
+    wqkv = jnp.concatenate([ap["wq"], ap["wk"], ap["wv"]], axis=-1)
+    return qnorm_gemm(h, g, b, wqkv, nkey, policy, rms=False)
 
 
 def encode(params, src_embeds, key, policy: NumericPolicy, cfg: ArchConfig):
@@ -193,10 +217,13 @@ def encode(params, src_embeds, key, policy: NumericPolicy, cfg: ArchConfig):
         lkey = jax.random.fold_in(key, idx)
 
         def inner(h):
-            hn = qlayernorm(h, lp["ln1_g"], lp["ln1_b"],
-                            jax.random.fold_in(lkey, 0), policy, out_q=oq)
+            qkv = _try_norm_qkv(h, lp["ln1_g"], lp["ln1_b"], lp["attn"],
+                                jax.random.fold_in(lkey, 0), policy)
+            hn = h if qkv is not None else qlayernorm(
+                h, lp["ln1_g"], lp["ln1_b"],
+                jax.random.fold_in(lkey, 0), policy, out_q=oq)
             q, k, v = _proj_qkv(hn, hn, lp["attn"], jax.random.fold_in(lkey, 1),
-                                policy, cfg, positions, positions)
+                                policy, cfg, positions, positions, qkv=qkv)
             o = chunked_attention(q, k, v, jax.random.fold_in(lkey, 2), policy,
                                   causal=False, chunk=cfg.attn_chunk or 1024)
             h = h + qmatmul(_unheads(o), lp["attn"]["wo"],
@@ -220,10 +247,13 @@ def _dec_layer(h, lp, lkey, policy, cfg, positions, enc_kv=None, enc_out=None,
                self_kv=None, pos=None):
     """enc_kv: precomputed cross (k, v); self_kv: decode self cache (k, v)."""
     oq = _qout(policy)
-    hn = qlayernorm(h, lp["ln1_g"], lp["ln1_b"], jax.random.fold_in(lkey, 0),
-                    policy, out_q=oq)
+    qkv = _try_norm_qkv(h, lp["ln1_g"], lp["ln1_b"], lp["self"],
+                        jax.random.fold_in(lkey, 0), policy)
+    hn = h if qkv is not None else qlayernorm(
+        h, lp["ln1_g"], lp["ln1_b"], jax.random.fold_in(lkey, 0), policy,
+        out_q=oq)
     q, k, v = _proj_qkv(hn, hn, lp["self"], jax.random.fold_in(lkey, 1),
-                        policy, cfg, positions, positions)
+                        policy, cfg, positions, positions, qkv=qkv)
     if self_kv is None:
         o = chunked_attention(q, k, v, jax.random.fold_in(lkey, 2), policy,
                               causal=True)

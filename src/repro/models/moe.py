@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import (BFP, PER_TENSOR, QW_NONE, QW_STACKED, NumericPolicy,
-                    bfp_value, qbmm, qmatmul)
+                    bfp_value, qbmm, qmatmul, qmatmul_epi)
 from .common import ArchConfig, dense_init
 
 __all__ = ["moe_params_init", "moe_param_specs", "moe_weight_mask",
@@ -163,9 +163,16 @@ def moe_block(h, lp, key, policy: NumericPolicy,
     # -- shared expert (llama4) ---------------------------------------------
     if cfg.moe_shared:
         ks = jax.random.split(jax.random.fold_in(key, 2), 3)
-        sg = qmatmul(x2_in, lp["ws_gate"], ks[0], policy)
-        su = qmatmul(x2_in, lp["ws_up"], ks[1], policy)
-        y = y + qmatmul(jax.nn.silu(sg) * su, lp["ws_down"], ks[2], policy)
+        fused = None
+        if not isinstance(lp["ws_gate"], BFP) and not isinstance(x2_in, BFP):
+            wgu = jnp.concatenate([lp["ws_gate"], lp["ws_up"]], axis=-1)
+            fused = qmatmul_epi(x2_in, wgu, ks[0], policy, act="silu_glu")
+        if fused is not None:
+            y = y + qmatmul(fused, lp["ws_down"], ks[2], policy)
+        else:
+            sg = qmatmul(x2_in, lp["ws_gate"], ks[0], policy)
+            su = qmatmul(x2_in, lp["ws_up"], ks[1], policy)
+            y = y + qmatmul(jax.nn.silu(sg) * su, lp["ws_down"], ks[2], policy)
 
     # -- Switch aux loss: E * sum_e f_e * p_e --------------------------------
     f = jnp.mean(onehot.astype(jnp.float32), axis=0)

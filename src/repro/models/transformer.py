@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from ..core import (BFP, QC_ROWS, QW_NONE, QW_STACKED, QW_TENSOR,
                     NumericPolicy, qcache_append, qcache_prefill, qembed,
                     qmatmul)
+from ..core.qchain import qdecode_block, qmatmul_epi, qnorm_gemm
 from ..core.qnorm import qlayernorm, qrmsnorm
 from ..runtime.sharding import logical_constraint
 from .attention import chunked_attention, decode_attention, local_attention
@@ -172,12 +173,19 @@ def _rope_tables(positions, cfg):
     return cos[None, None], sin[None, None]
 
 
-def _attn_block(h, lp, key, policy, cfg, *, positions, kv=None, pos=None):
-    """Self-attention. Training/prefill when kv is None; decode vs cache else."""
+def _attn_block(h, lp, key, policy, cfg, *, positions, kv=None, pos=None,
+                qkv=None):
+    """Self-attention. Training/prefill when kv is None; decode vs cache else.
+
+    ``qkv`` carries a precomputed fused norm->QKV projection (the
+    ``qnorm_gemm`` chain); when given, ``h`` is unused for the projection.
+    """
     kq, ka, ko = jax.random.split(key, 3)
     nq = lp["wq"].shape[-1]
     nk = lp["wk"].shape[-1]
-    if policy.enabled and policy.fused_proj and not isinstance(lp["wq"], BFP):
+    if qkv is not None:
+        q, k, v = jnp.split(qkv, (nq, nq + nk), axis=-1)
+    elif policy.enabled and policy.fused_proj and not isinstance(lp["wq"], BFP):
         # one integer GEMM, one input quantization, one merged weight scale.
         # (BFP weights cannot merge — each carries its own scale — so the
         # persistent weight currency keeps the split projections.)
@@ -229,8 +237,18 @@ def _mlp_block(h, lp, key, policy, cfg):
         return moe_block(h, lp, key, policy, cfg)
     k1, k2, k3 = jax.random.split(key, 3)
     if policy.enabled and policy.fused_proj and not isinstance(lp["w_gate"], BFP):
-        gu = qmatmul(h, jnp.concatenate([lp["w_gate"], lp["w_up"]], axis=-1),
-                     k1, policy)
+        wgu = jnp.concatenate([lp["w_gate"], lp["w_up"]], axis=-1)
+        if not isinstance(h, BFP):
+            # gate/up GEMM -> glu -> (q-out) as one MXU epilogue; falls
+            # through to the seamed composition unless dispatch plans the
+            # fused chain (bit-identical off-path).
+            fused = qmatmul_epi(h, wgu, k1, policy,
+                                act=("silu_glu" if cfg.act == "silu"
+                                     else "gelu_glu"),
+                                out_q=_qout(policy))
+            if fused is not None:
+                return qmatmul(fused, lp["w_down"], k3, policy), 0.0
+        gu = qmatmul(h, wgu, k1, policy)
         gate, up = jnp.split(gu, 2, axis=-1)
     else:
         gate = qmatmul(h, lp["w_gate"], k1, policy)
@@ -239,15 +257,54 @@ def _mlp_block(h, lp, key, policy, cfg):
     return qmatmul(act, lp["w_down"], k3, policy), 0.0
 
 
+def _try_decode_block(h, lp, key, policy, cfg, *, positions, kv, pos):
+    """Whole-layer decode megakernel hook: norm -> QKV -> fused decode
+    attention over the qcache -> out-proj -> gated MLP in one kernel.
+    None unless dispatch plans it (and the layer shape qualifies)."""
+    kc, vc = kv
+    if (cfg.moe_experts or cfg.qkv_bias or cfg.norm == "layernorm"
+            or cfg.act != "silu" or isinstance(h, BFP)
+            or not isinstance(kc, BFP) or h.shape[1] != 1):
+        return None
+    cos, sin = rope(positions, cfg.hd, cfg.rope_theta)      # (1, hd/2)
+    cossin = jnp.concatenate([cos, cos, sin, sin], axis=-1)  # (1, 2*hd)
+    out = qdecode_block(
+        h[:, 0, :], lp["ln1_g"], lp["ln2_g"], lp["wq"], lp["wk"], lp["wv"],
+        lp["wo"], lp["w_gate"], lp["w_up"], lp["w_down"], kc, vc, cossin,
+        pos, key, policy, hq=cfg.n_heads, hkv=cfg.n_kv_heads, dh=cfg.hd,
+        window=cfg.local_window)
+    if out is None:
+        return None
+    x_out, kc2, vc2 = out
+    return x_out[:, None, :], (kc2, vc2)
+
+
 def _layer(h, lp, key, policy, cfg, *, positions, kv=None, pos=None):
     # With qflow on, both pre-norms emit BFP: the norm -> projection seams
     # (QKV and gate/up) exchange int8 mantissas, quantized exactly once.
     # The residual stream itself stays float32 (cheap adds, no drift).
     oq = _qout(policy)
     kn1, kattn, kn2, kmlp = jax.random.split(key, 4)
-    hn = _norm(h, lp["ln1_g"], lp.get("ln1_b"), kn1, policy, cfg, out_q=oq)
+    if kv is not None:
+        blk = _try_decode_block(h, lp, key, policy, cfg,
+                                positions=positions, kv=kv, pos=pos)
+        if blk is not None:
+            h, new_kv = blk
+            h = logical_constraint(h, "batch", "seq", "embed")
+            return h, new_kv, 0.0
+    qkv = None
+    if (policy.enabled and policy.fused_proj and not cfg.qkv_bias
+            and not isinstance(lp["wq"], BFP) and not isinstance(h, BFP)):
+        # fused norm -> quantize -> QKV GEMM chain (None keeps the seam)
+        wqkv = jnp.concatenate([lp["wq"], lp["wk"], lp["wv"]], axis=-1)
+        qkv = qnorm_gemm(h, lp["ln1_g"], lp.get("ln1_b"), wqkv, kn1, policy,
+                         rms=cfg.norm != "layernorm")
+    if qkv is None:
+        hn = _norm(h, lp["ln1_g"], lp.get("ln1_b"), kn1, policy, cfg, out_q=oq)
+    else:
+        hn = h          # unused by the projection; heads come from qkv
     a, new_kv = _attn_block(hn, lp, kattn, policy, cfg,
-                            positions=positions, kv=kv, pos=pos)
+                            positions=positions, kv=kv, pos=pos, qkv=qkv)
     h = h + a
     hn = _norm(h, lp["ln2_g"], lp.get("ln2_b"), kn2, policy, cfg, out_q=oq)
     m, aux = _mlp_block(hn, lp, kmlp, policy, cfg)

@@ -1,0 +1,513 @@
+"""Cross-op fused-chain tests (ISSUE-7): kernel-vs-mirror bit parity for
+the norm->quantize->GEMM, GEMM-epilogue and whole-block decode chains,
+composition bit-identity for the epilogue, policy / per-block fallbacks,
+the degradation-ladder rung, the autotune jnp-fallback routing, model
+wiring engagement, and the PR-6 spec pin (``kernel_mode`` at its default
+== bit-identical to the pre-fusion pipeline goldens)."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (establishes the core -> kernels import order)
+from repro.configs import get_smoke_config
+from repro.core import (BFP, PAPER_INT8, NumericPolicy, QuantConfig,
+                        quantize)
+from repro.core.bfp import PER_TENSOR
+from repro.core.policy import int_policy
+from repro.core.qchain import qdecode_block, qmatmul_epi, qnorm_gemm
+from repro.core.qops import qmatmul
+from repro.kernels import autotune, dispatch
+from repro.models import get_model
+from repro.runtime import fault_injection as finj
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "goldens",
+                      "fusion_seams_pr6.npz")
+
+KEY = jax.random.key(0)
+
+FUSED_POL = dataclasses.replace(PAPER_INT8, kernel_mode="fused")
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path, monkeypatch):
+    """Never read or write the repo-level autotune cache from tests."""
+    monkeypatch.setenv("REPRO_KERNEL_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    yield
+    finj.clear_kernel_failure()
+    dispatch.reset_fallback_counts()
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+def _mirror_call(fn, *args):
+    """Trace+run ``fn`` with every fused kernel launch degraded to the
+    bit-exact jnp mirror (fresh jit so the armed trace is not cached)."""
+    finj.arm_kernel_failure("fused", count=-1)
+    try:
+        out = jax.jit(fn)(*args)
+        out = jax.block_until_ready(out)
+    finally:
+        finj.clear_kernel_failure()
+        dispatch.reset_fallback_counts()
+    return out
+
+
+def _flat(tree):
+    return jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, BFP))
+
+
+def _assert_tree_bitwise(a, b):
+    la, lb = _flat(a), _flat(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if isinstance(x, BFP):
+            np.testing.assert_array_equal(np.asarray(x.m), np.asarray(y.m))
+            np.testing.assert_array_equal(np.asarray(x.e), np.asarray(y.e))
+        else:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# GEMM -> bias/act -> out-quantize epilogue
+# ---------------------------------------------------------------------------
+
+class TestEpilogueChain:
+    @pytest.mark.parametrize("m,k,n", [(32, 128, 128), (37, 131, 130)])
+    @pytest.mark.parametrize("bias,act,out_q", [
+        (True, None, False),
+        (True, "relu", True),
+        (False, "gelu", False),
+    ])
+    def test_kernel_vs_mirror_bitwise(self, m, k, n, bias, act, out_q):
+        x, w = _rand((m, k), seed=m), _rand((k, n), seed=n, scale=0.1)
+        b = _rand((n,), seed=3, scale=0.1) if bias else None
+
+        def run(x, w):
+            out = qmatmul_epi(x, w, KEY, FUSED_POL, bias=b, act=act,
+                              out_q=out_q)
+            assert out is not None
+            return out
+
+        _assert_tree_bitwise(jax.jit(run)(x, w), _mirror_call(run, x, w))
+
+    @pytest.mark.parametrize("m,k,n", [(32, 128, 256), (37, 131, 256)])
+    def test_glu_kernel_vs_mirror_bitwise(self, m, k, n):
+        x, w = _rand((m, k), seed=m), _rand((k, n), seed=n, scale=0.1)
+
+        def run(x, w):
+            out = qmatmul_epi(x, w, KEY, FUSED_POL, act="silu_glu",
+                              out_q=True)
+            assert out is not None
+            return out
+
+        _assert_tree_bitwise(jax.jit(run)(x, w), _mirror_call(run, x, w))
+
+    def test_relu_bias_bit_identical_to_composition(self):
+        """The epilogue contract: same result (fwd AND grads) as the
+        unfused ``act(qmatmul(x, w, key) + bias)`` with identical keys."""
+        m, k, n = (24, 128, 128)
+        x, w = _rand((m, k), seed=1), _rand((k, n), seed=2, scale=0.1)
+        b = _rand((n,), seed=3, scale=0.1)
+
+        def fused_loss(x, w, b):
+            out = qmatmul_epi(x, w, KEY, FUSED_POL, bias=b, act="relu")
+            assert out is not None
+            return jnp.sum(out * out)
+
+        def seam_loss(x, w, b):
+            return jnp.sum(jnp.square(
+                jax.nn.relu(qmatmul(x, w, KEY, FUSED_POL) + b)))
+
+        lf, gf = jax.jit(jax.value_and_grad(fused_loss, (0, 1, 2)))(x, w, b)
+        ls, gs = jax.jit(jax.value_and_grad(seam_loss, (0, 1, 2)))(x, w, b)
+        np.testing.assert_array_equal(np.asarray(lf), np.asarray(ls))
+        _assert_tree_bitwise(gf, gs)
+
+    def test_out_quantize_matches_qout_key_contract(self):
+        """out_q mantissas+exponent == hand composition quantized under
+        the PR-2 q-out key ``fold_in(key, 0xD0)``."""
+        m, k, n = (16, 128, 128)
+        x, w = _rand((m, k), seed=4), _rand((k, n), seed=5, scale=0.1)
+
+        def fused(x, w):
+            out = qmatmul_epi(x, w, KEY, FUSED_POL, out_q=True)
+            assert out is not None
+            return out.m, out.e
+
+        def seam(x, w):
+            y = qmatmul(x, w, KEY, FUSED_POL)
+            q = quantize(y, QuantConfig(8), jax.random.fold_in(KEY, 0xD0))
+            return q.m, q.e
+
+        mf, ef = jax.jit(fused)(x, w)
+        ms, es = jax.jit(seam)(x, w)
+        np.testing.assert_array_equal(np.asarray(mf), np.asarray(ms))
+        np.testing.assert_array_equal(np.asarray(ef), np.asarray(es))
+
+
+# ---------------------------------------------------------------------------
+# norm -> quantize -> GEMM
+# ---------------------------------------------------------------------------
+
+class TestNormGemmChain:
+    @pytest.mark.parametrize("m,k,n", [(16, 128, 128), (13, 131, 70)])
+    @pytest.mark.parametrize("rms", [True, False])
+    def test_kernel_vs_mirror_bitwise(self, m, k, n, rms):
+        x = _rand((m, k), seed=m)
+        g = 1.0 + 0.1 * _rand((k,), seed=1)
+        beta = None if rms else 0.1 * _rand((k,), seed=2)
+        w = _rand((k, n), seed=n, scale=0.1)
+
+        def run(x, g, w):
+            out = qnorm_gemm(x, g, beta, w, KEY, FUSED_POL, rms=rms)
+            assert out is not None
+            return out
+
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(run)(x, g, w)),
+            np.asarray(_mirror_call(run, x, g, w)))
+
+    def test_grads_kernel_vs_mirror_bitwise(self):
+        m, k, n = (16, 128, 128)
+        x = _rand((m, k), seed=7)
+        g = 1.0 + 0.1 * _rand((k,), seed=8)
+        w = _rand((k, n), seed=9, scale=0.1)
+
+        def loss(x, g, w):
+            out = qnorm_gemm(x, g, None, w, KEY, FUSED_POL)
+            assert out is not None
+            return jnp.sum(out * out)
+
+        grad = jax.value_and_grad(loss, (0, 1, 2))
+        lf, gf = jax.jit(grad)(x, g, w)
+        lm, gm = _mirror_call(grad, x, g, w)
+        np.testing.assert_array_equal(np.asarray(lf), np.asarray(lm))
+        _assert_tree_bitwise(gf, gm)
+
+    def test_fwd_close_to_float_reference(self):
+        m, k, n = (16, 128, 96)
+        x = _rand((m, k), seed=11)
+        g = 1.0 + 0.1 * _rand((k,), seed=12)
+        w = _rand((k, n), seed=13, scale=0.1)
+        out = jax.jit(lambda x, g, w: qnorm_gemm(x, g, None, w, KEY,
+                                                 FUSED_POL))(x, g, w)
+        xf = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
+        want = (xf * g) @ w
+        err = float(jnp.linalg.norm(out - want) / jnp.linalg.norm(want))
+        assert err < 0.05
+
+
+# ---------------------------------------------------------------------------
+# whole-block decode megakernel
+# ---------------------------------------------------------------------------
+
+def _decode_operands(b=2, d=256, n_ff=256, hq=4, hkv=2, dh=64, t=64):
+    rng = np.random.RandomState(d)
+    mk = lambda ki, ko: jnp.asarray(
+        rng.randn(ki, ko).astype(np.float32) / np.sqrt(ki))
+    qc = dataclasses.replace(PAPER_INT8, qcache=True)
+    from repro.core import qcache_quantize
+    ops = dict(
+        x=jnp.asarray(rng.randn(b, d).astype(np.float32)),
+        g1=jnp.asarray(1.0 + 0.1 * rng.randn(d).astype(np.float32)),
+        g2=jnp.asarray(1.0 + 0.1 * rng.randn(d).astype(np.float32)),
+        wq=mk(d, hq * dh), wk=mk(d, hkv * dh), wv=mk(d, hkv * dh),
+        wo=mk(hq * dh, d), wg=mk(d, n_ff), wu=mk(d, n_ff), wd=mk(n_ff, d),
+        kc=qcache_quantize(
+            jnp.asarray(rng.randn(b, hkv, t, dh).astype(np.float32)), qc),
+        vc=qcache_quantize(
+            jnp.asarray(rng.randn(b, hkv, t, dh).astype(np.float32)), qc),
+    )
+    cq = jnp.cos(jnp.arange(dh // 2, dtype=jnp.float32))[None]
+    sq = jnp.sin(jnp.arange(dh // 2, dtype=jnp.float32))[None]
+    ops["cossin"] = jnp.concatenate([cq, cq, sq, sq], axis=-1)
+    return ops, dict(hq=hq, hkv=hkv, dh=dh), t
+
+
+class TestDecodeBlockChain:
+    @pytest.mark.parametrize("window", [0, 32])
+    def test_kernel_vs_mirror_bitwise_traced_pos(self, window):
+        ops, dims, t = _decode_operands()
+        pol = dataclasses.replace(PAPER_INT8, qcache=True,
+                                  kernel_mode="fused")
+
+        def run(x, pos):
+            out = qdecode_block(
+                x, ops["g1"], ops["g2"], ops["wq"], ops["wk"], ops["wv"],
+                ops["wo"], ops["wg"], ops["wu"], ops["wd"], ops["kc"],
+                ops["vc"], ops["cossin"], pos, KEY, pol,
+                window=window, **dims)
+            assert out is not None
+            return out
+
+        pos = jnp.int32(t - 1)                      # traced under jit
+        _assert_tree_bitwise(jax.jit(run)(ops["x"], pos),
+                             _mirror_call(run, ops["x"], pos))
+
+    def test_appends_fresh_rows_at_pos(self):
+        ops, dims, t = _decode_operands()
+        pol = dataclasses.replace(PAPER_INT8, qcache=True,
+                                  kernel_mode="fused")
+        pos = jnp.int32(t - 2)
+        out = jax.jit(lambda x, pos: qdecode_block(
+            x, ops["g1"], ops["g2"], ops["wq"], ops["wk"], ops["wv"],
+            ops["wo"], ops["wg"], ops["wu"], ops["wd"], ops["kc"],
+            ops["vc"], ops["cossin"], pos, KEY, pol, **dims))(ops["x"], pos)
+        x_out, kc2, vc2 = out
+        assert x_out.shape == ops["x"].shape
+        assert bool(jnp.all(jnp.isfinite(x_out)))
+        # rows at pos changed, every other row untouched
+        p = int(pos)
+        changed = np.any(np.asarray(kc2.m[:, :, p]) !=
+                         np.asarray(ops["kc"].m[:, :, p]))
+        assert changed
+        mask = np.arange(t) != p
+        np.testing.assert_array_equal(np.asarray(kc2.m[:, :, mask]),
+                                      np.asarray(ops["kc"].m[:, :, mask]))
+        np.testing.assert_array_equal(np.asarray(vc2.m[:, :, mask]),
+                                      np.asarray(ops["vc"].m[:, :, mask]))
+
+
+# ---------------------------------------------------------------------------
+# policy fallbacks: the chain helpers return None and the caller keeps the
+# established (golden-pinned) seam
+# ---------------------------------------------------------------------------
+
+class TestPolicyFallbacks:
+    def _operands(self):
+        return _rand((8, 128), seed=0), _rand((128, 128), seed=1, scale=0.1)
+
+    def test_default_kernel_mode_keeps_seam_on_cpu(self):
+        x, w = self._operands()
+        g = 1.0 + 0.1 * _rand((128,), seed=2)
+        assert qmatmul_epi(x, w, KEY, PAPER_INT8, act="relu") is None
+        assert qnorm_gemm(x, g, None, w, KEY, PAPER_INT8) is None
+
+    def test_per_block_policy_falls_back(self):
+        x, w = self._operands()
+        g = 1.0 + 0.1 * _rand((128,), seed=2)
+        pol = dataclasses.replace(int_policy(block=32),
+                                  kernel_mode="fused")
+        assert pol.fwd_cfg().block != PER_TENSOR
+        assert qmatmul_epi(x, w, KEY, pol, act="relu") is None
+        assert qnorm_gemm(x, g, None, w, KEY, pol) is None
+
+    def test_bfp_operands_fall_back(self):
+        x, w = self._operands()
+        xq = quantize(x, QuantConfig(8), KEY)
+        xb = BFP(xq.m, xq.e, xq.cfg)
+        assert qmatmul_epi(xb, w, KEY, FUSED_POL, act="relu") is None
+
+    def test_low_bits_fall_back(self):
+        x, w = self._operands()
+        pol = dataclasses.replace(int_policy(bits=4), kernel_mode="fused")
+        assert qmatmul_epi(x, w, KEY, pol, act="relu") is None
+
+    def test_glu_misalignment_falls_back(self):
+        x = _rand((8, 128), seed=0)
+        w = _rand((128, 192), seed=1, scale=0.1)       # 192 % 256 != 0
+        assert qmatmul_epi(x, w, KEY, FUSED_POL, act="silu_glu") is None
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: chains degrade fused -> jnp mirror, results unchanged
+# ---------------------------------------------------------------------------
+
+class TestDegradationLadder:
+    def test_armed_failure_lands_on_mirror_and_counts(self):
+        x, w = _rand((16, 128), seed=0), _rand((128, 128), seed=1, scale=0.1)
+
+        def run(x, w):
+            out = qmatmul_epi(x, w, KEY, FUSED_POL, act="relu", out_q=True)
+            assert out is not None
+            return out
+
+        clean = jax.jit(run)(x, w)
+        dispatch.reset_fallback_counts()
+        finj.arm_kernel_failure("fused", count=1)
+        try:
+            degraded = jax.jit(lambda a, b: run(a * 1.0, b))(x, w)
+        finally:
+            finj.clear_kernel_failure()
+        assert dispatch.fallback_counts() == {"fused->jnp": 1}
+        _assert_tree_bitwise(clean, degraded)
+
+
+# ---------------------------------------------------------------------------
+# autotune: measured jnp-fallback routing (the qmatmul_pp small-shape fix)
+# ---------------------------------------------------------------------------
+
+class TestAutotuneJnpFallback:
+    def test_select_bm_records_measured_jnp_win(self, tmp_path):
+        cache = autotune.AutotuneCache(str(tmp_path / "at.json"))
+        calls = []
+        bm = autotune.select_bm(
+            "pp:256x256x256:b8:blk0:cpu", 256, lambda bm: True,
+            measure=True, bench=lambda bm: float(100 + bm),
+            bench_jnp=lambda: (calls.append(1), 10.0)[1], cache=cache)
+        assert bm == autotune.JNP_FALLBACK
+        assert calls == [1]
+        entry = cache.get("pp:256x256x256:b8:blk0:cpu")
+        assert entry["jnp"] is True and entry["bm"] == 0
+        assert entry["us"]["jnp"] == 10.0
+        # cached: no re-measurement, same routing
+        bm2 = autotune.select_bm("pp:256x256x256:b8:blk0:cpu", 256,
+                                 lambda bm: True, cache=cache)
+        assert bm2 == autotune.JNP_FALLBACK
+
+    def test_select_bm_keeps_fused_when_kernel_wins(self, tmp_path):
+        cache = autotune.AutotuneCache(str(tmp_path / "at.json"))
+        bm = autotune.select_bm(
+            "qq:512x512x512:b8:blk0:cpu", 512, lambda bm: True,
+            measure=True, bench=lambda bm: 10.0,
+            bench_jnp=lambda: 50.0, cache=cache)
+        assert bm in autotune.BM_CANDIDATES
+
+    def test_plan_contract_routes_pp_via_recorded_fallback(self, tmp_path,
+                                                           monkeypatch):
+        path = str(tmp_path / "at.json")
+        monkeypatch.setenv("REPRO_KERNEL_AUTOTUNE_CACHE", path)
+        backend = jax.default_backend()
+        key = autotune.shape_key("pp", 256, 256, 256, 8, 0, backend)
+        with open(path, "w") as f:
+            json.dump({key: {"bm": 0, "jnp": True,
+                             "us": {"256": 120.0, "jnp": 35.0}}}, f)
+        cfg = QuantConfig(8, PER_TENSOR, True, "threefry")
+        dec = dispatch.plan_contract("qmatmul_fwd", 256, 256, 256, cfg,
+                                     kind="pp", cfg2=cfg,
+                                     kernel_mode="fused")
+        assert dec.path == dispatch.JNP
+        assert "jnp mirror measured faster" in dec.reason
+
+
+# ---------------------------------------------------------------------------
+# model wiring: the chains actually engage under kernel_mode="fused"
+# ---------------------------------------------------------------------------
+
+class TestModelEngagement:
+    def test_transformer_train_seams_plan_fused(self):
+        cfg = dataclasses.replace(get_smoke_config("minicpm_2b"), d_ff=128)
+        mod = get_model(cfg)
+        params = mod.init_params(jax.random.key(0), cfg)
+        batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+                 "labels": jnp.zeros((1, 8), jnp.int32)}
+        # qflow off: the MLP input stays f32, so the gate/up epilogue
+        # (fresh-operand kind "qq" only) engages alongside the norm chain.
+        pol = dataclasses.replace(PAPER_INT8, fused_proj=True,
+                                  kernel_mode="fused")
+        with dispatch.record_decisions() as log:
+            jax.eval_shape(lambda p: mod.loss_fn(p, batch, KEY, pol, cfg),
+                           params)
+        fused_ops = {d.op for d in log if d.path == dispatch.FUSED}
+        assert "qnorm_gemm" in fused_ops
+        assert "qmatmul_epi" in fused_ops
+        # qflow on: the norm chain still engages (the residual stream it
+        # consumes is f32 either way); the epilogue correctly declines its
+        # now-BFP input and the seam composition runs instead.
+        polq = dataclasses.replace(pol, qflow=True)
+        with dispatch.record_decisions() as log:
+            jax.eval_shape(lambda p: mod.loss_fn(p, batch, KEY, polq, cfg),
+                           params)
+        fused_ops = {d.op for d in log if d.path == dispatch.FUSED}
+        assert "qnorm_gemm" in fused_ops
+        assert "qmatmul_epi" not in fused_ops
+
+    def test_transformer_train_fused_loss_and_grads_finite(self):
+        cfg = dataclasses.replace(get_smoke_config("minicpm_2b"), d_ff=128)
+        mod = get_model(cfg)
+        params = mod.init_params(jax.random.key(0), cfg)
+        batch = {"tokens": jnp.arange(8, dtype=jnp.int32)[None] % cfg.vocab,
+                 "labels": jnp.arange(8, dtype=jnp.int32)[None] % cfg.vocab}
+        pol = dataclasses.replace(PAPER_INT8, qflow=True, fused_proj=True,
+                                  kernel_mode="fused")
+        loss, grads = jax.jit(jax.value_and_grad(
+            lambda p: mod.loss_fn(p, batch, KEY, pol, cfg)))(params)
+        assert bool(jnp.isfinite(loss))
+        for g in jax.tree_util.tree_leaves(grads):
+            assert bool(jnp.all(jnp.isfinite(g)))
+
+    def test_transformer_decode_block_plans_fused(self):
+        cfg = get_smoke_config("minicpm_2b")
+        mod = get_model(cfg)
+        params = mod.init_params(jax.random.key(0), cfg)
+        pol = dataclasses.replace(PAPER_INT8, qcache=True,
+                                  kernel_mode="fused")
+        cache = mod.init_cache(cfg, 1, 16, policy=pol)
+        tok = jnp.zeros((1,), jnp.int32)
+        with dispatch.record_decisions() as log:
+            jax.eval_shape(
+                lambda p, c: mod.decode_step(p, c, tok, jnp.int32(4), KEY,
+                                             pol, cfg), params, cache)
+        assert any(d.op == "qdecode_block" and d.path == dispatch.FUSED
+                   for d in log)
+
+    def test_encdec_seams_plan_fused(self):
+        cfg = get_smoke_config("seamless_m4t_medium")
+        mod = get_model(cfg)
+        params = mod.init_params(jax.random.key(0), cfg)
+        batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+                 "labels": jnp.zeros((1, 8), jnp.int32),
+                 "src_embeds": jnp.zeros((1, 6, cfg.d_model))}
+        # qflow off for the same reason as the transformer test: the FFN
+        # epilogue only takes fresh f32 operands (kind "qq").
+        pol = dataclasses.replace(PAPER_INT8, fused_proj=True,
+                                  kernel_mode="fused")
+        with dispatch.record_decisions() as log:
+            jax.eval_shape(lambda p: mod.loss_fn(p, batch, KEY, pol, cfg),
+                           params)
+        fused_ops = {d.op for d in log if d.path == dispatch.FUSED}
+        assert "qnorm_gemm" in fused_ops
+        assert "qmatmul_epi" in fused_ops
+
+
+# ---------------------------------------------------------------------------
+# spec pin: kernel_mode at its default == PR-6 HEAD goldens, bit-for-bit
+# ---------------------------------------------------------------------------
+
+class TestSpecPin:
+    POLICIES = (("int8", PAPER_INT8),
+                ("qfull", NumericPolicy(qflow=True, qweights=True)))
+
+    def _batch_for(self, arch, cfg, key):
+        b, s = 1, 8
+        toks = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0,
+                                  cfg.vocab)
+        labels = jax.random.randint(jax.random.fold_in(key, 2), (b, s), 0,
+                                    cfg.vocab)
+        batch = {"tokens": toks, "labels": labels}
+        if arch == "seamless_m4t_medium":
+            batch["src_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, 3), (b, 6, cfg.d_model)) * 0.1
+        return batch
+
+    @pytest.mark.parametrize("arch", ["seamless_m4t_medium",
+                                      "llama4_scout_17b_16e"])
+    def test_loss_and_grads_bit_identical_to_pr6(self, arch):
+        golden = np.load(GOLDEN)
+        cfg = get_smoke_config(arch)
+        mod = get_model(cfg)
+        key = jax.random.key(0)
+        params = mod.init_params(key, cfg)
+        batch = self._batch_for(arch, cfg, key)
+        for tag, policy in self.POLICIES:
+            loss, grads = jax.jit(jax.value_and_grad(
+                lambda p: mod.loss_fn(p, batch, jax.random.fold_in(key, 7),
+                                      policy, cfg)))(params)
+            np.testing.assert_array_equal(
+                np.asarray(loss, np.float64),
+                golden[f"{arch}_{tag}_loss"])
+            fp = np.asarray(jax.device_get(
+                [jnp.sum(jnp.abs(g))
+                 for g in jax.tree_util.tree_leaves(grads)]))
+            np.testing.assert_array_equal(fp, golden[f"{arch}_{tag}_gradfp"])

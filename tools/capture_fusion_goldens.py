@@ -1,0 +1,82 @@
+"""Capture pre-fusion-HEAD goldens for the cross-op-fusion spec pin.
+
+Run from the repo root at the commit whose behaviour is the contract
+(the PR-6 HEAD, before the fused-chain kernels landed):
+
+    PYTHONPATH=src python tools/capture_fusion_goldens.py
+
+Writes ``tests/goldens/fusion_seams_pr6.npz`` holding, for the encoder-
+decoder (seamless) and MoE (llama4-scout) smoke configs — the two model
+families whose norm->projection seams the fused-chain PR rewires and that
+the PR-5 goldens do *not* cover — the jitted loss value and a gradient
+fingerprint (sum of |g| per leaf) under the plain int8 policy and under
+qflow+qweights.  ``tests/test_fused_chain.py::TestSpecPin`` asserts the
+same computation with ``kernel_mode`` at its default reproduces every
+number bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import PAPER_INT8
+from repro.core.policy import NumericPolicy
+from repro.models import get_model
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "goldens",
+                   "fusion_seams_pr6.npz")
+
+POLICIES = (("int8", PAPER_INT8),
+            ("qfull", NumericPolicy(qflow=True, qweights=True)))
+
+
+def _batch_for(arch, cfg, key):
+    b, s = 1, 8
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab)
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": labels}
+    if arch == "seamless_m4t_medium":
+        batch["src_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 3), (b, 6, cfg.d_model)) * 0.1
+    return batch
+
+
+def capture(arch):
+    cfg = get_smoke_config(arch)
+    mod = get_model(cfg)
+    key = jax.random.key(0)
+    params = mod.init_params(key, cfg)
+    batch = _batch_for(arch, cfg, key)
+    out = {}
+    for tag, policy in POLICIES:
+
+        @jax.jit
+        def run(params, batch):
+            return jax.value_and_grad(
+                lambda p: mod.loss_fn(p, batch, jax.random.fold_in(key, 7),
+                                      policy, cfg))(params)
+
+        loss, grads = run(params, batch)
+        out[f"{arch}_{tag}_loss"] = np.asarray(loss, np.float64)
+        fp = [jnp.sum(jnp.abs(g))
+              for g in jax.tree_util.tree_leaves(grads)]
+        out[f"{arch}_{tag}_gradfp"] = np.asarray(jax.device_get(fp))
+    return out
+
+
+def main():
+    payload = {}
+    for arch in ("seamless_m4t_medium", "llama4_scout_17b_16e"):
+        payload.update(capture(arch))
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    np.savez_compressed(OUT, **payload)
+    print(f"wrote {os.path.normpath(OUT)} ({len(payload)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

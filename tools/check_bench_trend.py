@@ -15,7 +15,11 @@ fails when the fused-path story regresses:
     ``modeled_only`` (``us: null``) — once measured, always measured;
   * within the fresh file, every fused attention row must move strictly
     fewer bytes than its scan-path twin (the ISSUE-5 acceptance gate),
-    and every fused GEMM row strictly fewer than its unfused/jnp twin.
+    and every fused GEMM row strictly fewer than its unfused/jnp twin;
+  * every fused cross-op chain row (``norm_gemm``, ``gemm_epilogue``,
+    ``decode_block``) must additionally be no slower than its unfused
+    composition twin, beyond a 2-sigma noise floor built from the rows'
+    ``us_std`` (the cross-op fusion wall-clock gate).
 
 Usage (CI runs the first form after snapshotting the committed file)::
 
@@ -37,7 +41,20 @@ FRESH_DEFAULT = os.path.join(ROOT, "BENCH_kernels.json")
 
 # per (op) the non-fused twin path a fused row must strictly beat
 _TWIN = {"attn_prefill": "scan", "attn_decode": "scan",
-         "qmatmul": "unfused", "qmatmul_qin": "jnp", "qmatmul_pp": "jnp"}
+         "qmatmul": "unfused", "qmatmul_qin": "jnp", "qmatmul_pp": "jnp",
+         "norm_gemm": "unfused", "gemm_epilogue": "unfused",
+         "decode_block": "unfused"}
+
+# cross-op chains additionally gate WALL TIME: the fused chain must not be
+# slower than its unfused composition twin (which times the full multi-op
+# sequence the chain replaces), beyond a noise floor derived from the
+# recorded per-row ``us_std`` (benchmarks/common.time_op_stats).
+_TIME_GATED = {"norm_gemm", "gemm_epilogue", "decode_block"}
+
+
+def _noise_floor(*rows):
+    """2-sigma combined noise floor in µs (0 when no std was recorded)."""
+    return 2.0 * sum(float(r.get("us_std") or 0.0) for r in rows)
 
 
 def _load_baseline(path):
@@ -84,6 +101,14 @@ def check(baseline, fresh, max_regression_pct):
             errors.append(
                 f"fused not below {_TWIN[op]}: {op} {shape} "
                 f"{f['bytes_moved']} >= {twin['bytes_moved']}")
+        if (op in _TIME_GATED and twin is not None
+                and f.get("us") is not None and twin.get("us") is not None):
+            floor = _noise_floor(f, twin)
+            if f["us"] > twin["us"] + floor:
+                errors.append(
+                    f"fused chain slower than composition: {op} {shape} "
+                    f"{f['us']:.1f}us > {twin['us']:.1f}us "
+                    f"+ noise {floor:.1f}us")
     return errors
 
 
