@@ -328,6 +328,8 @@ def _chain_records():
 ATTN_SHAPES = [(64, 256, 64), (128, 512, 64)]
 ATTN_CHUNK = 128
 DECODE_ATTN_SHAPE = (4, 256, 64)     # (g, T, hd): one decode step, GQA 4
+DECODE_BATCHES = (1, 8)              # lanes per decode step: single-stream
+                                     # and the serving engine's batched path
 
 
 def _attention_records():
@@ -359,24 +361,28 @@ def _attention_records():
                     dispatch.FUSED if path == "fused" else "scan",
                     gs, t, d, chunk=ATTN_CHUNK)))
     g, t, d = DECODE_ATTN_SHAPE
-    rng = np.random.RandomState(7)
-    # one decode step: g grouped query heads (Hq=g, S=1) over one KV head
-    q1 = jnp.asarray(rng.randn(1, g, 1, d).astype(np.float32))
-    kc = jnp.asarray(rng.randn(1, 1, t, d).astype(np.float32))
-    vc = jnp.asarray(rng.randn(1, 1, t, d).astype(np.float32))
     qc = _dc.replace(PAPER_INT8, qcache=True)
-    kq, vq = qcache_quantize(kc, qc), qcache_quantize(vc, qc)
-    shape = f"{g}x{t}x{d}"
-    for path, pol in (("scan", qc),
-                      ("fused", _dc.replace(qc, kernel_mode="fused"))):
-        fn = jax.jit(lambda q, pos, key, pol=pol: cache_decode_attention(
-            q, kq, vq, pos, key, pol))
-        us = time_op(fn, q1, jnp.int32(t - 1), KEY, warmup=1, iters=3)
-        records.append(dict(
-            op="attn_decode", path=path, shape=shape, us=us,
-            bytes_moved=dispatch.attention_bytes_moved(
-                dispatch.FUSED if path == "fused" else "scan",
-                g, t, d, op="attn_decode")))
+    for b in DECODE_BATCHES:
+        rng = np.random.RandomState(7)
+        # one decode step: b lanes of g grouped query heads (Hq=g, S=1)
+        # over one KV head each.  b=1 is the single-stream serve.py path;
+        # b>1 is the serving engine's batched-decode hot path
+        # (launch/engine.py) — same kernels, lane-stacked operands.
+        q1 = jnp.asarray(rng.randn(b, g, 1, d).astype(np.float32))
+        kc = jnp.asarray(rng.randn(b, 1, t, d).astype(np.float32))
+        vc = jnp.asarray(rng.randn(b, 1, t, d).astype(np.float32))
+        kq, vq = qcache_quantize(kc, qc), qcache_quantize(vc, qc)
+        shape = f"{g}x{t}x{d}" if b == 1 else f"b{b}x{g}x{t}x{d}"
+        for path, pol in (("scan", qc),
+                          ("fused", _dc.replace(qc, kernel_mode="fused"))):
+            fn = jax.jit(lambda q, pos, key, pol=pol, kq=kq, vq=vq:
+                         cache_decode_attention(q, kq, vq, pos, key, pol))
+            us = time_op(fn, q1, jnp.int32(t - 1), KEY, warmup=1, iters=3)
+            records.append(dict(
+                op="attn_decode", path=path, shape=shape, us=us,
+                bytes_moved=b * dispatch.attention_bytes_moved(
+                    dispatch.FUSED if path == "fused" else "scan",
+                    g, t, d, op="attn_decode")))
     return records
 
 

@@ -1,0 +1,129 @@
+"""Seeded synthetic-load serving benchmark: N concurrent streams through
+the continuous-batching engine (docs/SERVING.md §Engine).
+
+Everything runs on a SIMULATED clock — scheduler steps, no wall-clock
+threads — so every number here is deterministic given the seed and gets
+gated in CI like the kernel bench (tools/check_bench_trend.py --serving):
+
+- ``tokens_per_step``: tokens emitted per engine iteration, the
+  throughput iteration-level batching buys (weights are read once per
+  iteration however many lanes decode).
+- ``ttft_p50_steps`` / ``ttft_p99_steps``: scheduler steps from a
+  stream's arrival to its first token (prefill completion).
+- pool occupancy + accounting: pages allocated must equal pages freed
+  plus live.
+
+Each family runs the SAME request set twice: ``batched`` (max_batch = N)
+and ``serial`` (max_batch = 1, the engine degenerating to today's
+serve.py loop, golden-pinned by test_engine.py).  Tokens must match
+bitwise between the two modes — batching moves throughput, never results
+— and batched must clear >= 2x serial tokens/step (the acceptance gate).
+
+    PYTHONPATH=src python -m benchmarks.serving_bench \
+        --arch qwen2_0_5b --arch rwkv6_3b --streams 8
+
+Covers one QC_ROWS family (qwen2: paged KV blocks) and one QC_STATE
+family (rwkv6: single-slot state pages) by default, so both pool
+residency shapes are on the trend record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.policy import PAPER_INT8
+from repro.launch.engine import Engine, EngineConfig, Request
+
+
+def _requests(cfg, n_streams: int, prompt_len: int, gen: int, seed: int):
+    """Deterministic synthetic load: seeded inter-arrival gaps of 0-2
+    steps, per-stream prompts and key-chain seeds."""
+    rs = np.random.RandomState(seed)
+    arrivals = rs.randint(0, 3, size=n_streams).cumsum()
+    reqs = []
+    for i in range(n_streams):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(jax.random.key(1000 + seed + i), 1),
+            (prompt_len,), 0, cfg.vocab), np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, gen=gen,
+                            arrival_step=int(arrivals[i]), seed=seed + i))
+    return reqs
+
+
+def bench_family(arch: str, *, n_streams: int, prompt_len: int, gen: int,
+                 page_size: int, seed: int) -> list:
+    cfg = get_smoke_config(arch)
+    policy = dataclasses.replace(PAPER_INT8, qweights=True, qcache=True)
+    max_len = prompt_len + gen
+    reqs = _requests(cfg, n_streams, prompt_len, gen, seed)
+    rows = []
+    results = {}
+    prev = None
+    for mode, max_batch in (("batched", n_streams), ("serial", 1)):
+        eng = Engine(cfg, policy, EngineConfig(
+            max_len=max_len, page_size=page_size,
+            # full residency for every stream: this bench measures the
+            # batching win, not eviction churn (tests cover preemption).
+            n_pages=n_streams * (max_len // page_size + 1),
+            max_batch=max_batch, seed=seed), src_len=prompt_len,
+            params=prev.params if prev else None, share_fns=prev)
+        prev = eng
+        results[mode] = eng.run(list(reqs))
+        stats = eng.stats()
+        acct = eng.pool.accounting()
+        assert acct["balanced"], f"pool accounting leaked: {acct}"
+        rows.append({
+            "family": cfg.family, "arch": arch, "mode": mode,
+            "n_streams": n_streams, "prompt_len": prompt_len, "gen": gen,
+            "page_size": page_size, "n_pages": eng.pool.n_pages,
+            "max_batch": max_batch, "seed": seed, **stats})
+        print(f"{arch} [{cfg.family}] {mode:>7}: {stats['tokens']} tokens / "
+              f"{stats['steps']} steps = {stats['tokens_per_step']:.2f} "
+              f"tokens/step, TTFT p50 {stats['ttft_p50_steps']:.0f} p99 "
+              f"{stats['ttft_p99_steps']:.0f}, peak occupancy "
+              f"{stats['pool']['peak_occupancy']:.2f}")
+    for rid in results["batched"]:
+        np.testing.assert_array_equal(
+            results["batched"][rid], results["serial"][rid],
+            err_msg=f"{arch} stream {rid}: batched decode changed tokens")
+    speedup = rows[0]["tokens_per_step"] / rows[1]["tokens_per_step"]
+    rows[0]["speedup_vs_serial"] = round(speedup, 3)
+    print(f"{arch}: batched/serial tokens-per-step = {speedup:.2f}x")
+    assert speedup >= 2.0 or n_streams < 2, (
+        f"{arch}: batched decode only {speedup:.2f}x serial tokens/step "
+        f"at {n_streams} streams — the engine's batching win regressed")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="repeatable; default qwen2_0_5b + rwkv6_3b (one "
+                         "QC_ROWS family, one QC_STATE family)")
+    ap.add_argument("--streams", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+    archs = args.arch or ["qwen2_0_5b", "rwkv6_3b"]
+    rows = []
+    for arch in archs:
+        rows += bench_family(arch, n_streams=args.streams,
+                             prompt_len=args.prompt_len, gen=args.gen,
+                             page_size=args.page_size, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1, sort_keys=True)
+    print(f"wrote {len(rows)} records -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -86,6 +86,7 @@ __all__ = [
     "plan_attention", "record_decisions", "contract_qq", "contract_qi",
     "contract_iq", "contract_ii", "contract_pp", "bytes_moved",
     "attention_bytes_moved", "attn_block_t", "cache_operand_bytes",
+    "paged_gather_bytes", "plan_batched_decode",
     "fallback_counts", "reset_fallback_counts",
     "DEFAULT_VMEM_BUDGET",
     "plan_norm_gemm", "run_norm_gemm", "plan_epilogue", "contract_epi",
@@ -375,6 +376,46 @@ def cache_operand_bytes(n_rows: int, row: int, *, quantized: bool,
     if rewritten:
         return 2 * f32 * n                       # f32 read + f32 write
     return (f32 + f32 + r8 + 1) * n              # scan + quantize + residual
+
+
+def paged_gather_bytes(n_blocks: int, page_rows: int, row: int, *,
+                       bits: int = 8, rewritten: bool = False) -> int:
+    """Analytic HBM bytes ONE paged cache operand costs a batched decode
+    lane: the engine (launch/engine.py) walks the sequence's page table —
+    one int32 page-id read per block — and streams each page's
+    ``page_rows`` quantized rows into the contiguous layout the decode
+    kernels consume.  The row payload is exactly
+    :func:`cache_operand_bytes` of the gathered operand (paging relocates
+    integer rows, it never requantizes), so the pool's whole overhead over
+    a private contiguous cache is the page-table walk."""
+    payload = cache_operand_bytes(n_blocks * page_rows, row, quantized=True,
+                                  bits=bits, rewritten=rewritten)
+    return payload + 4 * n_blocks
+
+
+def plan_batched_decode(n_lanes: int, layout: dict, shapes: dict,
+                        bits_for, *, page_rows: int = 16) -> dict:
+    """Traffic plan for one engine decode iteration over ``n_lanes``
+    gathered lanes (the continuous-batching hot path, docs/SERVING.md
+    §Engine).  ``layout``/``shapes`` come from ``get_cache_layout`` and
+    the batch-1 ``cache_template``; ``bits_for(kind, row)`` is
+    ``policy.cache_cfg_for(...).bits``.  Weight mantissas are read once
+    per iteration regardless of lane count — that amortization is the
+    whole reason iteration-level batching moves tokens/s-per-step — so
+    the per-lane cost is the paged cache traffic alone."""
+    per_lane = 0
+    for name, kind in layout.items():
+        shape = shapes[name]
+        rows = 1
+        for dim in shape[:-1]:
+            rows *= dim
+        n_blocks = max(1, -(-rows // page_rows))
+        per_lane += paged_gather_bytes(n_blocks, page_rows, shape[-1],
+                                       bits=bits_for(kind, shape[-1]),
+                                       rewritten=kind == "state")
+    return {"n_lanes": n_lanes, "page_rows": page_rows,
+            "cache_bytes_per_lane": per_lane,
+            "cache_bytes_total": n_lanes * per_lane}
 
 
 # ---------------------------------------------------------------------------

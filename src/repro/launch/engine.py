@@ -1,0 +1,355 @@
+"""Continuous-batching integer serving engine over the block-paged qcache
+pool (docs/SERVING.md §Engine).
+
+``serve.py`` runs one request set, lock-step: one prefill, then a decode
+loop, one private contiguous cache.  This engine runs the real serving
+shape instead — N streams arriving over time, admitted against a shared
+page pool (``runtime.qpool``), prefill interleaved with iteration-level
+batched decode, preemption-by-eviction when the pool runs dry — while
+keeping the paper's discipline: batching moves THROUGHPUT, never results.
+
+Determinism contract (everything is pinned by tests):
+
+- per-request randomness replicates ``serve.py`` exactly: request key
+  ``jax.random.key(seed)``, prefill key ``fold_in(key, 3)``, decode step
+  ``i`` key ``fold_in(key, 10 + i)``, first token = argmax of the prefill
+  logits.  An evicted sequence resumes at its saved step index, so
+  preemption is invisible in the emitted tokens.
+- with ``max_batch == 1`` the engine runs the very same jitted batch-1
+  program ``serve.py`` runs — the single-stream golden pin.
+- with ``max_batch > 1`` decode lanes run under ``jax.vmap`` of that
+  program.  Each lane traces at batch-1 shapes, so per-tensor quantizer
+  reductions, stochastic-rounding bits and cache appends are per-lane
+  bit-identical to running the stream alone (``test_engine.py`` pins
+  vmap-lane == plain).  Part-empty batches are padded with a zero-cache
+  lane and the padding discarded — one compiled program for the whole run.
+- the clock is SIMULATED scheduler steps, not wall time: TTFT and
+  tokens/s-per-step are deterministic and CI-stable
+  (``benchmarks/serving_bench.py``).
+
+Scheduler, one ``step()``:
+
+1. arrivals whose ``arrival_step`` has come join the wait queue.
+2. admission: at most one sequence per step (preempted sequences first,
+   then arrivals FIFO), only if its pages fit above the free-page
+   watermark.  A fresh admission prefills this step (its TTFT); a
+   preempted one relocates its checkpoint into fresh pages.
+3. capacity: every running sequence reserves the page its next row lands
+   in; on ``PoolExhausted`` the lowest-priority running sequence (latest
+   arrival, highest rid) is evicted and re-queued until the allocation
+   fits.
+4. decode: one batched step over all running lanes — gather each lane's
+   contiguous cache through its page table, run, scatter back the one
+   dirty block plus the state page.  Finished sequences hand their pages
+   straight back to the free list.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime.qpool import PoolExhausted, QPool
+from .steps import make_decode_step, make_prefill_step, quantize_serving_params
+
+__all__ = ["Engine", "EngineConfig", "Request"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Pool geometry + scheduler bounds.  ``max_len`` bounds every
+    admitted sequence's prompt+gen; ``page_size`` must divide it
+    (stochastic-rounding bits are position-dependent, so gathered caches
+    must reproduce the contiguous max_len layout exactly)."""
+
+    max_len: int
+    page_size: int = 16
+    n_pages: int = 64
+    max_batch: int = 8
+    watermark: int = 0        # free pages an admission must leave behind
+    seed: int = 0             # model-load seed (matches serve.py)
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One stream: ``prompt`` is a (prompt_len,) int32 row; ``seed`` keys
+    this stream's randomness exactly as ``serve(seed=...)`` would."""
+
+    rid: int
+    prompt: np.ndarray
+    gen: int
+    arrival_step: int = 0
+    seed: int = 0
+    # extra prefill inputs for the multimodal families (audio src_embeds,
+    # vlm patch_embeds): unbatched arrays, keyed as the prefill batch dict
+    # expects; the engine adds the batch-1 axis.
+    extras: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class _Running:
+    req: Request
+    n_decoded: int = 0                    # decode steps taken (serve's i)
+    tokens: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def pos(self) -> int:
+        """Cache position the NEXT decode step writes (serve.py's
+        ``prompt_len + i``)."""
+        return len(self.req.prompt) + self.n_decoded
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.req.gen
+
+
+def _priority(run: _Running):
+    """Eviction order: latest arrival (then highest rid) goes first —
+    the streams that have waited longest keep their pages."""
+    return (run.req.arrival_step, run.req.rid)
+
+
+class Engine:
+    """One engine serves one (cfg, policy, EngineConfig) shape; submit
+    any number of requests and ``run()`` them to completion."""
+
+    def __init__(self, cfg, policy, ecfg: EngineConfig, params=None,
+                 src_len: Optional[int] = None,
+                 share_fns: Optional["Engine"] = None):
+        self.cfg = cfg
+        self.policy = policy
+        self.ecfg = ecfg
+        self.pool = QPool(cfg, policy, page_size=ecfg.page_size,
+                          n_pages=ecfg.n_pages, max_len=ecfg.max_len,
+                          src_len=src_len)
+        if params is None:
+            # model load, exactly as serve.py: init from the seed key,
+            # weights quantized once (the deployment contract) when the
+            # policy serves the persistent weight currency.
+            key = jax.random.key(ecfg.seed)
+            from ..models import get_model
+            params = get_model(cfg).init_params(key, cfg)
+            if policy.qweights_on:
+                params = quantize_serving_params(
+                    params, cfg, policy, jax.random.fold_in(key, 0x9E))
+        self.params = params
+        if share_fns is not None:
+            # reuse another engine's jitted programs (same cfg/policy/
+            # max_len required) — scheduler state is NOT shared, only the
+            # compile cache, e.g. the bench's batched/serial twin runs.
+            assert (share_fns.cfg, share_fns.policy,
+                    share_fns.ecfg.max_len) == (cfg, policy, ecfg.max_len)
+            self._prefill = share_fns._prefill
+            self._decode1 = share_fns._decode1
+            self._decodeN = share_fns._decodeN
+        else:
+            self._prefill = jax.jit(
+                make_prefill_step(cfg, policy, ecfg.max_len))
+            # the batch-1 program serve.py runs — the golden-pinned path.
+            self._decode1 = jax.jit(make_decode_step(cfg, policy))
+            # its vmap: params broadcast, (cache, token, pos, raw key)
+            # per lane.  jax.jit is lazy, so a max_batch==1 engine never
+            # compiles this.
+            self._decodeN = jax.jit(jax.vmap(make_decode_step(cfg, policy),
+                                             in_axes=(None, 0, 0, 0, 0)))
+        self.clock = 0
+        self._pending: List[Request] = []
+        self._waiting: List[Request] = []
+        self._preempted: List[tuple] = []     # (_Running, pool checkpoint)
+        self._running: Dict[int, _Running] = {}
+        self.results: Dict[int, np.ndarray] = {}
+        self.ttft_steps: Dict[int, int] = {}
+        self.tokens_per_step: List[int] = []
+        self.occupancy_trace: List[float] = []
+        self.n_preemptions = 0
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, requests) -> None:
+        for r in requests:
+            if len(r.prompt) + r.gen > self.ecfg.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.prompt)} + gen {r.gen} "
+                    f"exceeds engine max_len {self.ecfg.max_len}")
+            self._pending.append(r)
+        self._pending.sort(key=lambda r: (r.arrival_step, r.rid))
+
+    # -- request-local randomness (serve.py-identical) ----------------------
+
+    def _prefill_key(self, req: Request):
+        return jax.random.fold_in(jax.random.key(req.seed), 3)
+
+    def _decode_key(self, req: Request, i: int):
+        return jax.random.fold_in(jax.random.key(req.seed), 10 + i)
+
+    # -- scheduler ---------------------------------------------------------
+
+    def _admit_one(self) -> None:
+        """At most one admission per step, preempted sequences first."""
+        if len(self._running) >= self.ecfg.max_batch:
+            return
+        if self._preempted:
+            run, ckpt = self._preempted[0]
+            need = self.pool.pages_needed(ckpt["length"])
+            if self.pool.free_pages - need < self.ecfg.watermark:
+                return
+            self._preempted.pop(0)
+            self.pool.readmit(run.req.rid, ckpt)
+            self._running[run.req.rid] = run
+            return
+        if not self._waiting:
+            return
+        req = self._waiting[0]
+        need = self.pool.pages_needed(len(req.prompt))
+        if self.pool.free_pages - need < self.ecfg.watermark:
+            return
+        self._waiting.pop(0)
+        self.pool.admit(req.rid)
+        self.pool.ensure_capacity(req.rid, len(req.prompt))
+        run = _Running(req)
+        self._running[req.rid] = run
+        self._do_prefill(run)
+
+    def _do_prefill(self, run: _Running) -> None:
+        req = run.req
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        for name, arr in (req.extras or {}).items():
+            batch[name] = jnp.asarray(arr)[None]
+        cache, logits = self._prefill(self.params, batch,
+                                      self._prefill_key(req))
+        tok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        run.tokens.append(tok)
+        self.ttft_steps[req.rid] = self.clock - req.arrival_step
+        host = jax.tree_util.tree_map(np.asarray, cache)
+        self.pool.write(req.rid, host, upto=len(req.prompt))
+        self._retire_if_done(run)
+
+    def _reserve_or_preempt(self) -> List[_Running]:
+        """Reserve next-row pages for every running sequence; evict the
+        lowest-priority one (possibly the requester itself) whenever the
+        pool runs dry.  Returns this step's decode lanes."""
+        for run in sorted(self._running.values(), key=_priority):
+            if run.req.rid not in self._running:
+                continue                      # evicted by an earlier lane
+            while run.req.rid in self._running:
+                try:
+                    self.pool.ensure_capacity(run.req.rid, run.pos + 1)
+                    break
+                except PoolExhausted:
+                    victim = max(self._running.values(), key=_priority)
+                    self._evict(victim)
+        return sorted(self._running.values(), key=_priority)
+
+    def _evict(self, run: _Running) -> None:
+        ckpt = self.pool.evict(run.req.rid)
+        del self._running[run.req.rid]
+        self._preempted.append((run, ckpt))
+        self._preempted.sort(key=lambda rc: _priority(rc[0]))
+        self.n_preemptions += 1
+
+    def _retire_if_done(self, run: _Running) -> None:
+        if run.done:
+            self.pool.release(run.req.rid)
+            del self._running[run.req.rid]
+            self.results[run.req.rid] = np.concatenate(run.tokens)
+
+    def _decode_batch(self, lanes: List[_Running]) -> None:
+        caches = [self.pool.gather(r.req.rid) for r in lanes]
+        toks = [np.asarray(r.tokens[-1], np.int32) for r in lanes]
+        if self.ecfg.max_batch == 1:
+            # the exact batch-1 program serve.py runs (golden pin).
+            run = lanes[0]
+            logits, cache = self._decode1(
+                self.params, caches[0], jnp.asarray(toks[0]),
+                jnp.int32(run.pos), self._decode_key(run.req, run.n_decoded))
+            out_toks = [np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))]
+            out_caches = [jax.tree_util.tree_map(np.asarray, cache)]
+        else:
+            pad = self.ecfg.max_batch - len(lanes)
+            caches += [self.pool.empty_cache()] * pad
+            vcache = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *caches)
+            vtok = np.stack(toks + [np.zeros(1, np.int32)] * pad)
+            vpos = np.asarray([r.pos for r in lanes] + [0] * pad, np.int32)
+            vkey = np.stack(
+                [np.asarray(jax.random.key_data(
+                    self._decode_key(r.req, r.n_decoded))) for r in lanes]
+                + [np.zeros_like(np.asarray(jax.random.key_data(
+                    jax.random.key(0))))] * pad)
+            vlogits, vcaches = self._decodeN(self.params, vcache, vtok,
+                                             vpos, vkey)
+            vout = np.asarray(jnp.argmax(vlogits, -1).astype(jnp.int32))
+            out_toks = [vout[j] for j in range(len(lanes))]
+            out_caches = [jax.tree_util.tree_map(
+                lambda a, j=j: np.asarray(a[j]), vcaches)
+                for j in range(len(lanes))]
+        for run, tok, host in zip(lanes, out_toks, out_caches):
+            block = run.pos // self.pool.page_size
+            self.pool.write(run.req.rid, host,
+                            block=block if self.pool.has_paged else None)
+            self.pool.set_length(run.req.rid, run.pos + 1)
+            run.n_decoded += 1
+            run.tokens.append(tok)
+            self._retire_if_done(run)
+
+    def step(self) -> int:
+        """One simulated scheduler step; returns tokens emitted."""
+        self.clock += 1
+        while self._pending and self._pending[0].arrival_step <= self.clock:
+            self._waiting.append(self._pending.pop(0))
+        emitted_before = sum(len(r) for r in self.results.values()) + sum(
+            len(r.tokens) for r in self._running.values()) + sum(
+            len(rc[0].tokens) for rc in self._preempted)
+        self._admit_one()
+        lanes = self._reserve_or_preempt()[:self.ecfg.max_batch]
+        if lanes:
+            self._decode_batch(lanes)
+        emitted = sum(len(r) for r in self.results.values()) + sum(
+            len(r.tokens) for r in self._running.values()) + sum(
+            len(rc[0].tokens) for rc in self._preempted) - emitted_before
+        self.tokens_per_step.append(emitted)
+        self.occupancy_trace.append(self.pool.occupancy()["occupancy"])
+        return emitted
+
+    def run(self, requests=None, max_steps: int = 100000):
+        """Drive every submitted request to completion; returns
+        ``{rid: (gen,) int32 token array}``."""
+        if requests is not None:
+            self.submit(requests)
+        while (self._pending or self._waiting or self._preempted
+               or self._running):
+            if self.clock >= max_steps:
+                raise RuntimeError(
+                    f"engine wedged after {max_steps} steps: "
+                    f"{len(self.results)} done, {len(self._running)} "
+                    f"running, {len(self._preempted)} preempted, "
+                    f"pool {self.pool.occupancy()}")
+            self.step()
+        return dict(self.results)
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Simulated-step serving metrics + pool accounting, the record
+        ``benchmarks/serving_bench.py`` emits into BENCH_serving.json."""
+        ttfts = sorted(self.ttft_steps.values())
+        steps = len(self.tokens_per_step)
+        toks = int(sum(self.tokens_per_step))
+        pct = (lambda q: float(np.percentile(ttfts, q)) if ttfts else 0.0)
+        occ = self.occupancy_trace
+        return {
+            "steps": steps,
+            "tokens": toks,
+            "tokens_per_step": toks / steps if steps else 0.0,
+            "ttft_p50_steps": pct(50),
+            "ttft_p99_steps": pct(99),
+            "n_preemptions": self.n_preemptions,
+            "pool": {**self.pool.accounting(),
+                     "n_pages": self.pool.n_pages,
+                     "peak_live": self.pool.peak_live,
+                     "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
+                     "peak_occupancy": float(np.max(occ)) if occ else 0.0},
+        }

@@ -23,6 +23,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +33,7 @@ from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..core.health import bfp_tree_stats
 from ..core.policy import FLOAT32, PAPER_INT8
 from ..kernels import dispatch
-from ..models import get_cache_layout, get_model
+from ..models import get_cache_layout, get_cache_page_spec, get_model
 from .steps import (cache_template, make_decode_step, make_prefill_step,
                     quantize_serving_params)
 
@@ -90,7 +91,7 @@ def weight_traffic_report(cfg, batch: int, prompt_len: int) -> dict:
 
 
 def cache_traffic_report(cfg, policy, batch: int, prompt_len: int,
-                         max_len: int) -> dict:
+                         max_len: int, page_size: Optional[int] = None) -> dict:
     """Analytic per-decode-step HBM traffic of the CACHE operands
     (docs/SERVING.md): float caches (decode re-quantizes the whole K/V
     operand inside attention each step, and reads/writes f32 recurrent
@@ -99,7 +100,10 @@ def cache_traffic_report(cfg, policy, batch: int, prompt_len: int,
     band, and is modeled so.  ``gemm`` rows additionally give the
     whole-contraction comparison of the two decode attention GEMMs through
     the ``bytes_moved`` kinds they actually plan (``qq`` fresh vs ``qi``
-    pre-quantized cache operand)."""
+    pre-quantized cache operand).  With a ``page_size`` the report adds an
+    ``engine`` row: the same cache operands served per-lane through the
+    block-paged pool (``plan_batched_decode``) — the pool's only overhead
+    over a private contiguous cache is the page-table walk."""
     layout = get_cache_layout(cfg)
     tmpl = cache_template(cfg, batch, max_len, src_len=prompt_len)
     f_total = q_total = 0
@@ -135,6 +139,30 @@ def cache_traffic_report(cfg, policy, batch: int, prompt_len: int,
         whole["reduction_pct"] = round(
             100.0 * (1 - whole["qcache_bytes"] / whole["float_cache_bytes"]), 2)
         out["gemm"] = whole
+    if page_size:
+        tmpl1 = cache_template(cfg, 1, max_len, src_len=prompt_len,
+                               policy=policy)
+        shapes = {}
+        for name in layout:
+            leaf = tmpl1[name]
+            shapes[name] = tuple(leaf.m.shape if hasattr(leaf, "m")
+                                 else leaf.shape)
+        bits_for = lambda kind, row: policy.cache_cfg_for(kind, row).bits
+        plan = dispatch.plan_batched_decode(batch, layout, shapes, bits_for,
+                                            page_rows=page_size)
+        contiguous = 0
+        for name, kind in layout.items():
+            rows = 1
+            for dim in shapes[name][:-1]:
+                rows *= dim
+            contiguous += dispatch.cache_operand_bytes(
+                rows, shapes[name][-1], quantized=True,
+                bits=bits_for(kind, shapes[name][-1]),
+                rewritten=kind == "state")
+        plan["contiguous_bytes_per_lane"] = contiguous
+        plan["page_table_overhead_pct"] = round(
+            100.0 * (plan["cache_bytes_per_lane"] / max(contiguous, 1) - 1), 2)
+        out["engine"] = plan
     return out
 
 
@@ -231,10 +259,15 @@ def chain_traffic_report(cfg, policy, batch: int, prompt_len: int,
 
 def validate_request(arch: str, policy_name: str, *, batch: int = 1,
                      prompt_len: int = 1, gen: int = 1, qcache: bool = False,
-                     health: bool = False) -> None:
+                     health: bool = False, engine: bool = False,
+                     page_size: int = 16, n_pages: int = 64,
+                     smoke: bool = True) -> None:
     """Reject impossible serving requests up front with a message that
     names the fix, instead of a traceback from deep inside model import
-    or jit trace (docs/ROBUSTNESS.md §Serving)."""
+    or jit trace (docs/ROBUSTNESS.md §Serving).  With ``engine`` the pool
+    geometry is checked too: a zero-page pool, a non-positive page size,
+    or a page size that doesn't divide the cache length / attention window
+    can never serve a single request."""
     if arch not in ARCH_IDS:
         raise ServeConfigError(
             f"unknown arch {arch!r}; known archs: {', '.join(ARCH_IDS)}")
@@ -254,6 +287,94 @@ def validate_request(arch: str, policy_name: str, *, batch: int = 1,
             raise ServeConfigError(
                 "--health reports quantized-leaf saturation, which needs "
                 "an integer policy; drop --health or use --policy int8")
+    if engine:
+        if not (POLICIES[policy_name].enabled and qcache):
+            raise ServeConfigError(
+                "--engine serves through the block-paged qcache pool, "
+                "which needs quantized caches; add --qcache with "
+                "--policy int8")
+        if page_size < 1:
+            raise ServeConfigError(
+                f"--page-size must be >= 1 cache row, got {page_size}")
+        if n_pages < 1:
+            raise ServeConfigError(
+                f"a zero-page pool cannot admit anything: "
+                f"--n-pages {n_pages} must be >= 1")
+        max_len = prompt_len + gen
+        if max_len % page_size != 0:
+            raise ServeConfigError(
+                f"--page-size {page_size} must divide prompt_len + gen = "
+                f"{max_len}: gathered caches must reproduce the contiguous "
+                f"max_len layout exactly (stochastic rounding bits are "
+                f"position-dependent); pick a page size dividing {max_len}")
+        cfg = get_smoke_config(arch) if smoke else get_config(arch)
+        if cfg.local_window and cfg.local_window % page_size != 0:
+            raise ServeConfigError(
+                f"--page-size {page_size} must divide {arch}'s attention "
+                f"window {cfg.local_window} so a window never straddles a "
+                f"part-page")
+        spec = get_cache_page_spec(cfg)
+        need = (-(-prompt_len // page_size)
+                if any(s.seq_axis is not None for s in spec.values()) else 0)
+        need += 1 if any(s.seq_axis is None for s in spec.values()) else 0
+        if n_pages < need:
+            raise ServeConfigError(
+                f"--n-pages {n_pages} cannot hold even one "
+                f"{prompt_len}-token prompt at --page-size {page_size} "
+                f"({need} pages needed)")
+
+
+def serve_engine(arch: str, *, smoke: bool = True, batch: int = 4,
+                 prompt_len: int = 32, gen: int = 16,
+                 policy_name: str = "int8", seed: int = 0, page_size: int = 16,
+                 n_pages: int = 64, max_batch: int = 4, quiet: bool = False):
+    """Route a smoke request set — ``batch`` concurrent streams with the
+    same prompt randomness ``serve`` would draw — through the
+    continuous-batching engine (launch/engine.py) and report the
+    simulated-step serving metrics next to the analytic engine traffic
+    row.  Streams get staggered arrivals and per-stream key chains, so
+    this exercises admission, iteration-level batching and the pool."""
+    from .engine import Engine, EngineConfig, Request
+    validate_request(arch, policy_name, batch=batch, prompt_len=prompt_len,
+                     gen=gen, qcache=True, engine=True, page_size=page_size,
+                     n_pages=n_pages, smoke=smoke)
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    policy = dataclasses.replace(POLICIES[policy_name], qweights=True,
+                                 qcache=True)
+    key = jax.random.key(seed)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 1), (batch, prompt_len), 0, cfg.vocab),
+        np.int32)
+    max_len = prompt_len + gen
+    eng = Engine(cfg, policy, EngineConfig(
+        max_len=max_len, page_size=page_size, n_pages=n_pages,
+        max_batch=max_batch, seed=seed), src_len=prompt_len)
+    reqs = [Request(rid=i, prompt=prompts[i], gen=gen, arrival_step=i,
+                    seed=seed + i) for i in range(batch)]
+    results = eng.run(reqs)
+    stats = eng.stats()
+    stats["cache_traffic"] = cache_traffic_report(
+        cfg, policy, batch, prompt_len, max_len, page_size=page_size)
+    if not quiet:
+        print(f"arch={cfg.name} engine: {batch} streams, max_batch="
+              f"{max_batch}, pool {n_pages} pages x {page_size} rows")
+        print(f"{stats['tokens']} tokens in {stats['steps']} steps "
+              f"({stats['tokens_per_step']:.2f} tokens/step), TTFT p50 "
+              f"{stats['ttft_p50_steps']:.0f} / p99 "
+              f"{stats['ttft_p99_steps']:.0f} steps, "
+              f"{stats['n_preemptions']} preemptions")
+        pool = stats["pool"]
+        print(f"pool: peak {pool['peak_live']}/{pool['n_pages']} pages, "
+              f"allocs {pool['page_allocs']} = frees {pool['page_frees']} "
+              f"+ live {pool['live_pages']} (balanced={pool['balanced']})")
+        eng_row = stats["cache_traffic"]["engine"]
+        print(f"engine cache traffic/lane: contiguous "
+              f"{eng_row['contiguous_bytes_per_lane'] / 1e6:.3f} MB -> "
+              f"paged {eng_row['cache_bytes_per_lane'] / 1e6:.3f} MB "
+              f"(page-table overhead "
+              f"+{eng_row['page_table_overhead_pct']}%)")
+    toks = np.stack([results[i] for i in range(batch)])
+    return toks, stats
 
 
 def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
@@ -416,12 +537,31 @@ def main(argv=None):
                     help="print per-artifact saturation/exponent stats of "
                          "the quantized serving weights and qcache "
                          "(docs/ROBUSTNESS.md); needs --policy int8")
+    ap.add_argument("--engine", action="store_true", default=False,
+                    help="route the request set through the "
+                         "continuous-batching engine over the block-paged "
+                         "qcache pool (docs/SERVING.md §Engine): --batch "
+                         "becomes N concurrent streams with staggered "
+                         "arrivals; implies --qcache")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="cache rows per pool page (--engine); must divide "
+                         "prompt_len + gen and any attention window")
+    ap.add_argument("--n-pages", type=int, default=64,
+                    help="physical pages in the qcache pool (--engine)")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode lanes per engine iteration (--engine)")
     args = ap.parse_args(argv)
     try:
-        serve(args.arch, smoke=args.smoke, batch=args.batch,
-              prompt_len=args.prompt_len, gen=args.gen,
-              policy_name=args.policy, qweights=args.qweights,
-              qcache=args.qcache, health=args.health)
+        if args.engine:
+            serve_engine(args.arch, smoke=args.smoke, batch=args.batch,
+                         prompt_len=args.prompt_len, gen=args.gen,
+                         policy_name=args.policy, page_size=args.page_size,
+                         n_pages=args.n_pages, max_batch=args.max_batch)
+        else:
+            serve(args.arch, smoke=args.smoke, batch=args.batch,
+                  prompt_len=args.prompt_len, gen=args.gen,
+                  policy_name=args.policy, qweights=args.qweights,
+                  qcache=args.qcache, health=args.health)
     except ServeConfigError as err:
         ap.exit(2, f"error: {err}\n")
 

@@ -1,7 +1,9 @@
 """Architecture zoo: 10 assigned archs built from the integer core ops."""
 
-from .common import ArchConfig, softmax_xent
-from .registry import get_cache_layout, get_model, get_weight_mask
+from .common import ArchConfig, CachePageSpec, softmax_xent
+from .registry import (get_cache_layout, get_cache_page_spec, get_model,
+                       get_weight_mask)
 
-__all__ = ["ArchConfig", "get_cache_layout", "get_model", "get_weight_mask",
+__all__ = ["ArchConfig", "CachePageSpec", "get_cache_layout",
+           "get_cache_page_spec", "get_model", "get_weight_mask",
            "softmax_xent"]

@@ -19,8 +19,30 @@ import jax.numpy as jnp
 from ..core import BFP, NumericPolicy
 from ..runtime.sharding import logical_constraint
 
-__all__ = ["ArchConfig", "KVCache", "dense_init", "rope", "apply_rope",
-           "softmax_xent", "glu_act", "weight_t", "LAYER_AXIS"]
+__all__ = ["ArchConfig", "CachePageSpec", "KVCache", "dense_init", "rope",
+           "apply_rope", "softmax_xent", "glu_act", "weight_t", "LAYER_AXIS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePageSpec:
+    """How one decode-cache leaf maps onto the block-paged qcache pool
+    (runtime.qpool, docs/SERVING.md §Engine).
+
+    ``kind`` is the leaf's qcache currency (``QC_ROWS``/``QC_STATE``,
+    core.policy). ``batch_axis`` is the axis indexing sequences — the pool
+    stores batch-1 slices, the engine stacks lanes back along it.
+    ``seq_axis`` is the axis that grows with decoded positions: leaves with
+    one are split into fixed-size row-blocks (pages) along it; leaves
+    without one (``seq_axis=None`` — recurrent state, token-shift
+    registers, the conv window, encdec cross K/V written once at prefill)
+    live whole in a per-sequence single-slot state page.  The per-row
+    exponent array of a quantized leaf pages along the same axes — one
+    int32 per cache row is exactly what makes pages relocatable without
+    requantization."""
+
+    kind: str
+    batch_axis: int
+    seq_axis: Optional[int] = None
 
 
 def weight_t(w):

@@ -24,8 +24,8 @@ from ..core.qnorm import qlayernorm
 from ..runtime.sharding import logical_constraint
 from .attention import (cache_decode_attention, chunked_attention,
                         decode_attention)
-from .common import (ArchConfig, apply_rope, dense_init, rope, softmax_xent,
-                     weight_t)
+from .common import (ArchConfig, CachePageSpec, apply_rope, dense_init, rope,
+                     softmax_xent, weight_t)
 
 __all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
            "loss_fn", "prefill", "decode_step", "init_cache", "encode"]
@@ -350,6 +350,17 @@ def cache_layout(cfg: ArchConfig):
     and re-read by every decode step — the biggest single win of the int8
     cache currency for this family."""
     return {"k": QC_ROWS, "v": QC_ROWS, "xk": QC_ROWS, "xv": QC_ROWS}
+
+
+def cache_page_spec(cfg: ArchConfig):
+    """Pool-paging metadata (runtime.qpool): decoder self K/V page along
+    the time axis like any transformer; cross K/V are written once at
+    prefill to the fixed source length and never grow, so they ride in the
+    single-slot state page (still int8 rows — slot residency is about
+    growth, not currency)."""
+    kv = CachePageSpec(QC_ROWS, batch_axis=1, seq_axis=3)
+    x = CachePageSpec(QC_ROWS, batch_axis=1)
+    return {"k": kv, "v": kv, "xk": x, "xv": x}
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, src_len: int,

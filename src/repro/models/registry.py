@@ -10,7 +10,8 @@ from ..core import QW_NONE
 from . import encdec, rglru, rwkv6, transformer
 from .common import ArchConfig
 
-__all__ = ["get_model", "get_weight_mask", "get_cache_layout"]
+__all__ = ["get_model", "get_weight_mask", "get_cache_layout",
+           "get_cache_page_spec"]
 
 _FAMILY_TO_MODULE = {
     "dense": transformer,
@@ -54,3 +55,13 @@ def get_cache_layout(cfg: ArchConfig):
     and docs/SERVING.md.  Leaves absent from the dict stay float under
     ``policy.qcache`` (none currently)."""
     return get_model(cfg).cache_layout(cfg)
+
+
+def get_cache_page_spec(cfg: ArchConfig):
+    """Pool-paging metadata for this arch's decode cache: a dict mapping
+    each cache leaf name to a ``CachePageSpec`` (which axis indexes
+    sequences, which axis — if any — grows with decoded positions and
+    therefore pages into row-blocks).  Consumed by ``runtime.qpool`` and
+    the serving engine (docs/SERVING.md §Engine).  Keys always match
+    ``get_cache_layout``."""
+    return get_model(cfg).cache_page_spec(cfg)

@@ -22,8 +22,8 @@ from ..core import (BFP, QC_ROWS, QC_STATE, QW_NONE, QW_STACKED, QW_STACKED2,
 from ..core.qnorm import qrmsnorm
 from ..runtime.sharding import logical_constraint
 from .attention import decode_attention, local_attention
-from .common import (ArchConfig, apply_rope, dense_init, rope, softmax_xent,
-                     weight_t)
+from .common import (ArchConfig, CachePageSpec, apply_rope, dense_init, rope,
+                     softmax_xent, weight_t)
 
 __all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
            "loss_fn", "prefill", "decode_step", "init_cache"]
@@ -268,6 +268,25 @@ def cache_layout(cfg: ArchConfig):
         layout["conv_t"] = QC_ROWS
         layout["h_t"] = QC_STATE
     return layout
+
+
+def cache_page_spec(cfg: ArchConfig):
+    """Pool-paging metadata (runtime.qpool): only the attention K/V leaves
+    ``(np, B, Hkv, T, hd)`` grow with decoded positions and page along the
+    time axis.  The conv window (a fixed ``conv_width-1`` ring rewritten
+    each step), the RG-LRU hidden state and their tail twins are
+    per-sequence registers — single-slot state pages."""
+    _, _, tail = _layout(cfg)
+    spec = {
+        "k": CachePageSpec(QC_ROWS, batch_axis=1, seq_axis=3),
+        "v": CachePageSpec(QC_ROWS, batch_axis=1, seq_axis=3),
+        "conv": CachePageSpec(QC_ROWS, batch_axis=2),
+        "h": CachePageSpec(QC_STATE, batch_axis=2),
+    }
+    if tail:
+        spec["conv_t"] = CachePageSpec(QC_ROWS, batch_axis=1)
+        spec["h_t"] = CachePageSpec(QC_STATE, batch_axis=1)
+    return spec
 
 
 def _q_state(x, policy: NumericPolicy, kind: str) -> BFP:

@@ -21,7 +21,8 @@ from ..core import (BFP, QC_ROWS, QC_STATE, QW_NONE, QW_STACKED, QW_TENSOR,
                     qmatmul)
 from ..core.qnorm import qlayernorm
 from ..runtime.sharding import logical_constraint
-from .common import ArchConfig, dense_init, softmax_xent, weight_t
+from .common import (ArchConfig, CachePageSpec, dense_init, softmax_xent,
+                     weight_t)
 
 __all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
            "loss_fn", "prefill", "decode_step", "init_state", "HEAD_DIM"]
@@ -195,6 +196,16 @@ def cache_layout(cfg: ArchConfig):
     ``S`` is the accumulator, so it keeps master-width (int16) mantissas
     with one exponent per S-row."""
     return {"tm": QC_ROWS, "cm": QC_ROWS, "S": QC_STATE}
+
+
+def cache_page_spec(cfg: ArchConfig):
+    """Pool-paging metadata (runtime.qpool): nothing in this family grows
+    with decoded positions — the token-shift registers hold one row and the
+    WKV matrix state is fixed ``(H, 64, 64)`` — so every leaf lives in the
+    per-sequence single-slot state page (batch axis 1, no seq axis)."""
+    return {"tm": CachePageSpec(QC_ROWS, batch_axis=1),
+            "cm": CachePageSpec(QC_ROWS, batch_axis=1),
+            "S": CachePageSpec(QC_STATE, batch_axis=1)}
 
 
 def _q_state_tree(state, policy: NumericPolicy):

@@ -25,8 +25,8 @@ from ..core.qchain import qdecode_block, qmatmul_epi, qnorm_gemm
 from ..core.qnorm import qlayernorm, qrmsnorm
 from ..runtime.sharding import logical_constraint
 from .attention import chunked_attention, decode_attention, local_attention
-from .common import (ArchConfig, apply_rope, dense_init, rope, softmax_xent,
-                     weight_t)
+from .common import (ArchConfig, CachePageSpec, apply_rope, dense_init, rope,
+                     softmax_xent, weight_t)
 from .moe import moe_block, moe_param_specs, moe_params_init, moe_weight_mask
 
 __all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
@@ -380,6 +380,14 @@ def cache_layout(cfg: ArchConfig):
     quantized exactly once when written, int8 mantissas + one exponent per
     (layer, batch, head, position) row."""
     return {"k": QC_ROWS, "v": QC_ROWS}
+
+
+def cache_page_spec(cfg: ArchConfig):
+    """Pool-paging metadata (runtime.qpool): K/V leaves are
+    ``(L, B, Hkv, T, hd)`` — sequences index axis 1, positions grow along
+    axis 3, so both leaves page into row-blocks along the time axis."""
+    spec = CachePageSpec(QC_ROWS, batch_axis=1, seq_axis=3)
+    return {"k": spec, "v": spec}
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,

@@ -1,0 +1,335 @@
+"""Block-paged qcache pool: the serving engine's cache allocator.
+
+``launch/serve.py`` gives every sequence a private, contiguously allocated
+decode cache sized to ``max_len``.  A serving engine admitting and retiring
+streams continuously cannot: it needs one shared physical pool whose unit
+of allocation is much smaller than a whole sequence.  This module provides
+that pool, host-side, over the qcache currency of PR 4 (docs/SERVING.md).
+
+The per-row-exponent layout is what makes this cheap: a quantized cache
+leaf stores int8/int16 mantissas plus ONE int32 exponent per cache row, so
+a block of rows carries everything needed to dequantize it.  Pages
+therefore relocate between physical slots — and between eviction
+checkpoints and re-admission — as pure integer copies, never a
+requantization (``test_qpool.py`` pins ``==`` on mantissas AND exponents).
+
+Layout, per ``models.get_cache_page_spec``:
+
+- leaves with a ``seq_axis`` (transformer/encdec/rglru K/V) are split into
+  fixed-size row-blocks of ``page_size`` positions; a per-sequence page
+  table maps block index -> physical page.
+- leaves without one (recurrent state, token-shift registers, the conv
+  ring, encdec cross K/V) live whole in a single-slot STATE page per
+  sequence, so the ``QC_STATE`` families serve through the same pool and
+  the same free list as the KV families.
+
+Pages are reset to the qcache zero (mantissa 0, exponent 1 — exactly what
+``qcache_prefill`` pads with) when allocated, so a gathered cache is
+bit-identical to the contiguous cache the single-stream path would hold.
+Freeing is copy-free: pages go back on the free list untouched.
+
+Everything here is plain numpy on the host — the pool is bookkeeping; the
+jitted prefill/decode steps only ever see ordinary contiguous batch-1
+cache trees produced by ``gather``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core import BFP
+from ..models import get_cache_page_spec
+
+__all__ = ["QPool", "PoolConfigError", "PoolExhausted", "SeqPages"]
+
+
+class PoolConfigError(ValueError):
+    """A pool geometry that can never serve (zero pages, page size not
+    dividing the cache length) — reject at construction, not mid-request."""
+
+
+class PoolExhausted(RuntimeError):
+    """No free page for an allocation.  The engine catches this and
+    preempts the lowest-priority running sequence (docs/SERVING.md)."""
+
+
+@dataclasses.dataclass
+class SeqPages:
+    """Per-sequence pool residency: the page table (block index ->
+    physical page id), the state page (or -1), and how many positions of
+    cache the sequence has actually written."""
+
+    rid: int
+    blocks: List[int]
+    state_page: int
+    length: int = 0
+
+
+def _leaf_parts(leaf) -> Dict[str, "np.ndarray"]:
+    """A cache leaf as a dict of plain arrays: BFP -> mantissas + per-row
+    exponents (the gradient carrier is a training artifact, never present
+    at serving); float leaf -> itself."""
+    if isinstance(leaf, BFP):
+        return {"m": leaf.m, "e": leaf.e}
+    return {"a": leaf}
+
+
+def _reset_fill(part: str):
+    """The qcache zero: exponent 1 dequantizes mantissa 0 to exact 0.0 —
+    the same (m=0, e=1) every init_cache/qcache_prefill pad row holds."""
+    return 1 if part == "e" else 0
+
+
+class QPool:
+    """Fixed-size page pool for one (cfg, policy, max_len) serving shape.
+
+    ``template`` is the batch-1 ``cache_template`` tree; its structure
+    (BFP vs float leaves, QuantConfigs) is kept to rebuild gathered
+    caches.  One free list covers row-block pages and state pages alike:
+    accounting must always balance ``allocs == frees + live``.
+    """
+
+    def __init__(self, cfg, policy, *, page_size: int, n_pages: int,
+                 max_len: int, src_len: Optional[int] = None):
+        if page_size <= 0:
+            raise PoolConfigError(
+                f"page_size must be >= 1 cache row, got {page_size}")
+        if n_pages <= 0:
+            raise PoolConfigError(
+                f"a zero-page pool cannot admit anything: n_pages={n_pages}")
+        if max_len % page_size != 0:
+            raise PoolConfigError(
+                f"page_size {page_size} must divide max_len {max_len}: the "
+                f"gathered cache must reproduce the contiguous max_len "
+                f"layout exactly (stochastic rounding bits are "
+                f"position-dependent)")
+        if getattr(cfg, "local_window", 0) and cfg.local_window % page_size:
+            raise PoolConfigError(
+                f"page_size {page_size} must divide the attention window "
+                f"{cfg.local_window} so a window never straddles a "
+                f"part-page")
+        from ..launch.steps import cache_template
+        self.cfg = cfg
+        self.policy = policy
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_len = max_len
+        self.blocks_per_seq = max_len // page_size
+        self._tmpl = cache_template(cfg, 1, max_len, src_len=src_len,
+                                    policy=policy)
+        self._spec = get_cache_page_spec(cfg)
+        if set(self._spec) != set(self._tmpl):
+            raise PoolConfigError(
+                f"cache_page_spec keys {sorted(self._spec)} != cache leaves "
+                f"{sorted(self._tmpl)} for family {cfg.family!r}")
+        # physical storage: paged leaves (n_pages, ..page_size rows..),
+        # slot leaves (n_pages, full leaf) — a state page is an ordinary
+        # page id whose storage lives in the slot arrays.
+        self._paged: Dict[str, Dict[str, np.ndarray]] = {}
+        self._slots: Dict[str, Dict[str, np.ndarray]] = {}
+        for name, spec in self._spec.items():
+            parts = _leaf_parts(self._tmpl[name])
+            store = {}
+            for pname, part in parts.items():
+                shape = list(part.shape)
+                if spec.seq_axis is not None:
+                    shape[spec.seq_axis] = page_size
+                arr = np.full((n_pages, *shape), _reset_fill(pname),
+                              dtype=np.dtype(part.dtype))
+                store[pname] = arr
+            (self._paged if spec.seq_axis is not None
+             else self._slots)[name] = store
+        self.has_state_page = bool(self._slots)
+        self.has_paged = bool(self._paged)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._seqs: Dict[int, SeqPages] = {}
+        self.page_allocs = 0
+        self.page_frees = 0
+        self.peak_live = 0
+
+    # -- free-list primitives ----------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def _alloc_page(self, reset_paged: bool) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"pool exhausted: {self.n_pages} pages all live")
+        pid = self._free.pop()
+        self.page_allocs += 1
+        store = self._paged if reset_paged else self._slots
+        for parts in store.values():
+            for pname, arr in parts.items():
+                arr[pid] = _reset_fill(pname)
+        self.peak_live = max(self.peak_live, self.live_pages)
+        return pid
+
+    def _free_page(self, pid: int) -> None:
+        # copy-free handoff: the data is left in place; the next alloc
+        # resets it.
+        self._free.append(pid)
+        self.page_frees += 1
+
+    # -- sequence lifecycle ------------------------------------------------
+
+    def pages_needed(self, n_positions: int) -> int:
+        """Pages an admission must be able to allocate: blocks covering the
+        prompt plus the state page, if this family has one."""
+        blocks = -(-n_positions // self.page_size) if self.has_paged else 0
+        return blocks + (1 if self.has_state_page else 0)
+
+    def admit(self, rid: int) -> SeqPages:
+        if rid in self._seqs:
+            raise ValueError(f"sequence {rid} already admitted")
+        state_page = self._alloc_page(False) if self.has_state_page else -1
+        seq = SeqPages(rid=rid, blocks=[], state_page=state_page)
+        self._seqs[rid] = seq
+        return seq
+
+    def ensure_capacity(self, rid: int, n_positions: int) -> None:
+        """Grow the page table until it covers ``n_positions`` cache rows.
+        Raises ``PoolExhausted`` (sequence left intact) when the free list
+        runs dry — the engine's preemption trigger."""
+        if n_positions > self.max_len:
+            raise PoolConfigError(
+                f"sequence {rid} wants {n_positions} positions > "
+                f"max_len {self.max_len}")
+        if not self.has_paged:
+            return
+        seq = self._seqs[rid]
+        while len(seq.blocks) * self.page_size < n_positions:
+            seq.blocks.append(self._alloc_page(True))
+
+    def release(self, rid: int) -> None:
+        """Completion handoff: every page straight back to the free list,
+        no data movement."""
+        seq = self._seqs.pop(rid)
+        for pid in seq.blocks:
+            self._free_page(pid)
+        if seq.state_page >= 0:
+            self._free_page(seq.state_page)
+
+    # -- data movement -----------------------------------------------------
+
+    def _seq_idx(self, name: str, block: int):
+        """(page-side, cache-side) index tuples selecting block ``block``'s
+        positions along the leaf's seq axis."""
+        spec = self._spec[name]
+        lo = block * self.page_size
+        src = [slice(None)] * len(self._tmpl[name].m.shape
+                                  if isinstance(self._tmpl[name], BFP)
+                                  else self._tmpl[name].shape)
+        src[spec.seq_axis] = slice(lo, lo + self.page_size)
+        return tuple(src)
+
+    def write(self, rid: int, cache, upto: Optional[int] = None,
+              block: Optional[int] = None) -> None:
+        """Scatter a contiguous batch-1 cache tree into the sequence's
+        pages.  ``upto`` writes every block covering positions [0, upto)
+        (prefill, checkpoint restore); ``block`` writes that single block
+        (the decode hot path — only the appended row's block changed).
+        State-slot leaves are always written whole."""
+        seq = self._seqs[rid]
+        if self.has_paged:
+            if block is not None:
+                blocks = [block]
+            else:
+                blocks = range(-(-(upto or 0) // self.page_size))
+            for name, store in self._paged.items():
+                parts = _leaf_parts(cache[name])
+                for b in blocks:
+                    idx = self._seq_idx(name, b)
+                    for pname, arr in store.items():
+                        arr[seq.blocks[b]] = np.asarray(parts[pname])[idx]
+        for name, store in self._slots.items():
+            parts = _leaf_parts(cache[name])
+            for pname, arr in store.items():
+                arr[seq.state_page] = np.asarray(parts[pname])
+        if upto is not None:
+            seq.length = max(seq.length, upto)
+
+    def set_length(self, rid: int, n_positions: int) -> None:
+        """Advance the sequence's written-position count (the engine calls
+        this after a decode step appended row ``n_positions - 1``)."""
+        self._seqs[rid].length = n_positions
+
+    def gather(self, rid: int):
+        """The sequence's cache as one contiguous batch-1 tree, exactly as
+        the single-stream path would hold it: allocated blocks copied into
+        place, unallocated tail blocks left at the qcache zero (identical
+        to ``qcache_prefill`` padding), state leaves from the state page."""
+        seq = self._seqs[rid]
+        out = self.empty_cache()
+        for name, store in self._paged.items():
+            parts = _leaf_parts(out[name])
+            for b, pid in enumerate(seq.blocks):
+                idx = self._seq_idx(name, b)
+                for pname, arr in store.items():
+                    parts[pname][idx] = arr[pid]
+        for name, store in self._slots.items():
+            parts = _leaf_parts(out[name])
+            for pname, arr in store.items():
+                parts[pname][...] = arr[seq.state_page]
+        return out
+
+    def empty_cache(self):
+        """A freshly-reset contiguous batch-1 cache tree (host numpy) —
+        also the engine's padding lane for part-empty decode batches."""
+        out = {}
+        for name, leaf in self._tmpl.items():
+            if isinstance(leaf, BFP):
+                m = np.zeros(leaf.m.shape, np.dtype(leaf.m.dtype))
+                e = np.ones(leaf.e.shape, np.dtype(leaf.e.dtype))
+                out[name] = BFP(m, e, leaf.cfg)
+            else:
+                out[name] = np.zeros(leaf.shape, np.dtype(leaf.dtype))
+        return out
+
+    # -- eviction / re-admission -------------------------------------------
+
+    def evict(self, rid: int):
+        """Preemption: checkpoint the sequence's pages to host copies and
+        free them.  The checkpoint is pure integer data (mantissas +
+        exponents) — re-admission relocates it into whatever pages are
+        then free without requantizing anything."""
+        ckpt = {"cache": self.gather(rid),
+                "length": self._seqs[rid].length}
+        self.release(rid)
+        return ckpt
+
+    def readmit(self, rid: int, ckpt) -> SeqPages:
+        """Restore an evicted sequence into fresh pages (raises
+        ``PoolExhausted``, leaving nothing allocated, if they don't fit)."""
+        seq = self.admit(rid)
+        try:
+            self.ensure_capacity(rid, ckpt["length"])
+        except PoolExhausted:
+            self.release(rid)
+            raise
+        self.write(rid, ckpt["cache"], upto=ckpt["length"])
+        return seq
+
+    # -- observability -----------------------------------------------------
+
+    def accounting(self) -> dict:
+        """Must always balance: pages allocated == pages freed + live
+        (gated by tools/check_bench_trend.py on BENCH_serving.json)."""
+        return {"page_allocs": self.page_allocs,
+                "page_frees": self.page_frees,
+                "live_pages": self.live_pages,
+                "balanced": self.page_allocs == self.page_frees
+                + self.live_pages}
+
+    def occupancy(self) -> dict:
+        return {"n_pages": self.n_pages, "live_pages": self.live_pages,
+                "free_pages": self.free_pages, "peak_live": self.peak_live,
+                "occupancy": self.live_pages / self.n_pages}

@@ -1,0 +1,149 @@
+"""Determinism contract of the continuous-batching engine (launch/engine.py).
+
+Three claims, all bitwise (docs/SERVING.md §Engine):
+
+- golden pin: a ``max_batch == 1`` engine emits exactly the tokens the
+  serve.py-style loop (prefill -> argmax -> decode chain with the same
+  fold_in key schedule) emits — the engine with batching off IS serve.
+- batching moves throughput, never results: staggered streams decoded
+  under ``jax.vmap`` match their single-stream tokens bitwise, because
+  every lane traces at batch-1 shapes (per-tensor quantizer reductions
+  and stochastic-rounding bits are per-lane identical).
+- preemption is invisible: a pool too small for full residency forces
+  evict/readmit cycles, and the tokens still match bitwise — eviction
+  checkpoints relocate as pure integer copies and resume at the saved
+  decode-step index, so the key chain never forks.
+
+One module-scoped fixture compiles the three jitted programs (prefill,
+batch-1 decode, vmapped decode) once on a tiny d32 config; every engine
+shares them via ``share_fns``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.policy import PAPER_INT8
+from repro.launch.engine import Engine, EngineConfig, Request
+
+POLICY = dataclasses.replace(PAPER_INT8, qweights=True, qcache=True)
+PROMPT_LEN, GEN, MAX_LEN, PAGE = 6, 6, 12, 4
+
+
+def _tiny_cfg():
+    return dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                               n_layers=2, d_model=32, d_ff=64, n_heads=2,
+                               n_kv_heads=2, vocab=97)
+
+
+def _requests(cfg, n):
+    rs = np.random.RandomState(7)
+    return [Request(rid=i,
+                    prompt=rs.randint(0, cfg.vocab,
+                                      size=PROMPT_LEN).astype(np.int32),
+                    gen=GEN, arrival_step=i, seed=100 + i)
+            for i in range(n)]
+
+
+def _reference_tokens(eng, req):
+    """The serve.py decode chain, run directly on the engine's jitted
+    batch-1 programs: prefill with fold_in(key, 3), first token = argmax,
+    decode step i with fold_in(key, 10 + i) at position prompt_len + i."""
+    key = jax.random.key(req.seed)
+    batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+    cache, logits = eng._prefill(eng.params, batch,
+                                 jax.random.fold_in(key, 3))
+    toks = [np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))]
+    for i in range(req.gen - 1):
+        logits, cache = eng._decode1(
+            eng.params, cache, jnp.asarray(toks[-1], jnp.int32),
+            jnp.int32(len(req.prompt) + i), jax.random.fold_in(key, 10 + i))
+        toks.append(np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)))
+    return np.concatenate(toks)
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = _tiny_cfg()
+    base = Engine(cfg, POLICY, EngineConfig(
+        max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=1, seed=0))
+    reqs = _requests(cfg, 4)
+    refs = {r.rid: _reference_tokens(base, r) for r in reqs}
+    return {"cfg": cfg, "base": base, "reqs": reqs, "refs": refs}
+
+
+def _twin(world, **over):
+    """A fresh engine sharing the fixture's params + jitted programs."""
+    kw = dict(max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=4,
+              seed=0)
+    kw.update(over)
+    return Engine(world["cfg"], POLICY, EngineConfig(**kw),
+                  params=world["base"].params, share_fns=world["base"])
+
+
+def test_single_stream_golden_pin(world):
+    eng = _twin(world, max_batch=1)
+    req = world["reqs"][0]
+    out = eng.run([req])
+    np.testing.assert_array_equal(out[req.rid], world["refs"][req.rid])
+    assert eng.ttft_steps[req.rid] >= 0
+    assert eng.pool.accounting()["balanced"]
+    assert eng.pool.live_pages == 0
+
+
+def test_batched_decode_matches_single_stream(world):
+    """Staggered arrivals, iteration-level batching: every stream's
+    tokens bitwise equal its single-stream reference."""
+    eng = _twin(world)
+    out = eng.run(list(world["reqs"]))
+    assert set(out) == {r.rid for r in world["reqs"]}
+    for rid, ref in world["refs"].items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"stream {rid}: batched decode changed tokens")
+    # genuine batching happened (several lanes emitted in one step), so
+    # the vmapped program — not serialized batch-1 calls — produced this.
+    assert max(eng.tokens_per_step) > 1
+    assert eng.n_preemptions == 0
+    assert eng.pool.accounting()["balanced"]
+
+
+def test_preemption_resumes_bit_identically(world):
+    """A pool too small for full residency forces evict/readmit cycles;
+    tokens still match the references bitwise, so checkpoint relocation
+    and decode-step resume never touch the numerics."""
+    eng = _twin(world, n_pages=4)
+    out = eng.run(list(world["reqs"]))
+    assert eng.n_preemptions > 0
+    for rid, ref in world["refs"].items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"stream {rid}: tokens changed across preemption")
+    acct = eng.pool.accounting()
+    assert acct["balanced"] and acct["live_pages"] == 0
+
+
+def test_stats_record_shape(world):
+    """stats() carries everything the serving bench publishes and the
+    trend gate (tools/check_bench_trend.py --serving) reads."""
+    eng = _twin(world, max_batch=2)
+    eng.run(world["reqs"][:2])
+    s = eng.stats()
+    for k in ("steps", "tokens", "tokens_per_step", "ttft_p50_steps",
+              "ttft_p99_steps", "n_preemptions", "pool"):
+        assert k in s, k
+    assert s["tokens"] == 2 * GEN
+    assert s["pool"]["balanced"] and s["pool"]["live_pages"] == 0
+    assert 0.0 <= s["pool"]["peak_occupancy"] <= 1.0
+
+
+def test_submit_rejects_overlong_request(world):
+    eng = _twin(world)
+    bad = Request(rid=99, prompt=np.zeros(MAX_LEN, np.int32), gen=1)
+    with pytest.raises(ValueError, match="exceeds engine max_len"):
+        eng.submit([bad])

@@ -1,0 +1,234 @@
+"""Pool invariants for the block-paged qcache pool (runtime.qpool).
+
+Everything here is host-side numpy over ``cache_template`` trees filled
+with synthetic integer data — no model runs, no jit.  The engine-level
+claims (golden pin, vmap-lane bit-identity, preemption resume) live in
+``test_engine.py``; this file pins the allocator itself:
+
+- page-spec metadata is declared for every family and congruent with its
+  ``cache_layout``;
+- alloc/free/evict round-trips keep the accounting balanced (pages
+  allocated == pages freed + live) and exhaustion raises, never corrupts;
+- a page-table gather is bit-identical to the contiguous cache it
+  shreds, including the qcache zero (m=0, e=1) in unwritten tail blocks;
+- eviction + re-admission relocates pages as pure integer copies: ``==``
+  on mantissas AND exponents, with physically different page ids.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import BFP
+from repro.core.policy import PAPER_INT8, QC_ROWS, QC_STATE
+from repro.launch.steps import cache_template
+from repro.models import get_cache_layout, get_cache_page_spec
+from repro.runtime.qpool import PoolConfigError, PoolExhausted, QPool
+
+QC = dataclasses.replace(PAPER_INT8, qcache=True)
+
+
+def _tiny_cfg():
+    return dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                               n_layers=2, d_model=32, d_ff=64, n_heads=2,
+                               n_kv_heads=2, vocab=97)
+
+
+def _random_cache(cfg, max_len, seed, src_len=None):
+    """A contiguous batch-1 cache tree with random (but valid) integer
+    mantissas and per-row exponents — stands in for real prefill output."""
+    rs = np.random.RandomState(seed)
+    tmpl = cache_template(cfg, 1, max_len, src_len=src_len, policy=QC)
+    out = {}
+    for name, leaf in tmpl.items():
+        if isinstance(leaf, BFP):
+            info = np.iinfo(np.dtype(leaf.m.dtype))
+            m = rs.randint(info.min, info.max + 1,
+                           size=leaf.m.shape).astype(leaf.m.dtype)
+            e = rs.randint(1, 40, size=leaf.e.shape).astype(leaf.e.dtype)
+            out[name] = BFP(m, e, leaf.cfg)
+        else:
+            out[name] = rs.randn(*leaf.shape).astype(leaf.dtype)
+    return out
+
+
+def _parts(leaf):
+    return {"m": np.asarray(leaf.m), "e": np.asarray(leaf.e)} \
+        if isinstance(leaf, BFP) else {"a": np.asarray(leaf)}
+
+
+def _assert_tree_equal(a, b, where=slice(None)):
+    for name in a:
+        pa, pb = _parts(a[name]), _parts(b[name])
+        for pn in pa:
+            np.testing.assert_array_equal(pa[pn], pb[pn],
+                                          err_msg=f"{name}.{pn}")
+
+
+ALL_ARCHS = ["qwen2_0_5b", "rwkv6_3b", "recurrentgemma_2b",
+             "seamless_m4t_medium", "pixtral_12b", "minicpm_2b"]
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_page_spec_matches_layout(arch):
+    """Every family declares pool metadata congruent with its quantized
+    cache layout: same leaves, same currency kind per leaf, and seq axes
+    only on leaves that actually grow with decoded positions."""
+    cfg = get_smoke_config(arch)
+    spec = get_cache_page_spec(cfg)
+    layout = get_cache_layout(cfg)
+    assert set(spec) == set(layout)
+    for name, s in spec.items():
+        assert s.kind == layout[name], name
+        assert s.kind in (QC_ROWS, QC_STATE)
+        if s.kind == QC_STATE:
+            # accumulator state is rewritten in place, never appended
+            assert s.seq_axis is None, name
+
+
+def test_alloc_free_evict_roundtrip():
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=6, max_len=12)
+    assert pool.pages_needed(6) == 2          # ceil(6/4), no state page
+    pool.admit(0)
+    pool.ensure_capacity(0, 6)
+    assert pool.live_pages == 2 and pool.free_pages == 4
+    pool.admit(1)
+    pool.ensure_capacity(1, 12)
+    assert pool.live_pages == 5
+    with pytest.raises(PoolExhausted):
+        pool.admit(2)
+        pool.ensure_capacity(2, 12)           # needs 3, only 1 free
+    pool.release(2)
+    pool.release(0)
+    acct = pool.accounting()
+    assert acct["balanced"]
+    assert acct["live_pages"] == 3            # seq 1 only
+    pool.release(1)
+    acct = pool.accounting()
+    assert acct["balanced"] and acct["live_pages"] == 0
+    assert acct["page_allocs"] == acct["page_frees"] > 0
+    assert pool.peak_live == 6
+
+
+def test_gather_bit_identity_vs_contiguous():
+    """Shredding a contiguous cache into pages and gathering it back is
+    the identity, bit for bit — mantissas and exponents."""
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=8, max_len=12)
+    src = _random_cache(cfg, 12, seed=0)
+    pool.admit(0)
+    pool.ensure_capacity(0, 12)
+    pool.write(0, src, upto=12)
+    _assert_tree_equal(pool.gather(0), src)
+
+
+def test_gather_unwritten_tail_is_qcache_zero():
+    """Blocks past the written length read back as the qcache zero
+    (m=0, e=1) — exactly what qcache_prefill pads with, so a gathered
+    part-full cache is bit-identical to the single-stream layout."""
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=8, max_len=12)
+    src = _random_cache(cfg, 12, seed=1)
+    pool.admit(0)
+    pool.ensure_capacity(0, 7)                # blocks 0..1 only
+    pool.write(0, src, upto=7)
+    got = pool.gather(0)
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(got[name].m[..., :8, :]),
+                                      np.asarray(src[name].m[..., :8, :]))
+        assert (np.asarray(got[name].m[..., 8:, :]) == 0).all()
+        assert (np.asarray(got[name].e[..., 8:, :]) == 1).all()
+
+
+def test_relocation_without_requantization():
+    """Evict -> scramble the free list -> readmit: the sequence lands in
+    physically different pages, yet mantissas AND exponents compare
+    ``==`` — relocation is pure integer copy, no quantizer ran."""
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=8, max_len=12)
+    src = _random_cache(cfg, 12, seed=2)
+    pool.admit(0)
+    pool.ensure_capacity(0, 12)
+    pool.write(0, src, upto=12)
+    old_pages = list(pool._seqs[0].blocks)
+    ckpt = pool.evict(0)
+    assert 0 not in pool._seqs
+    # scramble: another sequence grabs (and dirties) some freed pages
+    pool.admit(7)
+    pool.ensure_capacity(7, 8)
+    pool.write(7, _random_cache(cfg, 12, seed=3), upto=8)
+    pool.readmit(0, ckpt)
+    assert pool._seqs[0].blocks != old_pages
+    got = pool.gather(0)
+    for name in ("k", "v"):
+        assert (np.asarray(got[name].m) == np.asarray(src[name].m)).all()
+        assert (np.asarray(got[name].e) == np.asarray(src[name].e)).all()
+    assert pool.accounting()["balanced"]
+
+
+@pytest.mark.parametrize("arch", ["rwkv6_3b", "recurrentgemma_2b",
+                                  "seamless_m4t_medium"])
+def test_state_slot_families_roundtrip(arch):
+    """QC_STATE families (and encdec's write-once cross K/V) ride the
+    single-slot state page; mixed paged+slot families round-trip whole."""
+    cfg = get_smoke_config(arch)
+    max_len, src_len = 8, 8
+    pool = QPool(cfg, QC, page_size=4, n_pages=8, max_len=max_len,
+                 src_len=src_len)
+    if arch == "rwkv6_3b":
+        assert not pool.has_paged
+        assert pool.pages_needed(max_len) == 1    # the state page alone
+    else:
+        assert pool.has_paged and pool.has_state_page
+    src = _random_cache(cfg, max_len, seed=4, src_len=src_len)
+    pool.admit(0)
+    pool.ensure_capacity(0, max_len)
+    pool.write(0, src, upto=max_len)
+    _assert_tree_equal(pool.gather(0), src)
+    ckpt = pool.evict(0)
+    pool.readmit(0, ckpt)
+    _assert_tree_equal(pool.gather(0), src)
+    pool.release(0)
+    assert pool.accounting()["balanced"]
+
+
+def test_pool_config_errors():
+    cfg = _tiny_cfg()
+    with pytest.raises(PoolConfigError, match="page_size"):
+        QPool(cfg, QC, page_size=0, n_pages=4, max_len=12)
+    with pytest.raises(PoolConfigError, match="zero-page"):
+        QPool(cfg, QC, page_size=4, n_pages=0, max_len=12)
+    with pytest.raises(PoolConfigError, match="divide max_len"):
+        QPool(cfg, QC, page_size=5, n_pages=4, max_len=12)
+    win = get_smoke_config("recurrentgemma_2b")     # local_window=16
+    with pytest.raises(PoolConfigError, match="window"):
+        QPool(win, QC, page_size=3, n_pages=4, max_len=12)
+
+
+def test_validate_request_pool_errors():
+    """serve.validate_request rejects bad pool geometry with clean,
+    fix-naming errors (no traceback from inside the pool)."""
+    from repro.launch.serve import ServeConfigError, validate_request
+    ok = dict(batch=2, prompt_len=6, gen=4, qcache=True, engine=True)
+    validate_request("qwen2_0_5b", "int8", page_size=5, n_pages=8, **ok)
+    with pytest.raises(ServeConfigError, match="zero-page"):
+        validate_request("qwen2_0_5b", "int8", page_size=5, n_pages=0, **ok)
+    with pytest.raises(ServeConfigError, match="page-size"):
+        validate_request("qwen2_0_5b", "int8", page_size=0, n_pages=8, **ok)
+    with pytest.raises(ServeConfigError, match="divide prompt_len"):
+        validate_request("qwen2_0_5b", "int8", page_size=3, n_pages=8, **ok)
+    # page size must divide the attention window (recurrentgemma: 16)
+    with pytest.raises(ServeConfigError, match="window"):
+        validate_request("recurrentgemma_2b", "int8", page_size=5,
+                         n_pages=8, **ok)
+    with pytest.raises(ServeConfigError, match="cannot hold even one"):
+        validate_request("qwen2_0_5b", "int8", page_size=5, n_pages=1,
+                         batch=2, prompt_len=26, gen=4, qcache=True,
+                         engine=True)
+    with pytest.raises(ServeConfigError, match="qcache"):
+        validate_request("qwen2_0_5b", "int8", page_size=5, n_pages=8,
+                         batch=2, prompt_len=6, gen=4, qcache=False,
+                         engine=True)

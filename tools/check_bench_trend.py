@@ -21,11 +21,26 @@ fails when the fused-path story regresses:
     composition twin, beyond a 2-sigma noise floor built from the rows'
     ``us_std`` (the cross-op fusion wall-clock gate).
 
+With ``--serving`` the same trend discipline gates the serving bench
+(``BENCH_serving.json``, written by ``benchmarks/serving_bench.py`` on a
+simulated-step clock, so no noise floor applies):
+
+  * per (arch, mode, n_streams) record, ``tokens_per_step`` may not drop
+    and ``ttft_p99_steps`` may not rise by more than ``--max-regression``
+    percent vs the committed baseline;
+  * pool accounting must balance in every fresh record — pages allocated
+    == pages freed + live — and every completed run must end with zero
+    live pages;
+  * every batched record must keep ``speedup_vs_serial >= 2`` (the
+    engine's batching win) when its serial twin is present.
+
 Usage (CI runs the first form after snapshotting the committed file)::
 
     python tools/check_bench_trend.py --baseline /tmp/base.json \
         --fresh BENCH_kernels.json
     python tools/check_bench_trend.py        # baseline from git show HEAD
+    python tools/check_bench_trend.py --serving \
+        --baseline /tmp/serving_base.json --fresh BENCH_serving.json
 """
 
 from __future__ import annotations
@@ -57,11 +72,11 @@ def _noise_floor(*rows):
     return 2.0 * sum(float(r.get("us_std") or 0.0) for r in rows)
 
 
-def _load_baseline(path):
+def _load_baseline(path, name="BENCH_kernels.json"):
     if path:
         with open(path) as f:
             return json.load(f)
-    out = subprocess.run(["git", "show", "HEAD:BENCH_kernels.json"],
+    out = subprocess.run(["git", "show", f"HEAD:{name}"],
                          cwd=ROOT, capture_output=True, text=True)
     if out.returncode != 0:
         raise SystemExit(f"cannot read committed baseline: {out.stderr}")
@@ -112,17 +127,75 @@ def check(baseline, fresh, max_regression_pct):
     return errors
 
 
+def _serving_index(rows):
+    return {(r["arch"], r["mode"], r["n_streams"]): r for r in rows}
+
+
+def check_serving(baseline, fresh, max_regression_pct):
+    """Gate BENCH_serving.json: throughput/tail-latency trend vs the
+    committed baseline, pool-accounting balance, and the batched-vs-serial
+    speedup floor.  All metrics are simulated-step deterministic, so the
+    only tolerance is the explicit regression allowance."""
+    errors = []
+    scale = max_regression_pct / 100.0
+    base_ix = _serving_index(baseline)
+    for key, f in _serving_index(fresh).items():
+        pool = f.get("pool", {})
+        if not pool.get("balanced", False):
+            errors.append(f"pool accounting unbalanced: {key} {pool}")
+        if pool.get("live_pages", 0) != 0:
+            errors.append(
+                f"pages leaked after completed run: {key} "
+                f"{pool.get('live_pages')} still live")
+        if (f["mode"] == "batched" and "speedup_vs_serial" in f
+                and f["n_streams"] >= 2 and f["speedup_vs_serial"] < 2.0):
+            errors.append(
+                f"batching win below 2x: {key} "
+                f"speedup={f['speedup_vs_serial']}")
+        b = base_ix.get(key)
+        if b is None:
+            continue                     # new coverage: no trend to hold yet
+        if f["tokens_per_step"] < b["tokens_per_step"] * (1 - scale):
+            errors.append(
+                f"tokens/step regression: {key} "
+                f"{b['tokens_per_step']:.3f} -> {f['tokens_per_step']:.3f} "
+                f"(> -{max_regression_pct}%)")
+        if f["ttft_p99_steps"] > b["ttft_p99_steps"] * (1 + scale):
+            errors.append(
+                f"p99 TTFT regression: {key} "
+                f"{b['ttft_p99_steps']:.1f} -> {f['ttft_p99_steps']:.1f} "
+                f"steps (> +{max_regression_pct}%)")
+    return errors
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default=None,
-                    help="baseline JSON path (default: git show "
-                         "HEAD:BENCH_kernels.json)")
-    ap.add_argument("--fresh", default=FRESH_DEFAULT)
+                    help="baseline JSON path (default: git show HEAD:"
+                         "BENCH_kernels.json / BENCH_serving.json)")
+    ap.add_argument("--fresh", default=None)
     ap.add_argument("--max-regression", type=float, default=20.0,
-                    help="max allowed fused bytes_moved growth, percent")
+                    help="max allowed fused bytes_moved growth / serving "
+                         "tokens-per-step drop / p99 TTFT rise, percent")
+    ap.add_argument("--serving", action="store_true",
+                    help="gate BENCH_serving.json (tokens/step, p99 TTFT, "
+                         "pool accounting) instead of BENCH_kernels.json")
     args = ap.parse_args()
+    if args.serving:
+        baseline = _load_baseline(args.baseline, "BENCH_serving.json")
+        with open(args.fresh or os.path.join(ROOT, "BENCH_serving.json")) as f:
+            fresh = json.load(f)
+        errors = check_serving(baseline, fresh, args.max_regression)
+        if errors:
+            for e in errors:
+                print(f"SERVING TREND FAIL: {e}", file=sys.stderr)
+            return 1
+        print(f"serving trend OK: {len(fresh)} records checked against "
+              f"{len(baseline)} baseline records "
+              f"(limit ±{args.max_regression}%)")
+        return 0
     baseline = _load_baseline(args.baseline)
-    with open(args.fresh) as f:
+    with open(args.fresh or FRESH_DEFAULT) as f:
         fresh = json.load(f)
     errors = check(baseline, fresh, args.max_regression)
     n_fused = sum(1 for r in fresh if r["path"] == "fused")
