@@ -19,12 +19,27 @@ serve.py loop, golden-pinned by test_engine.py).  Tokens must match
 bitwise between the two modes — batching moves throughput, never results
 — and batched must clear >= 2x serial tokens/step (the acceptance gate).
 
+With ``--speculate K`` eligible families additionally run a speculative
+pair (docs/SERVING.md §Speculative decoding): ``spec_baseline``
+(speculation off) and ``speculative`` (a truncated self-draft proposing
+K tokens per round, the target verifying the block).  Tokens must again
+match bitwise — greedy accept/reject moves steps, never results — and
+the ``speculative`` record carries ``accepted_tokens_per_step`` (mean
+committed DRAFT tokens per speculative round, the trend gate's >= 1.0
+floor) plus the analytic round-traffic plan.  The pair runs on the
+smoke config deepened to ``--spec-depth`` layers: an L-layer draft of an
+(L+1)-layer target presumes a deep stack — the 2-layer smoke config's
+only possible draft is half the model and agrees on almost nothing,
+which measures the degenerate config, not the mechanism.
+
     PYTHONPATH=src python -m benchmarks.serving_bench \
-        --arch qwen2_0_5b --arch rwkv6_3b --streams 8
+        --arch qwen2_0_5b --arch rwkv6_3b --streams 8 --speculate 4
 
 Covers one QC_ROWS family (qwen2: paged KV blocks) and one QC_STATE
 family (rwkv6: single-slot state pages) by default, so both pool
-residency shapes are on the trend record.
+residency shapes are on the trend record.  rwkv6 skips the speculative
+pair: its family declares no draft support (in-place recurrent state
+cannot be rolled back on rejection), which the skip note records.
 """
 
 from __future__ import annotations
@@ -40,6 +55,7 @@ import jax
 from repro.configs import get_smoke_config
 from repro.core.policy import PAPER_INT8
 from repro.launch.engine import Engine, EngineConfig, Request
+from repro.models import get_draft_support
 
 
 def _requests(cfg, n_streams: int, prompt_len: int, gen: int, seed: int):
@@ -102,6 +118,70 @@ def bench_family(arch: str, *, n_streams: int, prompt_len: int, gen: int,
     return rows
 
 
+def bench_speculative(arch: str, *, k: int, draft_layers: int, depth: int,
+                      n_streams: int, prompt_len: int, gen: int,
+                      page_size: int, seed: int) -> list:
+    """Speculative pair on the smoke config deepened to ``depth`` layers:
+    ``spec_baseline`` (speculation off) then ``speculative`` (same request
+    set, truncated self-draft of ``draft_layers`` layers proposing ``k``
+    tokens per round).  Asserts bitwise-identical tokens between the two
+    and records acceptance length + the analytic round-traffic plan."""
+    from repro.launch.serve import speculative_traffic_report
+
+    cfg = get_smoke_config(arch)
+    eligible, reason = get_draft_support(cfg)
+    if not eligible:
+        print(f"{arch} [{cfg.family}] speculative: skipped — {reason}")
+        return []
+    if depth:
+        cfg = dataclasses.replace(cfg, n_layers=depth)
+    if draft_layers == 0:
+        draft_layers = max(1, cfg.n_layers - 1)
+    policy = dataclasses.replace(PAPER_INT8, qweights=True, qcache=True)
+    max_len = prompt_len + gen
+    reqs = _requests(cfg, n_streams, prompt_len, gen, seed)
+    rows = []
+    results = {}
+    prev = None
+    for mode, spec in (("spec_baseline", 0), ("speculative", k)):
+        eng = Engine(cfg, policy, EngineConfig(
+            max_len=max_len, page_size=page_size,
+            n_pages=n_streams * (max_len // page_size + 1),
+            max_batch=n_streams, seed=seed, speculate=spec,
+            draft_layers=draft_layers if spec else 0), src_len=prompt_len,
+            params=prev.params if prev else None, share_fns=prev)
+        prev = eng
+        results[mode] = eng.run(list(reqs))
+        stats = eng.stats()
+        acct = eng.pool.accounting()
+        assert acct["balanced"], f"pool accounting leaked: {acct}"
+        rows.append({
+            "family": cfg.family, "arch": arch, "mode": mode,
+            "n_layers": cfg.n_layers, "n_streams": n_streams,
+            "prompt_len": prompt_len, "gen": gen, "page_size": page_size,
+            "n_pages": eng.pool.n_pages, "max_batch": n_streams,
+            "seed": seed, **stats})
+        print(f"{arch} [{cfg.family}] {mode:>13} (L={cfg.n_layers}): "
+              f"{stats['tokens']} tokens / {stats['steps']} steps = "
+              f"{stats['tokens_per_step']:.2f} tokens/step")
+    for rid in results["speculative"]:
+        np.testing.assert_array_equal(
+            results["speculative"][rid], results["spec_baseline"][rid],
+            err_msg=f"{arch} stream {rid}: speculation changed tokens")
+    rows[1]["bitwise_equal_vs_baseline"] = True
+    rows[1]["speedup_vs_nonspec"] = round(
+        rows[1]["tokens_per_step"] / rows[0]["tokens_per_step"], 3)
+    rows[1]["spec_traffic"] = speculative_traffic_report(
+        cfg, policy, k, draft_layers, max_len)
+    tau = rows[1]["accepted_tokens_per_step"]
+    print(f"{arch} speculative: k={k} draft={draft_layers}/{cfg.n_layers}, "
+          f"acceptance length {tau:.2f} tokens/round "
+          f"({rows[1]['spec_rejections']}/{rows[1]['spec_rounds']} rounds "
+          f"rejected), {rows[1]['speedup_vs_nonspec']:.2f}x baseline "
+          f"tokens/step, bitwise identical")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", action="append", default=None,
@@ -112,6 +192,14 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="draft tokens per speculative round; 0 skips the "
+                         "speculative pair")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="truncated-draft depth (0: all but one layer)")
+    ap.add_argument("--spec-depth", type=int, default=8,
+                    help="deepen the smoke config to this many layers for "
+                         "the speculative pair (0: keep the smoke depth)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
     archs = args.arch or ["qwen2_0_5b", "rwkv6_3b"]
@@ -120,6 +208,12 @@ def main(argv=None):
         rows += bench_family(arch, n_streams=args.streams,
                              prompt_len=args.prompt_len, gen=args.gen,
                              page_size=args.page_size, seed=args.seed)
+        if args.speculate > 0:
+            rows += bench_speculative(
+                arch, k=args.speculate, draft_layers=args.draft_layers,
+                depth=args.spec_depth, n_streams=args.streams,
+                prompt_len=args.prompt_len, gen=args.gen,
+                page_size=args.page_size, seed=args.seed)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1, sort_keys=True)
     print(f"wrote {len(rows)} records -> {args.out}")

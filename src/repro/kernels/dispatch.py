@@ -87,6 +87,7 @@ __all__ = [
     "contract_iq", "contract_ii", "contract_pp", "bytes_moved",
     "attention_bytes_moved", "attn_block_t", "cache_operand_bytes",
     "paged_gather_bytes", "plan_batched_decode",
+    "speculative_verify_bytes_moved", "plan_speculative_verify",
     "fallback_counts", "reset_fallback_counts",
     "DEFAULT_VMEM_BUDGET",
     "plan_norm_gemm", "run_norm_gemm", "plan_epilogue", "contract_epi",
@@ -416,6 +417,72 @@ def plan_batched_decode(n_lanes: int, layout: dict, shapes: dict,
     return {"n_lanes": n_lanes, "page_rows": page_rows,
             "cache_bytes_per_lane": per_lane,
             "cache_bytes_total": n_lanes * per_lane}
+
+
+def speculative_verify_bytes_moved(k: int, *, weight_bytes: int,
+                                   draft_weight_bytes: int,
+                                   cache_bytes: int,
+                                   draft_cache_bytes: int) -> int:
+    """Analytic HBM bytes ONE speculative decode round moves
+    (launch.speculative, docs/SERVING.md §Speculative decoding): ``k``
+    draft steps each stream the truncated model's weights and its slice
+    of the cache band, then the verify pass reads the TARGET's weights
+    exactly once for the whole k+1-token block — a banded fused-attention
+    prefill over the existing qcache rows, so the cache side pays the
+    k+1 band reads but the weight side is amortized the same way
+    iteration-level batching amortizes it across lanes.  Compare with
+    ``(k + 1) * (weight_bytes + cache_bytes)``, which is what sequential
+    decode pays for the same tokens when everything is accepted."""
+    return (k * (draft_weight_bytes + draft_cache_bytes)
+            + weight_bytes + (k + 1) * cache_bytes)
+
+
+def plan_speculative_verify(k: int, draft_layers: int, n_layers: int, *,
+                            weight_bytes: int, cache_bytes: int,
+                            draft_weight_bytes: Optional[int] = None,
+                            draft_cache_bytes: Optional[int] = None) -> dict:
+    """Traffic plan for speculative decoding at draft depth ``k``
+    (docs/SERVING.md §Speculative decoding).  ``weight_bytes`` /
+    ``cache_bytes`` are the target's per-decode-step weight-operand and
+    cache-operand HBM bytes; the draft twins default to the layer-count
+    fraction of them (the truncated draft shares the embedding/head, a
+    second-order term at serving widths).
+
+    The plan prices one round against the sequential decode that emits
+    the same tokens, and reports ``breakeven_accepted``: the fewest draft
+    tokens a round must land for speculation to move fewer bytes per
+    emitted token than plain decode.  The measured acceptance rate
+    (``accepted_tokens_per_step`` in BENCH_serving.json) closes the loop:
+    above breakeven, speculation wins on traffic; at full acceptance the
+    per-token bytes drop by ``reduction_at_full_accept_pct``."""
+    if not 1 <= draft_layers <= n_layers:
+        raise ValueError(
+            f"draft_layers must be in [1, {n_layers}], got {draft_layers}")
+    if k < 1:
+        raise ValueError(f"speculation depth k must be >= 1, got {k}")
+    frac = draft_layers / n_layers
+    dw = (int(weight_bytes * frac) if draft_weight_bytes is None
+          else draft_weight_bytes)
+    dc = (int(cache_bytes * frac) if draft_cache_bytes is None
+          else draft_cache_bytes)
+    round_bytes = speculative_verify_bytes_moved(
+        k, weight_bytes=weight_bytes, draft_weight_bytes=dw,
+        cache_bytes=cache_bytes, draft_cache_bytes=dc)
+    seq_token = weight_bytes + cache_bytes
+    seq_block = (k + 1) * seq_token
+    # round_bytes <= (1 + a) * seq_token  <=>  a >= round/seq - 1
+    breakeven = max(0, math.ceil(round_bytes / seq_token - 1))
+    return {
+        "k": k, "draft_layers": draft_layers, "n_layers": n_layers,
+        "weight_bytes": weight_bytes, "cache_bytes": cache_bytes,
+        "draft_weight_bytes": dw, "draft_cache_bytes": dc,
+        "round_bytes": round_bytes,
+        "sequential_bytes_per_token": seq_token,
+        "sequential_block_bytes": seq_block,
+        "breakeven_accepted": breakeven,
+        "reduction_at_full_accept_pct": round(
+            100.0 * (1 - round_bytes / seq_block), 2),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..runtime.qpool import PoolExhausted, QPool
+from .speculative import draft_config, draft_params, make_spec_decode_step
 from .steps import make_decode_step, make_prefill_step, quantize_serving_params
 
 __all__ = ["Engine", "EngineConfig", "Request"]
@@ -64,7 +65,13 @@ class EngineConfig:
     """Pool geometry + scheduler bounds.  ``max_len`` bounds every
     admitted sequence's prompt+gen; ``page_size`` must divide it
     (stochastic-rounding bits are position-dependent, so gathered caches
-    must reproduce the contiguous max_len layout exactly)."""
+    must reproduce the contiguous max_len layout exactly).
+
+    ``speculate`` > 0 arms speculative decoding (launch.speculative): a
+    ``draft_layers``-deep truncation of the model proposes up to
+    ``speculate`` tokens per round for every opted-in lane, the target
+    verifies, and the engine commits the accepted prefix — emitted tokens
+    stay bitwise identical to ``speculate == 0``."""
 
     max_len: int
     page_size: int = 16
@@ -72,6 +79,8 @@ class EngineConfig:
     max_batch: int = 8
     watermark: int = 0        # free pages an admission must leave behind
     seed: int = 0             # model-load seed (matches serve.py)
+    speculate: int = 0        # draft depth k per round (0 = off)
+    draft_layers: int = 0     # truncated-draft depth (required when k > 0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +97,10 @@ class Request:
     # vlm patch_embeds): unbatched arrays, keyed as the prefill batch dict
     # expects; the engine adds the batch-1 axis.
     extras: Optional[dict] = None
+    # opt this stream out of the engine's speculative mode; a no-op when
+    # the engine runs with ``EngineConfig.speculate == 0``.  Speculative
+    # and plain lanes batch together in one scheduler step.
+    speculate: bool = True
 
 
 @dataclasses.dataclass
@@ -156,6 +169,31 @@ class Engine:
             # compiles this.
             self._decodeN = jax.jit(jax.vmap(make_decode_step(cfg, policy),
                                              in_axes=(None, 0, 0, 0, 0)))
+        if ecfg.speculate > 0:
+            # truncated-draft speculative decoding: validate family
+            # eligibility + draft depth up front (raises SpeculativeError),
+            # slice the draft's weight view, and build the one-round
+            # program (draft scan + verify scan + accept/reject in-jit).
+            draft_config(cfg, ecfg.draft_layers)
+            self._draft_params = draft_params(self.params, ecfg.draft_layers)
+            if (share_fns is not None
+                    and (share_fns.ecfg.speculate,
+                         share_fns.ecfg.draft_layers)
+                    == (ecfg.speculate, ecfg.draft_layers)):
+                self._spec1 = share_fns._spec1
+                self._specN = share_fns._specN
+            else:
+                step = make_spec_decode_step(
+                    cfg, policy, k=ecfg.speculate,
+                    draft_layers=ecfg.draft_layers, max_len=ecfg.max_len)
+                self._spec1 = jax.jit(step)
+                # params + draft params broadcast; (cache, token, pos,
+                # step index, raw key, commit budget) per lane.
+                self._specN = jax.jit(jax.vmap(
+                    step, in_axes=(None, None, 0, 0, 0, 0, 0, 0)))
+        self.spec_rounds = 0          # speculative lane-rounds run
+        self.spec_accepted = 0        # draft tokens committed (bonus excl.)
+        self.spec_rejections = 0      # rounds cut short by a rejection
         self.clock = 0
         self._pending: List[Request] = []
         self._waiting: List[Request] = []
@@ -228,19 +266,45 @@ class Engine:
         self.pool.write(req.rid, host, upto=len(req.prompt))
         self._retire_if_done(run)
 
+    def _is_spec(self, run: _Running) -> bool:
+        return self.ecfg.speculate > 0 and run.req.speculate
+
+    def _spec_budget(self, run: _Running) -> int:
+        """Tokens this round may commit: the k drafts + the target's own
+        token, clamped to what the request still owes.  Bounds the
+        round's page reservation, and the committed cache length stays
+        <= max_len - 1 (the final token's row is never written), so the
+        verify program's tail-row restoration always covers whatever a
+        clamped out-of-range append touched."""
+        return min(self.ecfg.speculate + 1, run.req.gen - len(run.tokens))
+
     def _reserve_or_preempt(self) -> List[_Running]:
-        """Reserve next-row pages for every running sequence; evict the
-        lowest-priority one (possibly the requester itself) whenever the
-        pool runs dry.  Returns this step's decode lanes."""
+        """Reserve next-row pages for every running sequence — a
+        speculative lane reserves its whole worst-case block up front and
+        gives the tail back after accept/reject (``trim_capacity``) —
+        evicting the lowest-priority lane (possibly the requester itself)
+        whenever the pool runs dry.  Returns this step's decode lanes."""
         for run in sorted(self._running.values(), key=_priority):
             if run.req.rid not in self._running:
                 continue                      # evicted by an earlier lane
             while run.req.rid in self._running:
+                need = (self._spec_budget(run) if self._is_spec(run) else 1)
                 try:
-                    self.pool.ensure_capacity(run.req.rid, run.pos + 1)
+                    self.pool.ensure_capacity(run.req.rid, run.pos + need)
                     break
                 except PoolExhausted:
                     victim = max(self._running.values(), key=_priority)
+                    if victim is run and need > 1:
+                        # the speculative block itself doesn't fit: give
+                        # it up and take a plain single-token reservation
+                        # (the commit budget clamps to the reservation, so
+                        # tokens are unchanged) before self-evicting.
+                        try:
+                            self.pool.ensure_capacity(run.req.rid,
+                                                      run.pos + 1)
+                            break
+                        except PoolExhausted:
+                            pass
                     self._evict(victim)
         return sorted(self._running.values(), key=_priority)
 
@@ -258,6 +322,17 @@ class Engine:
             self.results[run.req.rid] = np.concatenate(run.tokens)
 
     def _decode_batch(self, lanes: List[_Running]) -> None:
+        """One scheduler step's decode: speculative and plain lanes split
+        into their two programs (each pads to max_batch under vmap, so
+        per-lane numerics never depend on who else is in the step)."""
+        plain = [r for r in lanes if not self._is_spec(r)]
+        spec = [r for r in lanes if self._is_spec(r)]
+        if plain:
+            self._decode_plain(plain)
+        if spec:
+            self._decode_spec(spec)
+
+    def _decode_plain(self, lanes: List[_Running]) -> None:
         caches = [self.pool.gather(r.req.rid) for r in lanes]
         toks = [np.asarray(r.tokens[-1], np.int32) for r in lanes]
         if self.ecfg.max_batch == 1:
@@ -293,6 +368,69 @@ class Engine:
             self.pool.set_length(run.req.rid, run.pos + 1)
             run.n_decoded += 1
             run.tokens.append(tok)
+            self._retire_if_done(run)
+
+    def _decode_spec(self, lanes: List[_Running]) -> None:
+        """One speculative round per lane: draft k, verify, commit the
+        accepted prefix.  The committed block scatters through the page
+        table exactly like sequential steps would have (the verify scan
+        IS the sequential program), then ``trim_capacity`` hands the
+        over-reserved tail pages straight back to the free list."""
+        k = self.ecfg.speculate
+        caches = [self.pool.gather(r.req.rid) for r in lanes]
+        toks = [np.asarray(r.tokens[-1], np.int32) for r in lanes]
+        # commit budget: tokens still owed, clamped to the reservation the
+        # scheduler actually got (a degraded lane just commits fewer).
+        mcs = [min(self._spec_budget(r),
+                   self.pool.capacity(r.req.rid) - r.pos) for r in lanes]
+        if self.ecfg.max_batch == 1:
+            run = lanes[0]
+            targets, commit, cache = self._spec1(
+                self.params, self._draft_params, caches[0],
+                jnp.asarray(toks[0]), jnp.int32(run.pos),
+                jnp.int32(run.n_decoded), jax.random.key(run.req.seed),
+                jnp.int32(mcs[0]))
+            outs = [(np.asarray(targets), int(np.asarray(commit)[0]),
+                     jax.tree_util.tree_map(np.asarray, cache))]
+        else:
+            pad = self.ecfg.max_batch - len(lanes)
+            caches += [self.pool.empty_cache()] * pad
+            vcache = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *caches)
+            vtok = np.stack(toks + [np.zeros(1, np.int32)] * pad)
+            vpos = np.asarray([r.pos for r in lanes] + [0] * pad, np.int32)
+            vi0 = np.asarray([r.n_decoded for r in lanes] + [0] * pad,
+                             np.int32)
+            vkey = np.stack(
+                [np.asarray(jax.random.key_data(
+                    jax.random.key(r.req.seed))) for r in lanes]
+                + [np.zeros_like(np.asarray(jax.random.key_data(
+                    jax.random.key(0))))] * pad)
+            vmc = np.asarray(mcs + [1] * pad, np.int32)
+            vtargets, vcommit, vcaches = self._specN(
+                self.params, self._draft_params, vcache, vtok, vpos, vi0,
+                vkey, vmc)
+            vtargets = np.asarray(vtargets)
+            vcommit = np.asarray(vcommit)
+            outs = [(vtargets[j], int(vcommit[j][0]),
+                     jax.tree_util.tree_map(lambda a, j=j: np.asarray(a[j]),
+                                            vcaches))
+                    for j in range(len(lanes))]
+        page = self.pool.page_size
+        for run, mc, (targets, m, host) in zip(lanes, mcs, outs):
+            rid = run.req.rid
+            p0 = run.pos
+            for j in range(m):
+                run.tokens.append(targets[j])
+            run.n_decoded += m
+            for b in range(p0 // page, (p0 + m - 1) // page + 1):
+                self.pool.write(rid, host,
+                                block=b if self.pool.has_paged else None)
+            self.pool.set_length(rid, p0 + m)
+            self.pool.trim_capacity(rid, p0 + m)
+            self.spec_rounds += 1
+            self.spec_accepted += m - 1
+            if m < mc:
+                self.spec_rejections += 1
             self._retire_if_done(run)
 
     def step(self) -> int:
@@ -340,7 +478,7 @@ class Engine:
         toks = int(sum(self.tokens_per_step))
         pct = (lambda q: float(np.percentile(ttfts, q)) if ttfts else 0.0)
         occ = self.occupancy_trace
-        return {
+        out = {
             "steps": steps,
             "tokens": toks,
             "tokens_per_step": toks / steps if steps else 0.0,
@@ -353,3 +491,22 @@ class Engine:
                      "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
                      "peak_occupancy": float(np.max(occ)) if occ else 0.0},
         }
+        if self.ecfg.speculate > 0:
+            out["speculate"] = self.ecfg.speculate
+            out["draft_layers"] = self.ecfg.draft_layers
+            out["spec_rounds"] = self.spec_rounds
+            out["spec_rejections"] = self.spec_rejections
+            # acceptance length tau: mean tokens COMMITTED per speculative
+            # round (accepted draft prefix + the target's own token).  A
+            # plain decode step commits exactly 1.0, so the trend gate
+            # requires strictly > 1.0 — at 1.0 the verifier never accepted
+            # a single draft token and speculation is pure overhead.
+            out["accepted_tokens_per_step"] = (
+                (self.spec_accepted + self.spec_rounds) / self.spec_rounds
+                if self.spec_rounds else 0.0)
+            # and the draft-only view: mean accepted drafts per round
+            # (tau - 1), the raw agreement between truncation and target.
+            out["accepted_drafts_per_round"] = (
+                self.spec_accepted / self.spec_rounds if self.spec_rounds
+                else 0.0)
+        return out

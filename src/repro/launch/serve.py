@@ -33,7 +33,8 @@ from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..core.health import bfp_tree_stats
 from ..core.policy import FLOAT32, PAPER_INT8
 from ..kernels import dispatch
-from ..models import get_cache_layout, get_cache_page_spec, get_model
+from ..models import (get_cache_layout, get_cache_page_spec,
+                      get_draft_support, get_model)
 from .steps import (cache_template, make_decode_step, make_prefill_step,
                     quantize_serving_params)
 
@@ -166,6 +167,54 @@ def cache_traffic_report(cfg, policy, batch: int, prompt_len: int,
     return out
 
 
+def speculative_traffic_report(cfg, policy, k: int, draft_layers: int,
+                               max_len: int) -> dict:
+    """Analytic HBM traffic of one speculative decode round vs the
+    sequential steps it replaces (docs/SERVING.md §Speculative decoding):
+    per-step weight-operand and cache-operand bytes for the target and
+    its ``draft_layers``-deep truncation feed
+    ``dispatch.plan_speculative_verify``, which prices the k draft steps
+    + one verify pass and reports the acceptance break-even.  The
+    ``decision`` row is the ``plan_attention`` Decision the deployment
+    target (backend="tpu") would record for the banded (k+1)-row verify
+    over the existing qcache rows — the fused-attention prefill shape of
+    the verify pass."""
+    from ..core.bfp import PER_TENSOR, QuantConfig
+
+    i8 = 1
+
+    def per_step(c):
+        wk = sum(n * kk for _, kk, n in _dense_gemm_shapes(c, 1))
+        cache = 0
+        layout = get_cache_layout(c)
+        tmpl = cache_template(c, 1, max_len, src_len=max_len)
+        for name, kind in layout.items():
+            shape = tuple(tmpl[name].shape)
+            rows = 1
+            for dim in shape[:-1]:
+                rows *= dim
+            cache += dispatch.cache_operand_bytes(
+                rows, shape[-1], quantized=True,
+                bits=policy.cache_cfg_for(kind, shape[-1]).bits,
+                rewritten=name not in _KV_LEAVES)
+        return i8 * wk, cache
+
+    wb, cb = per_step(cfg)
+    dwb, dcb = per_step(dataclasses.replace(cfg, n_layers=draft_layers))
+    plan = dispatch.plan_speculative_verify(
+        k, draft_layers, cfg.n_layers, weight_bytes=wb, cache_bytes=cb,
+        draft_weight_bytes=dwb, draft_cache_bytes=dcb)
+    g = cfg.n_heads // cfg.n_kv_heads
+    cfg8 = QuantConfig(policy.fwd_bits, PER_TENSOR, policy.stochastic,
+                       policy.rng)
+    band = dispatch.plan_attention(
+        "attn_fwd", g * (k + 1), max_len, cfg.hd, cfg8, s=k + 1, kind="pp",
+        backend="tpu", kernel_mode=policy.kernel_mode)
+    plan["decision"] = {"op": band.op, "kind": band.kind, "path": band.path,
+                        "bq": band.bm, "bt": band.bt, "reason": band.reason}
+    return plan
+
+
 def attention_traffic_report(cfg, policy, batch: int, prompt_len: int,
                              max_len: int) -> dict:
     """Analytic HBM traffic of the attention contractions themselves — the
@@ -261,6 +310,7 @@ def validate_request(arch: str, policy_name: str, *, batch: int = 1,
                      prompt_len: int = 1, gen: int = 1, qcache: bool = False,
                      health: bool = False, engine: bool = False,
                      page_size: int = 16, n_pages: int = 64,
+                     speculate: int = 0, draft_layers: int = 0,
                      smoke: bool = True) -> None:
     """Reject impossible serving requests up front with a message that
     names the fix, instead of a traceback from deep inside model import
@@ -322,25 +372,51 @@ def validate_request(arch: str, policy_name: str, *, batch: int = 1,
                 f"--n-pages {n_pages} cannot hold even one "
                 f"{prompt_len}-token prompt at --page-size {page_size} "
                 f"({need} pages needed)")
+    if speculate < 0:
+        raise ServeConfigError(
+            f"--speculate is a draft depth (tokens proposed per round), "
+            f"must be >= 0, got {speculate}")
+    if speculate > 0:
+        if not engine:
+            raise ServeConfigError(
+                "--speculate runs inside the continuous-batching engine's "
+                "decode loop; add --engine")
+        cfg = get_smoke_config(arch) if smoke else get_config(arch)
+        ok, why = get_draft_support(cfg)
+        if not ok:
+            raise ServeConfigError(
+                f"--speculate is unsupported for {arch} "
+                f"(family {cfg.family!r}): {why}")
+        if draft_layers and not 1 <= draft_layers <= cfg.n_layers:
+            raise ServeConfigError(
+                f"--draft-layers must be in [1, {cfg.n_layers}] for {arch} "
+                f"({cfg.n_layers} layers), got {draft_layers}")
 
 
 def serve_engine(arch: str, *, smoke: bool = True, batch: int = 4,
                  prompt_len: int = 32, gen: int = 16,
                  policy_name: str = "int8", seed: int = 0, page_size: int = 16,
-                 n_pages: int = 64, max_batch: int = 4, quiet: bool = False):
+                 n_pages: int = 64, max_batch: int = 4, speculate: int = 0,
+                 draft_layers: int = 0, quiet: bool = False):
     """Route a smoke request set — ``batch`` concurrent streams with the
     same prompt randomness ``serve`` would draw — through the
     continuous-batching engine (launch/engine.py) and report the
     simulated-step serving metrics next to the analytic engine traffic
     row.  Streams get staggered arrivals and per-stream key chains, so
-    this exercises admission, iteration-level batching and the pool."""
+    this exercises admission, iteration-level batching and the pool.
+    ``speculate`` > 0 arms truncated-draft speculative decoding
+    (``draft_layers`` defaults to all-but-one layer); tokens are bitwise
+    identical either way — speculation moves steps, never results."""
     from .engine import Engine, EngineConfig, Request
     validate_request(arch, policy_name, batch=batch, prompt_len=prompt_len,
                      gen=gen, qcache=True, engine=True, page_size=page_size,
-                     n_pages=n_pages, smoke=smoke)
+                     n_pages=n_pages, speculate=speculate,
+                     draft_layers=draft_layers, smoke=smoke)
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     policy = dataclasses.replace(POLICIES[policy_name], qweights=True,
                                  qcache=True)
+    if speculate > 0 and draft_layers == 0:
+        draft_layers = max(1, cfg.n_layers - 1)
     key = jax.random.key(seed)
     prompts = np.asarray(jax.random.randint(
         jax.random.fold_in(key, 1), (batch, prompt_len), 0, cfg.vocab),
@@ -348,13 +424,17 @@ def serve_engine(arch: str, *, smoke: bool = True, batch: int = 4,
     max_len = prompt_len + gen
     eng = Engine(cfg, policy, EngineConfig(
         max_len=max_len, page_size=page_size, n_pages=n_pages,
-        max_batch=max_batch, seed=seed), src_len=prompt_len)
+        max_batch=max_batch, seed=seed, speculate=speculate,
+        draft_layers=draft_layers), src_len=prompt_len)
     reqs = [Request(rid=i, prompt=prompts[i], gen=gen, arrival_step=i,
                     seed=seed + i) for i in range(batch)]
     results = eng.run(reqs)
     stats = eng.stats()
     stats["cache_traffic"] = cache_traffic_report(
         cfg, policy, batch, prompt_len, max_len, page_size=page_size)
+    if speculate > 0 and cfg.family in ("dense", "vlm"):
+        stats["spec_traffic"] = speculative_traffic_report(
+            cfg, policy, speculate, draft_layers, max_len)
     if not quiet:
         print(f"arch={cfg.name} engine: {batch} streams, max_batch="
               f"{max_batch}, pool {n_pages} pages x {page_size} rows")
@@ -363,6 +443,23 @@ def serve_engine(arch: str, *, smoke: bool = True, batch: int = 4,
               f"{stats['ttft_p50_steps']:.0f} / p99 "
               f"{stats['ttft_p99_steps']:.0f} steps, "
               f"{stats['n_preemptions']} preemptions")
+        if speculate > 0:
+            print(f"speculative: k={speculate} draft_layers={draft_layers}"
+                  f"/{cfg.n_layers}, {stats['spec_rounds']} rounds, "
+                  f"acceptance length "
+                  f"{stats['accepted_tokens_per_step']:.2f} tokens/round "
+                  f"({stats['accepted_drafts_per_round']:.2f} drafts), "
+                  f"{stats['spec_rejections']} rejections")
+            st = stats.get("spec_traffic")
+            if st:
+                d = st["decision"]
+                print(f"speculative round traffic: "
+                      f"{st['round_bytes'] / 1e6:.3f} MB vs sequential "
+                      f"{st['sequential_block_bytes'] / 1e6:.3f} MB for "
+                      f"k+1 tokens (break-even {st['breakeven_accepted']} "
+                      f"accepted; -{st['reduction_at_full_accept_pct']}% "
+                      f"at full accept)  [{d['op']}/{d['kind']} -> "
+                      f"{d['path']} bq={d['bq']} bt={d['bt']}]")
         pool = stats["pool"]
         print(f"pool: peak {pool['peak_live']}/{pool['n_pages']} pages, "
               f"allocs {pool['page_allocs']} = frees {pool['page_frees']} "
@@ -550,13 +647,25 @@ def main(argv=None):
                     help="physical pages in the qcache pool (--engine)")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="decode lanes per engine iteration (--engine)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="draft tokens per speculative round (--engine); "
+                         "0 disables; output stays bitwise identical")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="layers in the truncated self-draft (--speculate); "
+                         "0 means all but the last layer")
     args = ap.parse_args(argv)
     try:
+        if (args.speculate or args.draft_layers) and not args.engine:
+            raise ServeConfigError(
+                "--speculate runs inside the continuous-batching engine's "
+                "decode loop; add --engine")
         if args.engine:
             serve_engine(args.arch, smoke=args.smoke, batch=args.batch,
                          prompt_len=args.prompt_len, gen=args.gen,
                          policy_name=args.policy, page_size=args.page_size,
-                         n_pages=args.n_pages, max_batch=args.max_batch)
+                         n_pages=args.n_pages, max_batch=args.max_batch,
+                         speculate=args.speculate,
+                         draft_layers=args.draft_layers)
         else:
             serve(args.arch, smoke=args.smoke, batch=args.batch,
                   prompt_len=args.prompt_len, gen=args.gen,

@@ -1,0 +1,283 @@
+"""Integer speculative decoding: draft k tokens with a truncated model,
+verify with the target, commit the accepted prefix (docs/SERVING.md
+§Speculative decoding).
+
+Float speculative decoding is *distributionally* correct at best: when a
+draft and target logit tie, IEEE reduction order decides the argmax, so
+speculation can change emitted tokens run to run.  Here every logit is an
+integer-arithmetic result — bit-exact across batching, paging and replay —
+so greedy accept/reject is a pure deterministic function and the whole
+mechanism carries a provable invariant:
+
+    speculation-on output == speculation-off output, bitwise, always.
+
+The pieces:
+
+- **draft model** = the target's first ``draft_layers`` layers.  Every
+  parameter tree stacks its per-layer leaves on a leading axis for
+  ``lax.scan`` (BFP leaves carry one shared exponent per layer —
+  ``QW_STACKED``), so ``draft_params`` is a pure leading-axis slice:
+  no extra weights, no requantization, mantissas shared with the target.
+- **shared cache pages**: the draft reads the same qcache rows through a
+  leading-axis slice of the (L, B, H, T, hd) cache leaves — its view of
+  the page pool is the target's page table restricted to the first
+  ``draft_layers`` layers.  Because layer ``i`` of a decode step keys its
+  randomness as ``fold_in(step_key, i)``, the draft's layers compute
+  BIT-IDENTICALLY to the target's first layers on the same tokens: its
+  speculative cache rows are exactly the rows the target's verify pass
+  writes, maximizing agreement.  The draft's appends live only in the
+  functional value inside the jit — nothing speculative touches the pool.
+- **verify** = the target decoding the speculated block inside ONE jitted
+  program.  The block runs as a ``lax.scan`` of the ordinary decode step
+  over the k+1 tokens rather than a banded prefill: per-tensor activation
+  quantizers reduce over everything in a program, so a true multi-row
+  prefill over the block would see different reduction extents than
+  sequential decode and break the bitwise invariant.  The scan IS the
+  sequential program, so equivalence holds by construction; the
+  banded-prefill traffic story lives in the analytic model
+  (``kernels.dispatch.plan_speculative_verify``), which prices the verify
+  pass as one fused-attention band over the existing qcache rows.
+- **accept/reject**: greedy.  ``targets[i]`` is what the target would
+  emit after consuming ``tokens_in[i]``; a draft is accepted while it
+  equals the target's own argmax.  The first rejected slot is replaced by
+  the target's token — so the emitted block ``targets[:n_acc + 1]`` is
+  exactly the sequential greedy rollout whatever the drafts were.
+  Rejected cache rows are restored to the qcache zero (m=0, e=1) in-jit,
+  which also repairs the rows a clamped out-of-bounds
+  ``dynamic_update_slice`` append may have dirtied when the speculated
+  block ran past ``max_len`` (the committed prefix never does: the last
+  emitted token's row is never written).
+
+Family support: truncating a transformer-family model (dense/moe/vlm)
+keeps a valid model reading a slice of the same cache.  Recurrent
+families (ssm/rwkv6, hybrid/rglru) carry accumulator *state* the draft
+would corrupt — drafting them needs a snapshot/restore path — and the
+audio encoder-decoder's cross-attention cache makes truncation
+ill-defined; all three declare themselves ineligible
+(``models.registry.get_draft_support``) and the engine refuses with a
+clear error instead of silently changing results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import BFP
+from ..models import get_cache_page_spec, get_draft_support
+from ..models.common import ArchConfig
+from .steps import _wrap_key, make_decode_step
+
+__all__ = ["SpeculativeError", "accept_length", "draft_config",
+           "draft_params", "slice_cache", "make_verify_step",
+           "make_spec_decode_step"]
+
+
+class SpeculativeError(ValueError):
+    """A speculation request that can never hold the bitwise invariant
+    (ineligible family, bad draft depth) — reject at construction."""
+
+
+# ---------------------------------------------------------------------------
+# the accept/reject oracle
+# ---------------------------------------------------------------------------
+
+def accept_length(drafts, targets):
+    """Greedy acceptance: the number of leading draft tokens that equal
+    the target's own argmax at the same slot.
+
+    ``drafts`` is (k, ...) proposals; ``targets`` is (k+1, ...) where
+    ``targets[i]`` is the target's argmax after consuming slot ``i``'s
+    input (so ``targets[:k]`` aligns with ``drafts`` and ``targets[k]``
+    is the bonus token when everything is accepted).  Works on host numpy
+    or traced arrays; integer token comparison only — ties were already
+    resolved identically on both sides by the deterministic integer
+    argmax.  The emitted block is always ``targets[:n_acc + 1]``.
+    """
+    drafts = jnp.asarray(drafts)
+    matches = (drafts == jnp.asarray(targets)[: drafts.shape[0]])
+    return jnp.cumprod(matches.astype(jnp.int32), axis=0).sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# the draft model: a leading-axis slice of the target
+# ---------------------------------------------------------------------------
+
+def draft_config(cfg: ArchConfig, draft_layers: int) -> ArchConfig:
+    """The truncated-model config, after eligibility checks."""
+    ok, why = get_draft_support(cfg)
+    if not ok:
+        raise SpeculativeError(
+            f"{cfg.name} (family {cfg.family!r}) cannot draft: {why}")
+    if not 1 <= draft_layers <= cfg.n_layers:
+        raise SpeculativeError(
+            f"draft_layers must be in [1, {cfg.n_layers}] for {cfg.name} "
+            f"({cfg.n_layers} layers), got {draft_layers}")
+    return dataclasses.replace(cfg, n_layers=draft_layers)
+
+
+def _slice_lead(leaf: Any, n: int):
+    """First ``n`` entries of a layer-stacked leaf.  BFP leaves stack one
+    shared exponent (and optionally one float32 gradient carrier) per
+    layer, so the slice stays a self-contained BFP — no requantization."""
+    if isinstance(leaf, BFP):
+        e = leaf.e[:n] if (leaf.e.ndim and leaf.e.shape[0] == leaf.m.shape[0]) \
+            else leaf.e
+        g = None if leaf.g is None else leaf.g[:n]
+        return BFP(leaf.m[:n], e, leaf.cfg, g)
+    return leaf[:n]
+
+
+def draft_params(params: dict, draft_layers: int) -> dict:
+    """The draft's parameter tree: layer stack sliced, everything else
+    (embedding, final norm, lm head) shared with the target by reference.
+    Zero-copy in spirit and in bytes: XLA aliases the slices."""
+    out = dict(params)
+    out["layers"] = jax.tree_util.tree_map(
+        lambda l: _slice_lead(l, draft_layers), params["layers"],
+        is_leaf=lambda l: isinstance(l, BFP))
+    return out
+
+
+def slice_cache(cache: dict, draft_layers: int) -> dict:
+    """The draft's view of the target's cache: the same physical rows,
+    layer axis truncated.  This is the page-table-view of the pool —
+    block b of layer i < draft_layers is literally the target's page."""
+    return {name: _slice_lead(leaf, draft_layers)
+            for name, leaf in cache.items()}
+
+
+# ---------------------------------------------------------------------------
+# rejected-row restoration
+# ---------------------------------------------------------------------------
+
+def _zero_tail(cache: dict, commit_len, page_spec) -> dict:
+    """Restore every cache row at position >= ``commit_len`` (per batch
+    lane) to the qcache zero — mantissa 0, exponent 1, exactly what
+    ``qcache_prefill`` pads with and the pool resets pages to.  This
+    makes a post-speculation cache bit-identical to the sequential
+    single-stream cache at the same length: rejected speculative rows
+    (and any row a clamped out-of-range append dirtied) vanish."""
+    commit_len = jnp.asarray(commit_len, jnp.int32).reshape(-1)
+    out = {}
+    for name, leaf in cache.items():
+        spec = page_spec[name]
+        if spec.seq_axis is None:     # state leaf: nothing positional
+            out[name] = leaf
+            continue
+        ndim = leaf.m.ndim if isinstance(leaf, BFP) else leaf.ndim
+        t = (leaf.m if isinstance(leaf, BFP) else leaf).shape[spec.seq_axis]
+        rshape = [1] * ndim
+        rshape[spec.seq_axis] = t
+        rows = jnp.arange(t, dtype=jnp.int32).reshape(rshape)
+        cshape = [1] * ndim
+        cshape[spec.batch_axis] = commit_len.shape[0]
+        keep = rows < commit_len.reshape(cshape)
+        if isinstance(leaf, BFP):
+            out[name] = BFP(jnp.where(keep, leaf.m, 0),
+                            jnp.where(keep, leaf.e, 1), leaf.cfg,
+                            None if leaf.g is None
+                            else jnp.where(keep, leaf.g, 0.0))
+        else:
+            out[name] = jnp.where(keep, leaf, 0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# verify: the target replays the speculated block in one program
+# ---------------------------------------------------------------------------
+
+def make_verify_step(cfg: ArchConfig, policy, *, k: int, max_len: int,
+                     rng_impl: str = "threefry2x32"):
+    """The target's verify pass over a k-token speculated block.
+
+    Returns ``verify(params, cache, tokens_in, pos, i0, key, max_commit)
+    -> (targets, commit, cache')`` where ``tokens_in`` is (k+1, B): the
+    committed last token followed by the k proposals.  ``targets`` (k+1,
+    B) are the target's argmax tokens, produced by a ``lax.scan`` of the
+    ordinary decode step — the exact sequential program, so the accepted
+    prefix is bitwise what speculation-off would emit.  ``commit`` (B,)
+    = accepted drafts + the target's own token, clamped to ``max_commit``
+    (tokens still owed); the returned cache holds exactly ``pos +
+    commit`` valid rows, everything beyond restored to the qcache zero.
+
+    Exposed separately from :func:`make_spec_decode_step` so tests can
+    feed ADVERSARIAL proposals and pin reject-first / reject-mid cache
+    restoration deterministically.
+    """
+    if k < 1:
+        raise SpeculativeError(f"speculation depth k must be >= 1, got {k}")
+    decode = make_decode_step(cfg, policy, rng_impl)
+    page_spec = get_cache_page_spec(cfg)
+
+    def verify(params, cache, tokens_in, pos, i0, key, max_commit):
+        key = _wrap_key(key, rng_impl)
+        pos = jnp.asarray(pos, jnp.int32)
+        i0 = jnp.asarray(i0, jnp.int32)
+
+        def body(c, xs):
+            tok, j = xs
+            logits, c = decode(params, c, tok, pos + j,
+                               jax.random.fold_in(key, 10 + i0 + j))
+            return c, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        cache, targets = jax.lax.scan(
+            body, cache, (tokens_in, jnp.arange(k + 1, dtype=jnp.int32)))
+        n_acc = accept_length(tokens_in[1:], targets)
+        commit = jnp.minimum(n_acc + 1, jnp.asarray(max_commit, jnp.int32))
+        commit = jnp.broadcast_to(commit, n_acc.shape)
+        cache = _zero_tail(cache, pos + commit, page_spec)
+        return targets, commit, cache
+
+    return verify
+
+
+# ---------------------------------------------------------------------------
+# the full speculative step: draft, verify, accept
+# ---------------------------------------------------------------------------
+
+def make_spec_decode_step(cfg: ArchConfig, policy, *, k: int,
+                          draft_layers: int, max_len: int,
+                          rng_impl: str = "threefry2x32"):
+    """One speculative decode round as a single jittable program.
+
+    Returns ``spec_step(params, dparams, cache, token, pos, i0, key,
+    max_commit) -> (targets, commit, cache')``: the truncated draft
+    free-runs k proposals over its slice of the shared cache (same step
+    keys as the target, so its layers compute bit-identically to the
+    target's first layers), then the verify scan replays the block and
+    greedy accept/reject picks the committed prefix.  The engine appends
+    ``targets[:commit]`` and advances ``commit`` positions — output is
+    bitwise identical to ``commit`` sequential decode steps.
+
+    ``k`` and ``draft_layers`` are static (they shape the scans);
+    ``pos``/``i0``/``max_commit`` are traced, so one compilation serves
+    every position, step index and end-of-request clamp.
+    """
+    dcfg = draft_config(cfg, draft_layers)
+    draft_decode = make_decode_step(dcfg, policy, rng_impl)
+    verify = make_verify_step(cfg, policy, k=k, max_len=max_len,
+                              rng_impl=rng_impl)
+
+    def spec_step(params, dparams, cache, token, pos, i0, key, max_commit):
+        wkey = _wrap_key(key, rng_impl)
+        pos = jnp.asarray(pos, jnp.int32)
+        i0 = jnp.asarray(i0, jnp.int32)
+        dcache = slice_cache(cache, draft_layers)
+
+        def dbody(carry, j):
+            dc, t = carry
+            logits, dc = draft_decode(dparams, dc, t, pos + j,
+                                      jax.random.fold_in(wkey, 10 + i0 + j))
+            nt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (dc, nt), nt
+
+        (_, _), drafts = jax.lax.scan(
+            dbody, (dcache, token), jnp.arange(k, dtype=jnp.int32))
+        tokens_in = jnp.concatenate([token[None], drafts], axis=0)
+        return verify(params, cache, tokens_in, pos, i0, key, max_commit)
+
+    return spec_step

@@ -1,9 +1,9 @@
 """Architecture zoo: 10 assigned archs built from the integer core ops."""
 
 from .common import ArchConfig, CachePageSpec, softmax_xent
-from .registry import (get_cache_layout, get_cache_page_spec, get_model,
-                       get_weight_mask)
+from .registry import (get_cache_layout, get_cache_page_spec,
+                       get_draft_support, get_model, get_weight_mask)
 
 __all__ = ["ArchConfig", "CachePageSpec", "get_cache_layout",
-           "get_cache_page_spec", "get_model", "get_weight_mask",
-           "softmax_xent"]
+           "get_cache_page_spec", "get_draft_support", "get_model",
+           "get_weight_mask", "softmax_xent"]

@@ -28,7 +28,8 @@ from .common import (ArchConfig, CachePageSpec, apply_rope, dense_init, rope,
                      softmax_xent, weight_t)
 
 __all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
-           "loss_fn", "prefill", "decode_step", "init_cache", "encode"]
+           "draft_support", "loss_fn", "prefill", "decode_step",
+           "init_cache", "encode"]
 
 
 def _attn_params(key, cfg: ArchConfig, kv_d=None):
@@ -361,6 +362,17 @@ def cache_page_spec(cfg: ArchConfig):
     kv = CachePageSpec(QC_ROWS, batch_axis=1, seq_axis=3)
     x = CachePageSpec(QC_ROWS, batch_axis=1)
     return {"k": kv, "v": kv, "xk": x, "xv": x}
+
+
+def draft_support(cfg: ArchConfig):
+    """Speculative drafting is unsupported: decoder layers cross-attend
+    into per-layer encoder K/V, so a truncated stack is not a
+    self-contained draft of the same request (its cross context would be
+    the first n layers' projections only, a different model, and the
+    bitwise accept/reject contract gains nothing from a mismatched
+    draft)."""
+    return (False, "encoder-decoder cross-attention makes a truncated "
+                   "stack a different model, not a cheap draft")
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, src_len: int,

@@ -11,7 +11,7 @@ from . import encdec, rglru, rwkv6, transformer
 from .common import ArchConfig
 
 __all__ = ["get_model", "get_weight_mask", "get_cache_layout",
-           "get_cache_page_spec"]
+           "get_cache_page_spec", "get_draft_support"]
 
 _FAMILY_TO_MODULE = {
     "dense": transformer,
@@ -55,6 +55,24 @@ def get_cache_layout(cfg: ArchConfig):
     and docs/SERVING.md.  Leaves absent from the dict stay float under
     ``policy.qcache`` (none currently)."""
     return get_model(cfg).cache_layout(cfg)
+
+
+def get_draft_support(cfg: ArchConfig):
+    """Whether this family can serve as its own truncated-layer draft
+    model for speculative decoding (``launch.speculative``): returns
+    ``(eligible, reason)``.  Eligibility means slicing the first n layers
+    of the parameter stack yields a valid model whose decode reads a
+    leading-axis slice of the same cache — true for the KV-cache
+    transformer families, false for recurrent families (their
+    accumulator state would be corrupted by speculative steps without a
+    snapshot/restore path) and the encoder-decoder.  Families that
+    declare nothing are ineligible by default: speculation must never
+    silently change results."""
+    mod = get_model(cfg)
+    fn = getattr(mod, "draft_support", None)
+    if fn is None:
+        return (False, f"family {cfg.family!r} declares no draft support")
+    return fn(cfg)
 
 
 def get_cache_page_spec(cfg: ArchConfig):

@@ -26,7 +26,8 @@ from .common import (ArchConfig, CachePageSpec, apply_rope, dense_init, rope,
                      softmax_xent, weight_t)
 
 __all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
-           "loss_fn", "prefill", "decode_step", "init_cache"]
+           "draft_support", "loss_fn", "prefill", "decode_step",
+           "init_cache"]
 
 _C = 8.0  # RG-LRU gate sharpness constant
 
@@ -287,6 +288,16 @@ def cache_page_spec(cfg: ArchConfig):
         spec["conv_t"] = CachePageSpec(QC_ROWS, batch_axis=1)
         spec["h_t"] = CachePageSpec(QC_STATE, batch_axis=1)
     return spec
+
+
+def draft_support(cfg: ArchConfig):
+    """Speculative drafting is unsupported: the RG-LRU hidden state and
+    the conv ring advance in place every decode step, so a rejected
+    speculation cannot be truncated like append-only KV rows without a
+    state snapshot/restore path (launch.speculative raises instead of
+    silently changing results)."""
+    return (False, "RG-LRU hidden state and conv ring mutate in place "
+                   "every step; rejection would need snapshot/restore")
 
 
 def _q_state(x, policy: NumericPolicy, kind: str) -> BFP:

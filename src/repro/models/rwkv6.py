@@ -25,7 +25,8 @@ from .common import (ArchConfig, CachePageSpec, dense_init, softmax_xent,
                      weight_t)
 
 __all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
-           "loss_fn", "prefill", "decode_step", "init_state", "HEAD_DIM"]
+           "draft_support", "loss_fn", "prefill", "decode_step",
+           "init_state", "HEAD_DIM"]
 
 HEAD_DIM = 64
 _TCHUNK = 64   # remat chunk for the time scan
@@ -206,6 +207,17 @@ def cache_page_spec(cfg: ArchConfig):
     return {"tm": CachePageSpec(QC_ROWS, batch_axis=1),
             "cm": CachePageSpec(QC_ROWS, batch_axis=1),
             "S": CachePageSpec(QC_STATE, batch_axis=1)}
+
+
+def draft_support(cfg: ArchConfig):
+    """Speculative drafting is unsupported: every decode step folds the
+    token into the WKV matrix state and token-shift registers in place,
+    so a rejected speculation cannot be truncated away like append-only
+    KV rows — it needs a state snapshot/restore path this family does
+    not implement yet (launch.speculative raises instead of silently
+    changing results)."""
+    return (False, "recurrent WKV state mutates in place every step; "
+                   "rejection would need state snapshot/restore")
 
 
 def _q_state_tree(state, policy: NumericPolicy):

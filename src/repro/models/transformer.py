@@ -30,8 +30,8 @@ from .common import (ArchConfig, CachePageSpec, apply_rope, dense_init, rope,
 from .moe import moe_block, moe_param_specs, moe_params_init, moe_weight_mask
 
 __all__ = ["init_params", "param_specs", "weight_mask", "cache_layout",
-           "forward_hidden", "loss_fn", "prefill", "decode_step",
-           "init_cache"]
+           "draft_support", "forward_hidden", "loss_fn", "prefill",
+           "decode_step", "init_cache"]
 
 
 # ---------------------------------------------------------------------------
@@ -388,6 +388,15 @@ def cache_page_spec(cfg: ArchConfig):
     axis 3, so both leaves page into row-blocks along the time axis."""
     spec = CachePageSpec(QC_ROWS, batch_axis=1, seq_axis=3)
     return {"k": spec, "v": spec}
+
+
+def draft_support(cfg: ArchConfig):
+    """Truncated-layer speculative drafting (launch.speculative): slicing
+    the leading layer axis of ``params['layers']`` and of the (L, B, Hkv,
+    T, hd) cache leaves yields a valid shallower transformer reading the
+    same qcache rows, so every transformer family (dense/moe/vlm) is
+    eligible."""
+    return (True, "")
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,

@@ -209,6 +209,33 @@ class QPool:
         while len(seq.blocks) * self.page_size < n_positions:
             seq.blocks.append(self._alloc_page(True))
 
+    def capacity(self, rid: int) -> int:
+        """Cache rows the sequence's current page table can hold (the
+        reservation ``ensure_capacity`` built; families with no paged
+        leaves can always write their state page)."""
+        if not self.has_paged:
+            return self.max_len
+        return len(self._seqs[rid].blocks) * self.page_size
+
+    def trim_capacity(self, rid: int, n_positions: int) -> None:
+        """Shrink the page table to exactly cover ``n_positions`` cache
+        rows, handing surplus tail pages back to the free list — the
+        speculative-decode give-back: a round reserves pages for the full
+        speculated block up front, then returns whatever the accept/reject
+        didn't commit.  Copy-free like ``release``; a returned page is
+        reset on its next allocation, so nothing speculative ever leaks
+        into another sequence's gather."""
+        if not self.has_paged:
+            return
+        seq = self._seqs[rid]
+        keep = -(-n_positions // self.page_size)
+        if seq.length > n_positions:
+            raise PoolConfigError(
+                f"sequence {rid}: cannot trim to {n_positions} positions "
+                f"below the {seq.length} already written")
+        while len(seq.blocks) > keep:
+            self._free_page(seq.blocks.pop())
+
     def release(self, rid: int) -> None:
         """Completion handoff: every page straight back to the free list,
         no data movement."""

@@ -7,6 +7,7 @@ import json
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import NumericPolicy, qbmm, qmatmul
 from repro.core.bfp import QuantConfig
@@ -294,3 +295,42 @@ def test_plan_contract_with_real_autotune_measurement(tmp_path, monkeypatch):
     d2 = dispatch.plan_contract("t", 32, 128, 32, QuantConfig(8),
                                 kernel_mode="fused", autotune_measure=True)
     assert (d2.path, d2.bm) == (d.path, d.bm)
+
+
+def test_plan_speculative_verify_prices_the_round_exactly():
+    """The round-traffic model is closed-form: k draft steps stream the
+    truncated model (layer-count fraction of weight + cache bytes by
+    default), the verify pass reads the target's weights once plus k+1
+    cache bands.  breakeven_accepted is the fewest landed draft tokens
+    that make the round cheaper per emitted token than plain decode."""
+    plan = dispatch.plan_speculative_verify(
+        4, 2, 8, weight_bytes=1000, cache_bytes=100)
+    assert plan["draft_weight_bytes"] == 250
+    assert plan["draft_cache_bytes"] == 25
+    assert plan["round_bytes"] == 4 * (250 + 25) + 1000 + 5 * 100
+    assert plan["sequential_bytes_per_token"] == 1100
+    assert plan["sequential_block_bytes"] == 5 * 1100
+    # round=2600, seq/token=1100 -> need ceil(2600/1100 - 1) = 2 landed
+    assert plan["breakeven_accepted"] == 2
+    assert plan["reduction_at_full_accept_pct"] == round(
+        100.0 * (1 - 2600 / 5500), 2)
+    # explicit draft byte overrides are honoured verbatim
+    over = dispatch.plan_speculative_verify(
+        1, 1, 2, weight_bytes=10, cache_bytes=10,
+        draft_weight_bytes=7, draft_cache_bytes=3)
+    assert over["round_bytes"] == (7 + 3) + 10 + 2 * 10
+    # a full-depth draft prices the degenerate case: every draft step
+    # costs a whole target step, so speculation can never win on bytes
+    full = dispatch.plan_speculative_verify(
+        2, 8, 8, weight_bytes=1000, cache_bytes=100)
+    assert full["round_bytes"] > full["sequential_block_bytes"] - 1000
+    assert full["breakeven_accepted"] >= 2
+
+
+def test_plan_speculative_verify_rejects_bad_geometry():
+    with pytest.raises(ValueError, match=r"draft_layers must be in \[1, 4\]"):
+        dispatch.plan_speculative_verify(2, 0, 4, weight_bytes=1,
+                                         cache_bytes=1)
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        dispatch.plan_speculative_verify(0, 1, 4, weight_bytes=1,
+                                         cache_bytes=1)

@@ -142,6 +142,30 @@ def test_stats_record_shape(world):
     assert 0.0 <= s["pool"]["peak_occupancy"] <= 1.0
 
 
+def test_mixed_spec_and_plain_lanes_match_solo_runs(world):
+    """Speculative and non-speculative lanes batched in ONE engine step
+    emit exactly the tokens each would emit running alone: the step
+    splits the two populations into their own programs (each padded to
+    max_batch), so no lane's numerics depend on its neighbours' mode."""
+    eng = Engine(world["cfg"], POLICY, EngineConfig(
+        max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=4, seed=0,
+        speculate=2, draft_layers=1),
+        params=world["base"].params, share_fns=world["base"])
+    reqs = [r if r.rid % 2 == 0 else dataclasses.replace(r, speculate=False)
+            for r in world["reqs"]]
+    out = eng.run(reqs)
+    for rid, ref in world["refs"].items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"stream {rid} ({'spec' if rid % 2 == 0 else 'plain'} "
+                    f"lane): mixed-mode batching changed tokens")
+    # both populations actually decoded: speculative rounds ran AND the
+    # plain lanes' tokens all arrived one per step through _decode_plain.
+    assert eng.spec_rounds > 0
+    assert eng.pool.accounting()["balanced"]
+    assert eng.pool.live_pages == 0
+
+
 def test_submit_rejects_overlong_request(world):
     eng = _twin(world)
     bad = Request(rid=99, prompt=np.zeros(MAX_LEN, np.int32), gen=1)

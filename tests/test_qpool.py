@@ -113,6 +113,52 @@ def test_alloc_free_evict_roundtrip():
     assert pool.peak_live == 6
 
 
+def test_capacity_and_trim_give_back():
+    """The speculative reserve/give-back cycle at the allocator level:
+    ``ensure_capacity`` books the worst-case block, ``capacity`` reports
+    the reservation, ``trim_capacity`` returns exactly the surplus tail
+    pages — and refuses to trim below rows already written."""
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=6, max_len=12)
+    pool.admit(0)
+    pool.ensure_capacity(0, 6)                 # prompt: 2 pages
+    assert pool.capacity(0) == 8
+    pool.set_length(0, 6)
+    pool.ensure_capacity(0, 6 + 5)             # speculative block: +1 page
+    assert pool.capacity(0) == 12 and pool.live_pages == 3
+    pool.set_length(0, 7)                      # round committed 1 token
+    pool.trim_capacity(0, 7)                   # give the tail page back
+    assert pool.capacity(0) == 8 and pool.live_pages == 2
+    pool.trim_capacity(0, 7)                   # idempotent
+    assert pool.capacity(0) == 8
+    with pytest.raises(PoolConfigError, match="below the 7 already"):
+        pool.trim_capacity(0, 6)
+    # accepted-everything round: trim is a no-op, nothing freed
+    pool.ensure_capacity(0, 12)
+    pool.set_length(0, 12)
+    pool.trim_capacity(0, 12)
+    assert pool.capacity(0) == 12
+    pool.release(0)
+    acct = pool.accounting()
+    assert acct["balanced"] and acct["live_pages"] == 0
+    assert acct["page_allocs"] == acct["page_frees"] == 4  # 3 + retaken 1
+
+
+def test_trim_capacity_state_family_is_noop():
+    """QC_STATE families hold one state page regardless of decoded
+    length: capacity is always max_len and trim never frees anything."""
+    cfg = get_smoke_config("rwkv6_3b")
+    pool = QPool(cfg, QC, page_size=4, n_pages=4, max_len=12)
+    pool.admit(0)
+    pool.ensure_capacity(0, 6)
+    assert pool.capacity(0) == 12              # never the binding bound
+    live = pool.live_pages
+    pool.trim_capacity(0, 6)
+    assert pool.live_pages == live
+    pool.release(0)
+    assert pool.accounting()["balanced"]
+
+
 def test_gather_bit_identity_vs_contiguous():
     """Shredding a contiguous cache into pages and gathering it back is
     the identity, bit for bit — mantissas and exponents."""

@@ -1,0 +1,448 @@
+"""Determinism contract of integer speculative decoding
+(launch/speculative.py + the engine's speculative mode).
+
+The one invariant everything here pins: speculation-on output equals
+speculation-off output, BITWISE, always (docs/SERVING.md §Speculative
+decoding).  Integer logits make greedy accept/reject a pure function —
+there is no float tie for reduction order to break — so the claims are
+exact, not statistical:
+
+- the accept/reject oracle (``accept_length``) on hand-built token and
+  logit pairs: accept-all, reject-first, reject-mid, and exact-tie
+  argmax resolution;
+- adversarial drafts through the verify pass: whatever garbage the
+  draft proposes, the emitted block is the sequential greedy rollout,
+  committed cache rows are bit-identical to the sequential cache, and
+  every speculated-then-rejected row is restored to the qcache zero
+  (m=0, e=1);
+- engine-level bit-identity across k ∈ {1, 2, 4} for both QC_ROWS
+  transformer families (dense and moe), with pool accounting balanced
+  and rejection handing over-reserved tail pages straight back;
+- preemption-by-eviction while speculation is active resumes bitwise
+  identically;
+- a full-depth draft (draft == target) is accepted in full every round
+  — the oracle's sanity anchor;
+- ineligible families (in-place recurrent state) and bad depths are
+  rejected at construction with actionable errors.
+
+Module-scoped worlds compile each family's jitted programs once; every
+engine twin shares them via ``share_fns``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import BFP
+from repro.core.policy import PAPER_INT8
+from repro.launch.engine import Engine, EngineConfig, Request
+from repro.launch.serve import ServeConfigError, validate_request
+from repro.launch.speculative import (SpeculativeError, accept_length,
+                                      draft_config, draft_params,
+                                      make_verify_step)
+from repro.models import get_cache_page_spec, get_draft_support
+
+POLICY = dataclasses.replace(PAPER_INT8, qweights=True, qcache=True)
+PROMPT_LEN, GEN, MAX_LEN, PAGE = 6, 6, 12, 4
+
+
+def _dense_cfg():
+    return dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                               n_layers=2, d_model=32, d_ff=64, n_heads=2,
+                               n_kv_heads=2, vocab=97)
+
+
+def _moe_cfg():
+    return dataclasses.replace(get_smoke_config("llama4_scout_17b_16e"),
+                               n_layers=2, d_model=32, d_ff=48, n_heads=2,
+                               n_kv_heads=2, head_dim=16, vocab=97,
+                               moe_experts=2)
+
+
+def _requests(cfg, n):
+    rs = np.random.RandomState(11)
+    return [Request(rid=i,
+                    prompt=rs.randint(0, cfg.vocab,
+                                      size=PROMPT_LEN).astype(np.int32),
+                    gen=GEN, arrival_step=i, seed=200 + i)
+            for i in range(n)]
+
+
+def _reference_tokens(eng, req):
+    """serve.py's sequential greedy chain on the engine's own jitted
+    batch-1 programs — the speculation-off ground truth."""
+    key = jax.random.key(req.seed)
+    batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+    cache, logits = eng._prefill(eng.params, batch,
+                                 jax.random.fold_in(key, 3))
+    toks = [np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))]
+    for i in range(req.gen - 1):
+        logits, cache = eng._decode1(
+            eng.params, cache, jnp.asarray(toks[-1], jnp.int32),
+            jnp.int32(len(req.prompt) + i), jax.random.fold_in(key, 10 + i))
+        toks.append(np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)))
+    return np.concatenate(toks)
+
+
+def _build_world(cfg):
+    base = Engine(cfg, POLICY, EngineConfig(
+        max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=1, seed=0))
+    reqs = _requests(cfg, 3)
+    refs = {r.rid: _reference_tokens(base, r) for r in reqs}
+    return {"cfg": cfg, "base": base, "reqs": reqs, "refs": refs, "spec": {}}
+
+
+@pytest.fixture(scope="module")
+def dense_world():
+    return _build_world(_dense_cfg())
+
+
+@pytest.fixture(scope="module")
+def moe_world():
+    return _build_world(_moe_cfg())
+
+
+def _spec_twin(world, k, draft_layers=1, **over):
+    """A speculative engine sharing the world's params + jitted programs
+    — and the per-(k, draft_layers) speculative program once one twin has
+    built it, so the k-sweep compiles each program exactly once."""
+    kw = dict(max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=3,
+              seed=0, speculate=k, draft_layers=draft_layers)
+    kw.update(over)
+    src = world["spec"].get((k, draft_layers), world["base"])
+    eng = Engine(world["cfg"], POLICY, EngineConfig(**kw),
+                 params=world["base"].params, share_fns=src)
+    world["spec"].setdefault((k, draft_layers), eng)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# the accept/reject oracle, exhaustively, on hand-built inputs
+# ---------------------------------------------------------------------------
+
+def test_accept_length_accept_all():
+    drafts = np.array([[5], [7], [9]], np.int32)
+    targets = np.array([[5], [7], [9], [2]], np.int32)
+    assert int(accept_length(drafts, targets)[0]) == 3
+
+
+def test_accept_length_reject_first():
+    drafts = np.array([[5], [7], [9]], np.int32)
+    targets = np.array([[6], [7], [9], [2]], np.int32)
+    assert int(accept_length(drafts, targets)[0]) == 0
+
+
+def test_accept_length_reject_mid():
+    drafts = np.array([[5], [7], [9]], np.int32)
+    targets = np.array([[5], [8], [9], [2]], np.int32)
+    assert int(accept_length(drafts, targets)[0]) == 1
+
+
+def test_accept_length_no_resurrection():
+    """A match AFTER the first mismatch must not count: acceptance is a
+    prefix property (cumprod, not a sum of matches)."""
+    drafts = np.array([[5], [8], [9]], np.int32)
+    targets = np.array([[5], [7], [9], [2]], np.int32)
+    assert int(accept_length(drafts, targets)[0]) == 1
+
+
+def test_accept_length_per_lane_independent():
+    drafts = np.array([[5, 1], [7, 2], [9, 3]], np.int32)
+    targets = np.array([[5, 1], [7, 0], [9, 0], [2, 0]], np.int32)
+    np.testing.assert_array_equal(np.asarray(accept_length(drafts, targets)),
+                                  [3, 1])
+
+
+def test_tie_on_argmax_is_deterministic():
+    """Exact logit ties resolve to the LOWEST index, identically on both
+    sides — so a draft proposing the other tied id is rejected, and a
+    draft proposing the canonical one is accepted.  Hand-built pair: the
+    max value 7.0 appears at ids 2 and 5."""
+    tied = jnp.asarray([[0.0, 1.0, 7.0, 3.0, 1.0, 7.0, 2.0]])
+    tok = int(jnp.argmax(tied, axis=-1)[0])
+    assert tok == 2                       # first occurrence wins, always
+    targets = np.array([[tok], [4]], np.int32)
+    assert int(accept_length(np.array([[2]], np.int32), targets)[0]) == 1
+    assert int(accept_length(np.array([[5]], np.int32), targets)[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# adversarial drafts through the verify pass (reject-first / reject-mid
+# cache restoration, bit for bit)
+# ---------------------------------------------------------------------------
+
+def _cache_parts(cache):
+    out = {}
+    for name, leaf in cache.items():
+        if isinstance(leaf, BFP):
+            out[f"{name}.m"] = np.asarray(leaf.m)
+            out[f"{name}.e"] = np.asarray(leaf.e)
+        else:
+            out[name] = np.asarray(leaf)
+    return out
+
+
+@pytest.fixture(scope="module")
+def verify_world(dense_world):
+    """Prefill cache + a 4-step sequential reference chain (cache after
+    each step) + an UN-jitted verify, all sharing one decode program so
+    every comparison is eager-vs-eager."""
+    from repro.launch.steps import make_decode_step
+
+    cfg = dense_world["cfg"]
+    base = dense_world["base"]
+    req = dense_world["reqs"][0]
+    key = jax.random.key(req.seed)
+    batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+    cache0, logits = base._prefill(base.params, batch,
+                                   jax.random.fold_in(key, 3))
+    t0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    decode = make_decode_step(cfg, POLICY)
+    chain_toks, chain_caches = [], []
+    cache, tok = cache0, t0
+    for i in range(4):
+        logits, cache = decode(base.params, cache, tok,
+                               jnp.int32(PROMPT_LEN + i),
+                               jax.random.fold_in(key, 10 + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        chain_toks.append(int(tok[0]))
+        chain_caches.append(jax.tree_util.tree_map(np.asarray, cache))
+    return {"cfg": cfg, "params": base.params, "cache0": cache0,
+            "t0": t0, "key": key, "ref_toks": chain_toks,
+            "ref_caches": chain_caches}
+
+
+def _run_verify(vw, drafts, max_commit=4):
+    verify = make_verify_step(vw["cfg"], POLICY, k=3, max_len=MAX_LEN)
+    tokens_in = jnp.stack([vw["t0"]] + [jnp.asarray([d], jnp.int32)
+                                        for d in drafts])
+    targets, commit, cache = verify(
+        vw["params"], vw["cache0"], tokens_in, jnp.int32(PROMPT_LEN),
+        jnp.int32(0), vw["key"], jnp.int32(max_commit))
+    return (np.asarray(targets)[:, 0], int(np.asarray(commit)[0]),
+            jax.tree_util.tree_map(np.asarray, cache))
+
+
+def _assert_rows(vw, cache, commit):
+    """Rows < PROMPT_LEN+commit bit-equal the sequential chain's cache;
+    rows >= are the qcache zero (m=0, e=1) — rejected speculation and
+    clamped OOB appends both vanish."""
+    spec = get_cache_page_spec(vw["cfg"])
+    ref = _cache_parts(vw["ref_caches"][commit - 1])
+    got = _cache_parts(cache)
+    cut = PROMPT_LEN + commit
+    for name, leaf in cache.items():
+        ax = spec[name].seq_axis
+        for part, zero in (("m", 0), ("e", 1)):
+            g = np.moveaxis(got[f"{name}.{part}"], ax, 0)
+            r = np.moveaxis(ref[f"{name}.{part}"], ax, 0)
+            np.testing.assert_array_equal(
+                g[:cut], r[:cut],
+                err_msg=f"{name}.{part}: committed rows diverge from the "
+                        f"sequential cache")
+            assert (g[cut:] == zero).all(), \
+                f"{name}.{part}: rejected rows not restored to qcache zero"
+
+
+def test_verify_accept_all(verify_world):
+    vw = verify_world
+    targets, commit, cache = _run_verify(vw, vw["ref_toks"][:3])
+    assert commit == 4
+    np.testing.assert_array_equal(targets, vw["ref_toks"])
+    _assert_rows(vw, cache, 4)
+
+
+def test_verify_reject_first(verify_world):
+    vw = verify_world
+    wrong = (vw["ref_toks"][0] + 1) % vw["cfg"].vocab
+    targets, commit, cache = _run_verify(
+        vw, [wrong, vw["ref_toks"][1], vw["ref_toks"][2]])
+    assert commit == 1
+    assert targets[0] == vw["ref_toks"][0]
+    _assert_rows(vw, cache, 1)
+
+
+def test_verify_reject_mid(verify_world):
+    vw = verify_world
+    wrong = (vw["ref_toks"][1] + 1) % vw["cfg"].vocab
+    targets, commit, cache = _run_verify(
+        vw, [vw["ref_toks"][0], wrong, vw["ref_toks"][2]])
+    assert commit == 2
+    np.testing.assert_array_equal(targets[:2], vw["ref_toks"][:2])
+    _assert_rows(vw, cache, 2)
+
+
+def test_verify_budget_clamp(verify_world):
+    """max_commit clamps an accept-all round: the emitted prefix is
+    still the sequential rollout, just shorter — budget clamping is
+    bitwise-safe at any value >= 1."""
+    vw = verify_world
+    targets, commit, cache = _run_verify(vw, vw["ref_toks"][:3],
+                                         max_commit=2)
+    assert commit == 2
+    np.testing.assert_array_equal(targets[:2], vw["ref_toks"][:2])
+    _assert_rows(vw, cache, 2)
+
+
+# ---------------------------------------------------------------------------
+# engine-level bit-identity: the tentpole invariant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_spec_bit_identity(request, family, k):
+    """Speculation-on tokens bitwise equal the sequential references for
+    every stream, at every draft depth, for both QC_ROWS families."""
+    world = request.getfixturevalue(f"{family}_world")
+    eng = _spec_twin(world, k)
+    out = eng.run(list(world["reqs"]))
+    for rid, ref in world["refs"].items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"{family} k={k} stream {rid}: speculation changed "
+                    f"tokens")
+    assert eng.spec_rounds > 0
+    acct = eng.pool.accounting()
+    assert acct["balanced"] and acct["live_pages"] == 0
+    s = eng.stats()
+    assert s["accepted_tokens_per_step"] >= 1.0
+    assert s["accepted_drafts_per_round"] == pytest.approx(
+        s["accepted_tokens_per_step"] - 1.0)
+
+
+def test_full_depth_draft_accepts_everything(dense_world):
+    """draft_layers == n_layers makes the draft the target itself: every
+    proposal must be accepted and no round may reject — the end-to-end
+    anchor that acceptance is exact token equality, not luck."""
+    eng = _spec_twin(dense_world, 2, draft_layers=2)
+    out = eng.run(list(dense_world["reqs"]))
+    for rid, ref in dense_world["refs"].items():
+        np.testing.assert_array_equal(out[rid], ref)
+    assert eng.spec_rounds > 0
+    assert eng.spec_rejections == 0
+    assert eng.stats()["accepted_tokens_per_step"] > 1.0
+
+
+def test_rejection_frees_over_reserved_pages(dense_world):
+    """A speculative round reserves its worst-case block up front; after
+    accept/reject the pool must hold exactly the committed length's pages
+    — never a stranded over-reservation — and end-of-run accounting must
+    balance to zero live pages."""
+    eng = _spec_twin(dense_world, 4)
+    req = dense_world["reqs"][0]
+    eng.submit([dataclasses.replace(req, arrival_step=0)])
+    saw_round = False
+    while eng._running or eng._pending or eng._waiting:
+        eng.step()
+        if req.rid in eng._running and eng.spec_rounds > 0:
+            saw_round = True
+            run = eng._running[req.rid]
+            cap = eng.pool.capacity(req.rid)
+            held = cap - run.pos
+            assert 0 <= held < PAGE, (
+                f"over-reserved tail not trimmed: capacity {cap}, "
+                f"committed {run.pos}")
+    assert saw_round and eng.spec_rounds > 0
+    np.testing.assert_array_equal(eng.results[req.rid],
+                                  dense_world["refs"][req.rid])
+    acct = eng.pool.accounting()
+    assert acct["balanced"] and acct["live_pages"] == 0
+    assert acct["page_allocs"] == acct["page_frees"]
+
+
+def test_preemption_mid_speculation_resumes_bit_identically(dense_world):
+    """A pool too small for full residency forces evictions while
+    speculation is active; checkpoints relocate as integer copies and the
+    key chain resumes at the committed step index, so tokens still match
+    the sequential references bitwise."""
+    eng = _spec_twin(dense_world, 2, n_pages=4)
+    out = eng.run(list(dense_world["reqs"]))
+    assert eng.n_preemptions > 0
+    assert eng.spec_rounds > 0
+    for rid, ref in dense_world["refs"].items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"stream {rid}: tokens changed across preemption")
+    acct = eng.pool.accounting()
+    assert acct["balanced"] and acct["live_pages"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the draft view: pure slices, shared everything else
+# ---------------------------------------------------------------------------
+
+def test_draft_params_is_a_leading_axis_slice(dense_world):
+    params = dense_world["base"].params
+    dp = draft_params(params, 1)
+    for name in params:
+        if name != "layers":
+            assert dp[name] is params[name], (
+                f"{name}: non-layer params must be shared by reference")
+
+    def lead(x):
+        return x.m.shape[0] if isinstance(x, BFP) else x.shape[0]
+
+    full = jax.tree_util.tree_leaves(
+        params["layers"], is_leaf=lambda l: isinstance(l, BFP))
+    cut = jax.tree_util.tree_leaves(
+        dp["layers"], is_leaf=lambda l: isinstance(l, BFP))
+    assert len(full) == len(cut)
+    for f, c in zip(full, cut):
+        assert lead(c) == 1 and lead(f) == 2
+        fm = np.asarray(f.m if isinstance(f, BFP) else f)
+        cm = np.asarray(c.m if isinstance(c, BFP) else c)
+        np.testing.assert_array_equal(cm, fm[:1])
+
+
+# ---------------------------------------------------------------------------
+# eligibility + request validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["rwkv6_3b", "recurrentgemma_2b",
+                                  "seamless_m4t_medium"])
+def test_ineligible_families_refuse_to_draft(arch):
+    cfg = get_smoke_config(arch)
+    ok, why = get_draft_support(cfg)
+    assert not ok and why
+    with pytest.raises(SpeculativeError, match="cannot draft"):
+        draft_config(cfg, 1)
+
+
+def test_transformer_families_are_eligible():
+    for arch in ("qwen2_0_5b", "llama4_scout_17b_16e", "pixtral_12b"):
+        ok, _ = get_draft_support(get_smoke_config(arch))
+        assert ok, arch
+
+
+def test_draft_depth_bounds():
+    cfg = _dense_cfg()
+    with pytest.raises(SpeculativeError, match="draft_layers"):
+        draft_config(cfg, 0)
+    with pytest.raises(SpeculativeError, match="draft_layers"):
+        draft_config(cfg, 3)
+    assert draft_config(cfg, 2).n_layers == 2
+
+
+def test_verify_depth_bounds():
+    with pytest.raises(SpeculativeError, match="k must be >= 1"):
+        make_verify_step(_dense_cfg(), POLICY, k=0, max_len=MAX_LEN)
+
+
+def test_validate_request_speculate_errors():
+    common = dict(batch=4, prompt_len=8, gen=8, smoke=True)
+    with pytest.raises(ServeConfigError, match="must be >= 0"):
+        validate_request("qwen2_0_5b", "int8", speculate=-1, **common)
+    with pytest.raises(ServeConfigError, match="add --engine"):
+        validate_request("qwen2_0_5b", "int8", speculate=2, **common)
+    ek = dict(engine=True, qcache=True, page_size=4, n_pages=40, **common)
+    with pytest.raises(ServeConfigError, match="unsupported for rwkv6_3b"):
+        validate_request("rwkv6_3b", "int8", speculate=2, **ek)
+    with pytest.raises(ServeConfigError, match="--draft-layers"):
+        validate_request("qwen2_0_5b", "int8", speculate=2, draft_layers=99,
+                         **ek)
+    validate_request("qwen2_0_5b", "int8", speculate=2, **ek)  # clean

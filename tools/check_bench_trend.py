@@ -32,7 +32,13 @@ simulated-step clock, so no noise floor applies):
     == pages freed + live — and every completed run must end with zero
     live pages;
   * every batched record must keep ``speedup_vs_serial >= 2`` (the
-    engine's batching win) when its serial twin is present.
+    engine's batching win) when its serial twin is present;
+  * every ``speculative`` record must hold acceptance length
+    ``accepted_tokens_per_step`` strictly above the 1.0 floor (a plain
+    decode step commits exactly one token, so <= 1.0 means the verifier
+    never accepted a draft) and carry ``bitwise_equal_vs_baseline`` —
+    the bench's token-level identity assertion against its
+    speculation-off twin.
 
 Usage (CI runs the first form after snapshotting the committed file)::
 
@@ -152,6 +158,18 @@ def check_serving(baseline, fresh, max_regression_pct):
             errors.append(
                 f"batching win below 2x: {key} "
                 f"speedup={f['speedup_vs_serial']}")
+        if f["mode"] == "speculative":
+            tau = f.get("accepted_tokens_per_step", 0.0)
+            if tau <= 1.0:
+                errors.append(
+                    f"speculation accepted nothing: {key} acceptance "
+                    f"length {tau:.3f} tokens/round <= 1.0 floor (a plain "
+                    f"step commits exactly 1.0; the verifier must accept "
+                    f"draft tokens for speculation to be worth running)")
+            if not f.get("bitwise_equal_vs_baseline", False):
+                errors.append(
+                    f"speculative record not pinned bitwise to its "
+                    f"non-speculative twin: {key}")
         b = base_ix.get(key)
         if b is None:
             continue                     # new coverage: no trend to hold yet
