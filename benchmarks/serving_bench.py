@@ -13,11 +13,20 @@ gated in CI like the kernel bench (tools/check_bench_trend.py --serving):
 - pool occupancy + accounting: pages allocated must equal pages freed
   plus live.
 
-Each family runs the SAME request set twice: ``batched`` (max_batch = N)
-and ``serial`` (max_batch = 1, the engine degenerating to today's
-serve.py loop, golden-pinned by test_engine.py).  Tokens must match
-bitwise between the two modes — batching moves throughput, never results
-— and batched must clear >= 2x serial tokens/step (the acceptance gate).
+Each family runs the SAME request set three times: ``batched``
+(max_batch = N), ``serial`` (max_batch = 1, the engine degenerating to
+today's serve.py loop, golden-pinned by test_engine.py), and ``guarded``
+(max_batch = N with the serving guard attached — pool page checksums
+scanning every step, finite TTFT/stall deadlines, the full degradation
+ladder armed; docs/ROBUSTNESS.md §Serving resilience).  Tokens must
+match bitwise across all three modes — batching moves throughput and
+the guard moves cost, never results — batched must clear >= 2x serial
+tokens/step, and the guarded run must shed ZERO streams at the
+committed load (both acceptance gates in
+tools/check_bench_trend.py --serving).  The guarded record carries
+``n_retries`` / ``n_shed`` / ``n_preemptions`` and the guard's event
+counts, so integrity-scan overhead and any guard action land on the
+trend record.
 
 With ``--speculate K`` eligible families additionally run a speculative
 pair (docs/SERVING.md §Speculative decoding): ``spec_baseline``
@@ -55,6 +64,7 @@ import jax
 from repro.configs import get_smoke_config
 from repro.core.policy import PAPER_INT8
 from repro.launch.engine import Engine, EngineConfig, Request
+from repro.launch.engine_guard import EngineGuard, ServeGuardConfig
 from repro.models import get_draft_support
 
 
@@ -82,14 +92,23 @@ def bench_family(arch: str, *, n_streams: int, prompt_len: int, gen: int,
     rows = []
     results = {}
     prev = None
-    for mode, max_batch in (("batched", n_streams), ("serial", 1)):
+    for mode, max_batch in (("batched", n_streams), ("serial", 1),
+                            ("guarded", n_streams)):
+        # guarded twin: every watchdog armed at finite (but roomy)
+        # thresholds and the integrity scan on every step — the
+        # worst-case guard overhead, with zero expected actions at the
+        # committed load (the trend gate's n_shed == 0 floor).
+        guard = EngineGuard(ServeGuardConfig(
+            scan_every=1, ttft_deadline_steps=64 * max(1, n_streams),
+            stall_deadline_steps=64)) if mode == "guarded" else None
         eng = Engine(cfg, policy, EngineConfig(
             max_len=max_len, page_size=page_size,
             # full residency for every stream: this bench measures the
             # batching win, not eviction churn (tests cover preemption).
             n_pages=n_streams * (max_len // page_size + 1),
             max_batch=max_batch, seed=seed), src_len=prompt_len,
-            params=prev.params if prev else None, share_fns=prev)
+            params=prev.params if prev else None, share_fns=prev,
+            guard=guard)
         prev = eng
         results[mode] = eng.run(list(reqs))
         stats = eng.stats()
@@ -104,11 +123,17 @@ def bench_family(arch: str, *, n_streams: int, prompt_len: int, gen: int,
               f"{stats['steps']} steps = {stats['tokens_per_step']:.2f} "
               f"tokens/step, TTFT p50 {stats['ttft_p50_steps']:.0f} p99 "
               f"{stats['ttft_p99_steps']:.0f}, peak occupancy "
-              f"{stats['pool']['peak_occupancy']:.2f}")
-    for rid in results["batched"]:
-        np.testing.assert_array_equal(
-            results["batched"][rid], results["serial"][rid],
-            err_msg=f"{arch} stream {rid}: batched decode changed tokens")
+              f"{stats['pool']['peak_occupancy']:.2f}"
+              + (f", guard events {stats['guard']['event_counts']}, "
+                 f"{stats['n_shed']} shed" if mode == "guarded" else ""))
+    for mode in ("serial", "guarded"):
+        for rid in results["batched"]:
+            np.testing.assert_array_equal(
+                results["batched"][rid], results[mode][rid],
+                err_msg=f"{arch} stream {rid}: {mode} run changed tokens")
+    assert rows[2]["n_shed"] == 0, (
+        f"{arch}: guard shed {rows[2]['n_shed']} streams at committed load")
+    rows[2]["bitwise_equal_vs_batched"] = True
     speedup = rows[0]["tokens_per_step"] / rows[1]["tokens_per_step"]
     rows[0]["speedup_vs_serial"] = round(speedup, 3)
     print(f"{arch}: batched/serial tokens-per-step = {speedup:.2f}x")

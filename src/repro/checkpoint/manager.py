@@ -133,6 +133,15 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def load_extra(self, step: int) -> Dict:
+        """The ``extra`` metadata saved alongside ``step``'s arrays —
+        readable *before* any template exists.  An engine restoring a
+        serving snapshot reads this first to learn the request set and
+        rebuild the template tree the arrays then restore into."""
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "META.json")) as f:
+            return json.load(f).get("extra", {})
+
     def restore(self, step: int, template: Any, shardings=None) -> Any:
         """Load into the structure of ``template``. ``shardings`` (optional,
         same-structure tree of jax.sharding.Sharding) places each leaf —

@@ -89,8 +89,11 @@ def qmatmul_epi(x: jnp.ndarray, w: jnp.ndarray, key, policy: NumericPolicy,
         bias=bias is not None, out_q=out_q, kernel_mode=policy.kernel_mode,
         accum_chunk=policy.accum_chunk,
         autotune_measure=policy.kernel_autotune)
-    if dec.path != kdispatch.FUSED:
+    if dec.path != kdispatch.FUSED and dec.reason != kdispatch.OP_DISABLED:
         return None
+    # OP_DISABLED stays ON the chain at the mirror rung: the serving guard
+    # dropped the kernel, and the jnp mirror is bit-exact to it — falling
+    # to the per-op path would change the numerics contract mid-serve.
     return _qmatmul_epi(x, w, bias, key, policy, act, out_q, dec)
 
 
@@ -199,8 +202,9 @@ def qnorm_gemm(x: jnp.ndarray, gamma: jnp.ndarray,
     dec = kdispatch.plan_norm_gemm(
         "qnorm_gemm", m, k, n, cfg, kernel_mode=policy.kernel_mode,
         autotune_measure=policy.kernel_autotune)
-    if dec.path != kdispatch.FUSED:
+    if dec.path != kdispatch.FUSED and dec.reason != kdispatch.OP_DISABLED:
         return None
+    # OP_DISABLED: stay on the chain, run its bit-exact mirror rung.
     return _qnorm_gemm(x, gamma, beta, w, key, policy, rms, dec)
 
 
@@ -349,8 +353,11 @@ def qdecode_block(x: jnp.ndarray, g1, g2, wq, wk, wv, wo, wg, wu, wd,
     dec = kdispatch.plan_decode_block(
         "qdecode_block", b, d, n_ff, t, hq, hkv, dh, cfg,
         kernel_mode=policy.kernel_mode)
-    if dec.path != kdispatch.FUSED:
+    if dec.path != kdispatch.FUSED and dec.reason != kdispatch.OP_DISABLED:
         return None
+    # OP_DISABLED: the serving guard dropped the megakernel; keep the
+    # chain and run its bit-exact mirror (decode_block_ref) instead of
+    # changing numerics by falling back to the per-op decode path.
     x = lax.stop_gradient(x)
     wqkv_m, se_qkv = _cat_cols([wq, wk, wv], cfg, jax.random.fold_in(key, 0))
     wo_m, se_o = _cat_cols([wo], cfg, jax.random.fold_in(key, 1))

@@ -142,6 +142,33 @@ def reset_fallback_counts() -> None:
     _fallback_counts.clear()
 
 
+# Ops administratively disabled by the serving guard's degradation ladder
+# (docs/ROBUSTNESS.md §Serving resilience): a plan that would have been
+# FUSED is issued as JNP with the OP_DISABLED reason instead, so retraces
+# run the chain's bit-exact jnp mirror without ever launching the failing
+# kernel again.  The reason lets the chain call sites distinguish "declined
+# (use the per-op path)" from "disabled (stay on the chain, mirror rung)" —
+# the mirror is bit-exact to the kernel, so outputs are unchanged; the
+# per-op path is a different numerics contract.
+OP_DISABLED = "op disabled by serving guard"
+_disabled_ops: set = set()
+
+
+def disable_op(op: str) -> None:
+    """Administratively pin ``op`` (e.g. ``"qdecode_block"``) to its jnp
+    mirror on every subsequent plan."""
+    _disabled_ops.add(op)
+
+
+def enable_ops() -> None:
+    """Re-enable every administratively disabled op."""
+    _disabled_ops.clear()
+
+
+def disabled_ops() -> set:
+    return set(_disabled_ops)
+
+
 @contextlib.contextmanager
 def record_decisions():
     """Collect every Decision planned while the context is open.
@@ -1302,6 +1329,8 @@ def plan_norm_gemm(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
                and backend == jax.default_backend())
     bench = (_make_norm_gemm_bench(m, k, n, cfg, interpret)
              if measure else None)
+    if op in _disabled_ops:
+        return decide(JNP, OP_DISABLED)
     bm = autotune.select_bm(key, m, fits, measure=measure, bench=bench)
     if bm == autotune.JNP_FALLBACK:
         return decide(JNP, "autotune: jnp mirror measured faster", atkey=key)
@@ -1461,6 +1490,8 @@ def plan_epilogue(op: str, m: int, k: int, n: int, cfg: QuantConfig, *,
                and backend == jax.default_backend())
     bench = (_make_epi_bench(kind, m, k, n, cfg, act, bias, out_q, interpret)
              if measure else None)
+    if op in _disabled_ops:
+        return decide(JNP, OP_DISABLED)
     bm = autotune.select_bm(key, m, fits, measure=measure, bench=bench)
     if bm == autotune.JNP_FALLBACK:
         return decide(JNP, "autotune: jnp mirror measured faster", atkey=key)
@@ -1686,6 +1717,8 @@ def plan_decode_block(op: str, b: int, d: int, n_ff: int, t: int, hq: int,
         return decide(JNP, f"auto keeps the per-op path on backend={backend}")
     if _decode_block_vmem_bytes(b, d, n_ff, t, hq, hkv, dh) > vmem_budget:
         return decide(JNP, f"no residency fits vmem_budget={vmem_budget}")
+    if op in _disabled_ops:
+        return decide(JNP, OP_DISABLED)
     return decide(FUSED, "decode block fits VMEM budget")
 
 

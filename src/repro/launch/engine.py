@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..runtime import fault_injection
 from ..runtime.qpool import PoolExhausted, QPool
 from .speculative import draft_config, draft_params, make_spec_decode_step
 from .steps import make_decode_step, make_prefill_step, quantize_serving_params
@@ -108,6 +109,14 @@ class _Running:
     req: Request
     n_decoded: int = 0                    # decode steps taken (serve's i)
     tokens: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # guard bookkeeping (docs/ROBUSTNESS.md §Serving resilience): all of
+    # it is scheduling state — none of it feeds the decode programs.
+    last_progress_step: int = 0           # clock of the last emitted token
+    retries: int = 0                      # guard recoveries of this lane
+    spec_disabled: bool = False           # per-lane ladder: fell to plain
+    n_evictions: int = 0                  # priority-aging input
+    lane_spec_rounds: int = 0             # per-lane tau numerator/denom
+    lane_spec_committed: int = 0
 
     @property
     def pos(self) -> int:
@@ -132,13 +141,16 @@ class Engine:
 
     def __init__(self, cfg, policy, ecfg: EngineConfig, params=None,
                  src_len: Optional[int] = None,
-                 share_fns: Optional["Engine"] = None):
+                 share_fns: Optional["Engine"] = None, guard=None):
         self.cfg = cfg
         self.policy = policy
         self.ecfg = ecfg
+        # the guard turns on pool checksums; without one the engine takes
+        # none of the guard paths and behaves exactly as before.
+        self.guard = guard
         self.pool = QPool(cfg, policy, page_size=ecfg.page_size,
                           n_pages=ecfg.n_pages, max_len=ecfg.max_len,
-                          src_len=src_len)
+                          src_len=src_len, integrity=guard is not None)
         if params is None:
             # model load, exactly as serve.py: init from the seed key,
             # weights quantized once (the deployment contract) when the
@@ -204,6 +216,14 @@ class Engine:
         self.tokens_per_step: List[int] = []
         self.occupancy_trace: List[float] = []
         self.n_preemptions = 0
+        # guard-visible state: dropped streams, recovery count, and the
+        # batch ceiling the thrash ladder may shrink below max_batch (the
+        # vmap program stays padded to max_batch either way).
+        self.shed: Dict[int, str] = {}
+        self.n_retries = 0
+        self.eff_max_batch = ecfg.max_batch
+        if guard is not None:
+            guard.attach(self)
 
     # -- submission --------------------------------------------------------
 
@@ -226,9 +246,17 @@ class Engine:
 
     # -- scheduler ---------------------------------------------------------
 
+    def _lane_priority(self, run: _Running):
+        """Eviction/scheduling priority; with a guard attached this is the
+        guard's AGED priority (each eviction boosts the lane), without one
+        it is exactly the PR 8 rule — bit-identical scheduling."""
+        if self.guard is not None:
+            return self.guard.priority(run)
+        return _priority(run)
+
     def _admit_one(self) -> None:
         """At most one admission per step, preempted sequences first."""
-        if len(self._running) >= self.ecfg.max_batch:
+        if len(self._running) >= self.eff_max_batch:
             return
         if self._preempted:
             run, ckpt = self._preempted[0]
@@ -237,9 +265,12 @@ class Engine:
                 return
             self._preempted.pop(0)
             self.pool.readmit(run.req.rid, ckpt)
+            run.last_progress_step = self.clock
             self._running[run.req.rid] = run
             return
         if not self._waiting:
+            return
+        if self.guard is not None and not self.guard.allow_admission(self):
             return
         req = self._waiting[0]
         need = self.pool.pages_needed(len(req.prompt))
@@ -248,26 +279,33 @@ class Engine:
         self._waiting.pop(0)
         self.pool.admit(req.rid)
         self.pool.ensure_capacity(req.rid, len(req.prompt))
-        run = _Running(req)
+        run = _Running(req, last_progress_step=self.clock)
         self._running[req.rid] = run
         self._do_prefill(run)
 
-    def _do_prefill(self, run: _Running) -> None:
-        req = run.req
+    def _prefill_call(self, req: Request):
+        """The jitted prefill at this request's batch-1 shape — shared by
+        admission and guard lane recovery (both must hit the same program
+        with the same key for the bitwise invariant)."""
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
         for name, arr in (req.extras or {}).items():
             batch[name] = jnp.asarray(arr)[None]
-        cache, logits = self._prefill(self.params, batch,
-                                      self._prefill_key(req))
+        return self._prefill(self.params, batch, self._prefill_key(req))
+
+    def _do_prefill(self, run: _Running) -> None:
+        req = run.req
+        cache, logits = self._prefill_call(req)
         tok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
         run.tokens.append(tok)
+        run.last_progress_step = self.clock
         self.ttft_steps[req.rid] = self.clock - req.arrival_step
         host = jax.tree_util.tree_map(np.asarray, cache)
         self.pool.write(req.rid, host, upto=len(req.prompt))
         self._retire_if_done(run)
 
     def _is_spec(self, run: _Running) -> bool:
-        return self.ecfg.speculate > 0 and run.req.speculate
+        return (self.ecfg.speculate > 0 and run.req.speculate
+                and not run.spec_disabled)
 
     def _spec_budget(self, run: _Running) -> int:
         """Tokens this round may commit: the k drafts + the target's own
@@ -284,7 +322,7 @@ class Engine:
         gives the tail back after accept/reject (``trim_capacity``) —
         evicting the lowest-priority lane (possibly the requester itself)
         whenever the pool runs dry.  Returns this step's decode lanes."""
-        for run in sorted(self._running.values(), key=_priority):
+        for run in sorted(self._running.values(), key=self._lane_priority):
             if run.req.rid not in self._running:
                 continue                      # evicted by an earlier lane
             while run.req.rid in self._running:
@@ -293,7 +331,8 @@ class Engine:
                     self.pool.ensure_capacity(run.req.rid, run.pos + need)
                     break
                 except PoolExhausted:
-                    victim = max(self._running.values(), key=_priority)
+                    victim = max(self._running.values(),
+                                 key=self._lane_priority)
                     if victim is run and need > 1:
                         # the speculative block itself doesn't fit: give
                         # it up and take a plain single-token reservation
@@ -306,13 +345,14 @@ class Engine:
                         except PoolExhausted:
                             pass
                     self._evict(victim)
-        return sorted(self._running.values(), key=_priority)
+        return sorted(self._running.values(), key=self._lane_priority)
 
     def _evict(self, run: _Running) -> None:
         ckpt = self.pool.evict(run.req.rid)
         del self._running[run.req.rid]
+        run.n_evictions += 1
         self._preempted.append((run, ckpt))
-        self._preempted.sort(key=lambda rc: _priority(rc[0]))
+        self._preempted.sort(key=lambda rc: self._lane_priority(rc[0]))
         self.n_preemptions += 1
 
     def _retire_if_done(self, run: _Running) -> None:
@@ -320,6 +360,64 @@ class Engine:
             self.pool.release(run.req.rid)
             del self._running[run.req.rid]
             self.results[run.req.rid] = np.concatenate(run.tokens)
+
+    # -- guard recovery (docs/ROBUSTNESS.md §Serving resilience) -----------
+
+    def _shed_lane(self, rid: int, reason: str) -> None:
+        """Drop a running stream: pages back to the free list, no result
+        recorded, the reason kept for stats/telemetry."""
+        del self._running[rid]
+        self.pool.discard(rid)
+        self.shed[rid] = reason
+        if self.guard is not None:
+            self.guard.clear_lane_faults(rid)
+
+    def _replay(self, run: _Running):
+        """Rebuild a lane's contiguous cache from its committed tokens:
+        re-prefill the prompt, then re-run every committed decode step
+        with its original per-step key and the committed token forced.
+        The chain is deterministic in (prompt, tokens, keys) — and the
+        speculative verify scan IS the sequential program — so the result
+        is bitwise identical to the cache the lane held before the fault,
+        for the KV families and the recurrent state slots alike."""
+        req = run.req
+        cache, _ = self._prefill_call(req)
+        for i in range(run.n_decoded):
+            tok = jnp.asarray(np.asarray(run.tokens[i], np.int32))
+            _, cache = self._decode1(self.params, cache, tok,
+                                     jnp.int32(len(req.prompt) + i),
+                                     self._decode_key(req, i))
+        return jax.tree_util.tree_map(np.asarray, cache)
+
+    def _recover_lane(self, rid: int, reason: str,
+                      quarantine_pid: Optional[int] = None) -> None:
+        """Guard-driven lane retry: discard the lane's pages (retiring the
+        corrupt one to quarantine), clear any injected lane fault, and
+        re-admit the replayed cache into fresh pages — evicting other
+        lanes if the (possibly shrunken) pool demands it."""
+        run = self._running[rid]
+        self.pool.discard(rid, quarantine={quarantine_pid}
+                          if quarantine_pid is not None else None)
+        if self.guard is not None:
+            self.guard.clear_lane_faults(rid)
+        run.retries += 1
+        self.n_retries += 1
+        self.pool.admit(rid)
+        while True:
+            try:
+                self.pool.ensure_capacity(rid, run.pos)
+                break
+            except PoolExhausted:
+                others = [r for r in self._running.values()
+                          if r.req.rid != rid]
+                if not others:
+                    self.pool.release(rid)
+                    del self._running[rid]
+                    self.shed[rid] = f"{reason}: pool cannot hold the lane"
+                    return
+                self._evict(max(others, key=self._lane_priority))
+        self.pool.write(rid, self._replay(run), upto=run.pos)
+        run.last_progress_step = self.clock
 
     def _decode_batch(self, lanes: List[_Running]) -> None:
         """One scheduler step's decode: speculative and plain lanes split
@@ -368,6 +466,7 @@ class Engine:
             self.pool.set_length(run.req.rid, run.pos + 1)
             run.n_decoded += 1
             run.tokens.append(tok)
+            run.last_progress_step = self.clock
             self._retire_if_done(run)
 
     def _decode_spec(self, lanes: List[_Running]) -> None:
@@ -431,6 +530,9 @@ class Engine:
             self.spec_accepted += m - 1
             if m < mc:
                 self.spec_rejections += 1
+            run.last_progress_step = self.clock
+            run.lane_spec_rounds += 1
+            run.lane_spec_committed += m
             self._retire_if_done(run)
 
     def step(self) -> int:
@@ -438,11 +540,20 @@ class Engine:
         self.clock += 1
         while self._pending and self._pending[0].arrival_step <= self.clock:
             self._waiting.append(self._pending.pop(0))
+        if self.guard is not None:
+            self.guard.on_step(self)
         emitted_before = sum(len(r) for r in self.results.values()) + sum(
             len(r.tokens) for r in self._running.values()) + sum(
             len(rc[0].tokens) for rc in self._preempted)
         self._admit_one()
-        lanes = self._reserve_or_preempt()[:self.ecfg.max_batch]
+        lanes = self._reserve_or_preempt()
+        # an injected lane stall models a hung device: the lane keeps its
+        # pages but gets no decode work, so only the guard's stall
+        # watchdog (or a shed) can get it moving again.  With nothing
+        # stalled this filter is the identity.
+        lanes = [r for r in lanes
+                 if not fault_injection.lane_stalled(r.req.rid)]
+        lanes = lanes[:self.eff_max_batch]
         if lanes:
             self._decode_batch(lanes)
         emitted = sum(len(r) for r in self.results.values()) + sum(
@@ -485,12 +596,19 @@ class Engine:
             "ttft_p50_steps": pct(50),
             "ttft_p99_steps": pct(99),
             "n_preemptions": self.n_preemptions,
+            "n_retries": self.n_retries,
+            "n_shed": len(self.shed),
             "pool": {**self.pool.accounting(),
                      "n_pages": self.pool.n_pages,
                      "peak_live": self.pool.peak_live,
                      "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
                      "peak_occupancy": float(np.max(occ)) if occ else 0.0},
         }
+        if self.guard is not None:
+            out["guard"] = {"events": len(self.guard.events),
+                            "event_counts": self.guard.event_counts(),
+                            "eff_max_batch": self.eff_max_batch,
+                            "shed": {str(k): v for k, v in self.shed.items()}}
         if self.ecfg.speculate > 0:
             out["speculate"] = self.ecfg.speculate
             out["draft_layers"] = self.ecfg.draft_layers
@@ -510,3 +628,178 @@ class Engine:
                 self.spec_accepted / self.spec_rounds if self.spec_rounds
                 else 0.0)
         return out
+
+    # -- crash-recoverable snapshots (docs/ROBUSTNESS.md) ------------------
+    #
+    # Everything the scheduler knows is host-side integers: pool pages
+    # (int8 mantissas + int32 exponents), page tables, the free list,
+    # committed token streams, and per-request seeds — the step keys are
+    # pure functions of (seed, step index), so they re-derive exactly.  A
+    # snapshot therefore captures serving state EXACTLY, and a restored
+    # engine continues every stream bitwise identical to an uninterrupted
+    # run.  Preempted lanes' caches were already freed at eviction; their
+    # checkpoints are rebuilt at restore by the same committed-token
+    # replay the guard's lane recovery uses.
+
+    def save_snapshot(self, mgr, step: Optional[int] = None) -> int:
+        """Serialize the full serving state through ``CheckpointManager``
+        at a step boundary; returns the snapshot's step id."""
+        step = self.clock if step is None else step
+        reqs_meta: Dict[str, dict] = {}
+        prompts: Dict[str, np.ndarray] = {}
+        tokens: Dict[str, np.ndarray] = {}
+        extras: Dict[str, dict] = {}
+
+        def add(req: Request, status: str, run: Optional[_Running] = None):
+            rid = str(req.rid)
+            entry = {"status": status, "gen": req.gen,
+                     "arrival_step": req.arrival_step, "seed": req.seed,
+                     "speculate": bool(req.speculate),
+                     "prompt_len": int(len(req.prompt)),
+                     "extras": {k: {"shape": list(np.shape(v)),
+                                    "dtype": str(np.asarray(v).dtype)}
+                                for k, v in (req.extras or {}).items()}}
+            if run is not None:
+                entry.update(
+                    n_decoded=run.n_decoded, retries=run.retries,
+                    spec_disabled=run.spec_disabled,
+                    n_evictions=run.n_evictions,
+                    last_progress_step=run.last_progress_step,
+                    lane_spec_rounds=run.lane_spec_rounds,
+                    lane_spec_committed=run.lane_spec_committed,
+                    n_tokens=len(run.tokens))
+                if run.tokens:
+                    tokens[rid] = np.concatenate(
+                        [np.asarray(t, np.int32) for t in run.tokens])
+            reqs_meta[rid] = entry
+            prompts[rid] = np.asarray(req.prompt, np.int32)
+            if req.extras:
+                extras[rid] = {k: np.asarray(v)
+                               for k, v in req.extras.items()}
+
+        for r in self._pending:
+            add(r, "pending")
+        for r in self._waiting:
+            add(r, "waiting")
+        for run in self._running.values():
+            add(run.req, "running", run)
+        for run, _ckpt in self._preempted:
+            add(run.req, "preempted", run)
+        tree = {"pool": self.pool.snapshot_arrays(),
+                "prompts": prompts, "tokens": tokens, "extras": extras,
+                "results": {str(rid): np.asarray(v, np.int32)
+                            for rid, v in self.results.items()}}
+        meta = {
+            "kind": "engine_snapshot",
+            "clock": self.clock,
+            "n_preemptions": self.n_preemptions,
+            "n_retries": self.n_retries,
+            "eff_max_batch": self.eff_max_batch,
+            "shed": {str(k): v for k, v in self.shed.items()},
+            "ttft_steps": {str(k): int(v)
+                           for k, v in self.ttft_steps.items()},
+            "tokens_per_step": [int(x) for x in self.tokens_per_step],
+            "occupancy_trace": [float(x) for x in self.occupancy_trace],
+            "spec_rounds": self.spec_rounds,
+            "spec_accepted": self.spec_accepted,
+            "spec_rejections": self.spec_rejections,
+            "result_lens": {str(rid): int(len(v))
+                            for rid, v in self.results.items()},
+            "pool": self.pool.snapshot_meta(),
+            "requests": reqs_meta,
+            "order": {"pending": [r.rid for r in self._pending],
+                      "waiting": [r.rid for r in self._waiting],
+                      "preempted": [run.req.rid
+                                    for run, _ in self._preempted]},
+            "ecfg": dataclasses.asdict(self.ecfg),
+            "guard": (self.guard.state_dict()
+                      if self.guard is not None else None),
+        }
+        mgr.save(step, tree, extra=meta)
+        return step
+
+    def restore_snapshot(self, mgr, step: Optional[int] = None) -> int:
+        """Rebuild serving state on this freshly-constructed engine (same
+        cfg/policy/EngineConfig as the snapshotting one — validated).  The
+        jit caches are not state: programs recompile (or come via
+        ``share_fns``) and retrace to the same bits."""
+        step = mgr.latest_step() if step is None else step
+        if step is None:
+            raise ValueError("no snapshot to restore")
+        meta = mgr.load_extra(step)
+        if meta.get("kind") != "engine_snapshot":
+            raise ValueError(f"step {step} is not an engine snapshot")
+        if meta["ecfg"] != dataclasses.asdict(self.ecfg):
+            raise ValueError(
+                f"snapshot EngineConfig {meta['ecfg']} != this engine's "
+                f"{dataclasses.asdict(self.ecfg)}")
+        rm = meta["requests"]
+        template = {
+            "pool": self.pool.snapshot_arrays(),
+            "prompts": {rid: np.zeros(e["prompt_len"], np.int32)
+                        for rid, e in rm.items()},
+            "tokens": {rid: np.zeros(e["n_tokens"], np.int32)
+                       for rid, e in rm.items() if e.get("n_tokens")},
+            "extras": {rid: {k: np.zeros(s["shape"], np.dtype(s["dtype"]))
+                             for k, s in e["extras"].items()}
+                       for rid, e in rm.items() if e["extras"]},
+            "results": {rid: np.zeros(n, np.int32)
+                        for rid, n in meta["result_lens"].items()},
+        }
+        tree = mgr.restore(step, template)
+        self.pool.restore_state(meta["pool"], tree["pool"])
+
+        def build_req(rid: str) -> Request:
+            e = rm[rid]
+            ex = None
+            if e["extras"]:
+                ex = {k: np.asarray(v) for k, v in tree["extras"][rid].items()}
+            return Request(rid=int(rid),
+                           prompt=np.asarray(tree["prompts"][rid], np.int32),
+                           gen=int(e["gen"]),
+                           arrival_step=int(e["arrival_step"]),
+                           seed=int(e["seed"]), extras=ex,
+                           speculate=bool(e["speculate"]))
+
+        def build_run(rid: str) -> _Running:
+            e = rm[rid]
+            toks = (np.asarray(tree["tokens"][rid], np.int32)
+                    if e["n_tokens"] else np.zeros(0, np.int32))
+            return _Running(
+                build_req(rid), n_decoded=int(e["n_decoded"]),
+                tokens=[toks[i:i + 1] for i in range(len(toks))],
+                last_progress_step=int(e["last_progress_step"]),
+                retries=int(e["retries"]),
+                spec_disabled=bool(e["spec_disabled"]),
+                n_evictions=int(e["n_evictions"]),
+                lane_spec_rounds=int(e["lane_spec_rounds"]),
+                lane_spec_committed=int(e["lane_spec_committed"]))
+
+        self._pending = [build_req(str(r)) for r in meta["order"]["pending"]]
+        self._waiting = [build_req(str(r)) for r in meta["order"]["waiting"]]
+        self._running = {int(rid): build_run(rid)
+                         for rid, e in rm.items() if e["status"] == "running"}
+        # preempted checkpoints were freed at eviction; rebuild them by
+        # committed-token replay (bitwise — the eviction-resume invariant)
+        self._preempted = []
+        for rid in meta["order"]["preempted"]:
+            run = build_run(str(rid))
+            self._preempted.append(
+                (run, {"cache": self._replay(run), "length": run.pos}))
+        self.results = {int(rid): np.asarray(v, np.int32)
+                        for rid, v in tree["results"].items()}
+        self.clock = int(meta["clock"])
+        self.n_preemptions = int(meta["n_preemptions"])
+        self.n_retries = int(meta["n_retries"])
+        self.eff_max_batch = int(meta["eff_max_batch"])
+        self.shed = {int(k): v for k, v in meta["shed"].items()}
+        self.ttft_steps = {int(k): int(v)
+                           for k, v in meta["ttft_steps"].items()}
+        self.tokens_per_step = [int(x) for x in meta["tokens_per_step"]]
+        self.occupancy_trace = [float(x) for x in meta["occupancy_trace"]]
+        self.spec_rounds = int(meta["spec_rounds"])
+        self.spec_accepted = int(meta["spec_accepted"])
+        self.spec_rejections = int(meta["spec_rejections"])
+        if self.guard is not None and meta["guard"] is not None:
+            self.guard.load_state(meta["guard"])
+        return step

@@ -1,0 +1,250 @@
+"""Serving-side guard: watchdogs, recovery, overload control, degradation.
+
+``TrainSupervisor`` (launch.supervisor) wraps the training loop in a
+numeric-health sentinel plus rollback; this module is the serving half
+(docs/ROBUSTNESS.md §Serving resilience).  An :class:`EngineGuard` is
+consulted once per ``Engine.step`` and may only take actions that change
+SCHEDULING or COST — never numerics:
+
+* **Deadlines.**  A stream past its TTFT deadline is shed from the wait
+  queue; a running lane that stops emitting tokens past the stall
+  deadline is recovered (below) rather than wedging the engine.
+* **Lane recovery by re-prefill.**  A lane whose pool pages fail their
+  integrity checksum, or whose decode has stalled, is rebuilt from its
+  COMMITTED token stream: discard the pages (quarantining the corrupt
+  one), re-prefill the prompt, and replay each committed decode step
+  with its original per-step key and the committed token forced.  The
+  decode chain is deterministic in (prompt, tokens, keys), so the
+  rebuilt cache is bitwise identical to the pre-fault state — the same
+  invariant eviction/re-admission is pinned on — and the stream's
+  remaining tokens are unchanged.
+* **Overload control.**  Fresh admissions are backpressured during a
+  thrash cooldown; priority aging boosts a lane's priority each time it
+  is evicted, so preemption-by-eviction can never livelock one stream
+  into starvation.
+* **Degradation ladder.**  Low per-lane speculative acceptance ⇒ that
+  lane falls back to plain decode (bitwise-identical tokens, PR 9's
+  pin); repeated dispatch fallbacks ⇒ ``qdecode_block`` is
+  administratively dropped to its bit-exact jnp mirror; pool thrash ⇒
+  the effective batch ceiling shrinks.
+
+Every action lands in ``events`` — plain dicts, JSON-able — mirroring the
+training supervisor's telemetry stream.  With no guard attached the
+engine takes none of these paths and behaves bit-identically to PR 9
+(``test_engine_guard.py`` pins both directions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from ..kernels import dispatch as kdispatch
+from ..runtime import fault_injection
+
+__all__ = ["EngineGuard", "ServeGuardConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeGuardConfig:
+    """Thresholds for the serving guard, in SIMULATED scheduler steps
+    (the engine's deterministic clock), so every guard decision is
+    replayable."""
+
+    # deadlines
+    ttft_deadline_steps: Optional[int] = None   # None: never shed on TTFT
+    stall_deadline_steps: int = 12              # no token for this long
+    max_lane_retries: int = 2                   # then the lane is shed
+    # integrity
+    scan_every: int = 4                         # pool checksum scan period
+    # degradation ladder
+    min_accept_tau: float = 1.05                # per-lane spec floor
+    min_spec_rounds: int = 4                    # rounds before judging tau
+    max_kernel_fallbacks: int = 2               # then drop qdecode_block
+    thrash_preemptions: int = 8                 # per window
+    thrash_window_steps: int = 16
+    min_max_batch: int = 1
+    # overload control
+    age_boost_steps: int = 4                    # priority boost per eviction
+
+
+class EngineGuard:
+    """One guard watches one engine (``Engine(..., guard=...)`` attaches
+    it); ``on_step`` runs before admission each scheduler step."""
+
+    def __init__(self, gcfg: Optional[ServeGuardConfig] = None):
+        self.gcfg = gcfg or ServeGuardConfig()
+        self.events: List[dict] = []
+        self._engine = None
+        self._fallback_base: Dict[str, int] = {}
+        self._qdecode_dropped = False
+        self._window_start = 0
+        self._preempt_base = 0
+        self._cooldown_until = -1
+
+    # -- telemetry ---------------------------------------------------------
+
+    def _event(self, step: int, event: str, **detail) -> None:
+        self.events.append({"step": int(step), "event": event, **detail})
+
+    def event_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.events:
+            out[e["event"]] = out.get(e["event"], 0) + 1
+        return out
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def attach(self, engine) -> None:
+        if self._engine is not None and self._engine is not engine:
+            raise ValueError("EngineGuard is already attached to an engine")
+        self._engine = engine
+        self._fallback_base = dict(kdispatch.fallback_counts())
+        self._window_start = engine.clock
+        self._preempt_base = engine.n_preemptions
+
+    def priority(self, run):
+        """Aged eviction priority: every eviction a lane suffers moves its
+        effective arrival ``age_boost_steps`` earlier, so a repeatedly
+        preempted stream eventually outranks fresh arrivals and cannot be
+        starved forever.  Ties stay rid-ordered — deterministic."""
+        boost = self.gcfg.age_boost_steps * run.n_evictions
+        return (run.req.arrival_step - boost, run.req.rid)
+
+    def allow_admission(self, engine) -> bool:
+        """Backpressure hook for FRESH admissions (preempted streams are
+        always allowed back — holding them out is how starvation starts):
+        refused during the cooldown that follows a thrash response."""
+        return engine.clock > self._cooldown_until
+
+    # -- the per-step check ------------------------------------------------
+
+    def on_step(self, engine) -> None:
+        g = self.gcfg
+        clock = engine.clock
+        self._check_integrity(engine)
+        self._check_stalls(engine)
+        self._check_ttft(engine)
+        self._check_spec_tau(engine)
+        self._check_kernel_fallbacks(engine)
+        # pool-thrash window: too many preemptions per window ⇒ the
+        # running set does not fit the pool; shrink the batch ceiling so
+        # admissions stop overcommitting pages.  Threshold check runs
+        # BEFORE the window rolls over — a count that hits the limit
+        # exactly at the boundary must still trip it.
+        if (engine.n_preemptions - self._preempt_base >= g.thrash_preemptions
+                and engine.eff_max_batch > g.min_max_batch):
+            new = max(g.min_max_batch, engine.eff_max_batch // 2)
+            self._event(clock, "max_batch_shrunk",
+                        was=engine.eff_max_batch, now=new,
+                        preemptions=engine.n_preemptions - self._preempt_base)
+            engine.eff_max_batch = new
+            self._preempt_base = engine.n_preemptions
+            self._window_start = clock
+            self._cooldown_until = clock + g.thrash_window_steps
+        elif clock - self._window_start >= g.thrash_window_steps:
+            self._window_start = clock
+            self._preempt_base = engine.n_preemptions
+
+    def _check_integrity(self, engine) -> None:
+        g = self.gcfg
+        if not engine.pool.integrity or g.scan_every <= 0:
+            return
+        if engine.clock % g.scan_every:
+            return
+        scan = engine.pool.scan_integrity()
+        for pid in scan["corrupt"]:
+            owner = engine.pool.owner_of(pid)
+            if owner is None:
+                engine.pool.quarantine_page(pid)
+                self._event(engine.clock, "page_quarantined", page=pid)
+            else:
+                self._event(engine.clock, "page_corruption", page=pid,
+                            rid=owner)
+                self._recover_or_shed(engine, owner, "page_corruption",
+                                      quarantine_pid=pid)
+
+    def _check_stalls(self, engine) -> None:
+        g = self.gcfg
+        for run in list(engine._running.values()):
+            idle = engine.clock - run.last_progress_step
+            if idle < g.stall_deadline_steps:
+                continue
+            self._event(engine.clock, "lane_stalled", rid=run.req.rid,
+                        idle_steps=idle)
+            self._recover_or_shed(engine, run.req.rid, "lane_stall")
+
+    def _recover_or_shed(self, engine, rid: int, reason: str,
+                         quarantine_pid: Optional[int] = None) -> None:
+        run = engine._running[rid]
+        if run.retries >= self.gcfg.max_lane_retries:
+            engine._shed_lane(rid, f"{reason}: retries exhausted")
+            self._event(engine.clock, "stream_shed", rid=rid, reason=reason,
+                        retries=run.retries)
+            return
+        engine._recover_lane(rid, reason, quarantine_pid=quarantine_pid)
+        self._event(engine.clock, "lane_recovered", rid=rid, reason=reason,
+                    retries=run.retries, replayed=run.n_decoded)
+
+    def _check_ttft(self, engine) -> None:
+        g = self.gcfg
+        if g.ttft_deadline_steps is None:
+            return
+        for req in list(engine._waiting):
+            waited = engine.clock - req.arrival_step
+            if waited > g.ttft_deadline_steps:
+                engine._waiting.remove(req)
+                engine.shed[req.rid] = "ttft_deadline"
+                self._event(engine.clock, "stream_shed", rid=req.rid,
+                            reason="ttft_deadline", waited_steps=waited)
+
+    def _check_spec_tau(self, engine) -> None:
+        g = self.gcfg
+        if engine.ecfg.speculate <= 0:
+            return
+        for run in engine._running.values():
+            if run.spec_disabled or run.lane_spec_rounds < g.min_spec_rounds:
+                continue
+            tau = run.lane_spec_committed / run.lane_spec_rounds
+            if tau < g.min_accept_tau:
+                run.spec_disabled = True
+                self._event(engine.clock, "spec_disabled", rid=run.req.rid,
+                            tau=round(tau, 4), rounds=run.lane_spec_rounds)
+
+    def _check_kernel_fallbacks(self, engine) -> None:
+        if self._qdecode_dropped:
+            return
+        cur = kdispatch.fallback_counts()
+        delta = (sum(cur.values())
+                 - sum(self._fallback_base.get(k, 0) for k in cur))
+        if delta >= self.gcfg.max_kernel_fallbacks:
+            kdispatch.disable_op("qdecode_block")
+            self._qdecode_dropped = True
+            self._event(engine.clock, "qdecode_block_dropped",
+                        fallbacks=delta)
+
+    # -- recovery hooks shared with the engine -----------------------------
+
+    def clear_lane_faults(self, rid: int) -> None:
+        """Recovery tears down the lane's device work; any injected stall
+        goes with it (the chaos harness's stand-in for a real hang)."""
+        fault_injection.clear_lane_stalls(rid)
+
+    # -- snapshot ----------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {"events": list(self.events),
+                "fallback_base": dict(self._fallback_base),
+                "qdecode_dropped": self._qdecode_dropped,
+                "window_start": self._window_start,
+                "preempt_base": self._preempt_base,
+                "cooldown_until": self._cooldown_until}
+
+    def load_state(self, state: dict) -> None:
+        self.events = [dict(e) for e in state["events"]]
+        self._fallback_base = {str(k): int(v)
+                               for k, v in state["fallback_base"].items()}
+        self._qdecode_dropped = bool(state["qdecode_dropped"])
+        self._window_start = int(state["window_start"])
+        self._preempt_base = int(state["preempt_base"])
+        self._cooldown_until = int(state["cooldown_until"])

@@ -397,7 +397,8 @@ def serve_engine(arch: str, *, smoke: bool = True, batch: int = 4,
                  prompt_len: int = 32, gen: int = 16,
                  policy_name: str = "int8", seed: int = 0, page_size: int = 16,
                  n_pages: int = 64, max_batch: int = 4, speculate: int = 0,
-                 draft_layers: int = 0, quiet: bool = False):
+                 draft_layers: int = 0, guard: bool = False,
+                 quiet: bool = False):
     """Route a smoke request set — ``batch`` concurrent streams with the
     same prompt randomness ``serve`` would draw — through the
     continuous-batching engine (launch/engine.py) and report the
@@ -406,8 +407,13 @@ def serve_engine(arch: str, *, smoke: bool = True, batch: int = 4,
     this exercises admission, iteration-level batching and the pool.
     ``speculate`` > 0 arms truncated-draft speculative decoding
     (``draft_layers`` defaults to all-but-one layer); tokens are bitwise
-    identical either way — speculation moves steps, never results."""
+    identical either way — speculation moves steps, never results.
+    ``guard`` attaches an :class:`~repro.launch.engine_guard.EngineGuard`
+    (docs/ROBUSTNESS.md §Serving resilience): pool page checksums, stall
+    watchdogs, and the serving degradation ladder — also bitwise, the
+    guard moves scheduling and cost, never numerics."""
     from .engine import Engine, EngineConfig, Request
+    from .engine_guard import EngineGuard
     validate_request(arch, policy_name, batch=batch, prompt_len=prompt_len,
                      gen=gen, qcache=True, engine=True, page_size=page_size,
                      n_pages=n_pages, speculate=speculate,
@@ -425,7 +431,8 @@ def serve_engine(arch: str, *, smoke: bool = True, batch: int = 4,
     eng = Engine(cfg, policy, EngineConfig(
         max_len=max_len, page_size=page_size, n_pages=n_pages,
         max_batch=max_batch, seed=seed, speculate=speculate,
-        draft_layers=draft_layers), src_len=prompt_len)
+        draft_layers=draft_layers), src_len=prompt_len,
+        guard=EngineGuard() if guard else None)
     reqs = [Request(rid=i, prompt=prompts[i], gen=gen, arrival_step=i,
                     seed=seed + i) for i in range(batch)]
     results = eng.run(reqs)
@@ -464,6 +471,12 @@ def serve_engine(arch: str, *, smoke: bool = True, batch: int = 4,
         print(f"pool: peak {pool['peak_live']}/{pool['n_pages']} pages, "
               f"allocs {pool['page_allocs']} = frees {pool['page_frees']} "
               f"+ live {pool['live_pages']} (balanced={pool['balanced']})")
+        if guard:
+            g = stats["guard"]
+            print(f"guard: {g['events']} events {g['event_counts']}, "
+                  f"{stats['n_retries']} lane retries, "
+                  f"{stats['n_shed']} streams shed, eff_max_batch "
+                  f"{g['eff_max_batch']}")
         eng_row = stats["cache_traffic"]["engine"]
         print(f"engine cache traffic/lane: contiguous "
               f"{eng_row['contiguous_bytes_per_lane'] / 1e6:.3f} MB -> "
@@ -653,19 +666,29 @@ def main(argv=None):
     ap.add_argument("--draft-layers", type=int, default=0,
                     help="layers in the truncated self-draft (--speculate); "
                          "0 means all but the last layer")
+    ap.add_argument("--guard", action="store_true", default=False,
+                    help="attach the serving guard (--engine): pool page "
+                         "checksums, deadline watchdogs, lane recovery, "
+                         "and the degradation ladder "
+                         "(docs/ROBUSTNESS.md §Serving resilience); "
+                         "output stays bitwise identical")
     args = ap.parse_args(argv)
     try:
         if (args.speculate or args.draft_layers) and not args.engine:
             raise ServeConfigError(
                 "--speculate runs inside the continuous-batching engine's "
                 "decode loop; add --engine")
+        if args.guard and not args.engine:
+            raise ServeConfigError(
+                "--guard watches the continuous-batching engine; "
+                "add --engine")
         if args.engine:
             serve_engine(args.arch, smoke=args.smoke, batch=args.batch,
                          prompt_len=args.prompt_len, gen=args.gen,
                          policy_name=args.policy, page_size=args.page_size,
                          n_pages=args.n_pages, max_batch=args.max_batch,
                          speculate=args.speculate,
-                         draft_layers=args.draft_layers)
+                         draft_layers=args.draft_layers, guard=args.guard)
         else:
             serve(args.arch, smoke=args.smoke, batch=args.batch,
                   prompt_len=args.prompt_len, gen=args.gen,

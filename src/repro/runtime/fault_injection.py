@@ -42,6 +42,8 @@ __all__ = [
     "kernel_failure_armed", "maybe_fail_kernel",
     "corrupt_master_exponent", "flip_mantissa_bits", "nan_carrier",
     "SimClock", "HostSim", "FaultPlan",
+    "flip_pool_page_bits", "stall_lane", "lane_stalled",
+    "clear_lane_stalls", "ServingFaultPlan",
 ]
 
 
@@ -154,6 +156,81 @@ def nan_carrier(masters, leaf_index: int = 0):
         return bad if p == path else x
     return jax.tree_util.tree_map_with_path(
         replace, masters, is_leaf=lambda x: isinstance(x, BFP))
+
+
+# ---------------------------------------------------------------------------
+# serving-fault injectors (consumed by launch.engine / tools/chaos_smoke.py)
+# ---------------------------------------------------------------------------
+
+def flip_pool_page_bits(pool, pid: int, seed: int,
+                        n_flips: int = 8) -> None:
+    """Flip ``n_flips`` seeded random mantissa bits inside physical page
+    ``pid`` of a :class:`~repro.runtime.qpool.QPool` — the serving-side
+    silent-corruption model (a DRAM fault in the block-paged qcache).
+
+    The flips mutate the pool storage in place and deliberately do NOT
+    touch the recorded per-page checksum, so ``scan_integrity`` must
+    catch the mismatch.  Deterministic in ``seed``."""
+    role = pool._role.get(pid)
+    store = pool._slots if role == "slot" else pool._paged
+    if not store:
+        store = pool._slots or pool._paged
+    gen = np.random.Generator(np.random.Philox(seed))
+    names = sorted(store)
+    for _ in range(n_flips):
+        parts = store[names[int(gen.integers(0, len(names)))]]
+        # prefer mantissas; fall back to whatever integer part exists
+        pname = "m" if "m" in parts else sorted(parts)[0]
+        arr = parts[pname][pid]
+        flat = arr.reshape(-1)
+        i = int(gen.integers(0, flat.size))
+        b = int(gen.integers(0, 8 * flat.dtype.itemsize - 1))
+        flat[i] = flat[i] ^ np.asarray(1 << b, flat.dtype)
+
+
+# lanes currently stalled by injection: the engine skips a stalled lane's
+# decode entirely (it makes no progress, exactly like a hung device), so
+# only the guard's stall watchdog can get it moving again.
+_stalled_lanes: Set[int] = set()
+
+
+def stall_lane(rid: int) -> None:
+    """Stall sequence ``rid``: from now on the engine schedules no decode
+    work for it.  Persists until :func:`clear_lane_stalls` — which the
+    guard's recovery path calls for the lane it retries, standing in for
+    tearing down and re-creating the lane's device work."""
+    _stalled_lanes.add(rid)
+
+
+def lane_stalled(rid: int) -> bool:
+    return rid in _stalled_lanes
+
+
+def clear_lane_stalls(rid: Optional[int] = None) -> None:
+    if rid is None:
+        _stalled_lanes.clear()
+    else:
+        _stalled_lanes.discard(rid)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingFaultPlan:
+    """Declarative chaos schedule for one serving run, applied by
+    ``tools/chaos_smoke.py --serving`` between ``Engine.step`` calls.
+
+    ``corrupt_step``: flip mantissa bits in one of ``corrupt_rid``'s pool
+    pages after that step.  ``stall_step``: stall ``stall_rid``'s lane.
+    ``kernel_fail_step``: arm an any-path kernel failure (the dispatch
+    ladder absorbs it at trace time).  ``crash_step``: snapshot + kill the
+    engine after that step and restore into a fresh one."""
+
+    corrupt_step: Optional[int] = None
+    corrupt_rid: int = 0
+    corrupt_seed: int = 0xDECAF
+    stall_step: Optional[int] = None
+    stall_rid: int = 0
+    kernel_fail_step: Optional[int] = None
+    crash_step: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------

@@ -36,14 +36,16 @@ cache trees produced by ``gather``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import zlib
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
 from ..core import BFP
 from ..models import get_cache_page_spec
 
-__all__ = ["QPool", "PoolConfigError", "PoolExhausted", "SeqPages"]
+__all__ = ["QPool", "PoolConfigError", "PoolExhausted",
+           "PoolAccountingError", "SeqPages"]
 
 
 class PoolConfigError(ValueError):
@@ -54,6 +56,14 @@ class PoolConfigError(ValueError):
 class PoolExhausted(RuntimeError):
     """No free page for an allocation.  The engine catches this and
     preempts the lowest-priority running sequence (docs/SERVING.md)."""
+
+
+class PoolAccountingError(RuntimeError):
+    """The free list was about to be corrupted: a double free, a free of a
+    page owned by another sequence, or an alloc/free imbalance.  Raised
+    instead of silently appending — a duplicated free-list entry would
+    hand the same physical page to two sequences and corrupt both their
+    caches (docs/ROBUSTNESS.md)."""
 
 
 @dataclasses.dataclass
@@ -93,7 +103,8 @@ class QPool:
     """
 
     def __init__(self, cfg, policy, *, page_size: int, n_pages: int,
-                 max_len: int, src_len: Optional[int] = None):
+                 max_len: int, src_len: Optional[int] = None,
+                 integrity: bool = False):
         if page_size <= 0:
             raise PoolConfigError(
                 f"page_size must be >= 1 cache row, got {page_size}")
@@ -149,6 +160,15 @@ class QPool:
         self.page_allocs = 0
         self.page_frees = 0
         self.peak_live = 0
+        # integrity layer: page -> owning sequence for every live page,
+        # quarantined pages (never returned to the free list), and — when
+        # ``integrity`` is on — a pure-integer checksum per page folded
+        # over its mantissas + exponents (docs/ROBUSTNESS.md).
+        self.integrity = integrity
+        self._owner: Dict[int, int] = {}
+        self._quarantined: Set[int] = set()
+        self._role: Dict[int, str] = {}
+        self._sums: Dict[int, int] = {}
 
     # -- free-list primitives ----------------------------------------------
 
@@ -158,26 +178,52 @@ class QPool:
 
     @property
     def live_pages(self) -> int:
-        return self.n_pages - len(self._free)
+        return self.n_pages - len(self._free) - len(self._quarantined)
 
-    def _alloc_page(self, reset_paged: bool) -> int:
+    def _alloc_page(self, rid: int, reset_paged: bool) -> int:
         if not self._free:
             raise PoolExhausted(
-                f"pool exhausted: {self.n_pages} pages all live")
+                f"pool exhausted: {self.n_pages} pages all live"
+                + (f" ({len(self._quarantined)} quarantined)"
+                   if self._quarantined else ""))
         pid = self._free.pop()
         self.page_allocs += 1
+        self._owner[pid] = rid
         store = self._paged if reset_paged else self._slots
         for parts in store.values():
             for pname, arr in parts.items():
                 arr[pid] = _reset_fill(pname)
+        if self.integrity:
+            self._role[pid] = "paged" if reset_paged else "slot"
+            self._sums[pid] = self._page_checksum(pid)
         self.peak_live = max(self.peak_live, self.live_pages)
         return pid
 
-    def _free_page(self, pid: int) -> None:
+    def _free_page(self, pid: int, rid: int,
+                   quarantine: bool = False) -> None:
         # copy-free handoff: the data is left in place; the next alloc
-        # resets it.
-        self._free.append(pid)
+        # resets it.  Double frees and frees of a page another sequence
+        # owns are accounting corruption, not recoverable states.
+        owner = self._owner.get(pid)
+        if pid in self._quarantined or owner is None:
+            raise PoolAccountingError(
+                f"double free of page {pid} by sequence {rid}: page is "
+                f"{'quarantined' if pid in self._quarantined else 'already free'}")
+        if owner != rid:
+            raise PoolAccountingError(
+                f"sequence {rid} freed page {pid} owned by sequence "
+                f"{owner}")
+        del self._owner[pid]
+        if quarantine:
+            self._quarantined.add(pid)
+        else:
+            self._free.append(pid)
         self.page_frees += 1
+        if self.page_allocs != self.page_frees + self.live_pages:
+            raise PoolAccountingError(
+                f"pool accounting out of balance after freeing page {pid} "
+                f"(sequence {rid}): allocs={self.page_allocs} != "
+                f"frees={self.page_frees} + live={self.live_pages}")
 
     # -- sequence lifecycle ------------------------------------------------
 
@@ -190,7 +236,7 @@ class QPool:
     def admit(self, rid: int) -> SeqPages:
         if rid in self._seqs:
             raise ValueError(f"sequence {rid} already admitted")
-        state_page = self._alloc_page(False) if self.has_state_page else -1
+        state_page = self._alloc_page(rid, False) if self.has_state_page else -1
         seq = SeqPages(rid=rid, blocks=[], state_page=state_page)
         self._seqs[rid] = seq
         return seq
@@ -207,7 +253,7 @@ class QPool:
             return
         seq = self._seqs[rid]
         while len(seq.blocks) * self.page_size < n_positions:
-            seq.blocks.append(self._alloc_page(True))
+            seq.blocks.append(self._alloc_page(rid, True))
 
     def capacity(self, rid: int) -> int:
         """Cache rows the sequence's current page table can hold (the
@@ -234,16 +280,26 @@ class QPool:
                 f"sequence {rid}: cannot trim to {n_positions} positions "
                 f"below the {seq.length} already written")
         while len(seq.blocks) > keep:
-            self._free_page(seq.blocks.pop())
+            self._free_page(seq.blocks.pop(), rid)
 
     def release(self, rid: int) -> None:
         """Completion handoff: every page straight back to the free list,
         no data movement."""
+        self.discard(rid)
+
+    def discard(self, rid: int, quarantine: Optional[Set[int]] = None) -> None:
+        """Drop a sequence's residency without gathering its cache.  Pages
+        named in ``quarantine`` (e.g. a page whose checksum no longer
+        verifies) are retired to the quarantine set instead of the free
+        list, so the corruption can never be handed to another sequence;
+        everything else goes back to the free list untouched."""
+        quarantine = quarantine or set()
         seq = self._seqs.pop(rid)
         for pid in seq.blocks:
-            self._free_page(pid)
+            self._free_page(pid, rid, quarantine=pid in quarantine)
         if seq.state_page >= 0:
-            self._free_page(seq.state_page)
+            self._free_page(seq.state_page, rid,
+                            quarantine=seq.state_page in quarantine)
 
     # -- data movement -----------------------------------------------------
 
@@ -266,6 +322,7 @@ class QPool:
         (the decode hot path — only the appended row's block changed).
         State-slot leaves are always written whole."""
         seq = self._seqs[rid]
+        touched: List[int] = []
         if self.has_paged:
             if block is not None:
                 blocks = [block]
@@ -277,10 +334,16 @@ class QPool:
                     idx = self._seq_idx(name, b)
                     for pname, arr in store.items():
                         arr[seq.blocks[b]] = np.asarray(parts[pname])[idx]
+            touched += [seq.blocks[b] for b in blocks]
         for name, store in self._slots.items():
             parts = _leaf_parts(cache[name])
             for pname, arr in store.items():
                 arr[seq.state_page] = np.asarray(parts[pname])
+        if self._slots:
+            touched.append(seq.state_page)
+        if self.integrity:
+            for pid in touched:
+                self._sums[pid] = self._page_checksum(pid)
         if upto is not None:
             seq.length = max(seq.length, upto)
 
@@ -345,14 +408,130 @@ class QPool:
         self.write(rid, ckpt["cache"], upto=ckpt["length"])
         return seq
 
+    # -- page integrity ----------------------------------------------------
+    #
+    # The qcache layout makes a page pure integer data (int8 mantissas +
+    # one int32 exponent per row), so a page has ONE well-defined byte
+    # image and a checksum over it detects any corruption exactly — no
+    # float tolerance.  Checksums are recorded at alloc (over the reset
+    # fill) and after every write; freeing is copy-free so a free page's
+    # sum stays valid until reallocation.
+
+    def _page_checksum(self, pid: int) -> int:
+        """crc32 folded over every leaf part of page ``pid`` in its store,
+        in sorted (leaf, part) order so the fold is deterministic."""
+        store = self._paged if self._role[pid] == "paged" else self._slots
+        crc = 0
+        for name in sorted(store):
+            parts = store[name]
+            for pname in sorted(parts):
+                crc = zlib.crc32(
+                    np.ascontiguousarray(parts[pname][pid]).tobytes(), crc)
+        return crc
+
+    def owner_of(self, pid: int) -> Optional[int]:
+        """The sequence holding page ``pid``, or None if it is free."""
+        return self._owner.get(pid)
+
+    def verify_page(self, pid: int) -> bool:
+        """True iff page ``pid``'s bytes still match its recorded checksum
+        (pages never allocated have no record and verify trivially)."""
+        if pid not in self._sums:
+            return True
+        return self._page_checksum(pid) == self._sums[pid]
+
+    def scan_integrity(self) -> dict:
+        """Verify every page with a recorded checksum — live AND free
+        (free pages keep their data until reallocation, so a corrupt free
+        page must be caught before it is handed out).  Quarantined pages
+        are already retired and are not re-checked."""
+        corrupt = [pid for pid in sorted(self._sums)
+                   if pid not in self._quarantined
+                   and not self.verify_page(pid)]
+        return {"checked": len(self._sums) - len(self._quarantined),
+                "corrupt": corrupt}
+
+    def quarantine_page(self, pid: int) -> None:
+        """Retire a FREE corrupted page so it can never be allocated again.
+        A live corrupted page must go through ``discard(rid,
+        quarantine={pid})`` so its sequence's accounting stays balanced."""
+        owner = self._owner.get(pid)
+        if owner is not None:
+            raise PoolAccountingError(
+                f"page {pid} is live (sequence {owner}); quarantine it via "
+                f"discard(rid, quarantine={{pid}})")
+        if pid in self._quarantined:
+            return
+        self._free.remove(pid)
+        self._quarantined.add(pid)
+
+    @property
+    def quarantined_pages(self) -> int:
+        return len(self._quarantined)
+
+    # -- snapshot / restore ------------------------------------------------
+
+    def snapshot_meta(self) -> dict:
+        """JSON-able pool bookkeeping for an engine snapshot: the free
+        list, page tables, quarantine set, counters, and page roles.  The
+        page DATA travels separately via ``snapshot_arrays``."""
+        return {
+            "free": list(self._free),
+            "quarantined": sorted(self._quarantined),
+            "page_allocs": self.page_allocs,
+            "page_frees": self.page_frees,
+            "peak_live": self.peak_live,
+            "owner": {str(pid): rid for pid, rid in self._owner.items()},
+            "roles": {str(pid): role for pid, role in self._role.items()},
+            "seqs": {str(rid): {"blocks": list(s.blocks),
+                                "state_page": s.state_page,
+                                "length": s.length}
+                     for rid, s in self._seqs.items()},
+        }
+
+    def snapshot_arrays(self) -> dict:
+        """The physical page stores as a flat two-level dict of plain
+        arrays (references, not copies — the checkpoint writer copies)."""
+        return {"paged": {name: dict(parts)
+                          for name, parts in self._paged.items()},
+                "slots": {name: dict(parts)
+                          for name, parts in self._slots.items()}}
+
+    def restore_state(self, meta: dict, arrays: dict) -> None:
+        """Overwrite this pool's bookkeeping and page data from a
+        snapshot.  The pool must have been built with the same geometry;
+        checksums are recomputed from the restored bytes (the checkpoint
+        manager already verified them against its own crc32s)."""
+        for kind, store in (("paged", self._paged), ("slots", self._slots)):
+            for name, parts in store.items():
+                for pname, arr in parts.items():
+                    arr[...] = np.asarray(arrays[kind][name][pname])
+        self._free = [int(p) for p in meta["free"]]
+        self._quarantined = {int(p) for p in meta["quarantined"]}
+        self.page_allocs = int(meta["page_allocs"])
+        self.page_frees = int(meta["page_frees"])
+        self.peak_live = int(meta["peak_live"])
+        self._owner = {int(p): int(r) for p, r in meta["owner"].items()}
+        self._role = {int(p): str(r) for p, r in meta["roles"].items()}
+        self._seqs = {int(rid): SeqPages(rid=int(rid),
+                                         blocks=[int(b) for b in s["blocks"]],
+                                         state_page=int(s["state_page"]),
+                                         length=int(s["length"]))
+                      for rid, s in meta["seqs"].items()}
+        self._sums = ({pid: self._page_checksum(pid) for pid in self._role}
+                      if self.integrity else {})
+
     # -- observability -----------------------------------------------------
 
     def accounting(self) -> dict:
         """Must always balance: pages allocated == pages freed + live
-        (gated by tools/check_bench_trend.py on BENCH_serving.json)."""
+        (gated by tools/check_bench_trend.py on BENCH_serving.json).
+        Quarantined pages are retired, not live: a quarantine is counted
+        as a free that never returns to the free list."""
         return {"page_allocs": self.page_allocs,
                 "page_frees": self.page_frees,
                 "live_pages": self.live_pages,
+                "quarantined": len(self._quarantined),
                 "balanced": self.page_allocs == self.page_frees
                 + self.live_pages}
 

@@ -1,0 +1,223 @@
+"""Crash-recoverable engine snapshots (docs/ROBUSTNESS.md §Serving
+resilience).
+
+A serving snapshot is host-side integers only — pool pages (int8
+mantissas + int32 exponents), page tables, committed token streams, and
+per-request seeds — so a killed engine restored on a fresh instance must
+continue every surviving stream BITWISE identical to the uninterrupted
+run.  Pinned here at adversarial crash points:
+
+- mid-run, several lanes decoded (dense, moe, and rwkv6's QC_STATE
+  single-slot state pages — both pool residency shapes);
+- just after an eviction: the preempted lane's pages were freed at
+  eviction, so restore rebuilds its checkpoint by committed-token replay
+  (the same machinery the guard's lane recovery uses);
+- mid-speculation: lanes between speculative rounds, spec counters and
+  per-lane tau state in flight.
+
+Every engine in a module shares the fixture's jitted programs via
+``share_fns``; snapshots go through ``CheckpointManager`` (crc32 per
+leaf, atomic rename) with ``async_write=False`` so the crash point is
+deterministic.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core.policy import PAPER_INT8
+from repro.launch.engine import Engine, EngineConfig, Request
+from repro.launch.engine_guard import EngineGuard, ServeGuardConfig
+
+POLICY = dataclasses.replace(PAPER_INT8, qweights=True, qcache=True)
+PROMPT_LEN, GEN, MAX_LEN, PAGE = 6, 5, 12, 4
+
+
+def _requests(cfg, n):
+    rs = np.random.RandomState(11)
+    return [Request(rid=i,
+                    prompt=rs.randint(0, cfg.vocab,
+                                      size=PROMPT_LEN).astype(np.int32),
+                    gen=GEN, arrival_step=i, seed=200 + i)
+            for i in range(n)]
+
+
+def _crash_restore(make_engine, reqs, crash_when, tmp_path,
+                   make_guard=None):
+    """Run until ``crash_when(eng)`` is true, snapshot, kill the engine,
+    restore into a fresh twin, and run that to completion."""
+    mgr = CheckpointManager(str(tmp_path / "snap"), async_write=False)
+    eng = make_engine(make_guard() if make_guard else None)
+    eng.submit(list(reqs))
+    steps = 0
+    while not crash_when(eng):
+        eng.step()
+        steps += 1
+        assert steps < 500, "crash point never reached"
+    step = eng.save_snapshot(mgr)
+    pre_stats = eng.stats()
+    del eng                              # the crash
+    fresh = make_engine(make_guard() if make_guard else None)
+    assert fresh.restore_snapshot(mgr) == step
+    out = fresh.run()
+    return out, fresh, pre_stats
+
+
+# -- dense (QC_ROWS paged KV) ----------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                              n_layers=2, d_model=32, d_ff=64, n_heads=2,
+                              n_kv_heads=2, vocab=97)
+    base = Engine(cfg, POLICY, EngineConfig(
+        max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=4, seed=0))
+    reqs = _requests(cfg, 4)
+    refs = base.run(list(reqs))
+    return {"cfg": cfg, "base": base, "reqs": reqs, "refs": refs}
+
+
+def _dense_engine(dense, **over):
+    kw = dict(max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=4,
+              seed=0)
+    kw.update(over)
+
+    def make(guard=None):
+        return Engine(dense["cfg"], POLICY, EngineConfig(**kw),
+                      params=dense["base"].params,
+                      share_fns=dense["base"], guard=guard)
+    return make
+
+
+def test_dense_crash_mid_run_bitwise(dense, tmp_path):
+    out, fresh, pre = _crash_restore(
+        _dense_engine(dense), dense["reqs"],
+        lambda e: e.clock >= 5, tmp_path)
+    for rid, ref in dense["refs"].items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"stream {rid}: crash/restore changed tokens")
+    assert fresh.pool.accounting()["balanced"]
+    assert fresh.stats()["tokens"] == 4 * GEN
+
+
+def test_dense_crash_just_after_eviction_bitwise(dense, tmp_path):
+    """The nastiest point: a lane was JUST evicted, its pages freed —
+    the snapshot holds no cache bytes for it.  Restore rebuilds the
+    checkpoint by committed-token replay; tokens stay bitwise."""
+    out, fresh, pre = _crash_restore(
+        _dense_engine(dense, n_pages=4), dense["reqs"],
+        lambda e: len(e._preempted) > 0, tmp_path)
+    assert pre["n_preemptions"] > 0
+    for rid, ref in dense["refs"].items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"stream {rid}: post-eviction restore changed tokens")
+    assert fresh.pool.accounting()["balanced"]
+
+
+def test_dense_crash_mid_speculation_bitwise(dense, tmp_path):
+    """Crash between speculative rounds: spec counters, per-lane tau
+    state, and multi-token commits all in flight — restored tokens still
+    match the non-speculative references (the PR 9 pin, across a
+    crash)."""
+    def make(guard=None):
+        return Engine(dense["cfg"], POLICY, EngineConfig(
+            max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=4,
+            seed=0, speculate=2, draft_layers=1),
+            params=dense["base"].params, share_fns=dense["base"],
+            guard=guard)
+
+    out, fresh, pre = _crash_restore(
+        make, dense["reqs"],
+        lambda e: e.spec_rounds > 0 and e._running, tmp_path)
+    assert pre["spec_rounds"] > 0
+    assert fresh.spec_rounds >= pre["spec_rounds"]
+    for rid, ref in dense["refs"].items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"stream {rid}: mid-speculation restore changed tokens")
+
+
+def test_guard_state_survives_restore(dense, tmp_path):
+    """A guarded engine's snapshot carries the guard's telemetry and
+    ladder state; the restored guard continues from it (events kept,
+    fallback baseline restored)."""
+    out, fresh, pre = _crash_restore(
+        _dense_engine(dense), dense["reqs"],
+        lambda e: e.clock >= 4, tmp_path,
+        make_guard=lambda: EngineGuard(ServeGuardConfig(scan_every=2)))
+    assert fresh.guard is not None
+    assert fresh.stats()["guard"]["event_counts"] == {}
+    assert fresh.pool.integrity
+    assert fresh.pool.scan_integrity()["corrupt"] == []
+    for rid, ref in dense["refs"].items():
+        np.testing.assert_array_equal(out[rid], ref)
+
+
+def test_restore_rejects_mismatched_engine_config(dense, tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "snap"), async_write=False)
+    eng = _dense_engine(dense)(None)
+    eng.submit(list(dense["reqs"]))
+    eng.step()
+    eng.save_snapshot(mgr)
+    other = _dense_engine(dense, n_pages=8)(None)
+    with pytest.raises(ValueError, match="EngineConfig"):
+        other.restore_snapshot(mgr)
+
+
+# -- moe (router + experts in the decode path) -----------------------------
+
+
+def test_moe_crash_mid_run_bitwise(tmp_path):
+    cfg = dataclasses.replace(get_smoke_config("llama4_scout_17b_16e"),
+                              n_layers=2, d_model=32, d_ff=48, n_heads=2,
+                              n_kv_heads=2, head_dim=16, vocab=97,
+                              moe_experts=2)
+    base = Engine(cfg, POLICY, EngineConfig(
+        max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=2, seed=0))
+    reqs = _requests(cfg, 2)
+    refs = base.run(list(reqs))
+
+    def make(guard=None):
+        return Engine(cfg, POLICY, EngineConfig(
+            max_len=MAX_LEN, page_size=PAGE, n_pages=16, max_batch=2,
+            seed=0), params=base.params, share_fns=base, guard=guard)
+
+    out, fresh, _ = _crash_restore(make, reqs, lambda e: e.clock >= 4,
+                                   tmp_path)
+    for rid, ref in refs.items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"moe stream {rid}: crash/restore changed tokens")
+    assert fresh.pool.accounting()["balanced"]
+
+
+# -- rwkv6 (QC_STATE: single-slot state pages, no paged KV) ----------------
+
+
+def test_rwkv6_crash_mid_run_bitwise(tmp_path):
+    cfg = dataclasses.replace(get_smoke_config("rwkv6_3b"),
+                              n_layers=1, d_model=64, d_ff=128, vocab=97)
+    base = Engine(cfg, POLICY, EngineConfig(
+        max_len=MAX_LEN, page_size=PAGE, n_pages=8, max_batch=2, seed=0))
+    reqs = _requests(cfg, 2)
+    refs = base.run(list(reqs))
+
+    def make(guard=None):
+        return Engine(cfg, POLICY, EngineConfig(
+            max_len=MAX_LEN, page_size=PAGE, n_pages=8, max_batch=2,
+            seed=0), params=base.params, share_fns=base, guard=guard)
+
+    out, fresh, _ = _crash_restore(make, reqs, lambda e: e.clock >= 4,
+                                   tmp_path)
+    assert not fresh.pool.has_paged          # the state-page-only shape
+    for rid, ref in refs.items():
+        np.testing.assert_array_equal(
+            out[rid], ref,
+            err_msg=f"rwkv6 stream {rid}: crash/restore changed tokens")
+    assert fresh.pool.accounting()["balanced"]

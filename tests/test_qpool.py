@@ -25,7 +25,8 @@ from repro.core import BFP
 from repro.core.policy import PAPER_INT8, QC_ROWS, QC_STATE
 from repro.launch.steps import cache_template
 from repro.models import get_cache_layout, get_cache_page_spec
-from repro.runtime.qpool import PoolConfigError, PoolExhausted, QPool
+from repro.runtime.qpool import (PoolAccountingError, PoolConfigError,
+                                PoolExhausted, QPool)
 
 QC = dataclasses.replace(PAPER_INT8, qcache=True)
 
@@ -278,3 +279,120 @@ def test_validate_request_pool_errors():
         validate_request("qwen2_0_5b", "int8", page_size=5, n_pages=8,
                          batch=2, prompt_len=6, gen=4, qcache=False,
                          engine=True)
+
+
+# -- PR 10: accounting guards, page integrity, snapshot/restore ------------
+
+
+def test_double_free_raises_accounting_error():
+    """Freeing a page twice is accounting corruption, not a recoverable
+    state — the error names the page and the offending sequence."""
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=6, max_len=12)
+    pool.admit(0)
+    pool.ensure_capacity(0, 8)
+    pid = pool._seqs[0].blocks[-1]
+    pool.trim_capacity(0, 4)                  # frees pid legitimately
+    with pytest.raises(PoolAccountingError, match=f"double free of page {pid}"):
+        pool._free_page(pid, 0)
+    pool.release(0)
+    assert pool.accounting()["balanced"]
+
+
+def test_foreign_free_raises_accounting_error():
+    """A sequence freeing a page another sequence owns names both ids."""
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=6, max_len=12)
+    pool.admit(0)
+    pool.ensure_capacity(0, 4)
+    pid = pool._seqs[0].blocks[0]
+    with pytest.raises(PoolAccountingError,
+                       match=f"sequence 1 freed page {pid} owned by sequence 0"):
+        pool._free_page(pid, 1)
+    pool.release(0)
+    assert pool.accounting()["balanced"]
+
+
+def test_page_checksums_verify_and_scan():
+    """Integrity pools checksum every page at alloc and write; a bit flip
+    in a live page's mantissas is found by ``scan_integrity`` and
+    attributed to its owner."""
+    from repro.runtime.fault_injection import flip_pool_page_bits
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=8, max_len=12,
+                 integrity=True)
+    pool.admit(0)
+    pool.ensure_capacity(0, 12)
+    pool.write(0, _random_cache(cfg, 12, seed=5), upto=12)
+    scan = pool.scan_integrity()
+    assert scan["corrupt"] == [] and scan["checked"] == 3
+    pid = pool._seqs[0].blocks[1]
+    flip_pool_page_bits(pool, pid, seed=0)
+    assert not pool.verify_page(pid)
+    scan = pool.scan_integrity()
+    assert scan["corrupt"] == [pid]
+    assert pool.owner_of(pid) == 0
+    # guard-style recovery: discard the lane, retiring the corrupt page
+    pool.discard(0, quarantine={pid})
+    acct = pool.accounting()
+    assert acct["balanced"] and acct["quarantined"] == 1
+    assert pool.scan_integrity()["corrupt"] == []
+    # the quarantined page never comes back: all 7 remaining pages can be
+    # allocated, the 8th admission starves
+    pool.admit(1)
+    pool.ensure_capacity(1, 12)               # 3 pages
+    pool.admit(2)
+    pool.ensure_capacity(2, 12)               # 6 pages
+    pool.admit(3)
+    with pytest.raises(PoolExhausted, match="quarantined"):
+        pool.ensure_capacity(3, 12)
+
+
+def test_quarantine_free_page_and_live_page_rules():
+    """A corrupt FREE page is retired directly; quarantining a live page
+    must go through ``discard`` so its sequence stays balanced."""
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=6, max_len=12,
+                 integrity=True)
+    pool.admit(0)
+    pool.ensure_capacity(0, 8)
+    live_pid = pool._seqs[0].blocks[0]
+    tail_pid = pool._seqs[0].blocks[-1]
+    pool.trim_capacity(0, 4)                  # tail_pid back on free list
+    # free pages keep their recorded checksum until realloc
+    pool._paged["k"]["m"][tail_pid] ^= 1
+    assert pool.scan_integrity()["corrupt"] == [tail_pid]
+    pool.quarantine_page(tail_pid)
+    pool.quarantine_page(tail_pid)            # idempotent
+    assert pool.quarantined_pages == 1
+    with pytest.raises(PoolAccountingError, match="live"):
+        pool.quarantine_page(live_pid)
+    pool.release(0)
+    acct = pool.accounting()
+    assert acct["balanced"] and acct["quarantined"] == 1
+    assert pool.free_pages == 5
+
+
+def test_snapshot_restore_roundtrip_bitwise():
+    """meta + arrays from ``snapshot_*`` rebuild an equivalent pool in a
+    fresh instance: same gather bytes, same accounting, clean scan."""
+    cfg = _tiny_cfg()
+    pool = QPool(cfg, QC, page_size=4, n_pages=8, max_len=12,
+                 integrity=True)
+    src = _random_cache(cfg, 12, seed=6)
+    pool.admit(0)
+    pool.ensure_capacity(0, 12)
+    pool.write(0, src, upto=12)
+    pool.set_length(0, 12)
+    meta = pool.snapshot_meta()
+    arrays = {kind: {name: {pn: np.copy(arr) for pn, arr in parts.items()}
+                     for name, parts in store.items()}
+              for kind, store in pool.snapshot_arrays().items()}
+    fresh = QPool(cfg, QC, page_size=4, n_pages=8, max_len=12,
+                  integrity=True)
+    fresh.restore_state(meta, arrays)
+    _assert_tree_equal(fresh.gather(0), src)
+    assert fresh.accounting() == pool.accounting()
+    assert fresh.scan_integrity()["corrupt"] == []
+    fresh.release(0)
+    assert fresh.accounting()["balanced"]

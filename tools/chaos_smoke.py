@@ -147,6 +147,189 @@ def run_ladder_section(seed: int = 0) -> None:
            f"key={atkey} bad={sorted(bad)}")
 
 
+# ---------------------------------------------------------------------------
+# serving chaos (--serving): fault-injected serving must recover bit-exactly
+# ---------------------------------------------------------------------------
+
+# shrunk smoke configs: the serving chaos contract is about scheduling +
+# recovery, not model capacity, and the tiny shapes keep CI compiles short.
+_SERVING_TINY = {
+    "qwen2_0_5b": dict(n_layers=2, d_model=32, d_ff=64, n_heads=2,
+                       n_kv_heads=2, vocab=97),
+    "rwkv6_3b": dict(n_layers=1, d_model=64, d_ff=128, vocab=97),
+}
+
+
+def run_serving_sections(archs, events_out=None) -> None:
+    """Serving-side chaos (docs/ROBUSTNESS.md §Serving resilience), per
+    arch: a fault-free reference run, then guard-on runs under injected
+    page corruption, a lane stall, and a crash/restore — every stream's
+    tokens must stay BITWISE identical to the reference.  For the paged
+    family an armed-kernel-failure run additionally drives the dispatch
+    ladder + the guard's qdecode_block drop against a fused-policy
+    reference (fused-chain numerics differ from the per-op path by
+    design, so the armed run is pinned against its own kernel_mode)."""
+    import dataclasses as dc
+    import json
+
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_smoke_config
+    from repro.core.policy import PAPER_INT8
+    from repro.kernels import dispatch
+    from repro.launch.engine import Engine, EngineConfig, Request
+    from repro.launch.engine_guard import EngineGuard, ServeGuardConfig
+    from repro.runtime import fault_injection as fi
+    from repro.runtime.fault_injection import ServingFaultPlan
+
+    policy = dc.replace(PAPER_INT8, qweights=True, qcache=True)
+    plen, gen, max_len, page = 6, 6, 12, 4
+    telemetry = {}
+
+    def requests(cfg, n):
+        rs = np.random.RandomState(13)
+        return [Request(rid=i,
+                        prompt=rs.randint(0, cfg.vocab,
+                                          size=plen).astype(np.int32),
+                        gen=gen, arrival_step=i, seed=300 + i)
+                for i in range(n)]
+
+    def bitwise(out, refs, skip=()):
+        return all(np.array_equal(out[r], refs[r])
+                   for r in refs if r not in skip and r in out)
+
+    def drive(eng, reqs, plan=None, mgr=None, make_fresh=None):
+        """Run to drain, applying the ServingFaultPlan between steps;
+        a crash_step snapshots, kills the engine, and restores into
+        ``make_fresh()``.  Returns (final engine, results)."""
+        eng.submit(list(reqs))
+        while (eng._pending or eng._waiting or eng._preempted
+               or eng._running):
+            eng.step()
+            if plan is None:
+                continue
+            if plan.corrupt_step == eng.clock \
+                    and plan.corrupt_rid in eng.pool._seqs:
+                seq = eng.pool._seqs[plan.corrupt_rid]
+                pid = seq.blocks[0] if seq.blocks else seq.state_page
+                fi.flip_pool_page_bits(eng.pool, pid,
+                                       seed=plan.corrupt_seed)
+            if plan.stall_step == eng.clock:
+                fi.stall_lane(plan.stall_rid)
+            if plan.crash_step == eng.clock and mgr is not None:
+                step = eng.save_snapshot(mgr)
+                del eng                         # the crash
+                eng = make_fresh()
+                eng.restore_snapshot(mgr, step)
+        return eng, dict(eng.results)
+
+    for arch in archs:
+        cfg = dc.replace(get_smoke_config(arch),
+                         **_SERVING_TINY.get(arch, {}))
+        reqs = requests(cfg, 4)
+        ecfg = EngineConfig(max_len=max_len, page_size=page, n_pages=16,
+                            max_batch=4, seed=0)
+        events = telemetry.setdefault(arch, {})
+
+        base = Engine(cfg, policy, ecfg)
+        _, refs = drive(base, reqs)
+        print(f"{arch}: reference run "
+              f"{sum(len(v) for v in refs.values())} tokens")
+
+        def twin(guard):
+            return Engine(cfg, policy, ecfg, params=base.params,
+                          share_fns=base, guard=guard)
+
+        guard = EngineGuard(ServeGuardConfig(scan_every=1))
+        eng, out = drive(twin(guard), reqs)
+        _check(f"{arch}: guard-on no-fault is bitwise + silent",
+               bitwise(out, refs) and guard.events == [],
+               f"events={guard.event_counts()}")
+        events["no_fault"] = list(guard.events)
+
+        # corrupt rid 1 at clock 4: every stream is resident then, and
+        # rid 1 still has decodes left when the next step's scan fires
+        # (rid 0 finishes and frees its pages at clock 5).
+        guard = EngineGuard(ServeGuardConfig(scan_every=1))
+        eng, out = drive(twin(guard), reqs,
+                         plan=ServingFaultPlan(corrupt_step=4,
+                                               corrupt_rid=1))
+        counts = guard.event_counts()
+        _check(f"{arch}: page corruption recovered bitwise",
+               bitwise(out, refs) and counts.get("lane_recovered", 0) >= 1
+               and eng.pool.quarantined_pages == 1
+               and eng.pool.accounting()["balanced"]
+               and eng.stats()["n_shed"] == 0,
+               f"events={counts} "
+               f"quarantined={eng.pool.quarantined_pages}")
+        events["page_corruption"] = list(guard.events)
+
+        guard = EngineGuard(ServeGuardConfig(stall_deadline_steps=3))
+        eng, out = drive(twin(guard), reqs,
+                         plan=ServingFaultPlan(stall_step=4, stall_rid=0))
+        counts = guard.event_counts()
+        _check(f"{arch}: stalled lane recovered bitwise",
+               bitwise(out, refs) and counts.get("lane_stalled", 0) >= 1
+               and counts.get("lane_recovered", 0) >= 1
+               and eng.stats()["n_shed"] == 0,
+               f"events={counts}")
+        events["lane_stall"] = list(guard.events)
+
+        with tempfile.TemporaryDirectory(prefix="chaos_snap_") as snap:
+            mgr = CheckpointManager(snap, async_write=False)
+            guards = [EngineGuard(ServeGuardConfig(scan_every=2)),
+                      EngineGuard(ServeGuardConfig(scan_every=2))]
+            eng, out = drive(twin(guards[0]), reqs,
+                             plan=ServingFaultPlan(crash_step=5), mgr=mgr,
+                             make_fresh=lambda: twin(guards[1]))
+            _check(f"{arch}: crash at step 5 restores bitwise",
+                   bitwise(out, refs) and eng.guard is guards[1]
+                   and eng.pool.accounting()["balanced"],
+                   f"clock={eng.clock}")
+            events["crash_restore"] = list(eng.guard.events)
+
+        if not base.pool.has_paged:
+            continue            # the decode megakernel serves paged KV
+        # armed kernel failures, pinned against a fused-policy reference:
+        # the fused chain's numerics legitimately differ from the per-op
+        # path (fusion deletes requantize round-trips), while the ladder
+        # AND the guard's administrative drop both land on rungs bit-exact
+        # to the fused plan.  Fresh engines per run — jit caches hide
+        # trace-time arming, and a shared compile would make the armed
+        # run vacuously equal.
+        fpol = dc.replace(policy, kernel_mode="fused")
+        ecfg1 = EngineConfig(max_len=max_len, page_size=page, n_pages=8,
+                             max_batch=1, seed=0)
+        dispatch.enable_ops()
+        fi.clear_kernel_failure()
+        fref_eng = Engine(cfg, fpol, ecfg1, params=base.params)
+        fref = fref_eng.run([reqs[0]])
+        fi.arm_kernel_failure("any", -1)
+        dispatch.reset_fallback_counts()
+        guard = EngineGuard(ServeGuardConfig(max_kernel_fallbacks=1,
+                                             scan_every=0))
+        eng = Engine(cfg, fpol, ecfg1, params=base.params, guard=guard)
+        out = eng.run([reqs[0]])
+        fi.clear_kernel_failure()
+        counts = dispatch.fallback_counts()
+        gcounts = guard.event_counts()
+        _check(f"{arch}: armed kernel failures degrade bitwise + drop "
+               f"qdecode_block",
+               np.array_equal(out[0], fref[0])
+               and counts.get("fused->unfused", 0) >= 1
+               and gcounts.get("qdecode_block_dropped", 0) == 1
+               and "qdecode_block" in dispatch.disabled_ops(),
+               f"fallbacks={counts} events={gcounts}")
+        events["armed_kernel"] = list(guard.events)
+        dispatch.enable_ops()
+
+    if events_out:
+        with open(events_out, "w") as f:
+            json.dump(telemetry, f, indent=1, sort_keys=True)
+        print(f"wrote guard events -> {events_out}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_0_5b")
@@ -156,7 +339,25 @@ def main() -> int:
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--skip-train", action="store_true",
                     help="only run the (fast) kernel-ladder section")
+    ap.add_argument("--serving", action="store_true",
+                    help="run the serving chaos sections instead of the "
+                         "training ones")
+    ap.add_argument("--serving-arch", action="append", default=None,
+                    help="repeatable; default qwen2_0_5b + rwkv6_3b")
+    ap.add_argument("--events-out", default=None,
+                    help="write per-section guard-event JSON here "
+                         "(the CI chaos-serving artifact)")
     args = ap.parse_args()
+
+    if args.serving:
+        run_serving_sections(
+            args.serving_arch or ["qwen2_0_5b", "rwkv6_3b"],
+            events_out=args.events_out)
+        if _FAILED:
+            print(f"\nchaos smoke FAILED: {', '.join(_FAILED)}")
+            return 1
+        print("\nserving chaos smoke passed")
+        return 0
 
     run_ladder_section()
     if not args.skip_train:

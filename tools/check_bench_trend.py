@@ -158,6 +158,24 @@ def check_serving(baseline, fresh, max_regression_pct):
             errors.append(
                 f"batching win below 2x: {key} "
                 f"speedup={f['speedup_vs_serial']}")
+        if f["mode"] == "guarded":
+            # the guard may move cost, never results: at the committed
+            # load it must serve every stream (zero shed) and stay
+            # pinned bitwise to the unguarded batched run.  Its
+            # tokens/step + p99 TTFT ride the same trend envelope below,
+            # so integrity-scan overhead shows up as a gated regression.
+            if f.get("n_shed", 0) != 0:
+                errors.append(
+                    f"guarded run shed streams at committed load: {key} "
+                    f"n_shed={f['n_shed']} "
+                    f"(shed={f.get('guard', {}).get('shed')})")
+            if not f.get("bitwise_equal_vs_batched", False):
+                errors.append(
+                    f"guarded record not pinned bitwise to the unguarded "
+                    f"batched run: {key}")
+            if "guard" not in f:
+                errors.append(f"guarded record missing guard telemetry: "
+                              f"{key}")
         if f["mode"] == "speculative":
             tau = f.get("accepted_tokens_per_step", 0.0)
             if tau <= 1.0:
